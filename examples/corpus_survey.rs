@@ -1,0 +1,63 @@
+//! End-to-end driver (DESIGN.md E1/E5): the paper's full decision flow
+//! over the 56-benchmark / 223-configuration Table-1 corpus — measure R
+//! stage-by-stage through the simulated platform for a stratified engine
+//! sample, sweep the rest analytically, categorize every benchmark
+//! (Table 2), and apply the §6 streaming-necessity rule.
+//!
+//! ```sh
+//! cargo run --release --example corpus_survey -- [engine-sample-size]
+//! ```
+
+use hetstream::analysis::{decide, fraction_at_or_below, Decision};
+use hetstream::corpus::all_configs;
+use hetstream::device::DeviceProfile;
+use hetstream::experiments::{analytic_stage_times, fig1_engine, table2};
+use hetstream::hstreams::ContextBuilder;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let sample: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(20);
+    let profile = DeviceProfile::mic31sp();
+
+    // --- Analytic sweep of all 223 configs (paper-scale profile) ---
+    let configs = all_configs();
+    let mut r_h2d = Vec::new();
+    let mut r_d2h = Vec::new();
+    let mut worthwhile = 0usize;
+    for c in &configs {
+        let st = analytic_stage_times(c, &profile);
+        if decide(st.r_h2d()) == Decision::Worthwhile {
+            worthwhile += 1;
+        }
+        r_h2d.push(st.r_h2d());
+        r_d2h.push(st.r_d2h());
+    }
+    println!("=== Fig. 1 statistical view ({} configs) ===", configs.len());
+    for x in [0.1, 0.3, 0.5, 0.9] {
+        println!(
+            "  CDF at R = {x:.1}:  H2D {:5.1}%   D2H {:5.1}%",
+            100.0 * fraction_at_or_below(&r_h2d, x),
+            100.0 * fraction_at_or_below(&r_d2h, x),
+        );
+    }
+    println!(
+        "  paper: >50% of configs at R_H2D <= 0.1 -> here {:.1}%",
+        100.0 * fraction_at_or_below(&r_h2d, 0.1)
+    );
+    println!("  streaming worthwhile (0.1 < R < 0.9): {worthwhile}/{} configs", configs.len());
+
+    // --- Engine validation sample: same protocol through the real DMA +
+    //     compute engines (the paper's 11-run medians) ---
+    println!("\n=== engine validation sample ({sample} configs, 11-run medians) ===");
+    let ctx = ContextBuilder::new().only_artifacts(["burner_64"]).build()?;
+    let (table, rows) = fig1_engine(&ctx, 11, Some(sample));
+    println!("{}", table.markdown());
+    let eng_h2d: Vec<f64> = rows.iter().map(|r| r.r_h2d).collect();
+    println!(
+        "engine-measured CDF at R_H2D = 0.1: {:.1}%",
+        100.0 * fraction_at_or_below(&eng_h2d, 0.1)
+    );
+
+    // --- Table 2 ---
+    println!("\n{}", table2().markdown());
+    Ok(())
+}

@@ -1,0 +1,201 @@
+"""AOT pipeline: lower every L2 chunk computation to an HLO-text artifact.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the Rust ``xla`` crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Every artifact is recorded in ``artifacts/manifest.json`` with its input
+and output shapes/dtypes plus a FLOP estimate, which the Rust
+``runtime::ArtifactStore`` reads to type-check calls at load time.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import (
+    blackscholes,
+    burner,
+    cfft,
+    convsep,
+    dct8x8,
+    dotproduct,
+    fwt,
+    hotspot,
+    histogram,
+    lavamd,
+    matmul,
+    nn,
+    nw,
+    reduction,
+    scan,
+    stencil,
+    transpose,
+    vecadd,
+)
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _spec_list():
+    """(name, fn, example_args, flops_per_call) for every AOT variant."""
+    h2 = 2 * convsep.HALO + 1
+    lv_n = lavamd.CHUNK + 2 * lavamd.HALO
+    specs = [
+        # Embarrassingly Independent
+        ("nn_dist", model.nn_chunk, (f32(nn.CHUNK, 2), f32(2)), 6 * nn.CHUNK),
+        ("vector_add", model.vecadd_chunk, (f32(vecadd.CHUNK), f32(vecadd.CHUNK)), vecadd.CHUNK),
+        (
+            "transpose",
+            model.transpose_chunk,
+            (f32(transpose.ROWS, transpose.COLS),),
+            transpose.ROWS * transpose.COLS,
+        ),
+        (
+            "matmul",
+            model.matmul_chunk,
+            (f32(matmul.M, matmul.K), f32(matmul.K, matmul.N)),
+            2 * matmul.M * matmul.K * matmul.N,
+        ),
+        ("prefix_sum", model.scan_chunk, (f32(scan.CHUNK),), scan.CHUNK),
+        ("histogram", model.histogram_chunk, (i32(histogram.CHUNK),), 2 * histogram.CHUNK),
+        (
+            "black_scholes",
+            model.blackscholes_chunk,
+            (f32(blackscholes.CHUNK),) * 3,
+            60 * blackscholes.CHUNK,
+        ),
+        (
+            "dct8x8",
+            model.dct8x8_chunk,
+            (f32(dct8x8.ROWS, dct8x8.COLS), f32(8, 8)),
+            32 * dct8x8.ROWS * dct8x8.COLS,
+        ),
+        (
+            "dot_product",
+            model.dotproduct_chunk,
+            (f32(dotproduct.CHUNK), f32(dotproduct.CHUNK)),
+            2 * dotproduct.CHUNK,
+        ),
+        # Iterative control
+        (
+            "hotspot_step",
+            model.hotspot_chunk,
+            (f32(hotspot.N, hotspot.N), f32(hotspot.N, hotspot.N)),
+            8 * hotspot.N * hotspot.N,
+        ),
+        # False Dependent
+        ("fwt", model.fwt_chunk, (f32(fwt.CHUNK),), 2 * fwt.CHUNK * 12),
+        (
+            "conv_sep",
+            model.convsep_chunk,
+            (f32(convsep.ROWS + 2 * convsep.HALO, convsep.COLS), f32(h2), f32(h2)),
+            4 * h2 * convsep.ROWS * convsep.COLS,
+        ),
+        (
+            "stencil2d",
+            model.stencil_chunk,
+            (f32(stencil.ROWS + 2, stencil.COLS),),
+            6 * stencil.ROWS * stencil.COLS,
+        ),
+        ("lavamd_box", model.lavamd_chunk, (f32(lv_n),), 5 * (2 * lavamd.HALO + 1) * lavamd.CHUNK),
+        (
+            "cfft2d",
+            model.cfft2d_chunk,
+            (f32(cfft.TILE, cfft.TILE), f32(cfft.TILE, cfft.TILE)),
+            int(30 * cfft.TILE * cfft.TILE * 7),  # ~3 FFTs + pointwise
+        ),
+        # True Dependent
+        (
+            "nw_tile",
+            model.nw_chunk,
+            (i32(nw.TILE), i32(nw.TILE), i32(1), i32(nw.TILE, nw.TILE)),
+            5 * nw.TILE * nw.TILE,
+        ),
+        # Fig. 3 variants
+        ("reduction_v1", model.reduction_v1_chunk, (f32(reduction.CHUNK),), reduction.CHUNK),
+        ("reduction_v2", model.reduction_v2_chunk, (f32(reduction.CHUNK),), reduction.CHUNK),
+    ]
+    # Burner variants for descriptor-backed corpus entries.
+    for iters in burner.ITER_VARIANTS:
+        specs.append(
+            (
+                f"burner_{iters}",
+                model.make_burner_chunk(iters),
+                (f32(burner.CHUNK),),
+                2 * burner.CHUNK * iters,
+            )
+        )
+    return specs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dt).name]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact output dir")
+    parser.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"format": "hlo-text/v1", "artifacts": []}
+    for name, fn, example_args, flops in _spec_list():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *example_args)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [
+                    {"shape": list(a.shape), "dtype": _dtype_name(a.dtype)}
+                    for a in example_args
+                ],
+                "outputs": [
+                    {"shape": list(o.shape), "dtype": _dtype_name(o.dtype)}
+                    for o in outs
+                ],
+                "flops_per_call": int(flops),
+            }
+        )
+        print(f"  lowered {name:16s} -> {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""L1 Pallas kernels for hetstream.
+
+Each module implements one benchmark's chunk-level compute hot-spot as a
+Pallas kernel (lowered with ``interpret=True`` so the staged-out HLO is
+plain XLA ops runnable on the CPU PJRT client — see DESIGN.md
+§Hardware-Adaptation).  ``ref.py`` holds the pure-jnp/numpy oracles the
+pytest/hypothesis suite checks against.
+"""
+
+from . import (  # noqa: F401
+    blackscholes,
+    burner,
+    cfft,
+    convsep,
+    dct8x8,
+    dotproduct,
+    fwt,
+    hotspot,
+    histogram,
+    lavamd,
+    matmul,
+    nn,
+    nw,
+    reduction,
+    scan,
+    stencil,
+    transpose,
+    vecadd,
+)

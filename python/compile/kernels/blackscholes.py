@@ -1,0 +1,60 @@
+"""NVIDIA SDK ``BlackScholes`` — pointwise European option pricing.
+
+Category: *Embarrassingly Independent*: every option prices alone; three
+input arrays (spot, strike, expiry) stream in, two result arrays (call,
+put) stream out — the paper's archetype of an H2D-heavy pointwise code.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Options per chunk.
+CHUNK = 16384
+#: Riskless rate and volatility (SDK defaults).
+RISKFREE = 0.02
+VOLATILITY = 0.30
+
+
+def _erf(x):
+    # Abramowitz–Stegun 7.1.26 polynomial erf (|err| < 1.5e-7), written in
+    # basic ops only: xla_extension 0.5.1's HLO text parser predates the
+    # dedicated `erf` opcode that jax >= 0.5 lowers `lax.erf` to.
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + jnp.float32(0.3275911) * ax)
+    poly = (
+        (((jnp.float32(1.061405429) * t - jnp.float32(1.453152027)) * t
+          + jnp.float32(1.421413741)) * t - jnp.float32(0.284496736)) * t
+        + jnp.float32(0.254829592)
+    ) * t
+    return sign * (1.0 - poly * jnp.exp(-ax * ax))
+
+
+def _cnd(d):
+    # Cumulative normal distribution via erf.
+    return 0.5 * (1.0 + _erf(d / jnp.sqrt(2.0).astype(jnp.float32)))
+
+
+def _kernel(s_ref, k_ref, t_ref, call_ref, put_ref):
+    s, k, t = s_ref[...], k_ref[...], t_ref[...]
+    r = jnp.float32(RISKFREE)
+    v = jnp.float32(VOLATILITY)
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(s / k) + (r + 0.5 * v * v) * t) / (v * sqrt_t)
+    d2 = d1 - v * sqrt_t
+    exp_rt = jnp.exp(-r * t)
+    call = s * _cnd(d1) - k * exp_rt * _cnd(d2)
+    put = k * exp_rt * _cnd(-d2) - s * _cnd(-d1)
+    call_ref[...] = call
+    put_ref[...] = put
+
+
+def black_scholes(s, k, t):
+    """s, k, t: f32[N] -> (call f32[N], put f32[N])."""
+    shape = jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(shape, shape),
+        interpret=True,
+    )(s, k, t)

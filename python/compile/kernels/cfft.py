@@ -1,0 +1,35 @@
+"""NVIDIA SDK ``ConvolutionFFT2D`` — pointwise spectral multiply kernel.
+
+Category: *False Dependent*: the streamed port cuts the image into tiles
+with filter-sized aprons (read-only overlap) and convolves each tile by
+FFT -> pointwise complex multiply -> IFFT (overlap-save).
+
+Layer split: the FFTs live in the L2 jax model (``model.cfft2d_chunk``)
+where XLA's native FFT op runs them fused; the compute hot-spot this
+module owns is the pointwise complex multiply of the tile spectrum with
+the (precomputed) filter spectrum.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Tile side of the AOT variant (padded tile, power of two).
+TILE = 128
+
+
+def _kernel(ar_ref, ai_ref, br_ref, bi_ref, or_ref, oi_ref):
+    ar, ai = ar_ref[...], ai_ref[...]
+    br, bi = br_ref[...], bi_ref[...]
+    or_ref[...] = ar * br - ai * bi
+    oi_ref[...] = ar * bi + ai * br
+
+
+def complex_pointwise_mul(ar, ai, br, bi):
+    """(ar + i*ai) * (br + i*bi), all f32[T, T] -> (re, im)."""
+    shape = jax.ShapeDtypeStruct(ar.shape, jnp.float32)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(shape, shape),
+        interpret=True,
+    )(ar, ai, br, bi)

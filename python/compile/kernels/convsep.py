@@ -1,0 +1,56 @@
+"""NVIDIA SDK ``ConvolutionSeparable`` — separable 2D convolution on a row band.
+
+Category: *False Dependent*: the column pass of band ``b`` reads H rows
+owned by bands ``b-1``/``b+1`` (read-only), so the streamed port
+redundantly transfers H halo rows on each side (paper Fig. 7 applied to
+rows).
+
+The kernel runs both passes over one band: a column (vertical) pass that
+consumes the halo, then a row (horizontal) pass with zero padding at the
+image borders (bands keep full image width, so there is no horizontal
+halo — the adaptation of the OpenCL tiling that DESIGN.md §Hardware-
+Adaptation describes).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Band geometry of the AOT variant.
+ROWS = 128
+COLS = 256
+#: Filter radius (length 2H+1).
+HALO = 8
+
+
+def _kernel(img_ref, krow_ref, kcol_ref, o_ref):
+    rows, cols = o_ref.shape
+    h = (img_ref.shape[0] - rows) // 2
+    img = img_ref[...]
+
+    # Column pass: out1[r, c] = sum_k img[r + k, c] * kcol[k]
+    def col_step(k, acc):
+        sl = jax.lax.dynamic_slice(img, (k, 0), (rows, cols))
+        return acc + sl * kcol_ref[k]
+
+    mid = jax.lax.fori_loop(0, 2 * h + 1, col_step, jnp.zeros((rows, cols), jnp.float32))
+
+    # Row pass with zero padding: out[r, c] = sum_k mid[r, c + k - h] * krow[k]
+    padded = jnp.pad(mid, ((0, 0), (h, h)))
+
+    def row_step(k, acc):
+        sl = jax.lax.dynamic_slice(padded, (0, k), (rows, cols))
+        return acc + sl * krow_ref[k]
+
+    o_ref[...] = jax.lax.fori_loop(0, 2 * h + 1, row_step, jnp.zeros((rows, cols), jnp.float32))
+
+
+def conv_sep(img_halo, krow, kcol):
+    """img_halo: f32[R + 2H, C]; krow, kcol: f32[2H+1] -> f32[R, C]."""
+    rows = img_halo.shape[0] - (krow.shape[0] - 1)
+    cols = img_halo.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(img_halo, krow, kcol)

@@ -1,0 +1,63 @@
+"""NVIDIA SDK ``DCT8x8`` — 8x8 blockwise 2D discrete cosine transform.
+
+Category: *Embarrassingly Independent*: every 8x8 pixel block transforms
+alone (JPEG-style), so the image streams in row bands of blocks.
+
+Hardware adaptation: the OpenCL kernel assigns one 8x8 block per
+work-group; here a whole band sits in VMEM reshaped to a batch of 8x8
+blocks, and the two 1D DCT passes are batched (N, 8) x (8, 8) matmuls
+against the DCT basis — MXU-friendly instead of per-thread butterflies.
+
+The basis rides in as an artifact *input* rather than an embedded
+constant, and the passes use plain 2D `jnp.dot`s: xla_extension 0.5.1's
+HLO-text round-trip silently mis-executes the einsum/array-constant
+formulation this kernel originally used (output all-zeros) — see
+DESIGN.md §Hardware-Adaptation notes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+#: Band geometry of the AOT variant: 8 block-rows of a 512-wide image.
+ROWS = 64
+COLS = 512
+
+
+def _dct_basis():
+    # Orthonormal DCT-II basis C[k, n] = s(k)/2 * cos(pi (2n+1) k / 16).
+    k = np.arange(8)[:, None]
+    n = np.arange(8)[None, :]
+    c = np.cos(np.pi * (2 * n + 1) * k / 16.0)
+    c[0, :] *= 1.0 / np.sqrt(2.0)
+    return (c * 0.5).astype(np.float32)
+
+
+BASIS = _dct_basis()
+
+
+def _kernel(x_ref, c_ref, o_ref):
+    rows, cols = x_ref.shape
+    c = c_ref[...]
+    nb_i, nb_j = rows // 8, cols // 8
+    # (bi, 8, bj, 8) -> (blocks, 8, 8) batch.
+    blocks = x_ref[...].reshape(nb_i, 8, nb_j, 8).transpose(0, 2, 1, 3)
+    # Row pass: every block row times C^T.
+    t1 = jnp.dot(blocks.reshape(-1, 8), c.T)
+    # Column pass: transpose within blocks, multiply again.
+    t1 = t1.reshape(-1, 8, 8).transpose(0, 2, 1)
+    t2 = jnp.dot(t1.reshape(-1, 8), c.T)
+    out = t2.reshape(-1, 8, 8).transpose(0, 2, 1)
+    o_ref[...] = out.reshape(nb_i, nb_j, 8, 8).transpose(0, 2, 1, 3).reshape(rows, cols)
+
+
+def dct8x8(x, basis=None):
+    """x: f32[R, C] (R, C multiples of 8) -> blockwise 2D DCT."""
+    if basis is None:
+        basis = jnp.asarray(BASIS)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x, basis)

@@ -1,0 +1,27 @@
+"""NVIDIA SDK ``DotProduct`` — per-chunk partial dot products.
+
+Category: *Embarrassingly Independent* with a tiny host reduce: each
+task computes its chunk's partial sum; D2H is 4 bytes per task, making
+this the extreme H2D-dominated streamable code (two input arrays in,
+one scalar out).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Elements per chunk.
+CHUNK = 65536
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.sum(a_ref[...] * b_ref[...])[None]
+
+
+def dot_product(a, b):
+    """a, b: f32[N] -> f32[1] partial dot product."""
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,43 @@
+"""NVIDIA/AMD SDK ``FastWalshTransform`` — radix-2 Walsh–Hadamard butterfly.
+
+Category: *False Dependent* (paper Fig. 7): tasks share read-only (RAR)
+input neighborhoods.  The paper streams FWT by cutting the signal into
+blocks and redundantly transferring the boundary elements each block's
+butterflies touch; a block of size B then transforms independently (the
+first log2(B) stages of the full transform — the Rodinia/SDK streamed
+port's per-task kernel).
+
+Hardware adaptation: the OpenCL version stages each butterfly through
+local memory with a barrier between stages; here the whole block lives in
+VMEM, and the ``log2(B)`` stages are a statically unrolled sequence of
+reshape + (a+b, a-b) vector ops — no barriers needed.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Elements per task block (one AOT variant).
+CHUNK = 4096
+
+
+def _kernel(x_ref, o_ref):
+    n = x_ref.shape[0]
+    x = x_ref[...]
+    h = 1
+    while h < n:
+        y = x.reshape(n // (2 * h), 2, h)
+        a = y[:, 0, :]
+        b = y[:, 1, :]
+        x = jnp.stack([a + b, a - b], axis=1).reshape(n)
+        h *= 2
+    o_ref[...] = x
+
+
+def fwt(x):
+    """x: f32[N] (N a power of two) -> Walsh–Hadamard transform of x."""
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,39 @@
+"""Rodinia ``hotspot`` — one time step of the thermal grid, shape-
+preserving for device-side ping-pong iteration.
+
+Category: *Iterative* (non-streamable, Table 2): the grid uploads once
+and the kernel re-runs on resident data, so there is nothing for a
+second stream to overlap after the first step — the workload driver
+demonstrates exactly that (see `workloads/hotspot.rs`).
+
+temp' = temp + k * (power + neighbor_laplacian(temp)); the padded
+boundary rows/cols are copied through unchanged so output shape ==
+input shape and step t+1 can consume step t's output in place.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Grid side of the AOT variant (padded; interior is (N-2)^2).
+N = 128
+K_THERMAL = 0.1
+
+
+def _kernel(t_ref, p_ref, o_ref):
+    t = t_ref[...]
+    p = p_ref[...]
+    lap = (
+        t[:-2, 1:-1] + t[2:, 1:-1] + t[1:-1, :-2] + t[1:-1, 2:] - 4.0 * t[1:-1, 1:-1]
+    )
+    interior = t[1:-1, 1:-1] + jnp.float32(K_THERMAL) * (p[1:-1, 1:-1] + lap)
+    o_ref[...] = t.at[1:-1, 1:-1].set(interior)
+
+
+def hotspot_step(temp, power):
+    """temp, power: f32[N, N] -> f32[N, N] after one diffusion step."""
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(temp.shape, jnp.float32),
+        interpret=True,
+    )(temp, power)

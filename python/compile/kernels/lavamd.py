@@ -1,0 +1,51 @@
+"""Rodinia ``lavaMD`` — particle potential over a neighborhood window.
+
+Category: *False Dependent*, and the paper's **negative case** (§5): each
+output element depends on 2H = 222 neighbours while the task holds only
+~250 elements, so the redundant halo transfer is as large as the task
+itself and streaming does not pay off.
+
+Simplified physics faithful to the dependency structure: particles on a
+1D line, ``out[i] = sum_{|j-i| <= H} 1 / (1 + (x[i] - x[j])^2)`` — an
+inverse-square-style pairwise potential with a hard cutoff window, which
+is exactly the halo pattern the paper analyzes (H = 111 either side).
+
+Hardware adaptation: the OpenCL kernel loops neighbour *boxes* with the
+home box in local memory; here the chunk-plus-halo vector sits in VMEM
+and a ``fori_loop`` over the 2H+1 window offsets accumulates with
+dynamic-sliced shifted reads (each iteration is a full-width VPU op).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Particles per task — paper's task size is ~250.
+CHUNK = 256
+#: Halo radius — paper: one element depends on 111 before + 111 after.
+HALO = 111
+
+
+def _kernel(x_ref, o_ref):
+    n = o_ref.shape[0]
+    h = (x_ref.shape[0] - n) // 2
+    x = x_ref[...]
+    center = jax.lax.dynamic_slice(x, (h,), (n,))
+
+    def step(k, acc):
+        nbr = jax.lax.dynamic_slice(x, (k,), (n,))
+        d2 = (center - nbr) ** 2
+        return acc + 1.0 / (1.0 + d2)
+
+    acc = jax.lax.fori_loop(0, 2 * h + 1, step, jnp.zeros((n,), jnp.float32))
+    # Remove the self-interaction term (k == h gives d2 == 0 -> 1.0).
+    o_ref[...] = acc - 1.0
+
+
+def lavamd_box(x_halo, n=CHUNK):
+    """x_halo: f32[N + 2H] (chunk plus halo) -> f32[N] potentials."""
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x_halo)

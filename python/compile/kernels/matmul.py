@@ -1,0 +1,43 @@
+"""NVIDIA SDK ``MatrixMul`` / Parboil ``sgemm`` — row-band matmul.
+
+Category: *Embarrassingly Independent*: A is partitioned into row bands,
+B is broadcast (a SYNC-style shared input — the paper notes codes can mix
+categories); each task computes its band of C = A @ B.
+
+Hardware adaptation: OpenCL work-group tiles in local memory become a
+Pallas grid of MXU-shaped (128, 128) output tiles; each tile contracts the
+full K in VMEM with ``jnp.dot(..., preferred_element_type=f32)`` which
+maps to the MXU systolic array on real TPU hardware.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: AOT chunk variant: band M x K times K x N.
+M = 128
+K = 256
+N = 256
+TILE_N = 128
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul(a, b):
+    """a: f32[M, K]; b: f32[K, N] -> f32[M, N]."""
+    m, k = a.shape
+    _, n = b.shape
+    grid = (n // TILE_N,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, TILE_N), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, TILE_N), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

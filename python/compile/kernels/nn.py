@@ -1,0 +1,31 @@
+"""Rodinia ``nn`` (nearest neighbor) — per-chunk Euclidean distance.
+
+Category: *Embarrassingly Independent* (paper Fig. 6).  The record set is
+split into chunks; each task computes the distance of every record in its
+chunk to the target (lat, lng).  The k-nearest selection happens on the
+host (L3), exactly like Rodinia's host-side partial sort.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Records per chunk executable (one AOT variant).
+CHUNK = 16384
+
+
+def _kernel(rec_ref, tgt_ref, o_ref):
+    lat = rec_ref[:, 0]
+    lng = rec_ref[:, 1]
+    d2 = (lat - tgt_ref[0]) ** 2 + (lng - tgt_ref[1]) ** 2
+    o_ref[...] = jnp.sqrt(d2)
+
+
+def nn_dist(records, target):
+    """records: f32[N,2]; target: f32[2] -> f32[N] distances."""
+    n = records.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(records, target)

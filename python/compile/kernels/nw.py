@@ -1,0 +1,78 @@
+"""Rodinia ``nw`` (Needleman–Wunsch) — anti-diagonal DP tile kernel.
+
+Category: *True Dependent* (paper Fig. 8): cell (i,j) depends on its
+north, west and northwest neighbours (RAW), so the score matrix is
+computed tile-by-tile along anti-diagonals; tiles on the same diagonal
+run concurrently in different streams (L3's Wavefront partitioner).
+
+This kernel computes one T x T tile given the tile's north edge, west
+edge, northwest corner and reference (substitution score) tile.
+
+Hardware adaptation: the OpenCL port walks intra-tile diagonals with
+work-item barriers.  On TPU we keep an extended (T+1)x(T+1) score buffer
+in VMEM and run a ``fori_loop`` over the 2T-1 anti-diagonals; every
+iteration computes candidate scores for the whole tile with three shifted
+reads (vectorized on the VPU) and commits only the cells of the current
+diagonal via an iota mask — their neighbours are final by induction.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Tile side of the AOT variant (the paper's blocked NW uses 16..64).
+TILE = 32
+#: Rodinia's default gap penalty.
+PENALTY = 10
+
+
+def _kernel(north_ref, west_ref, corner_ref, sub_ref, o_ref, south_ref, east_ref):
+    t = sub_ref.shape[0]
+    penalty = PENALTY
+
+    # Extended score matrix E[(T+1),(T+1)]: row 0 = north edge, col 0 =
+    # west edge, E[0,0] = northwest corner, interior = scores to fill.
+    top = jnp.concatenate([corner_ref[...], north_ref[...]])[None, :]
+    left = west_ref[...][:, None]
+    interior = jnp.zeros((t, t), jnp.int32)
+    e0 = jnp.concatenate([top, jnp.concatenate([left, interior], axis=1)], axis=0)
+
+    ii = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    sub = sub_ref[...]
+
+    def step(d, e):
+        nw = e[:-1, :-1]  # E[i, j]     -> neighbour of interior (i, j)
+        n = e[:-1, 1:]    # E[i, j+1]
+        w = e[1:, :-1]    # E[i+1, j]
+        cand = jnp.maximum(nw + sub, jnp.maximum(n - penalty, w - penalty))
+        mask = (ii + jj) == d
+        new_interior = jnp.where(mask, cand, e[1:, 1:])
+        return e.at[1:, 1:].set(new_interior)
+
+    e = jax.lax.fori_loop(0, 2 * t - 1, step, e0)
+    tile = e[1:, 1:]
+    o_ref[...] = tile
+    # Contiguous edge outputs so neighbour tiles can DMA-read them as
+    # flat device regions (a 2D column slice is not contiguous).
+    south_ref[...] = tile[-1, :]
+    east_ref[...] = tile[:, -1]
+
+
+def nw_tile(north, west, corner, sub):
+    """One NW DP tile.
+
+    north: i32[T] (scores of the row above), west: i32[T] (column left),
+    corner: i32[1] (northwest score), sub: i32[T,T] (substitution scores)
+    -> (tile i32[T,T], south edge i32[T], east edge i32[T]).
+    """
+    t = sub.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((t, t), jnp.int32),
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+        ),
+        interpret=True,
+    )(north, west, corner, sub)

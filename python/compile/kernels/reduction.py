@@ -1,0 +1,47 @@
+"""NVIDIA SDK ``Reduction`` — the paper's Fig. 3 code-variant study.
+
+Two variants with *different data-transfer requirements*:
+
+- **v1** reduces the whole chunk to a scalar on the device (D2H = 4 bytes)
+  — the variant that "performs the whole reduction work on the
+  accelerator, thus significantly reducing the data-moving overheads".
+- **v2** reduces each block to a partial sum and ships the partials back
+  for a host-side final pass (D2H = NB * 4 bytes) — the variant with the
+  larger D2H fraction.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Elements per chunk.
+CHUNK = 65536
+#: Partial sums emitted by v2.
+BLOCKS = 256
+
+
+def _kernel_v1(x_ref, o_ref):
+    o_ref[...] = jnp.sum(x_ref[...])[None]
+
+
+def _kernel_v2(x_ref, o_ref):
+    n = x_ref.shape[0]
+    o_ref[...] = jnp.sum(x_ref[...].reshape(BLOCKS, n // BLOCKS), axis=1)
+
+
+def reduction_v1(x):
+    """x: f32[N] -> f32[1] full device-side sum."""
+    return pl.pallas_call(
+        _kernel_v1,
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def reduction_v2(x):
+    """x: f32[N] -> f32[BLOCKS] partial sums (final pass on host)."""
+    return pl.pallas_call(
+        _kernel_v2,
+        out_shape=jax.ShapeDtypeStruct((BLOCKS,), jnp.float32),
+        interpret=True,
+    )(x)

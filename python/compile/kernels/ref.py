@@ -1,0 +1,200 @@
+"""Pure-numpy correctness oracles for every L1 Pallas kernel.
+
+These are deliberately written in plain numpy loops / vector ops, with no
+JAX, so a bug in the Pallas kernels cannot be mirrored here.  The pytest
++ hypothesis suite sweeps shapes/values and asserts allclose.
+"""
+
+import numpy as np
+
+
+def nn_dist(records, target):
+    rec = np.asarray(records, np.float32)
+    t = np.asarray(target, np.float32)
+    return np.sqrt((rec[:, 0] - t[0]) ** 2 + (rec[:, 1] - t[1]) ** 2).astype(np.float32)
+
+
+def fwt(x):
+    x = np.asarray(x, np.float64).copy()
+    n = x.shape[0]
+    h = 1
+    while h < n:
+        for i in range(0, n, h * 2):
+            for j in range(i, i + h):
+                a, b = x[j], x[j + h]
+                x[j], x[j + h] = a + b, a - b
+        h *= 2
+    return x.astype(np.float32)
+
+
+def nw_tile(north, west, corner, sub, penalty=10):
+    t = sub.shape[0]
+    e = np.zeros((t + 1, t + 1), np.int64)
+    e[0, 0] = corner[0]
+    e[0, 1:] = north
+    e[1:, 0] = west
+    for i in range(1, t + 1):
+        for j in range(1, t + 1):
+            e[i, j] = max(
+                e[i - 1, j - 1] + sub[i - 1, j - 1],
+                e[i - 1, j] - penalty,
+                e[i, j - 1] - penalty,
+            )
+    return e[1:, 1:].astype(np.int32)
+
+
+def nw_full(seq_scores, penalty=10):
+    """Whole-matrix NW oracle; seq_scores: i32[R, C] substitution scores.
+
+    Boundary condition (Rodinia): first row/col are -penalty * index.
+    Returns the full i32[R, C] score matrix for the interior.
+    """
+    r, c = seq_scores.shape
+    e = np.zeros((r + 1, c + 1), np.int64)
+    e[0, :] = -penalty * np.arange(c + 1)
+    e[:, 0] = -penalty * np.arange(r + 1)
+    for i in range(1, r + 1):
+        for j in range(1, c + 1):
+            e[i, j] = max(
+                e[i - 1, j - 1] + seq_scores[i - 1, j - 1],
+                e[i - 1, j] - penalty,
+                e[i, j - 1] - penalty,
+            )
+    return e[1:, 1:].astype(np.int32)
+
+
+def lavamd(x_halo, n):
+    x = np.asarray(x_halo, np.float64)
+    h = (x.shape[0] - n) // 2
+    out = np.zeros(n, np.float64)
+    for i in range(n):
+        c = x[h + i]
+        win = x[i : i + 2 * h + 1]
+        out[i] = np.sum(1.0 / (1.0 + (c - win) ** 2)) - 1.0
+    return out.astype(np.float32)
+
+
+def conv_sep(img_halo, krow, kcol):
+    img = np.asarray(img_halo, np.float64)
+    kr = np.asarray(krow, np.float64)
+    kc = np.asarray(kcol, np.float64)
+    h = (len(kr) - 1) // 2
+    rows = img.shape[0] - 2 * h
+    cols = img.shape[1]
+    mid = np.zeros((rows, cols))
+    for k in range(2 * h + 1):
+        mid += img[k : k + rows, :] * kc[k]
+    padded = np.pad(mid, ((0, 0), (h, h)))
+    out = np.zeros((rows, cols))
+    for k in range(2 * h + 1):
+        out += padded[:, k : k + cols] * kr[k]
+    return out.astype(np.float32)
+
+
+def complex_pointwise_mul(ar, ai, br, bi):
+    a = np.asarray(ar, np.float32) + 1j * np.asarray(ai, np.float32)
+    b = np.asarray(br, np.float32) + 1j * np.asarray(bi, np.float32)
+    c = a * b
+    return c.real.astype(np.float32), c.imag.astype(np.float32)
+
+
+def cfft2d(tile, filt):
+    """Circular 2D convolution of tile with filt via FFT (both [T, T])."""
+    fa = np.fft.fft2(np.asarray(tile, np.float64))
+    fb = np.fft.fft2(np.asarray(filt, np.float64))
+    return np.real(np.fft.ifft2(fa * fb)).astype(np.float32)
+
+
+def transpose(x):
+    return np.ascontiguousarray(np.asarray(x, np.float32).T)
+
+
+def prefix_sum(x):
+    y = np.cumsum(np.asarray(x, np.float64)).astype(np.float32)
+    return y, y[-1:]
+
+
+def histogram(x, bins=256):
+    return np.bincount(np.asarray(x, np.int64), minlength=bins).astype(np.int32)
+
+
+def matmul(a, b):
+    return (np.asarray(a, np.float64) @ np.asarray(b, np.float64)).astype(np.float32)
+
+
+def vector_add(a, b):
+    return (np.asarray(a, np.float32) + np.asarray(b, np.float32)).astype(np.float32)
+
+
+def _cnd(d):
+    from math import erf, sqrt
+
+    return 0.5 * (1.0 + np.vectorize(erf)(d / sqrt(2.0)))
+
+
+def black_scholes(s, k, t, r=0.02, v=0.30):
+    s = np.asarray(s, np.float64)
+    k = np.asarray(k, np.float64)
+    t = np.asarray(t, np.float64)
+    sqrt_t = np.sqrt(t)
+    d1 = (np.log(s / k) + (r + 0.5 * v * v) * t) / (v * sqrt_t)
+    d2 = d1 - v * sqrt_t
+    exp_rt = np.exp(-r * t)
+    call = s * _cnd(d1) - k * exp_rt * _cnd(d2)
+    put = k * exp_rt * _cnd(-d2) - s * _cnd(-d1)
+    return call.astype(np.float32), put.astype(np.float32)
+
+
+def stencil2d(x_halo, c0=0.5, c1=0.125):
+    x = np.asarray(x_halo, np.float64)
+    rows = x.shape[0] - 2
+    cols = x.shape[1]
+    center = x[1:-1, :]
+    north = x[:-2, :]
+    south = x[2:, :]
+    west = np.pad(center, ((0, 0), (1, 0)))[:, :cols]
+    east = np.pad(center, ((0, 0), (0, 1)))[:, 1:]
+    return (c0 * center + c1 * (north + south + west + east)).astype(np.float32)
+
+
+def reduction_v1(x):
+    return np.sum(np.asarray(x, np.float64)).astype(np.float32).reshape(1)
+
+
+def reduction_v2(x, blocks=256):
+    x = np.asarray(x, np.float64)
+    return np.sum(x.reshape(blocks, -1), axis=1).astype(np.float32)
+
+
+def burner(x, iters):
+    v = np.asarray(x, np.float32).copy()
+    for _ in range(iters):
+        v = v * np.float32(1.000001) + np.float32(1e-7)
+    return v
+
+
+def dct8x8(x):
+    from .dct8x8 import BASIS
+
+    x = np.asarray(x, np.float64)
+    c = BASIS.astype(np.float64)
+    rows, cols = x.shape
+    out = np.zeros_like(x)
+    for bi in range(rows // 8):
+        for bj in range(cols // 8):
+            b = x[bi * 8:(bi + 1) * 8, bj * 8:(bj + 1) * 8]
+            out[bi * 8:(bi + 1) * 8, bj * 8:(bj + 1) * 8] = c @ b @ c.T
+    return out.astype(np.float32)
+
+
+def dot_product(a, b):
+    return np.array([np.dot(np.asarray(a, np.float64), np.asarray(b, np.float64))], np.float64).astype(np.float32)
+
+
+def hotspot_step(temp, power, k=0.1):
+    t = np.asarray(temp, np.float64)
+    p = np.asarray(power, np.float64)
+    out = t.copy()
+    lap = t[:-2, 1:-1] + t[2:, 1:-1] + t[1:-1, :-2] + t[1:-1, 2:] - 4.0 * t[1:-1, 1:-1]
+    out[1:-1, 1:-1] = t[1:-1, 1:-1] + k * (p[1:-1, 1:-1] + lap)
+    return out.astype(np.float32)

@@ -1,0 +1,44 @@
+"""AMD SDK ``PrefixSum`` / ``ScanLargeArrays`` — per-chunk inclusive scan.
+
+Category: *Embarrassingly Independent* with a host-side carry: each task
+scans its chunk and emits the chunk total; the host (L3) prefix-sums the
+totals and adds the carry to each chunk — the classic scan-then-propagate
+decomposition the SDK's multi-pass kernel uses, with the tiny middle pass
+on the host.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Elements per chunk.
+CHUNK = 16384
+
+
+def _kernel(x_ref, o_ref, tot_ref):
+    # Hillis–Steele doubling scan: log2(N) shifted adds.  (jnp.cumsum
+    # lowers to a width-N reduce-window here — O(N^2) on the CPU backend
+    # — so the classic data-parallel scan is both the faithful SDK
+    # structure from the SDK kernels and orders of magnitude faster.)
+    n = x_ref.shape[0]
+    y = x_ref[...]
+    k = 1
+    while k < n:
+        shifted = jnp.pad(y, (k, 0))[:n]
+        y = y + shifted
+        k *= 2
+    o_ref[...] = y
+    tot_ref[...] = y[-1:]
+
+
+def prefix_sum(x):
+    """x: f32[N] -> (inclusive scan f32[N], chunk total f32[1])."""
+    n = x.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ),
+        interpret=True,
+    )(x)

@@ -1,0 +1,41 @@
+"""Parboil ``stencil`` — 5-point Jacobi step on a row band.
+
+Category: *False Dependent*: band ``b`` reads one row owned by each
+neighbouring band (read-only within a step), so the streamed port ships
+one halo row per side with every task (paper Fig. 7 pattern).
+
+out[r, c] = c0 * x[r, c] + c1 * (x[r-1, c] + x[r+1, c] + x[r, c-1] + x[r, c+1])
+with zero boundaries along the columns.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Band geometry of the AOT variant (plus 1 halo row each side).
+ROWS = 128
+COLS = 512
+C0 = 0.5
+C1 = 0.125
+
+
+def _kernel(x_ref, o_ref):
+    rows, cols = o_ref.shape
+    x = x_ref[...]
+    center = x[1:-1, :]
+    north = x[:-2, :]
+    south = x[2:, :]
+    west = jnp.pad(center, ((0, 0), (1, 0)))[:, :cols]
+    east = jnp.pad(center, ((0, 0), (0, 1)))[:, 1:]
+    o_ref[...] = jnp.float32(C0) * center + jnp.float32(C1) * (north + south + west + east)
+
+
+def stencil2d(x_halo):
+    """x_halo: f32[R + 2, C] (band plus halo rows) -> f32[R, C]."""
+    rows = x_halo.shape[0] - 2
+    cols = x_halo.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x_halo)

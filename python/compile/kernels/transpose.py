@@ -1,0 +1,37 @@
+"""NVIDIA SDK ``Transpose`` — tiled matrix transpose of a row band.
+
+Category: *Embarrassingly Independent*.  The matrix is partitioned into
+row bands; each task reads a full-width band f32[RB, C] and writes the
+transposed band f32[C, RB] (the host assembles the column strips).
+
+Hardware adaptation: OpenCL uses a local-memory tile to get coalesced
+global writes; on TPU the whole band sits in VMEM and the relayout is a
+single vector shuffle, so the kernel is one transposed copy per grid tile.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Rows per band (chunk) and band width of the AOT variant.
+ROWS = 128
+COLS = 1024
+TILE = 128  # grid tile along the columns
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].T
+
+
+def transpose(x):
+    """x: f32[R, C] -> f32[C, R] (R rows = one band)."""
+    r, c = x.shape
+    grid = (c // TILE,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((r, TILE), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((TILE, r), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, r), jnp.float32),
+        interpret=True,
+    )(x)

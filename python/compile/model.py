@@ -1,0 +1,158 @@
+"""L2 — chunk-level JAX computations, one per streamed benchmark.
+
+Each function here is the *task body* the paper's streamed ports run per
+stream: it consumes one chunk (plus halo where the category requires it)
+and produces that chunk's output.  The compute hot-spot is an L1 Pallas
+kernel (``kernels/``); anything XLA fuses well natively (e.g. FFTs) stays
+at this layer.  ``aot.py`` lowers every function below to an HLO-text
+artifact the Rust runtime executes — Python never runs at request time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    blackscholes,
+    burner,
+    cfft,
+    convsep,
+    dct8x8,
+    dotproduct,
+    fwt,
+    hotspot,
+    histogram,
+    lavamd,
+    matmul,
+    nn,
+    nw,
+    reduction,
+    scan,
+    stencil,
+    transpose,
+    vecadd,
+)
+
+
+# --- Embarrassingly Independent -----------------------------------------
+
+def nn_chunk(records, target):
+    """Rodinia nn: distances of one record chunk to the target."""
+    return (nn.nn_dist(records, target),)
+
+
+def vecadd_chunk(a, b):
+    """VectorAdd: c = a + b for one chunk."""
+    return (vecadd.vector_add(a, b),)
+
+
+def transpose_chunk(x):
+    """Transpose: one row band -> transposed column strip."""
+    return (transpose.transpose(x),)
+
+
+def matmul_chunk(a, b):
+    """MatrixMul/sgemm: one row band of A times (shared) B."""
+    return (matmul.matmul(a, b),)
+
+
+def scan_chunk(x):
+    """PrefixSum: per-chunk inclusive scan + chunk total (host carries)."""
+    return scan.prefix_sum(x)
+
+
+def histogram_chunk(x):
+    """Histogram: per-chunk 256-bin counts (host merges)."""
+    return (histogram.histogram(x),)
+
+
+def blackscholes_chunk(s, k, t):
+    """BlackScholes: (call, put) prices for one option chunk."""
+    return blackscholes.black_scholes(s, k, t)
+
+
+def dct8x8_chunk(x, basis):
+    """DCT8x8: blockwise 2D DCT of one row band (basis broadcast in)."""
+    return (dct8x8.dct8x8(x, basis),)
+
+
+def dotproduct_chunk(a, b):
+    """DotProduct: one chunk's partial dot product (host reduces)."""
+    return (dotproduct.dot_product(a, b),)
+
+
+# --- Iterative (non-streamable control, Table 2) --------------------------
+
+def hotspot_chunk(temp, power):
+    """hotspot: one shape-preserving diffusion step (device ping-pong)."""
+    return (hotspot.hotspot_step(temp, power),)
+
+
+# --- False Dependent (redundant boundary/halo transfer) ------------------
+
+def fwt_chunk(x):
+    """FastWalshTransform: transform of one (boundary-padded) block."""
+    return (fwt.fwt(x),)
+
+
+def convsep_chunk(img_halo, krow, kcol):
+    """ConvolutionSeparable: both passes over one halo-padded row band."""
+    return (convsep.conv_sep(img_halo, krow, kcol),)
+
+
+def stencil_chunk(x_halo):
+    """Parboil stencil: one Jacobi step over a halo-padded row band."""
+    return (stencil.stencil2d(x_halo),)
+
+
+def lavamd_chunk(x_halo):
+    """lavaMD: particle potentials for one box chunk plus halo window."""
+    return (lavamd.lavamd_box(x_halo, lavamd.CHUNK),)
+
+
+def cfft2d_chunk(tile, filt):
+    """ConvolutionFFT2D: circular conv of one tile with the filter.
+
+    FFT/IFFT run at this layer (XLA-native FFT op); the spectral pointwise
+    multiply is the L1 Pallas kernel.
+    """
+    ft = jnp.fft.fft2(tile.astype(jnp.complex64))
+    ff = jnp.fft.fft2(filt.astype(jnp.complex64))
+    re, im = cfft.complex_pointwise_mul(
+        jnp.real(ft), jnp.imag(ft), jnp.real(ff), jnp.imag(ff)
+    )
+    out = jnp.fft.ifft2(jax.lax.complex(re, im))
+    return (jnp.real(out),)
+
+
+# --- True Dependent (wavefront) ------------------------------------------
+
+def nw_chunk(north, west, corner, sub):
+    """Needleman-Wunsch: one DP tile given its north/west/corner edges.
+
+    Returns (tile, south edge, east edge) — the edges are separate
+    contiguous outputs so dependent tiles can read them as flat device
+    regions.
+    """
+    return nw.nw_tile(north, west, corner, sub)
+
+
+# --- Fig. 3 code variants & synthetic corpus backing ----------------------
+
+def reduction_v1_chunk(x):
+    """Reduction v1: full device-side sum (scalar D2H)."""
+    return (reduction.reduction_v1(x),)
+
+
+def reduction_v2_chunk(x):
+    """Reduction v2: partial sums shipped to the host final pass."""
+    return (reduction.reduction_v2(x),)
+
+
+def make_burner_chunk(iters):
+    """Burner variant: `iters` FMA sweeps over one block."""
+
+    def burner_chunk(x):
+        return (burner.burner(x, iters),)
+
+    burner_chunk.__name__ = f"burner_{iters}_chunk"
+    return burner_chunk

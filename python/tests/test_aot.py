@@ -1,0 +1,71 @@
+"""AOT pipeline checks: manifest integrity and HLO-text artifact health."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART_DIR, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def _manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_specs():
+    names = {a["name"] for a in _manifest()["artifacts"]}
+    spec_names = {s[0] for s in aot._spec_list()}
+    assert names == spec_names
+
+
+def test_manifest_format_version():
+    assert _manifest()["format"] == "hlo-text/v1"
+
+
+def test_artifact_files_exist_and_parse():
+    for a in _manifest()["artifacts"]:
+        path = os.path.join(ART_DIR, a["file"])
+        assert os.path.exists(path), a["file"]
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text  # parseable HLO text
+
+
+def test_manifest_shapes_match_eval_shape():
+    specs = {s[0]: s for s in aot._spec_list()}
+    for a in _manifest()["artifacts"]:
+        _, fn, example_args, _ = specs[a["name"]]
+        outs = jax.eval_shape(fn, *example_args)
+        assert len(a["outputs"]) == len(outs)
+        for rec, o in zip(a["outputs"], outs):
+            assert tuple(rec["shape"]) == o.shape
+        for rec, arg in zip(a["inputs"], example_args):
+            assert tuple(rec["shape"]) == arg.shape
+
+
+def test_flop_estimates_positive():
+    for a in _manifest()["artifacts"]:
+        assert a["flops_per_call"] > 0
+
+
+def test_lowering_is_deterministic():
+    """Re-lowering a spec yields identical HLO text (reproducible builds)."""
+    name, fn, example_args, _ = aot._spec_list()[0]
+    t1 = aot.to_hlo_text(jax.jit(fn).lower(*example_args))
+    t2 = aot.to_hlo_text(jax.jit(fn).lower(*example_args))
+    assert t1 == t2
+
+
+def test_dtype_names_restricted():
+    for a in _manifest()["artifacts"]:
+        for io in a["inputs"] + a["outputs"]:
+            assert io["dtype"] in ("f32", "i32")

@@ -1,0 +1,377 @@
+"""L1 correctness: every Pallas kernel vs the pure-numpy oracle.
+
+Hypothesis sweeps shapes and values within each kernel's supported chunk
+envelope; shapes are drawn from small power-of-two sets so jit caching
+keeps the suite fast.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import (
+    blackscholes,
+    burner,
+    convsep,
+    fwt,
+    histogram,
+    lavamd,
+    matmul,
+    nn,
+    nw,
+    reduction,
+    ref,
+    scan,
+    stencil,
+    transpose,
+    vecadd,
+)
+
+RNG = np.random.default_rng(1234)
+FAST = settings(max_examples=8, deadline=None)
+
+
+def normals(rng_seed, *shape):
+    return np.random.default_rng(rng_seed).normal(size=shape).astype(np.float32)
+
+
+# --- nn -------------------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([64, 256, 1024]))
+def test_nn_dist(seed, n):
+    rec = normals(seed, n, 2)
+    tgt = normals(seed + 1, 2)
+    got = np.array(nn.nn_dist(rec, tgt))
+    np.testing.assert_allclose(got, ref.nn_dist(rec, tgt), rtol=1e-5, atol=1e-5)
+
+
+def test_nn_dist_zero_distance():
+    rec = np.array([[1.0, 2.0], [3.0, 4.0]], np.float32)
+    got = np.array(nn.nn_dist(rec, np.array([1.0, 2.0], np.float32)))
+    assert got[0] == 0.0
+    np.testing.assert_allclose(got[1], np.sqrt(8.0), rtol=1e-6)
+
+
+# --- vector add -------------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 512, 4096]))
+def test_vector_add(seed, n):
+    a, b = normals(seed, n), normals(seed + 1, n)
+    np.testing.assert_allclose(np.array(vecadd.vector_add(a, b)), ref.vector_add(a, b))
+
+
+# --- transpose --------------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([(128, 128), (128, 256), (64, 128)]))
+def test_transpose(seed, shape):
+    x = normals(seed, *shape)
+    np.testing.assert_array_equal(np.array(transpose.transpose(x)), ref.transpose(x))
+
+
+# --- matmul -----------------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([(128, 64, 128), (128, 128, 256)]))
+def test_matmul(seed, dims):
+    m, k, n = dims
+    a, b = normals(seed, m, k), normals(seed + 1, k, n)
+    np.testing.assert_allclose(np.array(matmul.matmul(a, b)), ref.matmul(a, b), rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_identity():
+    a = normals(7, 128, 128)
+    eye = np.eye(128, dtype=np.float32)
+    np.testing.assert_allclose(np.array(matmul.matmul(a, eye)), a, rtol=1e-6)
+
+
+# --- prefix sum ---------------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 128, 2048]))
+def test_prefix_sum(seed, n):
+    x = normals(seed, n)
+    y, tot = scan.prefix_sum(x)
+    ry, rtot = ref.prefix_sum(x)
+    np.testing.assert_allclose(np.array(y), ry, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.array(tot), rtot, rtol=1e-4, atol=1e-4)
+
+
+def test_prefix_sum_total_is_last():
+    x = normals(3, 256)
+    y, tot = scan.prefix_sum(x)
+    assert np.array(y)[-1] == np.array(tot)[0]
+
+
+# --- histogram ----------------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([64, 1024]))
+def test_histogram(seed, n):
+    x = np.random.default_rng(seed).integers(0, 256, n).astype(np.int32)
+    got = np.array(histogram.histogram(x))
+    np.testing.assert_array_equal(got, ref.histogram(x))
+    assert got.sum() == n  # conservation of mass
+
+
+def test_histogram_single_bin():
+    x = np.full(100, 42, np.int32)
+    got = np.array(histogram.histogram(x))
+    assert got[42] == 100 and got.sum() == 100
+
+
+# --- black-scholes --------------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([64, 512]))
+def test_black_scholes(seed, n):
+    r = np.random.default_rng(seed)
+    s = r.uniform(5.0, 30.0, n).astype(np.float32)
+    k = r.uniform(1.0, 100.0, n).astype(np.float32)
+    t = r.uniform(0.25, 10.0, n).astype(np.float32)
+    call, put = blackscholes.black_scholes(s, k, t)
+    rcall, rput = ref.black_scholes(s, k, t)
+    np.testing.assert_allclose(np.array(call), rcall, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.array(put), rput, rtol=1e-3, atol=1e-3)
+
+
+def test_black_scholes_put_call_parity():
+    n = 256
+    r = np.random.default_rng(9)
+    s = r.uniform(5.0, 30.0, n).astype(np.float32)
+    k = r.uniform(1.0, 100.0, n).astype(np.float32)
+    t = r.uniform(0.25, 10.0, n).astype(np.float32)
+    call, put = map(np.array, blackscholes.black_scholes(s, k, t))
+    # C - P = S - K * exp(-rT)
+    np.testing.assert_allclose(
+        call - put, s - k * np.exp(-blackscholes.RISKFREE * t), rtol=1e-3, atol=1e-2
+    )
+
+
+# --- fwt -------------------------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 64, 256]))
+def test_fwt(seed, n):
+    x = normals(seed, n)
+    np.testing.assert_allclose(np.array(fwt.fwt(x)), ref.fwt(x), rtol=1e-3, atol=1e-3)
+
+
+def test_fwt_involution():
+    # WHT is an involution up to scaling: fwt(fwt(x)) == n * x.
+    x = normals(5, 64)
+    twice = np.array(fwt.fwt(np.array(fwt.fwt(x))))
+    np.testing.assert_allclose(twice, 64.0 * x, rtol=1e-3, atol=1e-3)
+
+
+# --- conv separable ----------------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([(32, 64), (16, 128)]))
+def test_conv_sep(seed, shape):
+    rows, cols = shape
+    h = convsep.HALO
+    img = normals(seed, rows + 2 * h, cols)
+    kr, kc = normals(seed + 1, 2 * h + 1), normals(seed + 2, 2 * h + 1)
+    got = np.array(convsep.conv_sep(img, kr, kc))
+    np.testing.assert_allclose(got, ref.conv_sep(img, kr, kc), rtol=1e-3, atol=1e-3)
+
+
+def test_conv_sep_delta_kernel():
+    # Delta filters in both passes reproduce the interior band.
+    h = convsep.HALO
+    img = normals(11, 32 + 2 * h, 64)
+    delta = np.zeros(2 * h + 1, np.float32)
+    delta[h] = 1.0
+    got = np.array(convsep.conv_sep(img, delta, delta))
+    np.testing.assert_allclose(got, img[h:-h, :], rtol=1e-6)
+
+
+# --- stencil -----------------------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([(16, 64), (64, 128)]))
+def test_stencil2d(seed, shape):
+    rows, cols = shape
+    x = normals(seed, rows + 2, cols)
+    np.testing.assert_allclose(
+        np.array(stencil.stencil2d(x)), ref.stencil2d(x), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_stencil2d_constant_field():
+    # Interior of a constant field: c0*v + 4*c1*v except at column borders.
+    x = np.full((18, 32), 2.0, np.float32)
+    got = np.array(stencil.stencil2d(x))
+    interior = 2.0 * (stencil.C0 + 4 * stencil.C1)
+    np.testing.assert_allclose(got[:, 1:-1], interior, rtol=1e-6)
+
+
+# --- lavaMD ------------------------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([(64, 16), (128, 32)]))
+def test_lavamd(seed, cfg):
+    n, h = cfg
+    x = normals(seed, n + 2 * h)
+    got = np.array(lavamd.lavamd_box(x, n))
+    np.testing.assert_allclose(got, ref.lavamd(x, n), rtol=1e-3, atol=1e-3)
+
+
+def test_lavamd_identical_particles():
+    # All particles at the same point: each sees 2H neighbours at distance 0.
+    n, h = 32, 8
+    x = np.zeros(n + 2 * h, np.float32)
+    got = np.array(lavamd.lavamd_box(x, n))
+    np.testing.assert_allclose(got, 2 * h, rtol=1e-5)
+
+
+# --- nw ---------------------------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8, 16]))
+def test_nw_tile(seed, t):
+    r = np.random.default_rng(seed)
+    north = r.integers(-50, 50, t).astype(np.int32)
+    west = r.integers(-50, 50, t).astype(np.int32)
+    corner = r.integers(-50, 50, 1).astype(np.int32)
+    sub = r.integers(-5, 10, (t, t)).astype(np.int32)
+    got = np.array(nw.nw_tile(north, west, corner, sub)[0])
+    np.testing.assert_array_equal(got, ref.nw_tile(north, west, corner, sub))
+
+
+def test_nw_tile_monotone_gap_row():
+    # Zero substitution scores and huge penalties force pure diagonal walk.
+    t = 8
+    north = (-10 * np.arange(1, t + 1)).astype(np.int32)
+    west = (-10 * np.arange(1, t + 1)).astype(np.int32)
+    corner = np.zeros(1, np.int32)
+    sub = np.zeros((t, t), np.int32)
+    got = np.array(nw.nw_tile(north, west, corner, sub)[0])
+    # Diagonal elements accumulate only substitution scores (= 0).
+    np.testing.assert_array_equal(np.diag(got), np.zeros(t, np.int64))
+
+
+# --- reduction variants -------------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([512, 4096]))
+def test_reduction_v1(seed, n):
+    x = normals(seed, n)
+    np.testing.assert_allclose(
+        np.array(reduction.reduction_v1(x)), ref.reduction_v1(x), rtol=1e-3, atol=1e-3
+    )
+
+
+@FAST
+@given(st.integers(0, 2**31 - 1))
+def test_reduction_v2(seed):
+    x = normals(seed, 4096)
+    got = np.array(reduction.reduction_v2(x))
+    want = ref.reduction_v2(x, reduction.BLOCKS)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_reduction_variants_agree():
+    x = normals(13, reduction.CHUNK)
+    v1 = np.array(reduction.reduction_v1(x))[0]
+    v2 = np.array(reduction.reduction_v2(x)).sum()
+    np.testing.assert_allclose(v1, v2, rtol=1e-3)
+
+
+# --- burner -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("iters", burner.ITER_VARIANTS)
+def test_burner(iters):
+    x = normals(17, 1024)
+    np.testing.assert_allclose(
+        np.array(burner.burner(x, iters)), ref.burner(x, iters), rtol=1e-4, atol=1e-5
+    )
+
+
+# --- cfft2d (L2 composition) ----------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([8, 16, 32]))
+def test_cfft2d(seed, t):
+    tile = normals(seed, t, t)
+    filt = normals(seed + 1, t, t)
+    got = np.array(model.cfft2d_chunk(tile, filt)[0])
+    np.testing.assert_allclose(got, ref.cfft2d(tile, filt), rtol=1e-2, atol=1e-2)
+
+
+def test_cfft2d_delta_filter():
+    # Convolving with a delta at the origin is the identity.
+    t = 16
+    tile = normals(21, t, t)
+    filt = np.zeros((t, t), np.float32)
+    filt[0, 0] = 1.0
+    got = np.array(model.cfft2d_chunk(tile, filt)[0])
+    np.testing.assert_allclose(got, tile, rtol=1e-3, atol=1e-3)
+
+
+# --- dct8x8 -------------------------------------------------------------------------
+
+from compile.kernels import dct8x8, dotproduct, hotspot
+
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([(16, 32), (64, 64)]))
+def test_dct8x8(seed, shape):
+    x = normals(seed, *shape)
+    got = np.array(dct8x8.dct8x8(x))
+    np.testing.assert_allclose(got, ref.dct8x8(x), rtol=1e-3, atol=1e-3)
+
+
+def test_dct8x8_constant_block_energy():
+    # A constant block concentrates all energy in the DC coefficient.
+    x = np.full((8, 8), 3.0, np.float32)
+    got = np.array(dct8x8.dct8x8(x))
+    assert abs(got[0, 0] - 24.0) < 1e-3  # 8 * 3 * (1/sqrt(2))^2 * ... = 24
+    assert np.abs(got).sum() - abs(got[0, 0]) < 1e-3
+
+
+# --- dot product ---------------------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([64, 4096]))
+def test_dot_product(seed, n):
+    a, b = normals(seed, n), normals(seed + 1, n)
+    got = np.array(dotproduct.dot_product(a, b))
+    np.testing.assert_allclose(got, ref.dot_product(a, b), rtol=1e-3, atol=1e-3)
+
+
+def test_dot_product_orthogonal():
+    a = np.array([1.0, 0.0, 1.0, 0.0], np.float32)
+    b = np.array([0.0, 2.0, 0.0, 2.0], np.float32)
+    assert np.array(dotproduct.dot_product(a, b))[0] == 0.0
+
+
+# --- hotspot -------------------------------------------------------------------------
+
+@FAST
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 64]))
+def test_hotspot_step(seed, n):
+    t = normals(seed, n, n)
+    p = normals(seed + 1, n, n)
+    got = np.array(hotspot.hotspot_step(t, p))
+    np.testing.assert_allclose(got, ref.hotspot_step(t, p), rtol=1e-4, atol=1e-4)
+
+
+def test_hotspot_boundary_preserved():
+    t = normals(5, 32, 32)
+    p = normals(6, 32, 32)
+    got = np.array(hotspot.hotspot_step(t, p))
+    np.testing.assert_array_equal(got[0, :], t[0, :])
+    np.testing.assert_array_equal(got[:, -1], t[:, -1])
+
+
+def test_hotspot_equilibrium_fixed_point():
+    # Uniform temperature + zero power: laplacian = 0 -> fixed point.
+    t = np.full((16, 16), 5.0, np.float32)
+    p = np.zeros((16, 16), np.float32)
+    got = np.array(hotspot.hotspot_step(t, p))
+    np.testing.assert_array_equal(got, t)

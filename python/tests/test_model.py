@@ -1,0 +1,171 @@
+"""L2 correctness: chunked (streamed) compositions equal the whole-array
+computation — the invariant that makes the L3 partitioners sound.
+
+Each test mirrors what the Rust workload drivers do: cut the input the
+way the matching partitioner would (independent chunks / halo bands /
+wavefront tiles), run the chunk function per task, reassemble, and
+compare against the unpartitioned oracle.
+"""
+
+import numpy as np
+
+from compile import model
+from compile.kernels import convsep, lavamd, nw, ref, scan
+
+RNG = np.random.default_rng(42)
+
+
+def test_nn_chunked_equals_full():
+    n, chunks = 1024, 4
+    rec = RNG.normal(size=(n, 2)).astype(np.float32)
+    tgt = np.array([0.25, -0.5], np.float32)
+    parts = [
+        np.array(model.nn_chunk(rec[i::1][: n // chunks] if False else rec[i * (n // chunks):(i + 1) * (n // chunks)], tgt)[0])
+        for i in range(chunks)
+    ]
+    np.testing.assert_allclose(np.concatenate(parts), ref.nn_dist(rec, tgt), rtol=1e-5, atol=1e-5)
+
+
+def test_scan_chunked_with_host_carry():
+    n, chunks = 2048, 8
+    x = RNG.normal(size=n).astype(np.float32)
+    outs, carry = [], np.float32(0.0)
+    for i in range(chunks):
+        part = x[i * (n // chunks):(i + 1) * (n // chunks)]
+        y, tot = model.scan_chunk(part)
+        outs.append(np.array(y) + carry)  # host-side carry propagation
+        carry = carry + np.array(tot)[0]
+    got = np.concatenate(outs)
+    want, _ = ref.prefix_sum(x)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_histogram_chunked_merge():
+    n, chunks = 4096, 4
+    x = RNG.integers(0, 256, n).astype(np.int32)
+    merged = np.zeros(256, np.int64)
+    for i in range(chunks):
+        part = x[i * (n // chunks):(i + 1) * (n // chunks)]
+        merged += np.array(model.histogram_chunk(part)[0])
+    np.testing.assert_array_equal(merged.astype(np.int32), ref.histogram(x))
+
+
+def test_transpose_banded():
+    rows, cols, bands = 256, 128, 4
+    x = RNG.normal(size=(rows, cols)).astype(np.float32)
+    rb = rows // bands
+    strips = [np.array(model.transpose_chunk(x[i * rb:(i + 1) * rb, :])[0]) for i in range(bands)]
+    got = np.concatenate(strips, axis=1)
+    np.testing.assert_array_equal(got, ref.transpose(x))
+
+
+def test_matmul_row_bands():
+    m, k, n, bands = 256, 64, 128, 4
+    a = RNG.normal(size=(m, k)).astype(np.float32)
+    b = RNG.normal(size=(k, n)).astype(np.float32)
+    mb = m // bands
+    parts = [np.array(model.matmul_chunk(a[i * mb:(i + 1) * mb, :], b)[0]) for i in range(bands)]
+    np.testing.assert_allclose(np.concatenate(parts), ref.matmul(a, b), rtol=2e-4, atol=2e-4)
+
+
+def test_convsep_halo_bands():
+    h = convsep.HALO
+    rows, cols, bands = 128, 64, 4
+    img = RNG.normal(size=(rows, cols)).astype(np.float32)
+    kr = RNG.normal(size=2 * h + 1).astype(np.float32)
+    kc = RNG.normal(size=2 * h + 1).astype(np.float32)
+    # Oracle over the zero-padded full image.
+    padded = np.pad(img, ((h, h), (0, 0)))
+    want = ref.conv_sep(padded, kr, kc)
+    rb = rows // bands
+    parts = []
+    for i in range(bands):
+        lo, hi = i * rb, (i + 1) * rb
+        band = padded[lo : hi + 2 * h, :]  # halo rows ship redundantly
+        parts.append(np.array(model.convsep_chunk(band, kr, kc)[0]))
+    np.testing.assert_allclose(np.concatenate(parts), want, rtol=1e-3, atol=1e-3)
+
+
+def test_stencil_halo_bands():
+    rows, cols, bands = 64, 128, 4
+    x = RNG.normal(size=(rows, cols)).astype(np.float32)
+    padded = np.pad(x, ((1, 1), (0, 0)))
+    want = ref.stencil2d(padded)
+    rb = rows // bands
+    parts = []
+    for i in range(bands):
+        band = padded[i * rb : (i + 1) * rb + 2, :]
+        parts.append(np.array(model.stencil_chunk(band)[0]))
+    np.testing.assert_allclose(np.concatenate(parts), want, rtol=1e-4, atol=1e-4)
+
+
+def test_lavamd_halo_chunks():
+    n, chunks, h = 256, 4, 16
+    x = RNG.normal(size=n).astype(np.float32)
+    padded = np.pad(x, (h, h))
+    want = ref.lavamd(padded, n)
+    nc = n // chunks
+    parts = []
+    for i in range(chunks):
+        win = padded[i * nc : i * nc + nc + 2 * h]
+        parts.append(np.array(lavamd.lavamd_box(win, nc)))
+    np.testing.assert_allclose(np.concatenate(parts), want, rtol=1e-3, atol=1e-3)
+
+
+def test_nw_wavefront_tiles_equal_full_matrix():
+    """Tiled wavefront NW == whole-matrix DP — the True Dependent invariant."""
+    t, tiles = 8, 3  # 24x24 matrix of 8x8 tiles
+    size = t * tiles
+    penalty = nw.PENALTY
+    sub = RNG.integers(-5, 10, (size, size)).astype(np.int32)
+    want = ref.nw_full(sub, penalty)
+
+    # Boundary rows per Rodinia: -penalty * (1-based index).
+    full = np.zeros((size, size), np.int64)
+    for d in range(2 * tiles - 1):  # diagonal-by-diagonal (paper Fig. 8)
+        for bi in range(tiles):
+            bj = d - bi
+            if bj < 0 or bj >= tiles:
+                continue
+            r0, c0 = bi * t, bj * t
+            north = (
+                full[r0 - 1, c0 : c0 + t]
+                if r0 > 0
+                else -penalty * np.arange(c0 + 1, c0 + t + 1)
+            ).astype(np.int32)
+            west = (
+                full[r0 : r0 + t, c0 - 1]
+                if c0 > 0
+                else -penalty * np.arange(r0 + 1, r0 + t + 1)
+            ).astype(np.int32)
+            if r0 > 0 and c0 > 0:
+                corner = np.array([full[r0 - 1, c0 - 1]], np.int32)
+            elif r0 > 0:
+                corner = np.array([-penalty * r0], np.int32)
+            elif c0 > 0:
+                corner = np.array([-penalty * c0], np.int32)
+            else:
+                corner = np.zeros(1, np.int32)
+            tile = np.array(
+                model.nw_chunk(north, west, corner, sub[r0 : r0 + t, c0 : c0 + t])[0]
+            )
+            full[r0 : r0 + t, c0 : c0 + t] = tile
+    np.testing.assert_array_equal(full.astype(np.int32), want)
+
+
+def test_reduction_v1_chunked():
+    n, chunks = 8192, 8
+    x = RNG.normal(size=n).astype(np.float32)
+    total = sum(float(np.array(model.reduction_v1_chunk(x[i * (n // chunks):(i + 1) * (n // chunks)])[0])[0]) for i in range(chunks))
+    np.testing.assert_allclose(total, x.astype(np.float64).sum(), rtol=1e-3)
+
+
+def test_cfft2d_tiles_independent():
+    # Spectral conv per tile: each tile convolves independently (overlap-save
+    # aprons are the L3 partitioner's job; here tiles are exact).
+    t = 16
+    tiles = [RNG.normal(size=(t, t)).astype(np.float32) for _ in range(3)]
+    filt = RNG.normal(size=(t, t)).astype(np.float32)
+    for tile in tiles:
+        got = np.array(model.cfft2d_chunk(tile, filt)[0])
+        np.testing.assert_allclose(got, ref.cfft2d(tile, filt), rtol=1e-2, atol=1e-2)

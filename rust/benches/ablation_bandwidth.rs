@@ -1,0 +1,35 @@
+//! Ablation A3: how R (and hence streaming necessity) shifts with link
+//! bandwidth — the "platform divergence" of Fig. 4 swept continuously.
+//!
+//! `cargo bench --bench ablation_bandwidth`
+
+use hetstream::analysis::fraction_at_or_below;
+use hetstream::corpus::all_configs;
+use hetstream::device::DeviceProfile;
+use hetstream::experiments::analytic_stage_times;
+use hetstream::metrics::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "A3 — corpus CDF(R_H2D <= 0.1) vs PCIe bandwidth",
+        &["link GB/s", "CDF(0.1)", "CDF(0.3)", "median R_H2D", "worthwhile (0.1<R<0.9)"],
+    );
+    for bw in [2.0, 4.0, 6.0, 12.0, 24.0] {
+        let mut p = DeviceProfile::mic31sp();
+        p.h2d_gbps = bw;
+        p.d2h_gbps = bw * 1.08;
+        let mut rs: Vec<f64> =
+            all_configs().iter().map(|c| analytic_stage_times(c, &p).r_h2d()).collect();
+        rs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let worthwhile = rs.iter().filter(|&&r| (0.1..=0.9).contains(&r)).count();
+        t.row(&[
+            format!("{bw:.0}"),
+            format!("{:.1}%", 100.0 * fraction_at_or_below(&rs, 0.1)),
+            format!("{:.1}%", 100.0 * fraction_at_or_below(&rs, 0.3)),
+            format!("{:.3}", rs[rs.len() / 2]),
+            format!("{worthwhile}/223"),
+        ]);
+    }
+    println!("{}", t.markdown());
+    println!("KEY SHAPE — faster links shrink R: fewer codes are worth streaming (Fig. 4 logic)");
+}

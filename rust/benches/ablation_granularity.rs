@@ -1,0 +1,35 @@
+//! Ablation A2: streaming gain vs task granularity (nn).
+//!
+//! The paper's future work ("proper task granularity"): too few tasks
+//! can't fill the pipeline; too many pay per-task DMA latency.  This
+//! sweep exposes both ends.
+//!
+//! `cargo bench --bench ablation_granularity`
+
+use hetstream::experiments::fig9::measure_one;
+use hetstream::hstreams::ContextBuilder;
+use hetstream::metrics::Table;
+use hetstream::workloads::Nn;
+
+fn main() {
+    let ctx = ContextBuilder::new().only_artifacts(["nn_dist"]).build().expect("context");
+
+    let mut t = Table::new(
+        "A2 — nn: improvement vs task count (4 streams)",
+        &["tasks (x8 chunks)", "baseline (ms)", "streamed (ms)", "improvement"],
+    );
+    // Nn::new(scale) gives 8*scale chunks of 16384 records each.
+    for scale in [1usize, 2, 4, 8] {
+        let b = Nn::new(scale);
+        let row = measure_one(&ctx, &b, 4, 3).expect("measure");
+        assert!(row.validated);
+        t.row(&[
+            format!("{}", 8 * scale),
+            format!("{:.2}", row.baseline_ms),
+            format!("{:.2}", row.streamed_ms),
+            format!("{:+.1}%", row.improvement_pct),
+        ]);
+    }
+    println!("{}", t.markdown());
+    println!("KEY SHAPE — more tasks amortize pipeline fill/drain until DMA latency dominates");
+}

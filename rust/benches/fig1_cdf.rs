@@ -1,0 +1,47 @@
+//! Bench E1 / Fig. 1: CDF of R_H2D and R_D2H over the 223-config corpus.
+//!
+//! Regenerates the paper's headline statistic — "H2D takes less than 10%
+//! of end-to-end time for more than 50% of configurations; ~70% for D2H"
+//! — both analytically (all 223 configs) and through the DMA/compute
+//! engines (stratified sample, 11-run medians).
+//!
+//! `cargo bench --bench fig1_cdf`
+
+use hetstream::analysis::fraction_at_or_below;
+use hetstream::device::DeviceProfile;
+use hetstream::experiments::{fig1_analytic, fig1_engine};
+use hetstream::hstreams::ContextBuilder;
+
+fn main() {
+    let profile = DeviceProfile::mic31sp();
+
+    let t0 = std::time::Instant::now();
+    let (table, rows) = fig1_analytic(&profile);
+    println!("{}", table.markdown());
+    let h2d: Vec<f64> = rows.iter().map(|r| r.r_h2d).collect();
+    let d2h: Vec<f64> = rows.iter().map(|r| r.r_d2h).collect();
+    println!(
+        "analytic sweep: {} configs in {:.1} ms",
+        rows.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    println!(
+        "KEY SHAPE — paper: CDF(0.1) > 50% (H2D), ~70% (D2H); measured: {:.1}% / {:.1}%\n",
+        100.0 * fraction_at_or_below(&h2d, 0.1),
+        100.0 * fraction_at_or_below(&d2h, 0.1),
+    );
+
+    // Engine path (the §3.3 protocol on the simulated platform).
+    let sample = std::env::var("FIG1_SAMPLE").ok().and_then(|s| s.parse().ok()).unwrap_or(24);
+    let runs = std::env::var("FIG1_RUNS").ok().and_then(|s| s.parse().ok()).unwrap_or(11);
+    let ctx = ContextBuilder::new().only_artifacts(["burner_64"]).build().expect("context");
+    let t0 = std::time::Instant::now();
+    let (etable, erows) = fig1_engine(&ctx, runs, Some(sample));
+    println!("{}", etable.markdown());
+    println!(
+        "engine sample: {} configs x {} runs in {:.1} s",
+        erows.len(),
+        runs,
+        t0.elapsed().as_secs_f64()
+    );
+}

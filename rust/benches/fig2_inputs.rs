@@ -1,0 +1,21 @@
+//! Bench E2 / Fig. 2: R vs input dataset — lbm (short/long) and FDTD3d
+//! (timestep count).  Expected shape: lbm-short transfer-heavy vs
+//! lbm-long compute-heavy; FDTD3d's R falls as timesteps rise.
+//!
+//! `cargo bench --bench fig2_inputs`
+
+use hetstream::device::DeviceProfile;
+use hetstream::experiments::fig2;
+use hetstream::hstreams::ContextBuilder;
+
+fn main() {
+    let profile = DeviceProfile::mic31sp();
+    println!("{}", fig2(None, &profile, 11).markdown());
+
+    // Engine confirmation (11-run medians through the simulator).
+    let ctx = ContextBuilder::new().only_artifacts(["burner_64"]).build().expect("context");
+    let t0 = std::time::Instant::now();
+    println!("{}", fig2(Some(&ctx), &profile, 11).markdown());
+    println!("engine pass in {:.1} s", t0.elapsed().as_secs_f64());
+    println!("KEY SHAPE — paper: R(lbm short) >> R(lbm long); R(FDTD3d) decreases with steps");
+}

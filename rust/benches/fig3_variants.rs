@@ -1,0 +1,40 @@
+//! Bench E3 / Fig. 3: R across code variants — Reduction v1 (full
+//! device-side reduce, scalar D2H) vs v2 (partial sums to host).
+//! Expected shape: v2 has the larger R_D2H at every size.
+//!
+//! `cargo bench --bench fig3_variants`
+
+use hetstream::device::DeviceProfile;
+use hetstream::experiments::fig3;
+use hetstream::hstreams::ContextBuilder;
+use hetstream::workloads::{Benchmark, Mode, ReductionV1, ReductionV2};
+
+fn main() {
+    let profile = DeviceProfile::mic31sp();
+    println!("{}", fig3(None, &profile, 11).markdown());
+
+    let ctx = ContextBuilder::new().only_artifacts(["burner_64"]).build().expect("context");
+    println!("{}", fig3(Some(&ctx), &profile, 11).markdown());
+    drop(ctx);
+
+    // The variants also run end-to-end with their real kernels: both must
+    // produce the same sum while moving very different D2H payloads.
+    let ctx = ContextBuilder::new()
+        .only_artifacts(["reduction_v1", "reduction_v2"])
+        .build()
+        .expect("context");
+    for (name, b) in [
+        ("v1", Box::new(ReductionV1::new(1)) as Box<dyn Benchmark>),
+        ("v2", Box::new(ReductionV2::new(1)) as Box<dyn Benchmark>),
+    ] {
+        b.run(&ctx, Mode::Baseline).unwrap(); // warmup
+        let r = b.run(&ctx, Mode::Baseline).unwrap();
+        println!(
+            "Reduction {name}: wall {:.2} ms, D2H {} B, validated {}",
+            r.wall.as_secs_f64() * 1e3,
+            r.d2h_bytes,
+            r.validated
+        );
+    }
+    println!("KEY SHAPE — paper: variant choice changes transfer requirements (v2 D2H >> v1)");
+}

@@ -1,0 +1,31 @@
+//! Bench E4 / Fig. 4: platform divergence — nn's stage balance on the
+//! MIC profile vs a K80-like profile.  Expected shape: KEX ≈ 33% on MIC
+//! vs ≈ 2% on the GPU ("unnecessary to use multiple streams on GPU").
+//!
+//! `cargo bench --bench fig4_platforms`
+
+use hetstream::analysis::decide;
+use hetstream::corpus::configs_for;
+use hetstream::device::DeviceProfile;
+use hetstream::experiments::{analytic_stage_times, fig4};
+
+fn main() {
+    println!("{}", fig4().markdown());
+
+    // The §3.4 decision rule on both platforms.
+    let mic = DeviceProfile::mic31sp();
+    let k80 = DeviceProfile::k80();
+    for cfg in configs_for("nn") {
+        let m = analytic_stage_times(&cfg, &mic);
+        let k = analytic_stage_times(&cfg, &k80);
+        println!(
+            "nn {:9}  MIC: R={:.2} {:?}   K80: R={:.2} {:?}",
+            cfg.config,
+            m.r_h2d(),
+            decide(m.r_h2d()),
+            k.r_h2d(),
+            decide(k.r_h2d()),
+        );
+    }
+    println!("KEY SHAPE — paper: MIC KEX ~33% vs GPU ~2%; streaming unnecessary on the GPU");
+}

@@ -1,0 +1,31 @@
+//! Bench E6 / Fig. 9: single vs multi-stream wall-clock for the 13
+//! streamed benchmarks (the paper's headline result: 8%–90% improvement,
+//! lavaMD negative).
+//!
+//! `cargo bench --bench fig9_streams`
+//! Env: FIG9_SCALE (default 1), FIG9_STREAMS (4), FIG9_RUNS (5).
+
+use hetstream::experiments::fig9;
+use hetstream::hstreams::ContextBuilder;
+
+fn main() {
+    let scale = std::env::var("FIG9_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1);
+    let streams = std::env::var("FIG9_STREAMS").ok().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let runs = std::env::var("FIG9_RUNS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+
+    let ctx = ContextBuilder::new().build().expect("context");
+    let t0 = std::time::Instant::now();
+    let (table, rows) = fig9(&ctx, scale, streams, runs).expect("fig9");
+    println!("{}", table.markdown());
+    assert!(rows.iter().all(|r| r.validated), "all benchmarks must validate");
+
+    let positive = rows.iter().filter(|r| r.improvement_pct > 5.0).count();
+    let lavamd = rows.iter().find(|r| r.name == "lavaMD").unwrap();
+    println!("suite in {:.1} s — {} of {} benchmarks gain >5%;", t0.elapsed().as_secs_f64(), positive, rows.len());
+    println!(
+        "KEY SHAPE — paper: gains 8..90%, nn highest among independents, lavaMD negative \
+         (here {:+.1}%, h2d ratio {:.2}x vs paper ~1.9x)",
+        lavamd.improvement_pct,
+        lavamd.h2d_streamed as f64 / lavamd.h2d_baseline as f64
+    );
+}

@@ -1,0 +1,93 @@
+//! L3 hot-path microbenchmarks (§Perf): per-op overheads of the
+//! coordinator itself — these must stay far below the DMA pacing
+//! quantum or the runtime, not the modeled device, becomes the
+//! bottleneck.
+//!
+//! `cargo bench --bench hotpath_micro`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use hetstream::device::{DeviceProfile, DevRegion, HostSrc};
+use hetstream::hstreams::ContextBuilder;
+use hetstream::runtime::{bytes, ArtifactStore};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters.min(32) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{name:42} {ns:12.0} ns/op");
+    ns
+}
+
+fn main() {
+    // --- arena ops ---
+    let mut arena = hetstream::device::DeviceArena::new(1 << 28);
+    bench("arena: alloc+free 64KiB", 10_000, || {
+        let id = arena.alloc(65536).unwrap();
+        arena.free(id).unwrap();
+    });
+    let id = arena.alloc(1 << 20).unwrap();
+    let payload = vec![7u8; 65536];
+    bench("arena: write 64KiB", 10_000, || {
+        arena.write(DevRegion { buf: id, off: 0, len: 65536 }, &payload).unwrap();
+    });
+    bench("arena: read 64KiB", 10_000, || {
+        let _ = arena.read(DevRegion { buf: id, off: 0, len: 65536 }).unwrap();
+    });
+
+    // --- byte conversions (driver-side marshalling) ---
+    let v = vec![1.0f32; 65536];
+    bench("bytes: from_f32 64Ki elems", 2_000, || {
+        let _ = bytes::from_f32(&v);
+    });
+    let b = bytes::from_f32(&v);
+    bench("bytes: to_f32 64Ki elems", 2_000, || {
+        let _ = bytes::to_f32(&b);
+    });
+
+    // --- enqueue + event path on an instant (no pacing) device ---
+    let ctx = ContextBuilder::new()
+        .profile(DeviceProfile::instant())
+        .only_artifacts(["vector_add"])
+        .build()
+        .expect("context");
+    let dev = DevRegion::whole(ctx.alloc(65536 * 4).unwrap(), 65536 * 4);
+    let host = Arc::new(bytes::from_f32(&v));
+    let ns = bench("stream: h2d enqueue->retire 256KiB (instant)", 2_000, || {
+        let mut s = ctx.stream();
+        s.h2d(HostSrc::whole(host.clone()), dev);
+        s.sync();
+    });
+    println!(
+        "  -> h2d overhead vs mic31sp-sim DMA quantum (~1 ms): {:.2}%",
+        ns / 1e7 * 100.0 // quantum ≈ 10^7 ns after dilation
+    );
+
+    let dev_b = DevRegion::whole(ctx.alloc(65536 * 4).unwrap(), 65536 * 4);
+    let dev_o = DevRegion::whole(ctx.alloc(65536 * 4).unwrap(), 65536 * 4);
+    bench("stream: kex enqueue->retire vector_add 64Ki", 200, || {
+        let mut s = ctx.stream();
+        s.kex("vector_add", vec![dev, dev_b], vec![dev_o]);
+        s.sync();
+    });
+
+    // --- raw PJRT execute (the real KEX floor) ---
+    let store = ArtifactStore::load_subset(&hetstream::artifacts_dir(), &["vector_add"]).unwrap();
+    let raw = vec![0u8; 65536 * 4];
+    bench("pjrt: execute_bytes vector_add 64Ki", 200, || {
+        let _ = store.execute_bytes("vector_add", &[&raw, &raw]).unwrap();
+    });
+
+    // --- manifest parse (startup path) ---
+    let text = std::fs::read_to_string(hetstream::artifacts_dir().join("manifest.json")).unwrap();
+    bench("manifest: parse", 2_000, || {
+        let _ = hetstream::runtime::Manifest::parse(&text).unwrap();
+    });
+}

@@ -1,0 +1,15 @@
+//! Bench E7 / §5: the lavaMD negative case — halo ≈ task size, so the
+//! streamed port transfers ~1.9x the bytes and loses to the bulk
+//! offload (paper: 0.3476 + 0.3380 s single vs 0.7242 s streamed).
+//!
+//! `cargo bench --bench lavamd_negative`
+
+use hetstream::experiments::lavamd_negative;
+use hetstream::hstreams::ContextBuilder;
+
+fn main() {
+    let ctx = ContextBuilder::new().only_artifacts(["lavamd_box"]).build().expect("context");
+    let table = lavamd_negative(&ctx, 1, 4, 5).expect("lavamd");
+    println!("{}", table.markdown());
+    println!("KEY SHAPE — paper: streamed lavaMD is *slower* than the bulk offload");
+}

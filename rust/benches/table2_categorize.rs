@@ -1,0 +1,31 @@
+//! Bench E5 / Table 2: regenerate the application categorization from
+//! the corpus dependency facts, and report category counts.
+//!
+//! `cargo bench --bench table2_categorize`
+
+use hetstream::analysis::Category;
+use hetstream::corpus::apps;
+use hetstream::experiments::table2;
+
+fn main() {
+    println!("{}", table2().markdown());
+
+    let all = apps();
+    let count = |c: Category| all.iter().filter(|(_, _, cat)| *cat == c).count();
+    println!("56 benchmarks:");
+    for c in [
+        Category::Independent,
+        Category::FalseDependent,
+        Category::TrueDependent,
+        Category::Sync,
+        Category::Iterative,
+    ] {
+        println!("  {:16} {}", c.label(), count(c));
+    }
+    let streamable: usize = all.iter().filter(|(_, _, c)| c.streamable()).count();
+    println!("  streamable       {streamable} / {}", all.len());
+    println!(
+        "KEY SHAPE — paper: two non-streamable patterns (SYNC, Iterative), three streamable \
+         categories; exemplars nn/FWT/NW as Independent/False/True"
+    );
+}

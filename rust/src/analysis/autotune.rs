@@ -1,0 +1,103 @@
+//! Stream-count auto-tuning — the paper's §6 future work ("we will
+//! further investigate how to get optimal performance by setting a
+//! proper task and/or resource granularity … autotune these
+//! parameters").
+//!
+//! Two strategies:
+//!
+//! - [`predict_streams`] — zero-cost analytic rule from the stage
+//!   balance: with one DMA lane per direction and one kernel queue, the
+//!   pipeline saturates once every lane is busy, so the useful stream
+//!   count is ⌈serial / bottleneck⌉ (+1 fill margin), clamped to [2, 8].
+//! - [`autotune_streams`] — empirical: measure a candidate ladder and
+//!   return the argmin (the paper's "leveraging machine learning" is a
+//!   measured search here — exact, since the space is tiny).
+
+use crate::hstreams::Context;
+use crate::workloads::{Benchmark, Mode};
+use crate::Result;
+
+use super::stages::StageTimes;
+
+/// Analytic stream-count suggestion from a stage-by-stage measurement.
+pub fn predict_streams(st: &StageTimes) -> usize {
+    let total = st.total().as_secs_f64();
+    let bottleneck = st.h2d.as_secs_f64().max(st.kex.as_secs_f64()).max(st.d2h.as_secs_f64());
+    if bottleneck <= 0.0 {
+        return 2;
+    }
+    let depth = (total / bottleneck).ceil() as usize + 1;
+    depth.clamp(2, 8)
+}
+
+/// Result of an empirical sweep.
+#[derive(Debug, Clone)]
+pub struct AutotuneResult {
+    pub best_streams: usize,
+    pub best_ms: f64,
+    /// (streams, median ms) for every candidate tried.
+    pub ladder: Vec<(usize, f64)>,
+}
+
+/// Measure `bench` at each candidate stream count (median of `runs`)
+/// and return the fastest.
+pub fn autotune_streams(
+    ctx: &Context,
+    bench: &dyn Benchmark,
+    candidates: &[usize],
+    runs: usize,
+) -> Result<AutotuneResult> {
+    // Warmup (absorb PJRT first-execution cost).
+    bench.run(ctx, Mode::Streamed(candidates[0]))?;
+    let mut ladder = Vec::with_capacity(candidates.len());
+    for &n in candidates {
+        let mut samples = Vec::with_capacity(runs);
+        for _ in 0..runs {
+            let r = bench.run(ctx, Mode::Streamed(n))?;
+            if !r.validated {
+                return Err(crate::Error::Stream(format!(
+                    "{} failed validation at {n} streams",
+                    bench.name()
+                )));
+            }
+            samples.push(r.wall);
+        }
+        let med = crate::metrics::median_duration(&mut samples).as_secs_f64() * 1e3;
+        ladder.push((n, med));
+    }
+    let (best_streams, best_ms) =
+        ladder.iter().copied().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+    Ok(AutotuneResult { best_streams, best_ms, ladder })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn st(h2d: u64, kex: u64, d2h: u64) -> StageTimes {
+        StageTimes {
+            h2d: Duration::from_millis(h2d),
+            kex: Duration::from_millis(kex),
+            d2h: Duration::from_millis(d2h),
+        }
+    }
+
+    #[test]
+    fn balanced_stages_want_deep_pipelines() {
+        // Three equal stages: serial/bottleneck = 3 -> 4 streams.
+        assert_eq!(predict_streams(&st(10, 10, 10)), 4);
+    }
+
+    #[test]
+    fn kex_dominated_needs_few_streams() {
+        // KEX is 90%: overlap headroom is small -> shallow pipeline.
+        assert_eq!(predict_streams(&st(5, 90, 5)), 3);
+    }
+
+    #[test]
+    fn prediction_clamped() {
+        assert!(predict_streams(&st(1, 1000, 1)) >= 2);
+        assert!(predict_streams(&st(1, 1, 1)) <= 8);
+    }
+}

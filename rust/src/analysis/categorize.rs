@@ -1,0 +1,145 @@
+//! Table-2 categorizer: map a benchmark's dependency facts to the
+//! paper's five categories.
+//!
+//! The paper derives categories from H2D↔KEX dependency analysis
+//! (Fig. 5).  Corpus descriptors record the *facts* (what data each task
+//! needs, whether kernels iterate on resident data, whether the kernel
+//! is sequential); this module holds the *rules* so the classification
+//! is reproducible rather than hand-labeled.
+
+/// Inter-task data dependency of the partitioned code (§4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskDep {
+    /// Tasks share no data (Fig. 6, nn).
+    None,
+    /// Read-after-read sharing: tasks read each other's boundary inputs;
+    /// eliminated by redundant transfer (Fig. 7, FWT).  `halo` and
+    /// `chunk` sizes drive the lavaMD overhead analysis.
+    Rar { halo: usize, chunk: usize },
+    /// Read-after-write: true dependency, respected by wavefront
+    /// ordering (Fig. 8, NW).
+    Raw,
+}
+
+/// Dependency facts recorded per benchmark in the corpus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DependencyFacts {
+    /// The whole H2D payload is consumed by every task — the transfer
+    /// must finish before any kernel starts (SYNC pattern).
+    pub shared_input_all_tasks: bool,
+    /// KEX iterates on device-resident data after one upload
+    /// (Iterative pattern): overlapping helps only the first iteration.
+    pub iterative_kex: bool,
+    /// The kernel itself is sequential — no concurrent tasks exist
+    /// (myocyte).
+    pub sequential_kernel: bool,
+    /// Inter-task data dependency after partitioning.
+    pub task_dep: TaskDep,
+}
+
+impl DependencyFacts {
+    pub fn independent() -> Self {
+        Self {
+            shared_input_all_tasks: false,
+            iterative_kex: false,
+            sequential_kernel: false,
+            task_dep: TaskDep::None,
+        }
+    }
+
+    pub fn rar(halo: usize, chunk: usize) -> Self {
+        Self { task_dep: TaskDep::Rar { halo, chunk }, ..Self::independent() }
+    }
+
+    pub fn raw() -> Self {
+        Self { task_dep: TaskDep::Raw, ..Self::independent() }
+    }
+
+    pub fn sync() -> Self {
+        Self { shared_input_all_tasks: true, ..Self::independent() }
+    }
+
+    pub fn iterative() -> Self {
+        Self { iterative_kex: true, ..Self::independent() }
+    }
+}
+
+/// The paper's Table-2 categories.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Non-streamable: shared H2D payload must land before any KEX.
+    Sync,
+    /// Non-streamable: kernels iterate on resident data (or are
+    /// sequential) — pipelining the single upload buys nothing.
+    Iterative,
+    /// Streamable, no inter-task data.
+    Independent,
+    /// Streamable, RAR sharing removed by redundant boundary transfer.
+    FalseDependent,
+    /// Streamable, RAW dependency respected by wavefront ordering.
+    TrueDependent,
+}
+
+impl Category {
+    pub fn streamable(self) -> bool {
+        matches!(self, Category::Independent | Category::FalseDependent | Category::TrueDependent)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Category::Sync => "SYNC",
+            Category::Iterative => "Iterative",
+            Category::Independent => "Independent",
+            Category::FalseDependent => "False-dependent",
+            Category::TrueDependent => "True-dependent",
+        }
+    }
+}
+
+/// The classification rule (§4.1): non-streamable patterns first, then
+/// the three streamable categories by dependency kind.
+pub fn categorize(f: &DependencyFacts) -> Category {
+    if f.shared_input_all_tasks {
+        return Category::Sync;
+    }
+    if f.iterative_kex || f.sequential_kernel {
+        return Category::Iterative;
+    }
+    match f.task_dep {
+        TaskDep::None => Category::Independent,
+        TaskDep::Rar { .. } => Category::FalseDependent,
+        TaskDep::Raw => Category::TrueDependent,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_exemplars() {
+        // nn is the Embarrassingly Independent exemplar (Fig. 6).
+        assert_eq!(categorize(&DependencyFacts::independent()), Category::Independent);
+        // FWT is the False Dependent exemplar (Fig. 7).
+        assert_eq!(categorize(&DependencyFacts::rar(127, 1 << 20)), Category::FalseDependent);
+        // NW is the True Dependent exemplar (Fig. 8).
+        assert_eq!(categorize(&DependencyFacts::raw()), Category::TrueDependent);
+        // SYNC and Iterative are non-streamable.
+        assert!(!categorize(&DependencyFacts::sync()).streamable());
+        assert!(!categorize(&DependencyFacts::iterative()).streamable());
+    }
+
+    #[test]
+    fn sync_wins_over_dependency_kind() {
+        // A shared-input code is SYNC even if its tasks would otherwise
+        // look independent.
+        let f = DependencyFacts { shared_input_all_tasks: true, ..DependencyFacts::raw() };
+        assert_eq!(categorize(&f), Category::Sync);
+    }
+
+    #[test]
+    fn sequential_kernel_is_nonstreamable() {
+        let f = DependencyFacts { sequential_kernel: true, ..DependencyFacts::independent() };
+        assert_eq!(categorize(&f), Category::Iterative);
+    }
+}

@@ -1,0 +1,53 @@
+//! Empirical CDF — the Fig. 1 statistical view of R over the corpus.
+
+/// One CDF point: `fraction` of the sample is ≤ `value`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CdfPoint {
+    pub value: f64,
+    pub fraction: f64,
+}
+
+/// Build the empirical CDF of a sample (sorted ascending).
+pub fn cdf_points(values: &[f64]) -> Vec<CdfPoint> {
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len() as f64;
+    sorted
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| CdfPoint { value: v, fraction: (i + 1) as f64 / n })
+        .collect()
+}
+
+/// Fraction of the sample with value ≤ `x` — e.g. the paper's headline
+/// "the CDF is over 50% when R_H2D = 0.1".
+pub fn fraction_at_or_below(values: &[f64], x: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().filter(|&&v| v <= x).count() as f64 / values.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_monotone_and_normalized() {
+        let pts = cdf_points(&[0.3, 0.1, 0.2, 0.4]);
+        assert_eq!(pts.len(), 4);
+        assert!((pts.last().unwrap().fraction - 1.0).abs() < 1e-12);
+        for w in pts.windows(2) {
+            assert!(w[0].value <= w[1].value);
+            assert!(w[0].fraction <= w[1].fraction);
+        }
+    }
+
+    #[test]
+    fn fraction_below_threshold() {
+        let vs = [0.05, 0.08, 0.15, 0.5, 0.9];
+        assert_eq!(fraction_at_or_below(&vs, 0.1), 0.4);
+        assert_eq!(fraction_at_or_below(&vs, 1.0), 1.0);
+        assert_eq!(fraction_at_or_below(&vs, 0.0), 0.0);
+    }
+}

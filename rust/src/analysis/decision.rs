@@ -1,0 +1,47 @@
+//! The streaming-necessity decision rule (§3.4, §6).
+//!
+//! "Applications are not worthwhile to be streamed when R is small"
+//! (pipeline fill/drain + programming effort exceed the win) and "when
+//! R is too large (e.g. 90%) it is equally not worthwhile" (offloading
+//! itself is questionable, never mind streams).
+
+/// Below this R, streaming overheads swamp the achievable overlap.
+pub const LO_THRESHOLD: f64 = 0.10;
+/// Above this R, using the accelerator at all is questionable.
+pub const HI_THRESHOLD: f64 = 0.90;
+
+/// Outcome of the necessity analysis for one (benchmark, config).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// R < 0.10: transfers are a rounding error; keep single stream.
+    NotWorthLowR,
+    /// Streaming is expected to pay off.
+    Worthwhile,
+    /// R > 0.90: reconsider offloading before considering streams.
+    NotWorthHighR,
+}
+
+/// Apply the paper's rule to a measured R.
+pub fn decide(r: f64) -> Decision {
+    if r < LO_THRESHOLD {
+        Decision::NotWorthLowR
+    } else if r > HI_THRESHOLD {
+        Decision::NotWorthHighR
+    } else {
+        Decision::Worthwhile
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholds() {
+        assert_eq!(decide(0.05), Decision::NotWorthLowR);
+        assert_eq!(decide(0.10), Decision::Worthwhile);
+        assert_eq!(decide(0.5), Decision::Worthwhile);
+        assert_eq!(decide(0.90), Decision::Worthwhile);
+        assert_eq!(decide(0.95), Decision::NotWorthHighR);
+    }
+}

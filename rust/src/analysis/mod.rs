@@ -1,0 +1,15 @@
+//! The paper's analysis machinery: stage-by-stage *R* measurement
+//! (§3.3–3.4), the CDF view (Fig. 1), the streaming-necessity decision
+//! rule (§3.4/§6), and the Table-2 dependency categorizer (§4.1).
+
+mod autotune;
+mod categorize;
+mod cdf;
+mod decision;
+mod stages;
+
+pub use autotune::{autotune_streams, predict_streams, AutotuneResult};
+pub use categorize::{categorize, Category, DependencyFacts, TaskDep};
+pub use cdf::{cdf_points, fraction_at_or_below, CdfPoint};
+pub use decision::{decide, Decision, HI_THRESHOLD, LO_THRESHOLD};
+pub use stages::{measure_stages, KexCall, OffloadSpec, StageTimes};

@@ -1,0 +1,178 @@
+//! Stage-by-stage measurement (§3.3): run H2D, KEX, D2H strictly
+//! separated, 11 runs, median per stage, and compute R.
+//!
+//! Descriptor-backed corpus entries realize KEX with the calibrated
+//! `burner` kernel under a FLOP override, so all 223 configurations flow
+//! through the *same* engines, allocator and pacing as the real
+//! benchmarks — R keeps its shape (DESIGN.md §2).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::device::DevRegion;
+use crate::hstreams::Context;
+use crate::metrics::median_duration;
+
+/// One kernel execution in the KEX stage.
+#[derive(Debug, Clone)]
+pub struct KexCall {
+    /// Artifact name (usually a burner variant for corpus entries).
+    pub artifact: String,
+    /// FLOP budget driving the pacing for this call.
+    pub flops: u64,
+    /// Back-to-back repetitions (iterative kernels).
+    pub repeats: u32,
+}
+
+/// A stage-by-stage measurable offload: what moves in, what runs, what
+/// moves out.
+#[derive(Debug, Clone)]
+pub struct OffloadSpec {
+    pub name: String,
+    /// Byte sizes of the host→device payloads.
+    pub h2d: Vec<usize>,
+    /// Kernel executions.
+    pub kex: Vec<KexCall>,
+    /// Byte sizes of the device→host payloads.
+    pub d2h: Vec<usize>,
+}
+
+/// Median stage durations of an offload.
+#[derive(Debug, Clone, Copy)]
+pub struct StageTimes {
+    pub h2d: Duration,
+    pub kex: Duration,
+    pub d2h: Duration,
+}
+
+impl StageTimes {
+    pub fn total(&self) -> Duration {
+        self.h2d + self.kex + self.d2h
+    }
+
+    /// The paper's R: fraction of H2D in the end-to-end time.
+    pub fn r_h2d(&self) -> f64 {
+        self.h2d.as_secs_f64() / self.total().as_secs_f64()
+    }
+
+    /// D2H fraction (the second Fig. 1 series).
+    pub fn r_d2h(&self) -> f64 {
+        self.d2h.as_secs_f64() / self.total().as_secs_f64()
+    }
+
+    /// KEX fraction (Fig. 4 quotes this for nn).
+    pub fn r_kex(&self) -> f64 {
+        self.kex.as_secs_f64() / self.total().as_secs_f64()
+    }
+}
+
+/// Measure an offload stage-by-stage on `ctx`: `runs` repetitions,
+/// median per stage (the paper's protocol, §3.3).
+///
+/// Device buffers for the raw payloads are re-allocated every run so the
+/// lazy-allocation cost lands inside H2D each time, exactly like the
+/// paper's measurement ("the allocation overhead is often counted into
+/// H2D").  Kernel scratch buffers are staged once, untimed.
+pub fn measure_stages(ctx: &Context, spec: &OffloadSpec, runs: usize) -> StageTimes {
+    // Untimed: stage the kernel scratch (inputs must exist and match the
+    // artifact signatures; shapes come from the manifest).
+    let manifest = crate::runtime::Manifest::load(&crate::artifacts_dir()).expect("manifest");
+    let mut scratch: Vec<(String, Vec<DevRegion>, Vec<DevRegion>)> = Vec::new();
+    {
+        let mut stream = ctx.stream();
+        for call in &spec.kex {
+            let meta = manifest.get(&call.artifact).expect("artifact in manifest");
+            let mut ins = Vec::new();
+            for io in &meta.inputs {
+                let buf = ctx.alloc(io.bytes()).expect("scratch alloc");
+                let region = DevRegion::whole(buf, io.bytes());
+                // Touch with zeros so lazy-alloc cost stays out of KEX.
+                let payload = Arc::new(vec![0u8; io.bytes()]);
+                stream.h2d(crate::device::HostSrc::whole(payload), region);
+                ins.push(region);
+            }
+            let outs = meta
+                .outputs
+                .iter()
+                .map(|io| {
+                    let buf = ctx.alloc(io.bytes()).expect("scratch alloc");
+                    DevRegion::whole(buf, io.bytes())
+                })
+                .collect();
+            scratch.push((call.artifact.clone(), ins, outs));
+        }
+        stream.sync();
+    }
+
+    let h2d_payloads: Vec<Arc<Vec<u8>>> =
+        spec.h2d.iter().map(|&n| Arc::new(vec![0x5au8; n])).collect();
+
+    let mut h2d_samples = Vec::with_capacity(runs);
+    let mut kex_samples = Vec::with_capacity(runs);
+    let mut d2h_samples = Vec::with_capacity(runs);
+
+    for _ in 0..runs {
+        // Fresh buffers each run: lazy allocation charges into H2D.
+        let in_bufs: Vec<DevRegion> = spec
+            .h2d
+            .iter()
+            .map(|&n| DevRegion::whole(ctx.alloc(n).expect("h2d alloc"), n))
+            .collect();
+        let out_bufs: Vec<DevRegion> = spec
+            .d2h
+            .iter()
+            .map(|&n| DevRegion::whole(ctx.alloc(n).expect("d2h alloc"), n))
+            .collect();
+
+        // --- H2D stage ---
+        let t = crate::metrics::Timer::start();
+        {
+            let mut s = ctx.stream();
+            for (payload, region) in h2d_payloads.iter().zip(&in_bufs) {
+                s.h2d(crate::device::HostSrc::whole(payload.clone()), *region);
+            }
+            s.sync();
+        }
+        h2d_samples.push(t.elapsed());
+
+        // --- KEX stage ---
+        let t = crate::metrics::Timer::start();
+        {
+            let mut s = ctx.stream();
+            for (call, (artifact, ins, outs)) in spec.kex.iter().zip(&scratch) {
+                s.kex_with(artifact.clone(), ins.clone(), outs.clone(), Some(call.flops), call.repeats);
+            }
+            s.sync();
+        }
+        kex_samples.push(t.elapsed());
+
+        // --- D2H stage ---
+        let t = crate::metrics::Timer::start();
+        {
+            let mut s = ctx.stream();
+            for region in &out_bufs {
+                let dst = crate::hstreams::host_dst(region.len);
+                s.d2h(*region, dst);
+            }
+            s.sync();
+        }
+        d2h_samples.push(t.elapsed());
+
+        for r in in_bufs.iter().chain(&out_bufs) {
+            ctx.free(r.buf).expect("free");
+        }
+    }
+
+    // Free scratch.
+    for (_, ins, outs) in &scratch {
+        for r in ins.iter().chain(outs) {
+            let _ = ctx.free(r.buf);
+        }
+    }
+
+    StageTimes {
+        h2d: median_duration(&mut h2d_samples),
+        kex: median_duration(&mut kex_samples),
+        d2h: median_duration(&mut d2h_samples),
+    }
+}

@@ -1,0 +1,181 @@
+//! Run configuration: JSON-loadable settings for the launcher
+//! (`repro --config run.json`).  Parsed with the in-crate JSON parser —
+//! the build is fully offline.
+
+use crate::device::DeviceProfile;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Top-level run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub device: DeviceSection,
+    pub measure: MeasureSection,
+    pub streaming: StreamingSection,
+    pub artifacts_dir: Option<String>,
+}
+
+/// Device profile selection + overrides.
+#[derive(Debug, Clone)]
+pub struct DeviceSection {
+    /// Preset: mic31sp | k80 | instant | slow-link.
+    pub preset: String,
+    pub h2d_gbps: Option<f64>,
+    pub d2h_gbps: Option<f64>,
+    pub latency_us: Option<f64>,
+    pub gflops: Option<f64>,
+    pub compute_workers: usize,
+    pub device_mem_mb: usize,
+}
+
+/// Measurement protocol (paper §3.3: 11 runs, median).
+#[derive(Debug, Clone)]
+pub struct MeasureSection {
+    pub runs: usize,
+    pub warmup: usize,
+}
+
+/// Streaming defaults.
+#[derive(Debug, Clone)]
+pub struct StreamingSection {
+    pub streams: usize,
+    pub chunks: usize,
+}
+
+impl Default for DeviceSection {
+    fn default() -> Self {
+        Self {
+            preset: "mic31sp".into(),
+            h2d_gbps: None,
+            d2h_gbps: None,
+            latency_us: None,
+            gflops: None,
+            compute_workers: 1,
+            device_mem_mb: 2048,
+        }
+    }
+}
+
+impl Default for MeasureSection {
+    fn default() -> Self {
+        Self { runs: 11, warmup: 1 }
+    }
+}
+
+impl Default for StreamingSection {
+    fn default() -> Self {
+        Self { streams: 4, chunks: 8 }
+    }
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            device: DeviceSection::default(),
+            measure: MeasureSection::default(),
+            streaming: StreamingSection::default(),
+            artifacts_dir: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    /// Parse from JSON text.  Missing sections/fields keep defaults.
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| Error::Config(e.to_string()))?;
+        let mut cfg = RunConfig::default();
+        if let Some(d) = j.get("device") {
+            if let Some(p) = d.get("preset").and_then(Json::as_str) {
+                cfg.device.preset = p.to_string();
+            }
+            cfg.device.h2d_gbps = d.get("h2d_gbps").and_then(Json::as_f64);
+            cfg.device.d2h_gbps = d.get("d2h_gbps").and_then(Json::as_f64);
+            cfg.device.latency_us = d.get("latency_us").and_then(Json::as_f64);
+            cfg.device.gflops = d.get("gflops").and_then(Json::as_f64);
+            if let Some(w) = d.get("compute_workers").and_then(Json::as_usize) {
+                cfg.device.compute_workers = w;
+            }
+            if let Some(m) = d.get("device_mem_mb").and_then(Json::as_usize) {
+                cfg.device.device_mem_mb = m;
+            }
+        }
+        if let Some(m) = j.get("measure") {
+            if let Some(r) = m.get("runs").and_then(Json::as_usize) {
+                cfg.measure.runs = r;
+            }
+            if let Some(w) = m.get("warmup").and_then(Json::as_usize) {
+                cfg.measure.warmup = w;
+            }
+        }
+        if let Some(s) = j.get("streaming") {
+            if let Some(n) = s.get("streams").and_then(Json::as_usize) {
+                cfg.streaming.streams = n;
+            }
+            if let Some(c) = s.get("chunks").and_then(Json::as_usize) {
+                cfg.streaming.chunks = c;
+            }
+        }
+        cfg.artifacts_dir = j.get("artifacts_dir").and_then(Json::as_str).map(String::from);
+        Ok(cfg)
+    }
+
+    /// Resolve the device profile (preset + overrides).
+    pub fn device_profile(&self) -> Result<DeviceProfile> {
+        let mut p = DeviceProfile::preset(&self.device.preset).ok_or_else(|| {
+            Error::Config(format!("unknown device preset `{}`", self.device.preset))
+        })?;
+        if let Some(v) = self.device.h2d_gbps {
+            p.h2d_gbps = v;
+        }
+        if let Some(v) = self.device.d2h_gbps {
+            p.d2h_gbps = v;
+        }
+        if let Some(v) = self.device.latency_us {
+            p.latency_us = v;
+        }
+        if let Some(v) = self.device.gflops {
+            p.gflops = v;
+        }
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_resolves() {
+        let c = RunConfig::default();
+        assert_eq!(c.measure.runs, 11, "paper protocol");
+        assert_eq!(c.device_profile().unwrap().name, "mic31sp");
+    }
+
+    #[test]
+    fn json_overrides() {
+        let c = RunConfig::parse(
+            r#"{"device": {"preset": "k80", "gflops": 123.0, "compute_workers": 2},
+                "measure": {"runs": 5}}"#,
+        )
+        .unwrap();
+        let p = c.device_profile().unwrap();
+        assert_eq!(p.name, "k80");
+        assert_eq!(p.gflops, 123.0);
+        assert_eq!(c.measure.runs, 5);
+        assert_eq!(c.device.compute_workers, 2);
+        // untouched sections keep defaults
+        assert_eq!(c.streaming.streams, 4);
+    }
+
+    #[test]
+    fn unknown_preset_rejected() {
+        let c = RunConfig::parse(r#"{"device": {"preset": "tpu-v9"}}"#).unwrap();
+        assert!(c.device_profile().is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! AMD APP SDK suite descriptors (12 applications, 48 configurations).
+
+use crate::analysis::DependencyFacts;
+
+use super::{mk, Backing, BenchConfig, Suite};
+
+pub fn configs() -> Vec<BenchConfig> {
+    let s = Suite::AmdSdk;
+    let mut v = Vec::new();
+
+    // BinomialOption: one independent lattice walk per option,
+    // compute-bound.
+    v.extend(mk(s, "BinomialOption", DependencyFacts::independent(), Backing::Burner, &[
+        ("2^10x1", 0.02, 0.004, 530.0, 1),
+        ("2^10x2", 0.03, 0.008, 1060.0, 1),
+        ("2^10x4", 0.07, 0.016, 2120.0, 1),
+        ("2^10x8", 0.13, 0.03, 4240.0, 1),
+        ("2^10x16", 0.26, 0.07, 8480.0, 1),
+    ]));
+
+    // BitonicSort: log^2(n) passes over the resident array -> Iterative.
+    v.extend(mk(s, "BitonicSort", DependencyFacts::iterative(), Backing::Burner, &[
+        ("2^20x1", 4.0, 4.0, 2.1, 210),
+        ("2^20x2", 8.0, 8.0, 4.2, 231),
+        ("2^20x4", 16.0, 16.0, 8.4, 253),
+        ("2^20x8", 32.0, 32.0, 16.8, 276),
+        ("2^20x16", 64.0, 64.0, 33.6, 300),
+    ]));
+
+    // BoxFilter: sliding-window blur; window overlap is RAR halo.
+    v.extend(mk(s, "BoxFilter", DependencyFacts::rar(10, 1024), Backing::Burner, &[
+        ("BoxFilter_Input", 4.0, 4.0, 260.0, 1),
+    ]));
+
+    // DwtHaar1D: block Haar transform with boundary coefficients (RAR).
+    v.extend(mk(s, "DwtHaar1D", DependencyFacts::rar(1, 512), Backing::Burner, &[
+        ("2^10x10^3x1", 4.0, 4.0, 8.4, 1),
+        ("2^10x10^3x2", 8.0, 8.0, 16.8, 1),
+        ("2^10x10^3x3", 12.0, 12.0, 25.2, 1),
+        ("2^10x10^3x4", 16.0, 16.0, 33.6, 1),
+        ("2^10x10^3x8", 32.0, 32.0, 67.2, 1),
+    ]));
+
+    // FloydWarshall: k-loop over the resident distance matrix ->
+    // Iterative.
+    v.extend(mk(s, "FloydWarshall", DependencyFacts::iterative(), Backing::Burner, &[
+        ("2^10x1", 4.0, 4.0, 2.1, 1024),
+        ("2^10x2", 16.0, 16.0, 8.4, 2048),
+        ("2^10x3", 36.0, 36.0, 18.9, 3072),
+        ("2^10x4", 64.0, 64.0, 33.6, 4096),
+        ("2^10x5", 100.0, 100.0, 52.5, 5120),
+    ]));
+
+    // MonteCarloAsian: independent paths, compute-bound.
+    v.extend(mk(s, "MonteCarloAsian", DependencyFacts::independent(), Backing::Burner, &[
+        ("2^10x1", 0.02, 0.01, 1800.0, 1),
+        ("2^10x2", 0.03, 0.02, 3600.0, 1),
+        ("2^10x3", 0.05, 0.02, 5400.0, 1),
+        ("2^10x4", 0.07, 0.03, 7200.0, 1),
+        ("2^10x5", 0.08, 0.04, 9000.0, 1),
+    ]));
+
+    // PrefixSum: per-chunk scans + tiny host carry pass (paper's ps).
+    v.extend(mk(s, "PrefixSum", DependencyFacts::independent(), Backing::Real("prefix_sum"), &[
+        ("1024k", 4.0, 4.0, 1.05, 1),
+    ]));
+
+    // RadixSort: digit passes over resident keys -> Iterative.
+    v.extend(mk(s, "RadixSort", DependencyFacts::iterative(), Backing::Burner, &[
+        ("2^12x12", 0.19, 0.19, 0.4, 32),
+        ("2^12x13", 0.2, 0.2, 0.44, 32),
+        ("2^12x14", 0.22, 0.22, 0.44, 32),
+        ("2^12x15", 0.23, 0.23, 0.48, 32),
+        ("2^12x16", 0.25, 0.25, 0.52, 32),
+    ]));
+
+    // RecursiveGaussian: independent row/column IIR passes.
+    v.extend(mk(s, "RecursiveGaussian", DependencyFacts::independent(), Backing::Burner, &[
+        ("default", 4.0, 4.0, 210.0, 1),
+    ]));
+
+    // ScanLargeArrays: same scan-and-carry structure as PrefixSum.
+    v.extend(mk(s, "ScanLargeArrays", DependencyFacts::independent(), Backing::Real("prefix_sum"), &[
+        ("2^10x1", 4.0, 4.0, 1.05, 1),
+        ("2^10x2", 8.0, 8.0, 2.1, 1),
+        ("2^10x4", 16.0, 16.0, 4.2, 1),
+        ("2^10x8", 32.0, 32.0, 8.4, 1),
+        ("2^10x16", 64.0, 64.0, 16.8, 1),
+    ]));
+
+    // StringSearch: text chunks overlap by pattern length (RAR).
+    v.extend(mk(s, "StringSearch", DependencyFacts::rar(32, 65536), Backing::Burner, &[
+        ("1", 8.0, 0.1, 400.0, 1),
+        ("2", 16.0, 0.2, 800.0, 1),
+        ("3", 24.0, 0.3, 1200.0, 1),
+        ("4", 32.0, 0.4, 1600.0, 1),
+        ("5", 40.0, 0.5, 2000.0, 1),
+    ]));
+
+    // URNG: pointwise noise generation.
+    v.extend(mk(s, "URNG", DependencyFacts::independent(), Backing::Burner, &[
+        ("1", 4.0, 4.0, 4.2, 1),
+        ("2", 8.0, 8.0, 8.4, 1),
+        ("3", 12.0, 12.0, 12.6, 1),
+        ("4", 16.0, 16.0, 16.8, 1),
+        ("5", 20.0, 20.0, 21.0, 1),
+    ]));
+
+    v
+}

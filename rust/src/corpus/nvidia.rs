@@ -1,0 +1,162 @@
+//! NVIDIA SDK suite descriptors (17 applications, 77 configurations).
+
+use crate::analysis::DependencyFacts;
+
+use super::{mk, Backing, BenchConfig, Suite};
+
+pub fn configs() -> Vec<BenchConfig> {
+    let s = Suite::NvidiaSdk;
+    let mut v = Vec::new();
+
+    // BlackScholes: pointwise option pricing — three arrays in, two out.
+    v.extend(mk(s, "BlackScholes", DependencyFacts::independent(), Backing::Real("black_scholes"), &[
+        ("10^6x4", 48.0, 32.0, 240.0, 1),
+        ("10^6x8", 96.0, 64.0, 480.0, 1),
+        ("10^6x12", 144.0, 96.0, 720.0, 1),
+        ("10^6x16", 192.0, 128.0, 960.0, 1),
+        ("10^6x20", 240.0, 160.0, 1200.0, 1),
+    ]));
+
+    // ConvolutionFFT2D: tiled spectral convolution, apron overlap (RAR).
+    v.extend(mk(s, "ConvolutionFFT2D", DependencyFacts::rar(16, 16384), Backing::Real("cfft2d"), &[
+        ("6", 16.0, 16.0, 110.0, 1),
+        ("7", 32.0, 32.0, 235.0, 1),
+        ("8", 64.0, 64.0, 500.0, 1),
+        ("9", 128.0, 128.0, 1060.0, 1),
+    ]));
+
+    // ConvolutionSeparable: row/col passes share halo rows (RAR).
+    // Paper §5: R ≈ 19%, streamed gain ≈ 45%.
+    v.extend(mk(s, "ConvolutionSeparable", DependencyFacts::rar(8, 128), Backing::Real("conv_sep"), &[
+        ("2^10x1", 4.0, 4.0, 140.0, 1),
+        ("2^10x2", 8.0, 8.0, 285.0, 1),
+        ("2^10x3", 12.0, 12.0, 430.0, 1),
+        ("2^10x4", 16.0, 16.0, 570.0, 1),
+        ("2^10x8", 32.0, 32.0, 1140.0, 1),
+    ]));
+
+    // DCT8x8: independent 8x8 blocks.
+    v.extend(mk(s, "DCT8x8", DependencyFacts::independent(), Backing::Burner, &[
+        ("2^10x1", 4.0, 4.0, 270.0, 1),
+        ("2^10x2", 8.0, 8.0, 540.0, 1),
+        ("2^10x3", 12.0, 12.0, 810.0, 1),
+        ("2^10x4", 16.0, 16.0, 1080.0, 1),
+        ("2^10x8", 32.0, 32.0, 2160.0, 1),
+    ]));
+
+    // DotProduct: independent partial products + tiny reduce.
+    v.extend(mk(s, "DotProduct", DependencyFacts::independent(), Backing::Burner, &[
+        ("2^10x10^3x1", 8.0, 0.01, 2.1, 1),
+        ("2^10x10^3x2", 16.0, 0.01, 4.2, 1),
+        ("2^10x10^3x3", 24.0, 0.01, 6.3, 1),
+        ("2^10x10^3x4", 32.0, 0.01, 8.4, 1),
+        ("2^10x10^3x8", 64.0, 0.01, 16.8, 1),
+    ]));
+
+    // DXTCompression: independent 4x4 texel blocks (lena input).
+    v.extend(mk(s, "DXTCompression", DependencyFacts::independent(), Backing::Burner, &[
+        ("lena", 1.0, 0.13, 210.0, 1),
+    ]));
+
+    // FDTD3d: time-stepped 3D stencil -> Iterative.  Fig. 2: R falls as
+    // the user raises the timestep count.
+    v.extend(mk(s, "FDTD3d", DependencyFacts::iterative(), Backing::Burner, &[
+        ("steps=10", 55.0, 55.0, 190.0, 10),
+        ("steps=20", 55.0, 55.0, 190.0, 20),
+        ("steps=30", 55.0, 55.0, 190.0, 30),
+        ("steps=40", 55.0, 55.0, 190.0, 40),
+        ("steps=50", 55.0, 55.0, 190.0, 50),
+    ]));
+
+    // FastWalshTransform: block butterflies share boundary reads (RAR);
+    // boundary (254) << task (1M) so streaming pays (§5).
+    v.extend(mk(s, "FastWalshTransform", DependencyFacts::rar(127, 1 << 20), Backing::Real("fwt"), &[
+        ("2^20x1", 4.0, 4.0, 44.0, 1),
+        ("2^20x2", 8.0, 8.0, 92.0, 1),
+        ("2^20x4", 16.0, 16.0, 192.0, 1),
+        ("2^20x8", 32.0, 32.0, 400.0, 1),
+        ("2^20x16", 64.0, 64.0, 832.0, 1),
+    ]));
+
+    // Histogram: independent per-chunk counts, 1KB D2H (paper's hg).
+    v.extend(mk(s, "Histogram", DependencyFacts::independent(), Backing::Real("histogram"), &[
+        ("2^10x10^3x1", 4.0, 0.001, 2.1, 1),
+        ("2^10x10^3x2", 8.0, 0.001, 4.2, 1),
+        ("2^10x10^3x3", 12.0, 0.001, 6.3, 1),
+        ("2^10x10^3x4", 16.0, 0.001, 8.4, 1),
+        ("2^10x10^3x8", 32.0, 0.001, 16.8, 1),
+    ]));
+
+    // MatVecMul: matrix rows independent (small broadcast vector).
+    v.extend(mk(s, "MatVecMul", DependencyFacts::independent(), Backing::Burner, &[
+        ("n=1", 4.0, 0.01, 2.1, 1),
+        ("n=2", 8.0, 0.01, 4.2, 1),
+        ("n=3", 16.0, 0.02, 8.4, 1),
+        ("n=4", 32.0, 0.03, 16.8, 1),
+        ("n=5", 64.0, 0.06, 33.6, 1),
+    ]));
+
+    // MatrixMul: row bands of A independent; compute-bound.
+    v.extend(mk(s, "MatrixMul", DependencyFacts::independent(), Backing::Real("matmul"), &[
+        ("512", 2.0, 1.0, 268.0, 1),
+        ("1024", 8.0, 4.0, 2150.0, 1),
+        ("1536", 18.0, 9.0, 7250.0, 1),
+        ("2048", 32.0, 16.0, 17180.0, 1),
+    ]));
+
+    // QuasirandomGenerator: output-only generation (tiny H2D).
+    v.extend(mk(s, "QuasirandomGenerator", DependencyFacts::independent(), Backing::Burner, &[
+        ("2^20", 0.01, 12.0, 63.0, 1),
+        ("2^21", 0.01, 24.0, 126.0, 1),
+        ("2^22", 0.01, 48.0, 252.0, 1),
+        ("2^23", 0.01, 96.0, 504.0, 1),
+    ]));
+
+    // Reduction (v1): full device-side sum, scalar D2H (Fig. 3).
+    v.extend(mk(s, "Reduction", DependencyFacts::independent(), Backing::Real("reduction_v1"), &[
+        ("2^20", 4.0, 0.000004, 1.05, 1),
+        ("2^21", 8.0, 0.000004, 2.1, 1),
+        ("2^22", 16.0, 0.000004, 4.2, 1),
+        ("2^23", 32.0, 0.000004, 8.4, 1),
+        ("2^24", 64.0, 0.000004, 16.8, 1),
+    ]));
+
+    // Reduction-2 (v2): partial sums return to the host (Fig. 3's
+    // transfer-heavier variant).
+    v.extend(mk(s, "Reduction-2", DependencyFacts::independent(), Backing::Real("reduction_v2"), &[
+        ("2^20", 4.0, 0.25, 1.05, 1),
+        ("2^21", 8.0, 0.5, 2.1, 1),
+        ("2^22", 16.0, 1.0, 4.2, 1),
+        ("2^23", 32.0, 2.0, 8.4, 1),
+        ("2^24", 64.0, 4.0, 16.8, 1),
+    ]));
+
+    // Transpose: independent row bands.  Paper §5: R ≈ 14%, gain ≈ 11%;
+    // 400M vs 64M datasets give R 20% vs 10%.
+    v.extend(mk(s, "Transpose", DependencyFacts::independent(), Backing::Real("transpose"), &[
+        ("64M", 64.0, 64.0, 1100.0, 1),
+        ("128M", 128.0, 128.0, 2200.0, 1),
+        ("256M", 256.0, 256.0, 4400.0, 1),
+        ("400M", 200.0, 200.0, 2750.0, 1),
+        ("2^10x8", 32.0, 32.0, 550.0, 1),
+    ]));
+
+    // Tridiagonal: cyclic-reduction recurrence -> RAW.
+    v.extend(mk(s, "Tridiagonal", DependencyFacts::raw(), Backing::Burner, &[
+        ("10", 8.0, 2.7, 22.0, 1),
+        ("20", 16.0, 5.4, 44.0, 1),
+        ("30", 24.0, 8.1, 66.0, 1),
+        ("40", 32.0, 10.8, 88.0, 1),
+    ]));
+
+    // VectorAdd: the minimal streamable pointwise code.
+    v.extend(mk(s, "VectorAdd", DependencyFacts::independent(), Backing::Real("vector_add"), &[
+        ("2^10x1", 8.0, 4.0, 1.05, 1),
+        ("2^10x2", 16.0, 8.0, 2.1, 1),
+        ("2^10x3", 24.0, 12.0, 3.1, 1),
+        ("2^10x4", 32.0, 16.0, 4.2, 1),
+        ("2^10x8", 64.0, 32.0, 8.4, 1),
+    ]));
+
+    v
+}

@@ -1,0 +1,73 @@
+//! Parboil suite descriptors (9 applications, 21 configurations).
+
+use crate::analysis::DependencyFacts;
+
+use super::{mk, Backing, BenchConfig, Suite};
+
+pub fn configs() -> Vec<BenchConfig> {
+    let s = Suite::Parboil;
+    let mut v = Vec::new();
+
+    // bfs: level-synchronous traversal on the resident graph.
+    v.extend(mk(s, "bfs-parboil", DependencyFacts::iterative(), Backing::Burner, &[
+        ("1M", 28.0, 4.0, 6.0, 14),
+        ("NY", 12.0, 2.0, 3.0, 20),
+        ("SF", 18.0, 3.0, 4.5, 22),
+        ("UT", 8.0, 1.5, 2.0, 16),
+    ]));
+
+    // cutcp: Coulomb potential on a lattice; the *atom list* is read by
+    // every lattice task -> SYNC.
+    v.extend(mk(s, "cutcp", DependencyFacts::sync(), Backing::Burner, &[
+        ("small", 1.2, 16.0, 1900.0, 1),
+        ("large", 4.8, 64.0, 7800.0, 1),
+    ]));
+
+    // lbm: lattice-Boltzmann, time-stepping -> Iterative.  Fig. 2's
+    // dataset study: `short` runs few steps (transfer-heavy), `long`
+    // many steps (compute-heavy).
+    v.extend(mk(s, "lbm", DependencyFacts::iterative(), Backing::Burner, &[
+        ("short", 96.0, 96.0, 270.0, 20),
+        ("long", 96.0, 96.0, 270.0, 600),
+    ]));
+
+    // mri-gridding: independent sample scatter with host merge.
+    v.extend(mk(s, "mri-gridding", DependencyFacts::independent(), Backing::Burner, &[
+        ("small", 12.0, 48.0, 2100.0, 1),
+    ]));
+
+    // mri-q: pointwise Q-matrix computation, independent.
+    v.extend(mk(s, "mri-q", DependencyFacts::independent(), Backing::Burner, &[
+        ("small", 1.5, 1.0, 800.0, 1),
+        ("large", 6.0, 4.0, 3300.0, 1),
+    ]));
+
+    // sgemm: row-band matmul; bands independent (B broadcast).
+    v.extend(mk(s, "sgemm", DependencyFacts::independent(), Backing::Real("matmul"), &[
+        ("small", 1.5, 0.5, 330.0, 1),
+        ("medium", 6.0, 2.0, 2650.0, 1),
+    ]));
+
+    // spmv: rows independent given the vector.
+    v.extend(mk(s, "spmv", DependencyFacts::independent(), Backing::Burner, &[
+        ("small", 3.0, 0.3, 5.8, 1),
+        ("medium", 12.0, 1.2, 23.0, 1),
+        ("large", 48.0, 4.8, 92.0, 1),
+    ]));
+
+    // stencil: 7-point Jacobi over a 3D grid; halo RAR between bands.
+    v.extend(mk(s, "stencil", DependencyFacts::rar(1, 128), Backing::Real("stencil2d"), &[
+        ("small", 16.0, 16.0, 25.0, 1),
+        ("default", 64.0, 64.0, 100.0, 1),
+    ]));
+
+    // tpacf: angular correlation histograms over *all pairs* — every
+    // task reads the whole point set -> SYNC.
+    v.extend(mk(s, "tpacf", DependencyFacts::sync(), Backing::Burner, &[
+        ("small", 1.0, 0.01, 2600.0, 1),
+        ("medium", 2.0, 0.01, 10400.0, 1),
+        ("large", 4.0, 0.01, 41600.0, 1),
+    ]));
+
+    v
+}

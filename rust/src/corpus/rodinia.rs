@@ -1,0 +1,177 @@
+//! Rodinia suite descriptors (18 applications, 77 configurations).
+//!
+//! Input labels follow Table 1; byte/FLOP models follow each
+//! benchmark's published structure (Che et al., IISWC'09).
+
+use crate::analysis::DependencyFacts;
+
+use super::{mk, Backing, BenchConfig, Suite};
+
+pub fn configs() -> Vec<BenchConfig> {
+    let s = Suite::Rodinia;
+    let mut v = Vec::new();
+
+    // backprop: feed-forward net; weight matrices are consumed by every
+    // task -> SYNC.  Input 10x{2^16..2^20} connections.
+    v.extend(mk(s, "backprop", DependencyFacts::sync(), Backing::Burner, &[
+        ("10x2^16", 5.0, 0.5, 130.0, 2),
+        ("10x2^17", 10.0, 1.0, 260.0, 2),
+        ("10x2^18", 20.0, 2.0, 525.0, 2),
+        ("10x2^19", 40.0, 4.0, 1050.0, 2),
+        ("10x2^20", 80.0, 8.0, 2100.0, 2),
+    ]));
+
+    // bfs: frontier expansion loops on the resident graph -> Iterative.
+    v.extend(mk(s, "bfs", DependencyFacts::iterative(), Backing::Burner, &[
+        ("graph512K", 14.0, 2.0, 3.0, 12),
+        ("graph1M", 28.0, 4.0, 6.0, 14),
+        ("graph2M", 56.0, 8.0, 12.0, 16),
+        ("graph4M", 112.0, 16.0, 24.0, 18),
+        ("graph8M", 224.0, 32.0, 48.0, 20),
+    ]));
+
+    // b+tree: independent range queries over an uploaded tree.
+    v.extend(mk(s, "b+tree", DependencyFacts::independent(), Backing::Burner, &[
+        ("Kernel1", 48.0, 6.0, 2900.0, 1),
+        ("Kernel2", 48.0, 12.0, 5400.0, 1),
+    ]));
+
+    // cfd: Euler solver, time-stepping on resident data -> Iterative.
+    v.extend(mk(s, "cfd", DependencyFacts::iterative(), Backing::Burner, &[
+        ("0.97K", 0.9, 0.3, 2.5, 200),
+        ("193K", 22.0, 7.4, 120.0, 200),
+        ("0.2M", 23.0, 7.7, 125.0, 200),
+    ]));
+
+    // dwt2d: 2D wavelet; block transforms share boundary pixels (RAR).
+    v.extend(mk(s, "dwt2d", DependencyFacts::rar(4, 1024), Backing::Burner, &[
+        ("2^10", 4.0, 4.0, 21.0, 1),
+        ("2^11", 16.0, 16.0, 84.0, 1),
+        ("2^12", 64.0, 64.0, 336.0, 1),
+        ("2^13", 256.0, 256.0, 1344.0, 1),
+    ]));
+
+    // gaussian: elimination rows depend on the pivot row -> RAW.
+    v.extend(mk(s, "gaussian", DependencyFacts::raw(), Backing::Burner, &[
+        ("n=1024", 4.0, 4.0, 715.0, 1),
+        ("n=2048", 16.0, 16.0, 5726.0, 1),
+        ("n=3072", 36.0, 36.0, 19327.0, 1),
+        ("n=4096", 64.0, 64.0, 45812.0, 1),
+    ]));
+
+    // lud: blocked LU decomposition wavefront -> RAW.
+    v.extend(mk(s, "lud", DependencyFacts::raw(), Backing::Burner, &[
+        ("256", 0.25, 0.25, 22.0, 1),
+        ("512", 1.0, 1.0, 89.0, 1),
+        ("1024", 4.0, 4.0, 715.0, 1),
+        ("2048", 16.0, 16.0, 5726.0, 1),
+        ("4096", 64.0, 64.0, 45812.0, 1),
+    ]));
+
+    // heartwall: enormous tracking kernel iterating over frames; KEX
+    // dominates end-to-end on any platform (§4.1) -> Iterative.
+    v.extend(mk(s, "heartwall", DependencyFacts::iterative(), Backing::Burner, &[
+        ("frames=10", 28.0, 0.5, 210.0, 10),
+        ("frames=30", 28.0, 1.5, 210.0, 30),
+        ("frames=100", 28.0, 5.0, 210.0, 100),
+    ]));
+
+    // hotspot: thermal grid, time-stepping on resident data -> Iterative.
+    v.extend(mk(s, "hotspot", DependencyFacts::iterative(), Backing::Burner, &[
+        ("2^9", 2.0, 1.0, 2.4, 100),
+        ("2^10", 8.0, 4.0, 9.4, 100),
+        ("2^11", 32.0, 16.0, 38.0, 100),
+        ("2^12", 128.0, 64.0, 151.0, 100),
+        ("2^13", 256.0, 128.0, 302.0, 100),
+    ]));
+
+    // kmeans: membership/centroid loop on resident points -> Iterative.
+    v.extend(mk(s, "kmeans", DependencyFacts::iterative(), Backing::Burner, &[
+        ("1x10^5", 13.0, 0.4, 82.0, 20),
+        ("3x10^5", 40.0, 1.2, 245.0, 20),
+        ("10x10^5", 132.0, 4.0, 820.0, 20),
+        ("30x10^4x200", 80.0, 2.4, 490.0, 20),
+        ("100x10^3x400", 53.0, 1.6, 328.0, 20),
+    ]));
+
+    // lavaMD: particle potentials; neighbour-box reads are RAR with a
+    // halo comparable to the task size — the paper's negative case (§5).
+    v.extend(mk(s, "lavaMD", DependencyFacts::rar(111, 250), Backing::Real("lavamd_box"), &[
+        ("boxes=10", 2.4, 2.4, 530.0, 1),
+        ("boxes=20", 19.0, 19.0, 4240.0, 1),
+        ("boxes=30", 65.0, 65.0, 14310.0, 1),
+        ("boxes=40", 154.0, 154.0, 33920.0, 1),
+        ("boxes=50", 240.0, 240.0, 66250.0, 1),
+    ]));
+
+    // leukocyte: cell tracking across frames -> Iterative.
+    v.extend(mk(s, "leukocyte", DependencyFacts::iterative(), Backing::Burner, &[
+        ("frames=100", 2.8, 0.1, 470.0, 100),
+        ("frames=200", 2.8, 0.2, 470.0, 200),
+        ("frames=400", 2.8, 0.4, 470.0, 400),
+    ]));
+
+    // myocyte: ODE solver whose kernel runs sequentially — no
+    // concurrent tasks exist (§4.1).
+    v.extend(mk(
+        s,
+        "myocyte",
+        DependencyFacts { sequential_kernel: true, ..DependencyFacts::independent() },
+        Backing::Burner,
+        &[
+            ("time=100", 0.1, 0.5, 310.0, 100),
+            ("time=300", 0.1, 1.5, 310.0, 300),
+            ("time=500", 0.1, 2.5, 310.0, 500),
+        ],
+    ));
+
+    // nn: embarrassingly independent distance computation (Fig. 6).
+    // KEX ≈ 33% on MIC (Fig. 4); transfers dominate.
+    v.extend(mk(s, "nn", DependencyFacts::independent(), Backing::Real("nn_dist"), &[
+        ("100x2^10", 0.8, 0.4, 1.6, 1),
+        ("100x2^11", 1.6, 0.8, 3.2, 1),
+        ("100x2^12", 3.2, 1.6, 6.4, 1),
+        ("100x2^13", 6.4, 3.2, 12.8, 1),
+        ("100x2^14", 12.8, 6.4, 25.6, 1),
+    ]));
+
+    // nw: Needleman–Wunsch anti-diagonal DP -> RAW (Fig. 8).
+    v.extend(mk(s, "nw", DependencyFacts::raw(), Backing::Real("nw_tile"), &[
+        ("2^10", 8.0, 4.0, 5.2, 1),
+        ("2^11", 32.0, 16.0, 21.0, 1),
+        ("2^12", 128.0, 64.0, 84.0, 1),
+        ("2^13", 256.0, 128.0, 168.0, 1),
+        ("2^14", 256.0, 128.0, 170.0, 1),
+    ]));
+
+    // pathfinder: row-by-row DP on a grid -> RAW.
+    v.extend(mk(s, "pathfinder", DependencyFacts::raw(), Backing::Burner, &[
+        ("10^5x100", 40.0, 0.4, 30.0, 1),
+        ("2x10^5x100", 80.0, 0.8, 60.0, 1),
+        ("4x10^5x100", 160.0, 1.6, 120.0, 1),
+        ("10^5x200", 40.0, 0.4, 60.0, 1),
+        ("10^5x400", 40.0, 0.4, 120.0, 1),
+    ]));
+
+    // srad: speckle-reducing diffusion, iterative stencil.
+    v.extend(mk(s, "srad", DependencyFacts::iterative(), Backing::Burner, &[
+        ("100 iter", 16.0, 16.0, 50.0, 100),
+        ("200 iter", 16.0, 16.0, 50.0, 200),
+        ("300 iter", 16.0, 16.0, 50.0, 300),
+        ("400 iter", 16.0, 16.0, 50.0, 400),
+        ("500 iter", 16.0, 16.0, 50.0, 500),
+    ]));
+
+    // hotspot/srad-like: streamcluster re-clusters resident points each
+    // phase; the paper notes it spans multiple categories — dominated by
+    // its iterative phase structure.
+    v.extend(mk(s, "streamcluster", DependencyFacts::iterative(), Backing::Burner, &[
+        ("100x2^10", 0.4, 0.1, 6.0, 50),
+        ("100x2^11", 0.8, 0.1, 12.0, 50),
+        ("100x2^12", 1.6, 0.2, 24.0, 50),
+        ("100x2^13", 3.2, 0.4, 48.0, 50),
+        ("100x2^14", 6.4, 0.8, 96.0, 50),
+    ]));
+
+    v
+}

@@ -1,0 +1,156 @@
+//! Compute engine: the "coprocessor" — worker thread(s) executing the
+//! AOT-compiled XLA/Pallas artifacts through PJRT.
+//!
+//! Each worker owns its own [`ArtifactStore`] (PJRT handles are not
+//! `Send`).  One worker models one coprocessor kernel queue; more
+//! workers model hStreams-style core partitioning where small kernels
+//! from different streams run concurrently (an ablation knob).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+use crate::hstreams::{Event, Sample};
+use crate::runtime::ArtifactStore;
+
+use super::arena::{DevRegion, DeviceArena};
+use super::pacing::pace_to;
+use super::profile::DeviceProfile;
+
+/// One kernel launch: read device inputs, execute `artifact`, write the
+/// outputs back into device memory.
+pub struct KernelJob {
+    pub artifact: String,
+    pub inputs: Vec<DevRegion>,
+    pub outputs: Vec<DevRegion>,
+    /// Overrides the manifest's per-call FLOP estimate for KEX pacing
+    /// (descriptor-backed corpus entries set their own budget).
+    pub flops: Option<u64>,
+    /// Execute the artifact this many times (iterative kernels; KEX
+    /// pacing covers `repeats * flops`).
+    pub repeats: u32,
+    pub deps: Vec<Event>,
+    pub done: Event,
+}
+
+enum Msg {
+    Job(KernelJob),
+    Quit,
+}
+
+/// The device's kernel-execution resource.
+pub struct ComputeEngine {
+    tx: Sender<Msg>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ComputeEngine {
+    /// Spawn `workers` kernel queues over the artifacts in `dir`.
+    /// `artifact_subset` limits compilation to the named kernels (much
+    /// faster startup); `None` compiles everything in the manifest.
+    pub fn new(
+        arena: Arc<Mutex<DeviceArena>>,
+        profile: DeviceProfile,
+        dir: PathBuf,
+        workers: usize,
+        artifact_subset: Option<Vec<String>>,
+    ) -> Self {
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::new();
+        for w in 0..workers.max(1) {
+            let (a, p, d, s) = (arena.clone(), profile.clone(), dir.clone(), artifact_subset.clone());
+            // std mpsc receivers are single-consumer; workers share one
+            // behind a mutex and claim jobs first-come, first-served.
+            let worker_rx = rx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("hetstream-kex-{w}"))
+                    .spawn(move || worker_loop(worker_rx, a, p, d, s))
+                    .expect("spawn kex worker"),
+            );
+        }
+        Self { tx, handles }
+    }
+
+    /// Enqueue a kernel launch (FIFO; a worker waits the job's deps).
+    pub fn submit(&self, job: KernelJob) {
+        self.tx.send(Msg::Job(job)).expect("kex queue alive");
+    }
+
+    /// Stop the workers and join.
+    pub fn shutdown(&mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Msg::Quit);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ComputeEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Msg>>>,
+    arena: Arc<Mutex<DeviceArena>>,
+    profile: DeviceProfile,
+    dir: PathBuf,
+    subset: Option<Vec<String>>,
+) {
+    // PJRT client + compiled executables live on this thread.
+    let store = match &subset {
+        Some(names) => {
+            let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            ArtifactStore::load_subset(&dir, &refs)
+        }
+        None => ArtifactStore::load(&dir),
+    }
+    .expect("load artifacts");
+
+    loop {
+        let msg = { rx.lock().unwrap().recv() };
+        let job = match msg {
+            Ok(Msg::Job(j)) => j,
+            _ => return,
+        };
+        for dep in &job.deps {
+            dep.wait();
+        }
+        let start = Instant::now();
+
+        // Read inputs out of device memory (brief lock), execute, write
+        // outputs back.  The copy is the host-side shadow of the device's
+        // own memory traffic; KEX pacing dominates it.
+        let input_bytes: Vec<Vec<u8>> = {
+            let a = arena.lock().unwrap();
+            job.inputs.iter().map(|r| a.read(*r).expect("kex input read")).collect()
+        };
+        let input_refs: Vec<&[u8]> = input_bytes.iter().map(|b| b.as_slice()).collect();
+
+        let mut outputs = Vec::new();
+        for _ in 0..job.repeats.max(1) {
+            outputs = store.execute_bytes(&job.artifact, &input_refs).expect("kex execute");
+        }
+        {
+            let mut a = arena.lock().unwrap();
+            for (region, bytes) in job.outputs.iter().zip(&outputs) {
+                a.write(*region, bytes).expect("kex output write");
+            }
+        }
+
+        let flops = job.flops.unwrap_or_else(|| {
+            store.meta(&job.artifact).map(|m| m.flops_per_call).unwrap_or(0)
+        }) * job.repeats.max(1) as u64;
+        pace_to(start, profile.kex_time(flops));
+        job.done.complete(Sample { start, end: Instant::now() });
+    }
+}

@@ -1,0 +1,34 @@
+//! Simulated heterogeneous platform: host + coprocessor over a modeled
+//! PCIe link.
+//!
+//! The paper's testbed (dual Xeon + Xeon Phi 31SP over PCIe, MPSS/COI
+//! DMA) is substituted per DESIGN.md §2 by three cooperating pieces:
+//!
+//! - [`DeviceArena`] — coprocessor memory with the *lazy allocation*
+//!   semantics of §3.3 (allocation cost is charged into the first H2D
+//!   that touches a buffer).
+//! - [`TransferEngine`] — a dedicated DMA thread per direction that
+//!   performs real memcpys **paced** to a modeled link
+//!   (latency + bytes/bandwidth), so transfers occupy a real hardware
+//!   resource distinct from compute.
+//! - [`ComputeEngine`] — worker thread(s) owning a PJRT CPU client each,
+//!   executing the AOT-compiled XLA/Pallas artifacts; kernel time is
+//!   `max(real execution, flops / modeled_gflops)` so device compute
+//!   capability is a [`DeviceProfile`] knob (Fig. 4's platform study).
+//!
+//! Because transfer and compute run on *different OS threads*, H2D of
+//! one task genuinely overlaps KEX of another — multi-stream speedups
+//! measured on this simulator are real wall-clock effects, not modeled
+//! arithmetic.
+
+mod arena;
+mod compute;
+mod pacing;
+mod profile;
+mod transfer;
+
+pub use arena::{BufId, DevRegion, DeviceArena};
+pub use compute::{ComputeEngine, KernelJob};
+pub use pacing::pace_to;
+pub use profile::{DeviceProfile, DILATION};
+pub use transfer::{Direction, HostDst, HostSrc, TransferEngine, TransferJob};

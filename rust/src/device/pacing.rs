@@ -1,0 +1,44 @@
+//! Precise pacing: make an operation occupy its modeled duration.
+
+use std::time::{Duration, Instant};
+
+/// Sleep/spin until `start + modeled` has elapsed.  Durations under
+/// ~120 µs are spin-waited (OS sleep granularity would distort the DMA
+/// model); longer waits sleep most of the interval and spin the tail.
+pub fn pace_to(start: Instant, modeled: Duration) {
+    let deadline = start + modeled;
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            return;
+        }
+        let remaining = deadline - now;
+        if remaining > Duration::from_micros(200) {
+            std::thread::sleep(remaining - Duration::from_micros(120));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pace_reaches_deadline() {
+        let t0 = Instant::now();
+        pace_to(t0, Duration::from_micros(500));
+        assert!(t0.elapsed() >= Duration::from_micros(500));
+        // and not wildly over (sleep/spin hybrid should be tight)
+        assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn pace_past_deadline_returns_immediately() {
+        let t0 = Instant::now() - Duration::from_millis(5);
+        let before = Instant::now();
+        pace_to(t0, Duration::from_millis(1));
+        assert!(before.elapsed() < Duration::from_millis(2));
+    }
+}

@@ -1,0 +1,169 @@
+//! DMA transfer engine: dedicated thread(s) moving bytes host↔device,
+//! paced to the modeled PCIe link.
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+use crate::hstreams::{Event, Sample};
+
+use super::arena::{DevRegion, DeviceArena};
+use super::pacing::pace_to;
+use super::profile::DeviceProfile;
+
+/// Transfer direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    H2D,
+    D2H,
+}
+
+/// Host-side source for an H2D: shared immutable bytes plus a range.
+#[derive(Clone)]
+pub struct HostSrc {
+    pub data: Arc<Vec<u8>>,
+    pub off: usize,
+    pub len: usize,
+}
+
+impl HostSrc {
+    pub fn whole(data: Arc<Vec<u8>>) -> Self {
+        let len = data.len();
+        Self { data, off: 0, len }
+    }
+}
+
+/// Host-side destination for a D2H: shared mutable bytes plus an offset.
+#[derive(Clone)]
+pub struct HostDst {
+    pub data: Arc<Mutex<Vec<u8>>>,
+    pub off: usize,
+}
+
+/// One DMA job.
+pub struct TransferJob {
+    pub dir: Direction,
+    /// Present for H2D.
+    pub src: Option<HostSrc>,
+    /// Present for D2H.
+    pub dst: Option<HostDst>,
+    pub dev: DevRegion,
+    /// Events that must complete before the copy starts (stream order +
+    /// explicit cross-stream waits).
+    pub deps: Vec<Event>,
+    pub done: Event,
+}
+
+enum Msg {
+    Job(TransferJob),
+    Quit,
+}
+
+/// The DMA engine.  With `duplex` profiles, H2D and D2H each get a lane
+/// (PCIe has independent directions); otherwise one lane serves both.
+pub struct TransferEngine {
+    h2d_tx: Sender<Msg>,
+    d2h_tx: Sender<Msg>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl TransferEngine {
+    pub fn new(arena: Arc<Mutex<DeviceArena>>, profile: DeviceProfile) -> Self {
+        let (h2d_tx, h2d_rx) = channel::<Msg>();
+        let mut handles = Vec::new();
+        let d2h_tx;
+        if profile.duplex {
+            let (tx, d2h_rx) = channel::<Msg>();
+            d2h_tx = tx;
+            let (a1, p1) = (arena.clone(), profile.clone());
+            handles.push(
+                std::thread::Builder::new()
+                    .name("hetstream-dma-h2d".into())
+                    .spawn(move || lane_loop(h2d_rx, a1, p1))
+                    .expect("spawn dma h2d"),
+            );
+            let (a2, p2) = (arena, profile);
+            handles.push(
+                std::thread::Builder::new()
+                    .name("hetstream-dma-d2h".into())
+                    .spawn(move || lane_loop(d2h_rx, a2, p2))
+                    .expect("spawn dma d2h"),
+            );
+        } else {
+            // Single half-duplex lane: both directions share the queue.
+            d2h_tx = h2d_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("hetstream-dma".into())
+                    .spawn(move || lane_loop(h2d_rx, arena, profile))
+                    .expect("spawn dma"),
+            );
+        }
+        Self { h2d_tx, d2h_tx, handles }
+    }
+
+    /// Enqueue a DMA job (FIFO per lane; the lane waits the job's deps).
+    pub fn submit(&self, job: TransferJob) {
+        let tx = match job.dir {
+            Direction::H2D => &self.h2d_tx,
+            Direction::D2H => &self.d2h_tx,
+        };
+        tx.send(Msg::Job(job)).expect("dma lane alive");
+    }
+
+    /// Stop the lanes and join the threads.
+    pub fn shutdown(&mut self) {
+        let _ = self.h2d_tx.send(Msg::Quit);
+        let _ = self.d2h_tx.send(Msg::Quit);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TransferEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn lane_loop(rx: std::sync::mpsc::Receiver<Msg>, arena: Arc<Mutex<DeviceArena>>, profile: DeviceProfile) {
+    while let Ok(Msg::Job(job)) = rx.recv() {
+        // In-order lane semantics: the lane head blocks on its deps,
+        // exactly like a hardware DMA queue waiting on an event.
+        for dep in &job.deps {
+            dep.wait();
+        }
+        let start = Instant::now();
+        let mut modeled = profile.transfer_time(job.dev.len, job.dir == Direction::H2D);
+        match job.dir {
+            Direction::H2D => {
+                let src = job.src.as_ref().expect("h2d needs src");
+                let bytes = &src.data[src.off..src.off + src.len];
+                let first_touch = {
+                    let mut a = arena.lock().unwrap();
+                    a.write(job.dev, bytes).expect("h2d write")
+                };
+                if first_touch {
+                    // Lazy allocation (paper §3.3): the allocation cost
+                    // lands inside the first H2D that touches the buffer.
+                    modeled += profile.alloc_time(job.dev.len);
+                }
+            }
+            Direction::D2H => {
+                let bytes = {
+                    let a = arena.lock().unwrap();
+                    a.read(job.dev).expect("d2h read")
+                };
+                let dst = job.dst.as_ref().expect("d2h needs dst");
+                let mut out = dst.data.lock().unwrap();
+                out[dst.off..dst.off + bytes.len()].copy_from_slice(&bytes);
+            }
+        }
+        pace_to(start, modeled);
+        job.done.complete(Sample { start, end: Instant::now() });
+    }
+}

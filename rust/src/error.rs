@@ -1,0 +1,60 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Errors surfaced by the hetstream runtime.
+#[derive(Debug)]
+pub enum Error {
+    /// Failure inside the XLA/PJRT layer.
+    Xla(String),
+    /// Artifact manifest problems (missing file, bad shapes, ...).
+    Manifest(String),
+    /// A kernel call whose inputs don't match the artifact signature.
+    Signature { artifact: String, detail: String },
+    /// Device-memory arena exhaustion or bad handle.
+    Arena(String),
+    /// Stream/engine machinery failure (disconnected queue, poisoned op).
+    Stream(String),
+    /// Configuration / CLI errors.
+    Config(String),
+    /// I/O (manifest and artifact loading).
+    Io(std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Signature { artifact, detail } => {
+                write!(f, "signature mismatch for artifact `{artifact}`: {detail}")
+            }
+            Error::Arena(m) => write!(f, "device arena error: {m}"),
+            Error::Stream(m) => write!(f, "stream error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        Error::Manifest(e.to_string())
+    }
+}

@@ -1,0 +1,95 @@
+//! E1 / Fig. 1: CDF of R_H2D and R_D2H over the 223-config corpus.
+
+use crate::analysis::{fraction_at_or_below, KexCall, OffloadSpec};
+use crate::corpus::{all_configs, BenchConfig};
+use crate::device::DeviceProfile;
+use crate::hstreams::Context;
+use crate::metrics::Table;
+
+/// One corpus measurement.
+#[derive(Debug, Clone)]
+pub struct Fig1Row {
+    pub app: &'static str,
+    pub config: String,
+    pub r_h2d: f64,
+    pub r_d2h: f64,
+}
+
+/// Analytic sweep of the whole corpus (closed-form stage model).
+pub fn fig1_analytic(profile: &DeviceProfile) -> (Table, Vec<Fig1Row>) {
+    let rows: Vec<Fig1Row> = all_configs()
+        .iter()
+        .map(|c| {
+            let st = super::analytic_stage_times(c, profile);
+            Fig1Row { app: c.app, config: c.config.clone(), r_h2d: st.r_h2d(), r_d2h: st.r_d2h() }
+        })
+        .collect();
+    (summarize(&rows), rows)
+}
+
+/// Engine sweep: every config measured stage-by-stage through the DMA +
+/// compute engines (the paper's §3.3 protocol).  `runs` = repetitions
+/// per config (paper: 11).
+pub fn fig1_engine(
+    ctx: &Context,
+    runs: usize,
+    subset: Option<usize>,
+) -> (Table, Vec<Fig1Row>) {
+    let mut configs = all_configs();
+    if let Some(n) = subset {
+        // Deterministic stratified subset: every k-th config.
+        let step = (configs.len() / n.max(1)).max(1);
+        configs = configs.into_iter().step_by(step).collect();
+    }
+    let rows: Vec<Fig1Row> = configs
+        .iter()
+        .map(|c| {
+            let st = crate::analysis::measure_stages(ctx, &offload_spec(c), runs);
+            Fig1Row { app: c.app, config: c.config.clone(), r_h2d: st.r_h2d(), r_d2h: st.r_d2h() }
+        })
+        .collect();
+    (summarize(&rows), rows)
+}
+
+/// Map a corpus descriptor to a stage-measurable offload (burner-backed
+/// KEX under the descriptor's FLOP budget).
+///
+/// Bytes and FLOPs are scaled down by the engine time-dilation factor so
+/// one engine-measured config costs about what the paper-scale analytic
+/// model predicts; the linear stage terms cancel exactly, so R matches
+/// the analytic model up to the (dilated) fixed latencies.  Iterative
+/// kernels are capped at 20 repeats to keep the 223-config sweep
+/// tractable (R for heavily iterative apps is then an upper bound on
+/// R_H2D — they are non-streamable either way).
+pub fn offload_spec(c: &BenchConfig) -> OffloadSpec {
+    let dil = crate::device::DILATION;
+    let repeats = c.kex_iterations.clamp(1, 20);
+    let flops_per_iter = (c.flops_per_iteration() as f64 / dil) as u64;
+    OffloadSpec {
+        name: format!("{}/{}", c.app, c.config),
+        h2d: vec![((c.h2d_bytes as f64 / dil) as usize).max(4)],
+        kex: vec![KexCall {
+            artifact: "burner_64".into(),
+            flops: flops_per_iter.min(300_000_000),
+            repeats,
+        }],
+        d2h: vec![((c.d2h_bytes as f64 / dil) as usize).max(4)],
+    }
+}
+
+fn summarize(rows: &[Fig1Row]) -> Table {
+    let h2d: Vec<f64> = rows.iter().map(|r| r.r_h2d).collect();
+    let d2h: Vec<f64> = rows.iter().map(|r| r.r_d2h).collect();
+    let mut t = Table::new(
+        "Fig. 1 — CDF of data-transfer ratio R over the corpus",
+        &["R threshold", "CDF(R_H2D <= x)", "CDF(R_D2H <= x)"],
+    );
+    for x in [0.05, 0.10, 0.20, 0.30, 0.50, 0.70, 0.90] {
+        t.row(&[
+            format!("{x:.2}"),
+            format!("{:.1}%", 100.0 * fraction_at_or_below(&h2d, x)),
+            format!("{:.1}%", 100.0 * fraction_at_or_below(&d2h, x)),
+        ]);
+    }
+    t
+}

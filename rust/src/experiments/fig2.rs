@@ -1,0 +1,33 @@
+//! E2 / Fig. 2: R as a function of the input dataset — `lbm`
+//! (short vs long) and `FDTD3d` (timestep count).
+
+use crate::corpus::configs_for;
+use crate::device::DeviceProfile;
+use crate::hstreams::Context;
+use crate::metrics::Table;
+
+/// Measure the Fig. 2 apps.  `ctx = None` uses the analytic model.
+pub fn fig2(ctx: Option<&Context>, profile: &DeviceProfile, runs: usize) -> Table {
+    let mut t = Table::new(
+        "Fig. 2 — R changes over datasets (lbm, FDTD3d)",
+        &["app", "config", "R_H2D", "R_KEX", "R_D2H"],
+    );
+    for app in ["lbm", "FDTD3d"] {
+        for cfg in configs_for(app) {
+            let st = match ctx {
+                Some(c) => {
+                    crate::analysis::measure_stages(c, &super::fig1::offload_spec(&cfg), runs)
+                }
+                None => super::analytic_stage_times(&cfg, profile),
+            };
+            t.row(&[
+                app.to_string(),
+                cfg.config.clone(),
+                format!("{:.3}", st.r_h2d()),
+                format!("{:.3}", st.r_kex()),
+                format!("{:.3}", st.r_d2h()),
+            ]);
+        }
+    }
+    t
+}

@@ -1,0 +1,34 @@
+//! E3 / Fig. 3: R across the Reduction v1/v2 code variants — different
+//! codes generate different transfer requirements.
+
+use crate::corpus::configs_for;
+use crate::device::DeviceProfile;
+use crate::hstreams::Context;
+use crate::metrics::Table;
+
+/// Measure both Reduction variants.  `ctx = None` uses the analytic
+/// model; otherwise stage-by-stage through the engines.
+pub fn fig3(ctx: Option<&Context>, profile: &DeviceProfile, runs: usize) -> Table {
+    let mut t = Table::new(
+        "Fig. 3 — R changes over code variants (Reduction v1 vs v2)",
+        &["variant", "config", "R_H2D", "R_D2H", "D2H bytes"],
+    );
+    for app in ["Reduction", "Reduction-2"] {
+        for cfg in configs_for(app) {
+            let st = match ctx {
+                Some(c) => {
+                    crate::analysis::measure_stages(c, &super::fig1::offload_spec(&cfg), runs)
+                }
+                None => super::analytic_stage_times(&cfg, profile),
+            };
+            t.row(&[
+                app.to_string(),
+                cfg.config.clone(),
+                format!("{:.3}", st.r_h2d()),
+                format!("{:.4}", st.r_d2h()),
+                cfg.d2h_bytes.to_string(),
+            ]);
+        }
+    }
+    t
+}

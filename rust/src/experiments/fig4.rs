@@ -1,0 +1,44 @@
+//! E4 / Fig. 4: platform divergence — `nn`'s stage balance on the MIC
+//! profile vs a K80-like profile.  The paper: KEX ≈ 33% on MIC but ≈ 2%
+//! on the GPU, so streaming is pointless there.
+
+use crate::corpus::configs_for;
+use crate::device::DeviceProfile;
+use crate::metrics::Table;
+
+/// Analytic comparison across platform profiles (the engine path cannot
+/// speed real compute up 16x, so Fig. 4 uses the stage model on both
+/// profiles — see DESIGN.md §2).
+pub fn fig4() -> Table {
+    let mic = DeviceProfile::mic31sp();
+    let k80 = DeviceProfile::k80();
+    let mut t = Table::new(
+        "Fig. 4 — R changes over platforms (Rodinia nn)",
+        &["config", "MIC R_KEX", "K80 R_KEX", "MIC R_H2D", "K80 R_H2D"],
+    );
+    let mut mic_kex_sum = 0.0;
+    let mut k80_kex_sum = 0.0;
+    let cfgs = configs_for("nn");
+    let n = cfgs.len() as f64;
+    for cfg in &cfgs {
+        let st_mic = super::analytic_stage_times(cfg, &mic);
+        let st_k80 = super::analytic_stage_times(cfg, &k80);
+        mic_kex_sum += st_mic.r_kex();
+        k80_kex_sum += st_k80.r_kex();
+        t.row(&[
+            cfg.config.clone(),
+            format!("{:.3}", st_mic.r_kex()),
+            format!("{:.3}", st_k80.r_kex()),
+            format!("{:.3}", st_mic.r_h2d()),
+            format!("{:.3}", st_k80.r_h2d()),
+        ]);
+    }
+    t.row(&[
+        "MEAN".into(),
+        format!("{:.3}", mic_kex_sum / n),
+        format!("{:.3}", k80_kex_sum / n),
+        String::new(),
+        String::new(),
+    ]);
+    t
+}

@@ -1,0 +1,109 @@
+//! E6 / Fig. 9: single-stream vs multi-stream wall-clock for the 13
+//! streamed benchmarks, plus the E8 R-vs-gain correlation.
+
+use crate::hstreams::Context;
+use crate::metrics::{median_duration, Table};
+use crate::workloads::{fig9_benchmarks, Benchmark, Mode};
+use crate::Result;
+
+/// One benchmark's measurement.
+#[derive(Debug, Clone)]
+pub struct Fig9Row {
+    pub name: String,
+    pub baseline_ms: f64,
+    pub streamed_ms: f64,
+    /// Paper's metric: (t_single / t_multi - 1) * 100.
+    pub improvement_pct: f64,
+    pub h2d_baseline: u64,
+    pub h2d_streamed: u64,
+    pub validated: bool,
+}
+
+/// Run one benchmark in both modes, `runs`-median each.
+pub fn measure_one(
+    ctx: &Context,
+    b: &dyn Benchmark,
+    streams: usize,
+    runs: usize,
+) -> Result<Fig9Row> {
+    let mut base_samples = Vec::with_capacity(runs);
+    let mut strm_samples = Vec::with_capacity(runs);
+    let mut h2d_b = 0;
+    let mut h2d_s = 0;
+    let mut validated = true;
+    // Warmup: absorb PJRT first-execution costs outside the samples.
+    b.run(ctx, Mode::Baseline)?;
+    for _ in 0..runs {
+        let rb = b.run(ctx, Mode::Baseline)?;
+        validated &= rb.validated;
+        h2d_b = rb.h2d_bytes;
+        base_samples.push(rb.wall);
+        let rs = b.run(ctx, Mode::Streamed(streams))?;
+        validated &= rs.validated;
+        h2d_s = rs.h2d_bytes;
+        strm_samples.push(rs.wall);
+    }
+    let base = median_duration(&mut base_samples).as_secs_f64() * 1e3;
+    let strm = median_duration(&mut strm_samples).as_secs_f64() * 1e3;
+    Ok(Fig9Row {
+        name: b.name().into(),
+        baseline_ms: base,
+        streamed_ms: strm,
+        improvement_pct: (base / strm - 1.0) * 100.0,
+        h2d_baseline: h2d_b,
+        h2d_streamed: h2d_s,
+        validated,
+    })
+}
+
+/// The full Fig. 9 sweep.
+pub fn fig9(ctx: &Context, scale: usize, streams: usize, runs: usize) -> Result<(Table, Vec<Fig9Row>)> {
+    let mut rows = Vec::new();
+    for b in fig9_benchmarks(scale) {
+        rows.push(measure_one(ctx, b.as_ref(), streams, runs)?);
+    }
+    let mut t = Table::new(
+        format!("Fig. 9 — single vs {streams} streams (scale {scale})"),
+        &["benchmark", "single (ms)", "multi (ms)", "improvement", "h2d xfer ratio", "valid"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.name.clone(),
+            format!("{:.2}", r.baseline_ms),
+            format!("{:.2}", r.streamed_ms),
+            format!("{:+.1}%", r.improvement_pct),
+            format!("{:.2}x", r.h2d_streamed as f64 / r.h2d_baseline.max(1) as f64),
+            r.validated.to_string(),
+        ]);
+    }
+    Ok((t, rows))
+}
+
+/// E8: R vs gain for ConvolutionSeparable and Transpose (paper §5: a
+/// larger R leads to a greater improvement).
+pub fn rgain(ctx: &Context, scale: usize, streams: usize, runs: usize) -> Result<Table> {
+    use crate::workloads::{ConvSep, Transpose};
+    let mut t = Table::new(
+        "§5 — R vs streaming gain (ConvSep vs Transpose)",
+        &["benchmark", "scale", "R_H2D", "improvement"],
+    );
+    for s in [scale, scale * 2] {
+        let benches: Vec<(Box<dyn Benchmark>, &str)> = vec![
+            (Box::new(ConvSep::new(s)), "ConvolutionSeparable"),
+            (Box::new(Transpose::new(s)), "Transpose"),
+        ];
+        for (b, name) in benches {
+            let row = measure_one(ctx, b.as_ref(), streams, runs)?;
+            // R from the corpus stage model at this profile.
+            let cfg = &crate::corpus::configs_for(name)[0];
+            let st = super::analytic_stage_times(cfg, ctx.profile());
+            t.row(&[
+                name.to_string(),
+                format!("{s}"),
+                format!("{:.2}", st.r_h2d()),
+                format!("{:+.1}%", row.improvement_pct),
+            ]);
+        }
+    }
+    Ok(t)
+}

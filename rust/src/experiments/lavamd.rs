@@ -1,0 +1,32 @@
+//! E7 / §5: the lavaMD negative result — halo ≈ task size means the
+//! streamed port transfers ~1.9x the bytes in many tiny DMAs and loses
+//! to the bulk offload.
+
+use crate::hstreams::Context;
+use crate::metrics::Table;
+use crate::partition::halo_overhead_ratio;
+use crate::workloads::LavaMd;
+use crate::Result;
+
+/// Reproduce the §5 lavaMD numbers: single-stream H2D/KEX vs streamed
+/// total, plus the halo-overhead analysis that predicts the loss.
+pub fn lavamd_negative(ctx: &Context, scale: usize, streams: usize, runs: usize) -> Result<Table> {
+    let b = LavaMd::new(scale);
+    let row = super::fig9::measure_one(ctx, &b, streams, runs)?;
+    let ratio = halo_overhead_ratio(crate::workloads::lavamd::CHUNK, crate::workloads::lavamd::HALO);
+
+    let mut t = Table::new(
+        "§5 — lavaMD negative case",
+        &["metric", "value"],
+    );
+    t.row(&["halo/task ratio (paper: 222/250 ≈ 0.89)", &format!("{ratio:.2}")]);
+    t.row(&["bulk offload (ms)", &format!("{:.2}", row.baseline_ms)]);
+    t.row(&[&format!("streamed x{streams} (ms)"), &format!("{:.2}", row.streamed_ms)]);
+    t.row(&["improvement", &format!("{:+.1}%", row.improvement_pct)]);
+    t.row(&[
+        "h2d bytes streamed/bulk (paper: ~1.9x)",
+        &format!("{:.2}x", row.h2d_streamed as f64 / row.h2d_baseline.max(1) as f64),
+    ]);
+    t.row(&["validated", &row.validated.to_string()]);
+    Ok(t)
+}

@@ -1,0 +1,33 @@
+//! Experiment drivers: one function per paper table/figure, shared by
+//! the `repro` CLI and the criterion benches so every number in
+//! EXPERIMENTS.md is regenerable from two entry points.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig9;
+pub mod lavamd;
+pub mod table2;
+
+pub use fig1::{fig1_analytic, fig1_engine, offload_spec, Fig1Row};
+pub use fig2::fig2;
+pub use fig3::fig3;
+pub use fig4::fig4;
+pub use fig9::{fig9, measure_one, rgain, Fig9Row};
+pub use lavamd::lavamd_negative;
+pub use table2::table2;
+
+use crate::corpus::BenchConfig;
+use crate::device::DeviceProfile;
+
+/// Analytic stage-time model: the closed-form version of what the
+/// engines pace (used for fast corpus-wide sweeps; the engine path
+/// validates it on a subset — see `tests/analysis_integration.rs`).
+pub fn analytic_stage_times(cfg: &BenchConfig, p: &DeviceProfile) -> crate::analysis::StageTimes {
+    let h2d = p.transfer_time(cfg.h2d_bytes as usize, true) + p.alloc_time(cfg.h2d_bytes as usize);
+    let kex_per_iter = p.kex_time(cfg.flops_per_iteration());
+    let kex = kex_per_iter * cfg.kex_iterations.max(1);
+    let d2h = p.transfer_time(cfg.d2h_bytes as usize, false);
+    crate::analysis::StageTimes { h2d, kex, d2h }
+}

@@ -1,0 +1,33 @@
+//! E5 / Table 2: benchmark categorization from dependency facts.
+
+use crate::analysis::Category;
+use crate::corpus::{apps, Suite};
+use crate::metrics::Table;
+
+/// Regenerate Table 2: one row per suite, apps grouped by category.
+pub fn table2() -> Table {
+    let mut t = Table::new(
+        "Table 2 — Application categorization",
+        &["Suite", "Independent", "False-dependent", "True-dependent", "SYNC", "Iterative"],
+    );
+    for suite in [Suite::Rodinia, Suite::Parboil, Suite::NvidiaSdk, Suite::AmdSdk] {
+        let cell = |cat: Category| -> String {
+            let mut names: Vec<&str> = apps()
+                .into_iter()
+                .filter(|(_, s, c)| *s == suite && *c == cat)
+                .map(|(a, _, _)| a)
+                .collect();
+            names.sort();
+            names.join(", ")
+        };
+        t.row(&[
+            suite.label().to_string(),
+            cell(Category::Independent),
+            cell(Category::FalseDependent),
+            cell(Category::TrueDependent),
+            cell(Category::Sync),
+            cell(Category::Iterative),
+        ]);
+    }
+    t
+}

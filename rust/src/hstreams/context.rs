@@ -1,0 +1,141 @@
+//! Context: owns the simulated device and hands out streams.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use std::sync::Mutex;
+
+use crate::device::{
+    BufId, ComputeEngine, DevRegion, DeviceArena, DeviceProfile, TransferEngine,
+};
+use crate::Result;
+
+use super::stream::Stream;
+
+/// Builder for [`Context`].
+pub struct ContextBuilder {
+    profile: DeviceProfile,
+    artifacts_dir: PathBuf,
+    device_mem: usize,
+    compute_workers: usize,
+    artifact_subset: Option<Vec<String>>,
+}
+
+impl ContextBuilder {
+    pub fn new() -> Self {
+        Self {
+            profile: DeviceProfile::mic31sp().simulation(),
+            artifacts_dir: crate::artifacts_dir(),
+            device_mem: 2 << 30, // 2 GiB of simulated device memory
+            compute_workers: 1,
+            artifact_subset: None,
+        }
+    }
+
+    /// Device profile (default: the paper's MIC 31SP, time-dilated for
+    /// the engines — see [`crate::device::profile`]).  Paper-scale
+    /// profiles are dilated automatically; pass a profile whose name
+    /// ends in `-sim` (or `instant`) to use it as-is.
+    pub fn profile(mut self, p: DeviceProfile) -> Self {
+        self.profile = p.simulation();
+        self
+    }
+
+    /// Where `manifest.json` and the HLO artifacts live.
+    pub fn artifacts_dir(mut self, d: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = d.into();
+        self
+    }
+
+    /// Simulated device memory capacity.
+    pub fn device_mem(mut self, bytes: usize) -> Self {
+        self.device_mem = bytes;
+        self
+    }
+
+    /// Number of concurrent kernel queues (1 = one coprocessor queue;
+    /// >1 models hStreams core partitioning).
+    pub fn compute_workers(mut self, n: usize) -> Self {
+        self.compute_workers = n;
+        self
+    }
+
+    /// Compile only these artifacts (fast startup for focused runs).
+    pub fn only_artifacts<S: Into<String>>(mut self, names: impl IntoIterator<Item = S>) -> Self {
+        self.artifact_subset = Some(names.into_iter().map(Into::into).collect());
+        self
+    }
+
+    pub fn build(self) -> Result<Context> {
+        let arena = Arc::new(Mutex::new(DeviceArena::new(self.device_mem)));
+        let dma = TransferEngine::new(arena.clone(), self.profile.clone());
+        let kex = ComputeEngine::new(
+            arena.clone(),
+            self.profile.clone(),
+            self.artifacts_dir.clone(),
+            self.compute_workers,
+            self.artifact_subset.clone(),
+        );
+        Ok(Context {
+            arena,
+            dma,
+            kex,
+            profile: self.profile,
+            next_stream: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+}
+
+impl Default for ContextBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The heterogeneous-platform handle: device memory plus the two engine
+/// kinds every stream op is routed to.
+pub struct Context {
+    pub(crate) arena: Arc<Mutex<DeviceArena>>,
+    pub(crate) dma: TransferEngine,
+    pub(crate) kex: ComputeEngine,
+    profile: DeviceProfile,
+    next_stream: std::sync::atomic::AtomicU64,
+}
+
+impl Context {
+    /// Shorthand: default builder.
+    pub fn builder() -> ContextBuilder {
+        ContextBuilder::new()
+    }
+
+    /// Create a new logical stream.
+    pub fn stream(&self) -> Stream<'_> {
+        let id = self.next_stream.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Stream::new(self, id)
+    }
+
+    /// The device profile this context models.
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+
+    /// Reserve a device buffer (lazy-alloc cost charged on first H2D).
+    pub fn alloc(&self, len: usize) -> Result<BufId> {
+        self.arena.lock().unwrap().alloc(len)
+    }
+
+    /// Release a device buffer.
+    pub fn free(&self, id: BufId) -> Result<()> {
+        self.arena.lock().unwrap().free(id)
+    }
+
+    /// Direct, un-timed read of device memory — for validation only.
+    pub fn debug_read(&self, region: DevRegion) -> Result<Vec<u8>> {
+        self.arena.lock().unwrap().read(region)
+    }
+
+    /// Bytes of device memory currently reserved.
+    pub fn device_mem_used(&self) -> usize {
+        self.arena.lock().unwrap().used()
+    }
+}

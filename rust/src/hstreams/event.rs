@@ -1,0 +1,95 @@
+//! Completion events — the cross-stream synchronization primitive.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Timing sample recorded when an op retires.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    /// When the engine started executing the op (after dep waits).
+    pub start: Instant,
+    /// When the op retired (pacing included).
+    pub end: Instant,
+}
+
+impl Sample {
+    pub fn duration(&self) -> std::time::Duration {
+        self.end - self.start
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    state: Mutex<Option<Sample>>,
+    cv: Condvar,
+}
+
+/// A one-shot completion event, cloneable across threads.  Engines
+/// complete it with a timing [`Sample`]; streams and host code wait on
+/// it (parking, not spinning).
+#[derive(Clone, Default)]
+pub struct Event(Arc<Inner>);
+
+impl Event {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark complete with its timing sample.  Completing twice panics —
+    /// that would mean two engines retired the same op.
+    pub fn complete(&self, sample: Sample) {
+        let mut st = self.0.state.lock().unwrap();
+        assert!(st.is_none(), "event completed twice");
+        *st = Some(sample);
+        self.0.cv.notify_all();
+    }
+
+    /// Block until complete; returns the op's timing sample.
+    pub fn wait(&self) -> Sample {
+        let mut st = self.0.state.lock().unwrap();
+        while st.is_none() {
+            st = self.0.cv.wait(st).unwrap();
+        }
+        st.unwrap()
+    }
+
+    /// Non-blocking completion check.
+    pub fn is_done(&self) -> bool {
+        self.0.state.lock().unwrap().is_some()
+    }
+
+    /// Timing sample if already complete.
+    pub fn sample(&self) -> Option<Sample> {
+        *self.0.state.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn wait_blocks_until_complete() {
+        let e = Event::new();
+        let e2 = e.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            let now = Instant::now();
+            e2.complete(Sample { start: now, end: now });
+        });
+        assert!(!e.is_done());
+        e.wait();
+        assert!(e.is_done());
+        h.join().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "completed twice")]
+    fn double_complete_panics() {
+        let e = Event::new();
+        let now = Instant::now();
+        e.complete(Sample { start: now, end: now });
+        e.complete(Sample { start: now, end: now });
+    }
+}

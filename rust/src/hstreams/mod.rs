@@ -1,0 +1,21 @@
+//! The multi-stream programming model (hStreams / CUDA-streams analog).
+//!
+//! A [`Context`] owns the simulated device (arena + DMA + compute
+//! engines).  A [`Stream`] is a logical in-order pipeline: ops enqueued
+//! on it execute in enqueue order; ops on *different* streams may
+//! overlap whenever they occupy different engines — which is exactly the
+//! paper's mechanism: "the data movement stage of one pipeline overlaps
+//! the kernel execution stage of another".
+//!
+//! Engine queues are FIFO and the queue head blocks on its dependency
+//! events (the CUDA-stream hardware model).  Programs must therefore
+//! enqueue in a topological order of their task DAG — all partitioners
+//! in [`crate::partition`] emit tasks that way.
+
+mod context;
+mod event;
+mod stream;
+
+pub use context::{Context, ContextBuilder};
+pub use event::{Event, Sample};
+pub use stream::{host_dst, host_src_f32, host_src_i32, Stream};

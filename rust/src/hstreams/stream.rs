@@ -1,0 +1,148 @@
+//! In-order logical streams.
+
+use std::sync::Arc;
+
+use std::sync::Mutex;
+
+use crate::device::{DevRegion, Direction, HostDst, HostSrc, KernelJob, TransferJob};
+
+use super::context::Context;
+use super::event::Event;
+
+/// A logical in-order pipeline of H2D / KEX / D2H ops.
+///
+/// Every op implicitly depends on the stream's previous op (in-order
+/// semantics); [`Stream::wait_event`] adds a cross-stream dependency to
+/// the *next* enqueued op, mirroring `cudaStreamWaitEvent` /
+/// hStreams event waits.
+pub struct Stream<'c> {
+    ctx: &'c Context,
+    id: u64,
+    last: Option<Event>,
+    pending_waits: Vec<Event>,
+    issued: Vec<Event>,
+}
+
+impl<'c> Stream<'c> {
+    pub(crate) fn new(ctx: &'c Context, id: u64) -> Self {
+        Self { ctx, id, last: None, pending_waits: Vec::new(), issued: Vec::new() }
+    }
+
+    /// Stream id (diagnostics).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn take_deps(&mut self) -> Vec<Event> {
+        let mut deps = Vec::with_capacity(1 + self.pending_waits.len());
+        if let Some(last) = &self.last {
+            deps.push(last.clone());
+        }
+        deps.append(&mut self.pending_waits);
+        deps
+    }
+
+    fn record(&mut self, e: &Event) {
+        self.last = Some(e.clone());
+        self.issued.push(e.clone());
+    }
+
+    /// Enqueue a host→device copy.  Returns the op's completion event.
+    pub fn h2d(&mut self, src: HostSrc, dev: DevRegion) -> Event {
+        let done = Event::new();
+        let deps = self.take_deps();
+        self.ctx.dma.submit(TransferJob {
+            dir: Direction::H2D,
+            src: Some(src),
+            dst: None,
+            dev,
+            deps,
+            done: done.clone(),
+        });
+        self.record(&done);
+        done
+    }
+
+    /// Enqueue a kernel launch.
+    pub fn kex(
+        &mut self,
+        artifact: impl Into<String>,
+        inputs: Vec<DevRegion>,
+        outputs: Vec<DevRegion>,
+    ) -> Event {
+        self.kex_with(artifact, inputs, outputs, None, 1)
+    }
+
+    /// Kernel launch with a FLOP override and/or repeat count (iterative
+    /// kernels, descriptor-backed corpus entries).
+    pub fn kex_with(
+        &mut self,
+        artifact: impl Into<String>,
+        inputs: Vec<DevRegion>,
+        outputs: Vec<DevRegion>,
+        flops: Option<u64>,
+        repeats: u32,
+    ) -> Event {
+        let done = Event::new();
+        let deps = self.take_deps();
+        self.ctx.kex.submit(KernelJob {
+            artifact: artifact.into(),
+            inputs,
+            outputs,
+            flops,
+            repeats,
+            deps,
+            done: done.clone(),
+        });
+        self.record(&done);
+        done
+    }
+
+    /// Enqueue a device→host copy into `dst.data[dst.off..]`.
+    pub fn d2h(&mut self, dev: DevRegion, dst: HostDst) -> Event {
+        let done = Event::new();
+        let deps = self.take_deps();
+        self.ctx.dma.submit(TransferJob {
+            dir: Direction::D2H,
+            src: None,
+            dst: Some(dst),
+            dev,
+            deps,
+            done: done.clone(),
+        });
+        self.record(&done);
+        done
+    }
+
+    /// Make the next enqueued op also wait for `e` (cross-stream dep).
+    pub fn wait_event(&mut self, e: Event) {
+        self.pending_waits.push(e);
+    }
+
+    /// Block until every op enqueued on this stream has retired.
+    pub fn sync(&self) {
+        if let Some(last) = &self.last {
+            last.wait();
+        }
+    }
+
+    /// All completion events issued by this stream, in enqueue order.
+    pub fn events(&self) -> &[Event] {
+        &self.issued
+    }
+}
+
+/// Convenience: wrap a `Vec<f32>` as an H2D source.
+pub fn host_src_f32(v: &[f32]) -> HostSrc {
+    HostSrc::whole(Arc::new(crate::runtime::bytes::from_f32(v)))
+}
+
+/// Convenience: wrap a `Vec<i32>` as an H2D source.
+pub fn host_src_i32(v: &[i32]) -> HostSrc {
+    HostSrc::whole(Arc::new(crate::runtime::bytes::from_i32(v)))
+}
+
+/// Convenience: a zeroed, shared host destination of `len` bytes.
+pub fn host_dst(len: usize) -> HostDst {
+    HostDst { data: Arc::new(Mutex::new(vec![0u8; len])), off: 0 }
+}

@@ -1,0 +1,69 @@
+//! # hetstream — multi-stream heterogeneous offload runtime
+//!
+//! A full reproduction of *Streaming Applications on Heterogeneous
+//! Platforms* (Li, Fang, Tang, Chen, Yang — 2016) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The paper studies when and how to use **multiple streams** (hStreams /
+//! CUDA-streams style pipelines) to overlap host↔device data transfers
+//! with kernel execution on a CPU + coprocessor platform.  This crate
+//! provides:
+//!
+//! - [`device`] — a simulated heterogeneous platform: a device-memory
+//!   arena with the paper's lazy-allocation semantics, a DMA
+//!   [`device::TransferEngine`] paced to a modeled PCIe link, and a
+//!   [`device::ComputeEngine`] that runs the AOT-compiled XLA/Pallas
+//!   kernels through the PJRT CPU client (the "coprocessor").
+//! - [`hstreams`] — the multi-stream programming model: [`hstreams::Context`],
+//!   in-order [`hstreams::Stream`]s, cross-stream [`hstreams::Event`]s.
+//! - [`partition`] — the paper's three streaming transformations:
+//!   independent chunking (Fig. 6), redundant boundary/halo transfer
+//!   (Fig. 7), and wavefront diagonal scheduling (Fig. 8).
+//! - [`analysis`] — the stage-by-stage analyzer that measures the data
+//!   transfer ratio *R* (11-run medians), the CDF builder behind Fig. 1,
+//!   the streaming-necessity decision rule, and the Table-2 categorizer.
+//! - [`corpus`] — all 56 benchmarks × 223 input configurations of
+//!   Table 1 as workload descriptors.
+//! - [`workloads`] — the 13 streamed benchmark drivers of Fig. 9 plus
+//!   the Reduction v1/v2 code variants of Fig. 3.
+//! - [`runtime`] — the PJRT artifact loader (HLO-text interchange).
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
+//! produced `artifacts/*.hlo.txt` are loaded and executed from Rust — no
+//! Python on the measurement path.
+
+pub mod analysis;
+pub mod config;
+pub mod corpus;
+pub mod device;
+pub mod error;
+pub mod experiments;
+pub mod hstreams;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod util;
+pub mod workloads;
+
+pub use error::{Error, Result};
+
+/// Default location of the AOT artifacts relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$HETSTREAM_ARTIFACTS`, else walk up
+/// from the current directory looking for `artifacts/manifest.json`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("HETSTREAM_ARTIFACTS") {
+        return dir.into();
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join(DEFAULT_ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return DEFAULT_ARTIFACTS_DIR.into();
+        }
+    }
+}

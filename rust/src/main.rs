@@ -1,0 +1,222 @@
+//! `repro` — the hetstream launcher.
+//!
+//! One subcommand per paper experiment (fig1..fig9, table2, lavamd) plus
+//! generic `stream` / `survey` commands.  Run `repro help` for usage.
+
+use anyhow::{anyhow, Result};
+
+use hetstream::config::RunConfig;
+use hetstream::device::DeviceProfile;
+use hetstream::experiments;
+use hetstream::hstreams::{Context, ContextBuilder};
+use hetstream::util::cli::Args;
+use hetstream::workloads::{extended_benchmarks, fig9_benchmarks, Benchmark, Mode};
+
+const USAGE: &str = "\
+repro — hetstream launcher (reproduction of 'Streaming Applications on \
+Heterogeneous Platforms', Li et al. 2016)
+
+USAGE: repro <COMMAND> [OPTIONS]
+
+COMMANDS:
+  fig1        CDF of R_H2D / R_D2H over the 223-config corpus
+                [--engine] [--subset N] [--csv PATH]
+  fig2        R vs input dataset (lbm, FDTD3d)          [--engine]
+  fig3        R vs code variant (Reduction v1/v2)        [--engine]
+  fig4        R vs platform (nn on MIC vs K80 profiles)
+  table2      Dependency categorization of all 56 benchmarks
+  fig9        Single vs multi-stream, 13 streamed benchmarks
+                [--streams N=4] [--scale S=2]
+  lavamd      The §5 lavaMD negative case   [--streams N=4] [--scale S=2]
+  rgain       R vs gain correlation (ConvSep/Transpose)
+  stream NAME Run one streamed benchmark    [--streams N=4] [--scale S=2]
+  autotune NAME  Pick the best stream count for a benchmark (paper §6
+                 future work): analytic prediction + measured ladder
+  survey      Full corpus CSV (analytic R + category + decision)
+  quickstart  Smoke run: vector_add through the full stack
+
+GLOBAL OPTIONS:
+  --config PATH   JSON run config
+  --device NAME   mic31sp | k80 | instant | slow-link
+  --runs N        measurement repetitions (median; paper uses 11)
+";
+
+fn profile_from(args: &Args, cfg: &RunConfig) -> Result<DeviceProfile> {
+    if let Some(name) = args.get("device") {
+        return DeviceProfile::preset(name).ok_or_else(|| anyhow!("unknown device preset `{name}`"));
+    }
+    cfg.device_profile().map_err(|e| anyhow!(e.to_string()))
+}
+
+fn make_ctx(profile: DeviceProfile, artifacts: Option<Vec<String>>) -> Result<Context> {
+    let mut b = ContextBuilder::new().profile(profile);
+    if let Some(names) = artifacts {
+        b = b.only_artifacts(names);
+    }
+    b.build().map_err(|e| anyhow!(e.to_string()))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cfg = match args.get("config") {
+        Some(path) => RunConfig::load(path).map_err(|e| anyhow!(e.to_string()))?,
+        None => RunConfig::default(),
+    };
+    let runs = args.get_usize("runs", cfg.measure.runs);
+    let profile = profile_from(&args, &cfg)?;
+    let streams = args.get_usize("streams", cfg.streaming.streams);
+    let scale = args.get_usize("scale", 2);
+
+    match args.cmd.as_deref() {
+        Some("fig1") => {
+            let (table, rows) = if args.flag("engine") {
+                let ctx = make_ctx(profile, Some(vec!["burner_64".into()]))?;
+                let subset = args.get("subset").and_then(|s| s.parse().ok());
+                experiments::fig1_engine(&ctx, runs, subset)
+            } else {
+                experiments::fig1_analytic(&profile)
+            };
+            println!("{}", table.markdown());
+            println!("paper: CDF > 50% at R_H2D = 0.1; ~70% for D2H  (n = {})", rows.len());
+            if let Some(path) = args.get("csv") {
+                let mut t =
+                    hetstream::metrics::Table::new("", &["app", "config", "r_h2d", "r_d2h"]);
+                for r in &rows {
+                    t.row(&[
+                        r.app.to_string(),
+                        r.config.clone(),
+                        format!("{:.4}", r.r_h2d),
+                        format!("{:.4}", r.r_d2h),
+                    ]);
+                }
+                std::fs::write(path, t.csv())?;
+                println!("wrote {path}");
+            }
+        }
+        Some("fig2") => {
+            let table = if args.flag("engine") {
+                let ctx = make_ctx(profile.clone(), Some(vec!["burner_64".into()]))?;
+                experiments::fig2(Some(&ctx), &profile, runs)
+            } else {
+                experiments::fig2(None, &profile, runs)
+            };
+            println!("{}", table.markdown());
+        }
+        Some("fig3") => {
+            let table = if args.flag("engine") {
+                let ctx = make_ctx(profile.clone(), Some(vec!["burner_64".into()]))?;
+                experiments::fig3(Some(&ctx), &profile, runs)
+            } else {
+                experiments::fig3(None, &profile, runs)
+            };
+            println!("{}", table.markdown());
+        }
+        Some("fig4") => println!("{}", experiments::fig4().markdown()),
+        Some("table2") => println!("{}", experiments::table2().markdown()),
+        Some("fig9") => {
+            let ctx = make_ctx(profile, None)?;
+            let (table, _) = experiments::fig9(&ctx, scale, streams, runs)
+                .map_err(|e| anyhow!(e.to_string()))?;
+            println!("{}", table.markdown());
+            println!(
+                "paper: improvements of 8%..90%; nn ≈ 85%, fwt ≈ 39%, cFFT ≈ 38%, nw ≈ 52%; lavaMD negative"
+            );
+        }
+        Some("lavamd") => {
+            let ctx = make_ctx(profile, Some(vec!["lavamd_box".into()]))?;
+            let table = experiments::lavamd_negative(&ctx, scale, streams, runs)
+                .map_err(|e| anyhow!(e.to_string()))?;
+            println!("{}", table.markdown());
+        }
+        Some("rgain") => {
+            let ctx = make_ctx(profile, Some(vec!["conv_sep".into(), "transpose".into()]))?;
+            let table = experiments::rgain(&ctx, scale, streams, runs)
+                .map_err(|e| anyhow!(e.to_string()))?;
+            println!("{}", table.markdown());
+        }
+        Some("stream") => {
+            let name = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("usage: repro stream <NAME> [--streams N]"))?;
+            let mut benches = fig9_benchmarks(scale);
+            benches.extend(extended_benchmarks(scale));
+            let b = benches
+                .iter()
+                .find(|b| b.name().eq_ignore_ascii_case(name))
+                .ok_or_else(|| anyhow!("unknown benchmark `{name}`"))?;
+            let ctx =
+                make_ctx(profile, Some(b.artifacts().iter().map(|s| s.to_string()).collect()))?;
+            let base = b.run(&ctx, Mode::Baseline).map_err(|e| anyhow!(e.to_string()))?;
+            let strm = b.run(&ctx, Mode::Streamed(streams)).map_err(|e| anyhow!(e.to_string()))?;
+            println!(
+                "{name}: baseline {:.2} ms | {streams} streams {:.2} ms | improvement {:+.1}% | validated {}",
+                base.wall.as_secs_f64() * 1e3,
+                strm.wall.as_secs_f64() * 1e3,
+                (base.wall.as_secs_f64() / strm.wall.as_secs_f64() - 1.0) * 100.0,
+                base.validated && strm.validated,
+            );
+        }
+        Some("autotune") => {
+            let name = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("usage: repro autotune <NAME> [--scale S]"))?;
+            let mut benches = fig9_benchmarks(scale);
+            benches.extend(extended_benchmarks(scale));
+            let b = benches
+                .iter()
+                .find(|b| b.name().eq_ignore_ascii_case(name))
+                .ok_or_else(|| anyhow!("unknown benchmark `{name}`"))?;
+            let ctx =
+                make_ctx(profile, Some(b.artifacts().iter().map(|s| s.to_string()).collect()))?;
+            let result = hetstream::analysis::autotune_streams(
+                &ctx,
+                b.as_ref(),
+                &[1, 2, 4, 8],
+                runs.min(5),
+            )
+            .map_err(|e| anyhow!(e.to_string()))?;
+            for (n, ms) in &result.ladder {
+                println!("  {n:2} streams: {ms:8.2} ms");
+            }
+            println!("best: {} streams ({:.2} ms)", result.best_streams, result.best_ms);
+        }
+        Some("survey") => {
+            let mut t = hetstream::metrics::Table::new(
+                "",
+                &["suite", "app", "config", "category", "r_h2d", "r_d2h", "decision"],
+            );
+            for c in hetstream::corpus::all_configs() {
+                let st = experiments::analytic_stage_times(&c, &profile);
+                let d = hetstream::analysis::decide(st.r_h2d());
+                t.row(&[
+                    c.suite.label().to_string(),
+                    c.app.to_string(),
+                    c.config.clone(),
+                    c.category().label().to_string(),
+                    format!("{:.4}", st.r_h2d()),
+                    format!("{:.4}", st.r_d2h()),
+                    format!("{d:?}"),
+                ]);
+            }
+            print!("{}", t.csv());
+        }
+        Some("quickstart") => {
+            let ctx = make_ctx(profile, Some(vec!["vector_add".into()]))?;
+            let b = hetstream::workloads::VectorAdd::new(1);
+            let base = b.run(&ctx, Mode::Baseline).map_err(|e| anyhow!(e.to_string()))?;
+            let strm = b.run(&ctx, Mode::Streamed(4)).map_err(|e| anyhow!(e.to_string()))?;
+            println!(
+                "quickstart OK — baseline {:.2} ms, 4 streams {:.2} ms, validated {}",
+                base.wall.as_secs_f64() * 1e3,
+                strm.wall.as_secs_f64() * 1e3,
+                base.validated && strm.validated
+            );
+        }
+        _ => {
+            print!("{USAGE}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Timing, robust statistics (the paper's median-of-11 protocol), and
+//! report emission.
+
+mod report;
+mod stats;
+
+pub use report::{csv_table, markdown_table, Table};
+pub use stats::{median, median_duration, quantile, Stats};
+
+use std::time::{Duration, Instant};
+
+/// Wall-clock timer for a measured region.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+}
+
+/// Run `f` `runs` times and return the median duration — the paper's
+/// measurement protocol (§3.3: "we perform 11 runs and calculate the
+/// median value").
+pub fn median_of_runs<F: FnMut()>(runs: usize, mut f: F) -> Duration {
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed());
+    }
+    median_duration(&mut samples)
+}

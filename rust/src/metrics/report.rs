@@ -1,0 +1,81 @@
+//! Table emission: the benches print the same rows/series the paper's
+//! tables and figures report, in markdown and CSV.
+
+/// A simple column-ordered table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: ToString>(&mut self, cells: &[S]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.iter().map(|c| c.to_string()).collect());
+    }
+
+    pub fn markdown(&self) -> String {
+        markdown_table(&self.title, &self.headers, &self.rows)
+    }
+
+    pub fn csv(&self) -> String {
+        csv_table(&self.headers, &self.rows)
+    }
+}
+
+/// Render a markdown table.
+pub fn markdown_table(title: &str, headers: &[String], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    if !title.is_empty() {
+        out.push_str(&format!("### {title}\n\n"));
+    }
+    out.push_str(&format!("| {} |\n", headers.join(" | ")));
+    out.push_str(&format!("|{}\n", "---|".repeat(headers.len())));
+    for row in rows {
+        out.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    out
+}
+
+/// Render a CSV table.
+pub fn csv_table(headers: &[String], rows: &[Vec<String>]) -> String {
+    let mut out = headers.join(",");
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["1", "2"]);
+        let md = t.markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+        let csv = t.csv();
+        assert!(csv.starts_with("a,b\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["1"]);
+    }
+}

@@ -1,0 +1,77 @@
+//! False-dependent partitioning: redundant boundary transfer (Fig. 7).
+//!
+//! RAR-shared elements are *eliminated* by shipping each task its chunk
+//! plus the `halo` boundary elements its stencil reads.  The transfer
+//! window is clamped at the array ends (callers pre-pad when the kernel
+//! expects a fixed halo, as the AOT chunk shapes do).
+
+/// One halo task: it *owns* `[start, start+len)` of the output but
+/// *transfers* `[xfer_start, xfer_start + xfer_len)` of the (pre-padded)
+/// input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HaloChunk {
+    pub index: usize,
+    /// Owned output range (in unpadded coordinates).
+    pub start: usize,
+    pub len: usize,
+    /// Transferred input range (in *padded* coordinates: the caller pads
+    /// the input with `halo` elements on each side, so task `i`'s window
+    /// is `start .. start + len + 2*halo`).
+    pub xfer_start: usize,
+    pub xfer_len: usize,
+}
+
+/// Cut `total` output elements into `chunks` halo tasks with radius
+/// `halo`, against an input pre-padded by `halo` on each side.
+pub fn halo_chunks(total: usize, chunks: usize, halo: usize) -> Vec<HaloChunk> {
+    super::independent::chunk_ranges(total, chunks)
+        .into_iter()
+        .map(|r| HaloChunk {
+            index: r.index,
+            start: r.start,
+            len: r.len,
+            // Padded input coordinates: owned start maps to start+halo;
+            // the window begins `halo` earlier, i.e. at `start`.
+            xfer_start: r.start,
+            xfer_len: r.len + 2 * halo,
+        })
+        .collect()
+}
+
+/// The paper's lavaMD analysis (§5): redundant boundary bytes per task
+/// relative to owned bytes.  Streaming a false-dependent code pays off
+/// when this ratio is small (FWT: 254/1048576 ≈ 0); it fails when the
+/// boundary is comparable to the task (lavaMD: 222/250 ≈ 0.9).
+pub fn halo_overhead_ratio(chunk_len: usize, halo: usize) -> f64 {
+    if chunk_len == 0 {
+        return f64::INFINITY;
+    }
+    (2 * halo) as f64 / chunk_len as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_cover_owned_plus_halo() {
+        let halo = 3;
+        let cs = halo_chunks(100, 4, halo);
+        assert_eq!(cs.len(), 4);
+        for c in &cs {
+            assert_eq!(c.xfer_len, c.len + 2 * halo);
+            assert_eq!(c.xfer_start, c.start);
+        }
+        // Owned ranges tile the output exactly.
+        assert_eq!(cs.iter().map(|c| c.len).sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn overhead_ratio_matches_paper_cases() {
+        // FWT: boundary 254 elements, task 1048576 -> negligible.
+        assert!(halo_overhead_ratio(1_048_576, 127) < 0.001);
+        // lavaMD: boundary 222, task 250 -> ~0.9: streaming won't pay.
+        let r = halo_overhead_ratio(250, 111);
+        assert!(r > 0.8, "lavaMD halo ratio {r}");
+    }
+}

@@ -1,0 +1,64 @@
+//! Embarrassingly-independent partitioning (paper Fig. 6).
+//!
+//! The input is cut into contiguous chunks; chunk *i* is task *i*, and
+//! tasks share no data, so any assignment of tasks to streams is legal.
+
+/// One contiguous element range `[start, start + len)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkRange {
+    pub index: usize,
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Split `total` elements into `chunks` contiguous ranges.  Every range
+/// gets `total / chunks` elements; the remainder spreads one element at
+/// a time over the leading ranges (so lengths differ by at most one and
+/// the union is exact — a proptest invariant).
+pub fn chunk_ranges(total: usize, chunks: usize) -> Vec<ChunkRange> {
+    assert!(chunks > 0, "need at least one chunk");
+    let base = total / chunks;
+    let rem = total % chunks;
+    let mut out = Vec::with_capacity(chunks);
+    let mut start = 0;
+    for i in 0..chunks {
+        let len = base + usize::from(i < rem);
+        out.push(ChunkRange { index: i, start, len });
+        start += len;
+    }
+    debug_assert_eq!(start, total);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_cover() {
+        let rs = chunk_ranges(100, 7);
+        assert_eq!(rs.len(), 7);
+        assert_eq!(rs.iter().map(|r| r.len).sum::<usize>(), 100);
+        // contiguous, ordered, non-overlapping
+        let mut pos = 0;
+        for r in &rs {
+            assert_eq!(r.start, pos);
+            pos += r.len;
+        }
+    }
+
+    #[test]
+    fn lengths_differ_by_at_most_one() {
+        let rs = chunk_ranges(103, 8);
+        let min = rs.iter().map(|r| r.len).min().unwrap();
+        let max = rs.iter().map(|r| r.len).max().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn more_chunks_than_elements() {
+        let rs = chunk_ranges(3, 5);
+        assert_eq!(rs.iter().map(|r| r.len).sum::<usize>(), 3);
+        assert_eq!(rs.iter().filter(|r| r.len == 0).count(), 2);
+    }
+}

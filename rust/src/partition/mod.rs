@@ -1,0 +1,21 @@
+//! Task partitioning — the paper's three streaming transformations.
+//!
+//! Tasks are generated from input/output data partitioning; task
+//! dependency therefore shows up as data dependency (§4.2):
+//!
+//! - [`independent`]: *Embarrassingly Independent* — disjoint chunks, no
+//!   inter-task data (Fig. 6, nn).
+//! - [`halo`]: *False Dependent* — RAR overlap eliminated by redundantly
+//!   transferring boundary elements with each task (Fig. 7, FWT), plus
+//!   the overhead accounting that predicts the lavaMD negative case.
+//! - [`wavefront`]: *True Dependent* — RAW dependencies respected by
+//!   diagonal ordering; tasks on one diagonal run concurrently in
+//!   different streams (Fig. 8, NW).
+
+pub mod halo;
+pub mod independent;
+pub mod wavefront;
+
+pub use halo::{halo_chunks, halo_overhead_ratio, HaloChunk};
+pub use independent::{chunk_ranges, ChunkRange};
+pub use wavefront::{diagonals, tile_coords, Diagonal, TileCoord};

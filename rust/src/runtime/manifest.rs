@@ -1,0 +1,196 @@
+//! `artifacts/manifest.json` schema — the contract between `aot.py` and
+//! the Rust runtime.  Parsed with the in-crate JSON parser
+//! ([`crate::util::json`]); no external dependencies.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Element type of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size(self) -> usize {
+        4
+    }
+
+    fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(DType::F32),
+            "i32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+}
+
+/// Shape + dtype of one input or output.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    /// Number of elements.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    /// Payload size in bytes.
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.size()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Manifest("io spec missing shape".into()))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| Error::Manifest("bad shape entry".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .and_then(DType::from_name)
+            .ok_or_else(|| Error::Manifest("io spec missing/unknown dtype".into()))?;
+        Ok(IoSpec { shape, dtype })
+    }
+}
+
+/// One AOT-compiled kernel variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Analytic FLOP estimate for one call (drives KEX pacing).
+    pub flops_per_call: u64,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Manifest(format!("read {}: {e}", path.display())))?;
+        let m = Self::parse(&text)?;
+        for a in &m.artifacts {
+            if !dir.join(&a.file).exists() {
+                return Err(Error::Manifest(format!("missing artifact file {}", a.file)));
+            }
+        }
+        Ok(m)
+    }
+
+    /// Parse manifest JSON text (no filesystem checks).
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| Error::Manifest(e.to_string()))?;
+        let format = j
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Manifest("missing format".into()))?
+            .to_string();
+        if format != "hlo-text/v1" {
+            return Err(Error::Manifest(format!(
+                "unsupported manifest format `{format}` (want hlo-text/v1)"
+            )));
+        }
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Manifest("missing artifacts array".into()))?
+            .iter()
+            .map(|a| {
+                let name = a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Manifest("artifact missing name".into()))?
+                    .to_string();
+                let file = a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Manifest(format!("artifact {name} missing file")))?
+                    .to_string();
+                let io = |key: &str| -> Result<Vec<IoSpec>> {
+                    a.get(key)
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| Error::Manifest(format!("artifact {name} missing {key}")))?
+                        .iter()
+                        .map(IoSpec::from_json)
+                        .collect()
+                };
+                Ok(ArtifactMeta {
+                    inputs: io("inputs")?,
+                    outputs: io("outputs")?,
+                    flops_per_call: a
+                        .get("flops_per_call")
+                        .and_then(Json::as_u64)
+                        .unwrap_or(0),
+                    name,
+                    file,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { format, artifacts })
+    }
+
+    /// Look up an artifact by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+        "format": "hlo-text/v1",
+        "artifacts": [{
+            "name": "vector_add",
+            "file": "vector_add.hlo.txt",
+            "inputs": [{"shape": [65536], "dtype": "f32"}, {"shape": [65536], "dtype": "f32"}],
+            "outputs": [{"shape": [65536], "dtype": "f32"}],
+            "flops_per_call": 65536
+        }]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("vector_add").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].bytes(), 65536 * 4);
+        assert_eq!(a.outputs[0].elements(), 65536);
+        assert_eq!(a.flops_per_call, 65536);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let doc = DOC.replace("hlo-text/v1", "hlo-proto/v0");
+        assert!(Manifest::parse(&doc).is_err());
+    }
+
+    #[test]
+    fn scalar_shape_has_one_element() {
+        let spec = IoSpec { shape: vec![], dtype: DType::F32 };
+        assert_eq!(spec.elements(), 1);
+        assert_eq!(spec.bytes(), 4);
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The interchange format is HLO **text** produced by
+//! `python/compile/aot.py` — not a serialized `HloModuleProto`, because
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see DESIGN.md).
+//!
+//! All PJRT types wrap raw C pointers and are not `Send`; an
+//! [`ArtifactStore`] therefore lives on the thread that created it (the
+//! [`crate::device::ComputeEngine`] worker owns one).
+
+mod manifest;
+mod store;
+
+pub use manifest::{ArtifactMeta, DType, IoSpec, Manifest};
+pub use store::{bytes, ArtifactStore};

@@ -1,0 +1,211 @@
+//! Compiled-artifact store: one PJRT CPU client + every manifest entry
+//! compiled once at startup, executed by name with raw byte buffers.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::{Error, Result};
+
+use super::manifest::{ArtifactMeta, Manifest};
+
+/// Owns the PJRT client and the compiled executables.  `!Send` — keep it
+/// on the thread that created it.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// §Perf: per-artifact input literals, created once and refilled
+    /// with `copy_raw_from` on every call (saves an allocation + shape
+    /// setup per input per call; see EXPERIMENTS.md §Perf).
+    input_cache: std::cell::RefCell<HashMap<String, Vec<xla::Literal>>>,
+}
+
+impl ArtifactStore {
+    /// Load the manifest and compile every artifact on the CPU PJRT
+    /// client.  Compilation happens once; execution is pure dispatch.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        for art in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(dir.join(&art.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.insert(art.name.clone(), exe);
+        }
+        Ok(Self { client, manifest, executables, input_cache: Default::default() })
+    }
+
+    /// Load only the named artifacts (faster startup for focused runs).
+    pub fn load_subset(dir: &Path, names: &[&str]) -> Result<Self> {
+        let mut manifest = Manifest::load(dir)?;
+        manifest.artifacts.retain(|a| names.contains(&a.name.as_str()));
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        for art in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(dir.join(&art.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.insert(art.name.clone(), exe);
+        }
+        Ok(Self { client, manifest, executables, input_cache: Default::default() })
+    }
+
+    /// Metadata for an artifact.
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("unknown artifact `{name}`")))
+    }
+
+    /// All loaded artifact names.
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+
+    /// PJRT platform string (for diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute artifact `name` with raw little-endian byte payloads, one
+    /// per input, shaped per the manifest.  Returns one byte payload per
+    /// output.  Payload lengths are validated against the signature.
+    pub fn execute_bytes(&self, name: &str, inputs: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+        let meta = self.meta(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            return Err(Error::Signature {
+                artifact: name.into(),
+                detail: format!("got {} inputs, want {}", inputs.len(), meta.inputs.len()),
+            });
+        }
+        let mut cache = self.input_cache.borrow_mut();
+        let literals = cache.entry(name.to_string()).or_insert_with(|| {
+            meta.inputs
+                .iter()
+                .map(|spec| {
+                    let ty = match spec.dtype {
+                        super::DType::F32 => xla::PrimitiveType::F32,
+                        super::DType::I32 => xla::PrimitiveType::S32,
+                    };
+                    xla::Literal::create_from_shape(ty, &spec.shape)
+                })
+                .collect()
+        });
+        for ((spec, bytes), lit) in meta.inputs.iter().zip(inputs).zip(literals.iter_mut()) {
+            if bytes.len() != spec.bytes() {
+                return Err(Error::Signature {
+                    artifact: name.into(),
+                    detail: format!("input bytes {} != expected {}", bytes.len(), spec.bytes()),
+                });
+            }
+            // Refill the cached literal in place (§Perf).
+            match spec.dtype {
+                super::DType::F32 => {
+                    let src: &[f32] = unsafe {
+                        std::slice::from_raw_parts(bytes.as_ptr() as *const f32, spec.elements())
+                    };
+                    lit.copy_raw_from(src)?;
+                }
+                super::DType::I32 => {
+                    let src: &[i32] = unsafe {
+                        std::slice::from_raw_parts(bytes.as_ptr() as *const i32, spec.elements())
+                    };
+                    lit.copy_raw_from(src)?;
+                }
+            }
+        }
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("artifact `{name}` not compiled")))?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple at top level.
+        let parts = lit.to_tuple()?;
+        if parts.len() != meta.outputs.len() {
+            return Err(Error::Signature {
+                artifact: name.into(),
+                detail: format!("got {} outputs, want {}", parts.len(), meta.outputs.len()),
+            });
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (spec, part) in meta.outputs.iter().zip(parts) {
+            // §Perf: copy the literal straight into the output byte
+            // buffer (one copy) instead of to_vec + recopy (two copies
+            // plus an allocation) — see EXPERIMENTS.md §Perf.
+            let mut bytes = vec![0u8; spec.bytes()];
+            match spec.dtype {
+                super::DType::F32 => {
+                    let dst: &mut [f32] = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            bytes.as_mut_ptr() as *mut f32,
+                            spec.elements(),
+                        )
+                    };
+                    part.copy_raw_to(dst)?;
+                }
+                super::DType::I32 => {
+                    let dst: &mut [i32] = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            bytes.as_mut_ptr() as *mut i32,
+                            spec.elements(),
+                        )
+                    };
+                    part.copy_raw_to(dst)?;
+                }
+            }
+            outs.push(bytes);
+        }
+        Ok(outs)
+    }
+}
+
+/// Helpers to view typed slices as byte slices and back — used throughout
+/// the workload drivers.
+pub mod bytes {
+    // §Perf: bulk memcpy conversions.  PJRT literals and this host are
+    // both native-endian, so per-element to/from_le_bytes loops (the
+    // original implementation) only cost time; a compile-time check
+    // keeps the little-endian assumption explicit.
+    #[cfg(not(target_endian = "little"))]
+    compile_error!("hetstream assumes a little-endian host (matches HLO text artifacts)");
+
+    /// f32 slice -> byte vec (single memcpy).
+    pub fn from_f32(v: &[f32]) -> Vec<u8> {
+        let mut out = vec![0u8; v.len() * 4];
+        unsafe {
+            std::ptr::copy_nonoverlapping(v.as_ptr() as *const u8, out.as_mut_ptr(), out.len());
+        }
+        out
+    }
+
+    /// i32 slice -> byte vec (single memcpy).
+    pub fn from_i32(v: &[i32]) -> Vec<u8> {
+        let mut out = vec![0u8; v.len() * 4];
+        unsafe {
+            std::ptr::copy_nonoverlapping(v.as_ptr() as *const u8, out.as_mut_ptr(), out.len());
+        }
+        out
+    }
+
+    /// byte slice -> f32 vec (single memcpy).
+    pub fn to_f32(b: &[u8]) -> Vec<f32> {
+        let n = b.len() / 4;
+        let mut out = vec![0.0f32; n];
+        unsafe {
+            std::ptr::copy_nonoverlapping(b.as_ptr(), out.as_mut_ptr() as *mut u8, n * 4);
+        }
+        out
+    }
+
+    /// byte slice -> i32 vec (single memcpy).
+    pub fn to_i32(b: &[u8]) -> Vec<i32> {
+        let n = b.len() / 4;
+        let mut out = vec![0i32; n];
+        unsafe {
+            std::ptr::copy_nonoverlapping(b.as_ptr(), out.as_mut_ptr() as *mut u8, n * 4);
+        }
+        out
+    }
+}

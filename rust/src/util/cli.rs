@@ -1,0 +1,99 @@
+//! Tiny CLI argument helper (offline replacement for clap): positional
+//! subcommand + `--flag`, `--key value` options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand).
+    pub cmd: Option<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+    /// `--key value` options and bare `--flag`s (value = "true").
+    pub opts: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (usually `std::env::args().skip(1)`).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let tokens: Vec<String> = it.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(key) = t.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare flag.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.opts.insert(key.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.opts.insert(key.to_string(), "true".into());
+                }
+            } else if out.cmd.is_none() {
+                out.cmd = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// From the process arguments.
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.opts.get(name).map(|v| v != "false").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("fig9 --streams 8 --scale=2 --engine");
+        assert_eq!(a.cmd.as_deref(), Some("fig9"));
+        assert_eq!(a.get_usize("streams", 4), 8);
+        assert_eq!(a.get_usize("scale", 1), 2);
+        assert!(a.flag("engine"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn positional_after_command() {
+        let a = parse("stream nn --streams 2");
+        assert_eq!(a.cmd.as_deref(), Some("stream"));
+        assert_eq!(a.positional, vec!["nn".to_string()]);
+        assert_eq!(a.get_usize("streams", 4), 2);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("fig1");
+        assert_eq!(a.get_usize("runs", 11), 11);
+        assert_eq!(a.get("csv"), None);
+    }
+}

@@ -1,0 +1,7 @@
+//! In-crate utilities replacing external dependencies (offline build):
+//! a minimal JSON parser ([`json`]), a tiny CLI argument helper
+//! ([`cli`]), and a seeded property-testing loop ([`prop`]).
+
+pub mod cli;
+pub mod json;
+pub mod prop;

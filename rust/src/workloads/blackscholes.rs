@@ -1,0 +1,76 @@
+//! NVIDIA `BlackScholes` — pointwise option pricing; three streamed
+//! input arrays, two streamed outputs.
+
+use std::sync::Arc;
+
+use crate::hstreams::Context;
+use crate::runtime::bytes;
+use crate::Result;
+
+use super::{gen_f32, oracle, Benchmark, GenericWorkload, Mode, RunStats, Windows};
+
+pub const CHUNK: usize = 16384;
+
+pub struct BlackScholes {
+    chunks: usize,
+}
+
+impl BlackScholes {
+    pub fn new(scale: usize) -> Self {
+        Self { chunks: 8 * scale.max(1) }
+    }
+}
+
+fn uniform(n: usize, lo: f32, hi: f32, seed: u64) -> Vec<f32> {
+    gen_f32(n, seed).into_iter().map(|v| lo + (v * 0.5 + 0.5) * (hi - lo)).collect()
+}
+
+impl Benchmark for BlackScholes {
+    fn name(&self) -> &'static str {
+        "BlackScholes"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["black_scholes"]
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let total = self.chunks * CHUNK;
+        let s = uniform(total, 5.0, 30.0, 51);
+        let k = uniform(total, 1.0, 100.0, 52);
+        let t = uniform(total, 0.25, 10.0, 53);
+
+        let wl = GenericWorkload {
+            name: "BlackScholes",
+            artifact: "black_scholes",
+            streamed_inputs: vec![
+                Windows::disjoint(Arc::new(bytes::from_f32(&s)), self.chunks),
+                Windows::disjoint(Arc::new(bytes::from_f32(&k)), self.chunks),
+                Windows::disjoint(Arc::new(bytes::from_f32(&t)), self.chunks),
+            ],
+            shared_inputs: vec![],
+            output_chunk_bytes: vec![CHUNK * 4, CHUNK * 4],
+            // Transcendental-heavy pricing: ~250 device ops per option.
+            flops_per_chunk: Some(4_000_000),
+        };
+        let (wall, outputs, h2d) = wl.execute(ctx, mode)?;
+
+        let call = bytes::to_f32(&outputs[0]);
+        let put = bytes::to_f32(&outputs[1]);
+        let (wcall, wput) = oracle::black_scholes(&s, &k, &t);
+        let close = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).all(|(x, y)| (x - y).abs() <= 5e-3 + 2e-3 * y.abs())
+        };
+        let ok = close(&call, &wcall) && close(&put, &wput);
+
+        Ok(RunStats {
+            name: "BlackScholes".into(),
+            mode,
+            wall,
+            h2d_bytes: h2d,
+            d2h_bytes: (2 * total * 4) as u64,
+            tasks: self.chunks,
+            validated: ok,
+        })
+    }
+}

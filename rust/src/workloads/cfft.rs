@@ -1,0 +1,87 @@
+//! NVIDIA `ConvolutionFFT2D` (the paper's `cFFT`) — tiled spectral
+//! convolution.  The FFTs run inside the AOT artifact (XLA-native FFT
+//! op, lowered at L2); the spectral pointwise multiply is the L1 Pallas
+//! kernel.  Gain in the paper: ~38%.
+
+use std::sync::Arc;
+
+use crate::hstreams::Context;
+use crate::runtime::bytes;
+use crate::Result;
+
+use super::{gen_f32, Benchmark, GenericWorkload, Mode, RunStats, Windows};
+
+/// Tile side — must match the `cfft2d` AOT artifact.
+pub const TILE: usize = 128;
+
+pub struct ConvFft2d {
+    chunks: usize,
+}
+
+impl ConvFft2d {
+    pub fn new(scale: usize) -> Self {
+        Self { chunks: 12 * scale.max(1) }
+    }
+}
+
+impl Benchmark for ConvFft2d {
+    fn name(&self) -> &'static str {
+        "ConvolutionFFT2D"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["cfft2d"]
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let elems = TILE * TILE;
+        let tiles = gen_f32(self.chunks * elems, 101);
+        // Validation filter: a shifted delta at (1, 3) — the circular
+        // convolution then equals a circular shift of the tile, which is
+        // checked exactly (random-filter numerics are covered by the
+        // python kernel tests against the FFT oracle).
+        let mut filt = vec![0.0f32; elems];
+        filt[1 * TILE + 3] = 1.0;
+
+        let wl = GenericWorkload {
+            name: "ConvolutionFFT2D",
+            artifact: "cfft2d",
+            streamed_inputs: vec![Windows::disjoint(
+                Arc::new(bytes::from_f32(&tiles)),
+                self.chunks,
+            )],
+            shared_inputs: vec![bytes::from_f32(&filt)],
+            output_chunk_bytes: vec![elems * 4],
+            // FFT -> pointwise -> IFFT device time per tile.
+            flops_per_chunk: Some(2_000_000),
+        };
+        let (wall, outputs, h2d) = wl.execute(ctx, mode)?;
+
+        let got = bytes::to_f32(&outputs[0]);
+        let mut ok = true;
+        'outer: for c in 0..self.chunks {
+            let tile = &tiles[c * elems..(c + 1) * elems];
+            let out = &got[c * elems..(c + 1) * elems];
+            for i in 0..TILE {
+                for j in 0..TILE {
+                    // out[i][j] = tile[(i-1) mod T][(j-3) mod T]
+                    let want = tile[((i + TILE - 1) % TILE) * TILE + (j + TILE - 3) % TILE];
+                    if (out[i * TILE + j] - want).abs() > 1e-3 + 1e-3 * want.abs() {
+                        ok = false;
+                        break 'outer;
+                    }
+                }
+            }
+        }
+
+        Ok(RunStats {
+            name: "ConvolutionFFT2D".into(),
+            mode,
+            wall,
+            h2d_bytes: h2d,
+            d2h_bytes: (self.chunks * elems * 4) as u64,
+            tasks: self.chunks,
+            validated: ok,
+        })
+    }
+}

@@ -1,0 +1,82 @@
+//! NVIDIA SDK `DCT8x8` — blockwise 2D DCT over independent row bands
+//! (JPEG-style).  A second-tier streamable benchmark beyond the paper's
+//! 13, exercising the MXU-batched basis-matmul kernel.
+
+use std::sync::Arc;
+
+use crate::hstreams::Context;
+use crate::runtime::bytes;
+use crate::Result;
+
+use super::{gen_f32, oracle, Benchmark, GenericWorkload, Mode, RunStats, Windows};
+
+/// Band geometry — must match the `dct8x8` AOT artifact.
+pub const ROWS: usize = 64;
+pub const COLS: usize = 512;
+
+pub struct Dct8x8 {
+    chunks: usize,
+}
+
+impl Dct8x8 {
+    pub fn new(scale: usize) -> Self {
+        Self { chunks: 8 * scale.max(1) }
+    }
+}
+
+impl Benchmark for Dct8x8 {
+    fn name(&self) -> &'static str {
+        "DCT8x8"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["dct8x8"]
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let total = self.chunks * ROWS * COLS;
+        let x = gen_f32(total, 201);
+
+        // Orthonormal DCT basis, broadcast once (artifact input 2).
+        let mut basis = vec![0.0f32; 64];
+        for k in 0..8 {
+            for n in 0..8 {
+                let v = (std::f64::consts::PI * (2 * n + 1) as f64 * k as f64 / 16.0).cos();
+                basis[k * 8 + n] =
+                    (0.5 * if k == 0 { v / std::f64::consts::SQRT_2 } else { v }) as f32;
+            }
+        }
+        let wl = GenericWorkload {
+            name: "DCT8x8",
+            artifact: "dct8x8",
+            streamed_inputs: vec![Windows::disjoint(Arc::new(bytes::from_f32(&x)), self.chunks)],
+            shared_inputs: vec![bytes::from_f32(&basis)],
+            output_chunk_bytes: vec![ROWS * COLS * 4],
+            // Two basis matmuls per block on the device.
+            flops_per_chunk: Some(2_100_000),
+        };
+        let (wall, outputs, h2d) = wl.execute(ctx, mode)?;
+
+        let got = bytes::to_f32(&outputs[0]);
+        let mut ok = true;
+        for c in 0..self.chunks {
+            let band = &x[c * ROWS * COLS..(c + 1) * ROWS * COLS];
+            let want = oracle::dct8x8(band, ROWS, COLS);
+            let out = &got[c * ROWS * COLS..(c + 1) * ROWS * COLS];
+            if !out.iter().zip(&want).all(|(a, b)| (a - b).abs() <= 1e-3 + 1e-3 * b.abs()) {
+                ok = false;
+                break;
+            }
+        }
+
+        Ok(RunStats {
+            name: "DCT8x8".into(),
+            mode,
+            wall,
+            h2d_bytes: h2d,
+            d2h_bytes: (total * 4) as u64,
+            tasks: self.chunks,
+            validated: ok,
+        })
+    }
+}

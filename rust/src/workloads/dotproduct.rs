@@ -1,0 +1,71 @@
+//! NVIDIA SDK `DotProduct` — per-chunk partial products with a 4-byte
+//! D2H per task: the extreme H2D-dominated streamable code (R → 1
+//! territory, the paper's "is the offload even worth it" regime).
+
+use std::sync::Arc;
+
+use crate::hstreams::Context;
+use crate::runtime::bytes;
+use crate::Result;
+
+use super::{gen_f32, Benchmark, GenericWorkload, Mode, RunStats, Windows};
+
+pub const CHUNK: usize = 65536;
+
+pub struct DotProduct {
+    chunks: usize,
+}
+
+impl DotProduct {
+    pub fn new(scale: usize) -> Self {
+        Self { chunks: 8 * scale.max(1) }
+    }
+}
+
+impl Benchmark for DotProduct {
+    fn name(&self) -> &'static str {
+        "DotProduct"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["dot_product"]
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let total = self.chunks * CHUNK;
+        let a = gen_f32(total, 211);
+        let b = gen_f32(total, 212);
+
+        let wl = GenericWorkload {
+            name: "DotProduct",
+            artifact: "dot_product",
+            streamed_inputs: vec![
+                Windows::disjoint(Arc::new(bytes::from_f32(&a)), self.chunks),
+                Windows::disjoint(Arc::new(bytes::from_f32(&b)), self.chunks),
+            ],
+            shared_inputs: vec![],
+            output_chunk_bytes: vec![4],
+            flops_per_chunk: Some(1_000_000),
+        };
+        let timer = crate::metrics::Timer::start();
+        let (_, outputs, h2d) = wl.execute(ctx, mode)?;
+
+        // Host final reduce over the partials.
+        let partials = bytes::to_f32(&outputs[0]);
+        let got: f64 = partials.iter().map(|&v| v as f64).sum();
+        let wall = timer.elapsed();
+
+        let want: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+        let ok = (got - want).abs() <= 0.5 + 1e-3 * want.abs();
+
+        Ok(RunStats {
+            name: "DotProduct".into(),
+            mode,
+            wall,
+            h2d_bytes: h2d,
+            d2h_bytes: (self.chunks * 4) as u64,
+            tasks: self.chunks,
+            validated: ok,
+        })
+    }
+}

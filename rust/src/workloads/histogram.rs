@@ -1,0 +1,72 @@
+//! NVIDIA `Histogram` — independent per-chunk counts merged on the
+//! host (the paper's `hg`); D2H is 1 KiB per task, so R_H2D dominates.
+
+use std::sync::Arc;
+
+use crate::hstreams::Context;
+use crate::runtime::bytes;
+use crate::Result;
+
+use super::{gen_i32, oracle, Benchmark, GenericWorkload, Mode, RunStats, Windows};
+
+pub const CHUNK: usize = 16384;
+pub const BINS: usize = 256;
+
+pub struct Histogram {
+    chunks: usize,
+}
+
+impl Histogram {
+    pub fn new(scale: usize) -> Self {
+        Self { chunks: 16 * scale.max(1) }
+    }
+}
+
+impl Benchmark for Histogram {
+    fn name(&self) -> &'static str {
+        "Histogram"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["histogram"]
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let total = self.chunks * CHUNK;
+        let x = gen_i32(total, BINS as i32, 41);
+
+        let wl = GenericWorkload {
+            name: "Histogram",
+            artifact: "histogram",
+            streamed_inputs: vec![Windows::disjoint(Arc::new(bytes::from_i32(&x)), self.chunks)],
+            shared_inputs: vec![],
+            output_chunk_bytes: vec![BINS * 4],
+            // Privatized-histogram merge passes on the device.
+            flops_per_chunk: Some(6_500_000),
+        };
+        let timer = crate::metrics::Timer::start();
+        let (_, outputs, h2d) = wl.execute(ctx, mode)?;
+
+        // Host merge of the per-chunk histograms.
+        let parts = bytes::to_i32(&outputs[0]);
+        let mut merged = vec![0i32; BINS];
+        for c in 0..self.chunks {
+            for b in 0..BINS {
+                merged[b] += parts[c * BINS + b];
+            }
+        }
+        let wall = timer.elapsed();
+
+        let ok = merged == oracle::histogram(&x);
+
+        Ok(RunStats {
+            name: "Histogram".into(),
+            mode,
+            wall,
+            h2d_bytes: h2d,
+            d2h_bytes: (self.chunks * BINS * 4) as u64,
+            tasks: self.chunks,
+            validated: ok,
+        })
+    }
+}

@@ -1,0 +1,119 @@
+//! Rodinia `hotspot` — the **Iterative non-streamable control** (Table 2).
+//!
+//! The thermal grid uploads once, then the step kernel re-runs on
+//! device-resident data via ping-pong buffers; each step consumes the
+//! previous step's output, so there is no independent task for a second
+//! stream to overlap beyond the initial upload.  The paper (§4.1):
+//! "such cases can be streamed by overlapping the data transfer and the
+//! first iteration … the overlapping brings no performance benefit for
+//! a large number of iterations."  This driver measures exactly that:
+//! `Streamed` splits the two uploads across streams (everything the
+//! category permits) and the gain collapses toward zero as steps grow.
+
+use std::sync::Arc;
+
+use crate::device::DevRegion;
+use crate::hstreams::Context;
+use crate::runtime::bytes;
+use crate::Result;
+
+use super::{gen_f32, oracle, Benchmark, Mode, RunStats};
+
+/// Grid side — must match the `hotspot_step` AOT artifact.
+pub const N: usize = 128;
+
+pub struct Hotspot {
+    /// Diffusion steps (the paper's Iterative knob).
+    steps: usize,
+}
+
+impl Hotspot {
+    pub fn new(scale: usize) -> Self {
+        Self { steps: 16 * scale.max(1) }
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+}
+
+impl Benchmark for Hotspot {
+    fn name(&self) -> &'static str {
+        "hotspot"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["hotspot_step"]
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let bytes_n = N * N * 4;
+        let temp0 = gen_f32(N * N, 221);
+        let power = gen_f32(N * N, 222);
+
+        let ta = DevRegion::whole(ctx.alloc(bytes_n)?, bytes_n);
+        let tb = DevRegion::whole(ctx.alloc(bytes_n)?, bytes_n);
+        let pw = DevRegion::whole(ctx.alloc(bytes_n)?, bytes_n);
+        let dst = crate::hstreams::host_dst(bytes_n);
+
+        let n_streams = match mode {
+            Mode::Baseline => 1,
+            Mode::Streamed(n) => n.max(1),
+        };
+
+        let timer = crate::metrics::Timer::start();
+        let mut streams: Vec<_> = (0..n_streams.max(2).min(2)).map(|_| ctx.stream()).collect();
+
+        // All the overlap this category permits: the two uploads ride
+        // different streams when streamed.
+        let e_t = streams[0].h2d(
+            crate::device::HostSrc::whole(Arc::new(bytes::from_f32(&temp0))),
+            ta,
+        );
+        let up_stream = if n_streams > 1 && streams.len() > 1 { 1 } else { 0 };
+        let e_p = streams[up_stream].h2d(
+            crate::device::HostSrc::whole(Arc::new(bytes::from_f32(&power))),
+            pw,
+        );
+        // Ping-pong chain: step k reads step k-1's output — a pure
+        // dependency chain, serialized regardless of stream count.
+        streams[0].wait_event(e_t.clone());
+        streams[0].wait_event(e_p.clone());
+        let (mut src, mut dst_buf) = (ta, tb);
+        for _ in 0..self.steps {
+            streams[0].kex("hotspot_step", vec![src, pw], vec![dst_buf]);
+            std::mem::swap(&mut src, &mut dst_buf);
+        }
+        streams[0].d2h(src, dst.clone());
+        for s in &streams {
+            s.sync();
+        }
+        let wall = timer.elapsed();
+
+        // Validate against the host oracle iterated the same number of
+        // steps (f32 kernel vs f64 oracle: tolerance grows mildly).
+        let got = bytes::to_f32(&dst.data.lock().unwrap());
+        let mut want = temp0.clone();
+        for _ in 0..self.steps {
+            want = oracle::hotspot_step(&want, &power, N);
+        }
+        let ok = got
+            .iter()
+            .zip(&want)
+            .all(|(a, b)| (a - b).abs() <= 1e-2 + 1e-3 * b.abs());
+
+        for r in [ta, tb, pw] {
+            ctx.free(r.buf)?;
+        }
+
+        Ok(RunStats {
+            name: "hotspot".into(),
+            mode,
+            wall,
+            h2d_bytes: 2 * bytes_n as u64,
+            d2h_bytes: bytes_n as u64,
+            tasks: self.steps,
+            validated: ok,
+        })
+    }
+}

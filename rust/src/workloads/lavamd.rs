@@ -1,0 +1,84 @@
+//! Rodinia `lavaMD` — the paper's **negative case** (§5): the halo
+//! (2·111 elements) is comparable to the task itself (~250 elements), so
+//! the streamed port nearly doubles the transferred bytes and per-task
+//! DMA latency swamps the overlap — multiple streams do *not* beat the
+//! bulk offload.
+
+use std::sync::Arc;
+
+use crate::hstreams::Context;
+use crate::partition::halo_overhead_ratio;
+use crate::runtime::bytes;
+use crate::Result;
+
+use super::{gen_f32, oracle, Benchmark, GenericWorkload, Mode, RunStats, Windows};
+
+/// Task geometry — must match the `lavamd_box` AOT artifact.
+pub const CHUNK: usize = 256;
+pub const HALO: usize = 111;
+
+pub struct LavaMd {
+    chunks: usize,
+}
+
+impl LavaMd {
+    pub fn new(scale: usize) -> Self {
+        Self { chunks: 64 * scale.max(1) }
+    }
+
+    /// The paper's §5 analysis: redundant boundary vs task size.
+    pub fn halo_ratio() -> f64 {
+        halo_overhead_ratio(CHUNK, HALO)
+    }
+}
+
+impl Benchmark for LavaMd {
+    fn name(&self) -> &'static str {
+        "lavaMD"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["lavamd_box"]
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let n = self.chunks * CHUNK;
+        let particles = gen_f32(n, 91);
+        let mut padded = vec![0.0f32; n + 2 * HALO];
+        padded[HALO..HALO + n].copy_from_slice(&particles);
+
+        let wl = GenericWorkload {
+            name: "lavaMD",
+            artifact: "lavamd_box",
+            streamed_inputs: vec![Windows::halo(
+                Arc::new(bytes::from_f32(&padded)),
+                self.chunks,
+                HALO * 4,
+            )],
+            shared_inputs: vec![],
+            output_chunk_bytes: vec![CHUNK * 4],
+            // Per-box kernel time ~ halo-inflated transfer time: the
+            // §5 balance (H2D 0.3476s ≈ KEX 0.3380s) that makes
+            // streaming unprofitable.
+            flops_per_chunk: Some(150_000),
+        };
+        let (wall, outputs, h2d) = wl.execute(ctx, mode)?;
+
+        let got = bytes::to_f32(&outputs[0]);
+        let want = oracle::lavamd(&padded, n, HALO);
+        let ok = got
+            .iter()
+            .zip(&want)
+            .all(|(a, b)| (a - b).abs() <= 1e-3 + 1e-3 * b.abs());
+
+        Ok(RunStats {
+            name: "lavaMD".into(),
+            mode,
+            wall,
+            h2d_bytes: h2d,
+            d2h_bytes: (n * 4) as u64,
+            tasks: self.chunks,
+            validated: ok,
+        })
+    }
+}

@@ -1,0 +1,71 @@
+//! NVIDIA `MatrixMul` / Parboil `sgemm` — independent row bands with a
+//! broadcast B; compute-bound, so R is small and the streaming gain sits
+//! at the paper's 8% lower end.
+
+use std::sync::Arc;
+
+use crate::hstreams::Context;
+use crate::runtime::bytes;
+use crate::Result;
+
+use super::{gen_f32, oracle, Benchmark, GenericWorkload, Mode, RunStats, Windows};
+
+/// Band geometry — must match the `matmul` AOT artifact.
+pub const M: usize = 128;
+pub const K: usize = 256;
+pub const N: usize = 256;
+
+pub struct MatMul {
+    chunks: usize,
+}
+
+impl MatMul {
+    pub fn new(scale: usize) -> Self {
+        Self { chunks: 8 * scale.max(1) }
+    }
+}
+
+impl Benchmark for MatMul {
+    fn name(&self) -> &'static str {
+        "MatrixMul"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["matmul"]
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let a = gen_f32(self.chunks * M * K, 21);
+        let b = gen_f32(K * N, 22);
+
+        let wl = GenericWorkload {
+            name: "MatrixMul",
+            artifact: "matmul",
+            streamed_inputs: vec![Windows::disjoint(Arc::new(bytes::from_f32(&a)), self.chunks)],
+            shared_inputs: vec![bytes::from_f32(&b)],
+            output_chunk_bytes: vec![M * N * 4],
+            // Effective device GEMM time per band (the paper's 8% regime:
+            // compute-bound, small R).
+            flops_per_chunk: Some(8_000_000),
+        };
+        let (wall, outputs, h2d) = wl.execute(ctx, mode)?;
+
+        let got = bytes::to_f32(&outputs[0]);
+        let want = oracle::matmul(&a, &b, self.chunks * M, K, N);
+        let ok = got.len() == want.len()
+            && got
+                .iter()
+                .zip(&want)
+                .all(|(x, y)| (x - y).abs() <= 1e-3 * (1.0 + y.abs()));
+
+        Ok(RunStats {
+            name: "MatrixMul".into(),
+            mode,
+            wall,
+            h2d_bytes: h2d,
+            d2h_bytes: (self.chunks * M * N * 4) as u64,
+            tasks: self.chunks,
+            validated: ok,
+        })
+    }
+}

@@ -1,0 +1,376 @@
+//! The streamed benchmark drivers (paper §5 / Fig. 9).
+//!
+//! Every driver runs in two modes:
+//!
+//! - [`Mode::Baseline`] — the classic non-streamed port: one bulk H2D of
+//!   each input, the kernel grid, one bulk D2H.  No redundant halo
+//!   bytes, no per-task DMA latency — the strongest fair baseline.
+//! - [`Mode::Streamed`] — the paper's multi-stream port: the input is
+//!   partitioned into tasks ([`crate::partition`]); each task's H2D /
+//!   KEX / D2H ride one of `n` streams, so transfers of task *i+1*
+//!   overlap the kernel of task *i*.
+//!
+//! Both modes produce real outputs validated against host oracles
+//! ([`oracle`]); `Streamed` must equal `Baseline` bit-for-bit for
+//! integer kernels and to float tolerance otherwise.
+//!
+//! Most benchmarks instantiate [`GenericWorkload`] — per-chunk input
+//! *windows* (which may overlap: that is exactly the false-dependent
+//! redundant-boundary transfer of Fig. 7) plus shared broadcast inputs.
+//! Needleman–Wunsch has its own wavefront driver ([`nw`]).
+
+pub mod oracle;
+
+pub mod blackscholes;
+pub mod cfft;
+pub mod convsep;
+pub mod dct;
+pub mod dotproduct;
+pub mod fwt;
+pub mod hotspot;
+pub mod histogram;
+pub mod lavamd;
+pub mod matmul;
+pub mod nn;
+pub mod nw;
+pub mod reduction;
+pub mod scan;
+pub mod stencil;
+pub mod transpose;
+pub mod vecadd;
+
+pub use blackscholes::BlackScholes;
+pub use cfft::ConvFft2d;
+pub use convsep::ConvSep;
+pub use dct::Dct8x8;
+pub use dotproduct::DotProduct;
+pub use fwt::Fwt;
+pub use hotspot::Hotspot;
+pub use histogram::Histogram;
+pub use lavamd::LavaMd;
+pub use matmul::MatMul;
+pub use nn::Nn;
+pub use nw::NeedlemanWunsch;
+pub use reduction::{ReductionV1, ReductionV2};
+pub use scan::PrefixSum;
+pub use stencil::Stencil;
+pub use transpose::Transpose;
+pub use vecadd::VectorAdd;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::device::{DevRegion, HostSrc};
+use crate::hstreams::Context;
+use crate::Result;
+
+/// Execution mode of a driver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Bulk-transfer single-offload port (no streams).
+    Baseline,
+    /// Multi-stream port with this many streams (1 = serialized pipeline).
+    Streamed(usize),
+}
+
+/// Outcome of one run.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    pub name: String,
+    pub mode: Mode,
+    pub wall: Duration,
+    /// Host→device bytes actually transferred (includes halo redundancy
+    /// in streamed mode — the lavaMD analysis reads this).
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub tasks: usize,
+    pub validated: bool,
+}
+
+/// A streamed benchmark.
+pub trait Benchmark: Sync {
+    fn name(&self) -> &'static str;
+    /// Artifacts to compile (context subset loading).
+    fn artifacts(&self) -> Vec<&'static str>;
+    /// Run in the given mode and validate the outputs.
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats>;
+}
+
+/// Second-tier drivers beyond the paper's 13: extra Table-1 apps with
+/// real kernels, plus the Iterative non-streamable control.
+pub fn extended_benchmarks(scale: usize) -> Vec<Box<dyn Benchmark>> {
+    vec![
+        Box::new(Dct8x8::new(scale)),
+        Box::new(DotProduct::new(scale)),
+        Box::new(Hotspot::new(scale)),
+        Box::new(ReductionV1::new(scale)),
+        Box::new(ReductionV2::new(scale)),
+    ]
+}
+
+/// The 13 streamed benchmarks of Fig. 9, in the paper's order of
+/// discussion, plus their scale knob.
+pub fn fig9_benchmarks(scale: usize) -> Vec<Box<dyn Benchmark>> {
+    vec![
+        Box::new(Nn::new(scale)),
+        Box::new(Fwt::new(scale)),
+        Box::new(ConvFft2d::new(scale)),
+        Box::new(NeedlemanWunsch::new(scale)),
+        Box::new(LavaMd::new(scale)),
+        Box::new(ConvSep::new(scale)),
+        Box::new(Transpose::new(scale)),
+        Box::new(PrefixSum::new(scale)),
+        Box::new(Histogram::new(scale)),
+        Box::new(MatMul::new(scale)),
+        Box::new(VectorAdd::new(scale)),
+        Box::new(BlackScholes::new(scale)),
+        Box::new(Stencil::new(scale)),
+    ]
+}
+
+/// Per-chunk input windows over one shared host array.  Windows may
+/// overlap (halo / redundant boundary transfer).
+pub struct Windows {
+    pub host: Arc<Vec<u8>>,
+    /// (byte offset, byte length) per chunk.
+    pub windows: Vec<(usize, usize)>,
+}
+
+impl Windows {
+    /// Disjoint equal windows (independent partitioning).
+    pub fn disjoint(host: Arc<Vec<u8>>, chunks: usize) -> Self {
+        let ranges = crate::partition::chunk_ranges(host.len(), chunks);
+        Self { host, windows: ranges.into_iter().map(|r| (r.start, r.len)).collect() }
+    }
+
+    /// Overlapping halo windows over a pre-padded host array:
+    /// chunk `i` owns `owned` bytes and ships `owned + 2*halo_bytes`.
+    pub fn halo(host: Arc<Vec<u8>>, chunks: usize, halo_bytes: usize) -> Self {
+        let owned_total = host.len() - 2 * halo_bytes;
+        let hcs = crate::partition::halo_chunks(owned_total, chunks, halo_bytes);
+        Self {
+            host,
+            windows: hcs.into_iter().map(|h| (h.xfer_start, h.xfer_len)).collect(),
+        }
+    }
+}
+
+/// A declaratively-specified streamed benchmark: per-chunk windows over
+/// N streamed inputs, M broadcast inputs, K per-chunk outputs.
+///
+/// Artifact signature convention: streamed inputs first, then shared
+/// inputs — all AOT kernels in this repo follow it.
+pub struct GenericWorkload {
+    pub name: &'static str,
+    pub artifact: &'static str,
+    pub streamed_inputs: Vec<Windows>,
+    pub shared_inputs: Vec<Vec<u8>>,
+    /// Per-chunk byte length of each output.
+    pub output_chunk_bytes: Vec<usize>,
+    /// KEX pacing override (models device-side memory-bound kernels
+    /// whose FLOP count under-represents their device time).
+    pub flops_per_chunk: Option<u64>,
+}
+
+impl GenericWorkload {
+    pub fn chunks(&self) -> usize {
+        self.streamed_inputs[0].windows.len()
+    }
+
+    /// Execute; returns (wall, per-output concatenated host bytes,
+    /// streamed h2d bytes).
+    pub fn execute(&self, ctx: &Context, mode: Mode) -> Result<(Duration, Vec<Vec<u8>>, u64)> {
+        match mode {
+            Mode::Baseline => self.execute_baseline(ctx),
+            Mode::Streamed(n) => self.execute_streamed(ctx, n.max(1)),
+        }
+    }
+
+    fn alloc_shared(&self, ctx: &Context) -> Result<Vec<DevRegion>> {
+        self.shared_inputs
+            .iter()
+            .map(|payload| {
+                Ok(DevRegion::whole(ctx.alloc(payload.len())?, payload.len()))
+            })
+            .collect()
+    }
+
+    /// Bulk port: whole-array H2D, chunk kernels over device windows,
+    /// bulk D2H.
+    fn execute_baseline(&self, ctx: &Context) -> Result<(Duration, Vec<Vec<u8>>, u64)> {
+        let chunks = self.chunks();
+        let shared_regions = self.alloc_shared(ctx)?;
+
+        // One big device buffer per streamed input.
+        let in_bufs: Vec<DevRegion> = self
+            .streamed_inputs
+            .iter()
+            .map(|w| Ok(DevRegion::whole(ctx.alloc(w.host.len())?, w.host.len())))
+            .collect::<Result<_>>()?;
+        // One big device buffer per output (chunks back-to-back).
+        let out_bufs: Vec<DevRegion> = self
+            .output_chunk_bytes
+            .iter()
+            .map(|&b| Ok(DevRegion::whole(ctx.alloc(b * chunks)?, b * chunks)))
+            .collect::<Result<_>>()?;
+        let dsts: Vec<crate::device::HostDst> =
+            self.output_chunk_bytes.iter().map(|&b| crate::hstreams::host_dst(b * chunks)).collect();
+
+        let timer = crate::metrics::Timer::start();
+        let mut s = ctx.stream();
+        let mut h2d_bytes = 0u64;
+        for (payload, region) in self.shared_inputs.iter().zip(&shared_regions) {
+            s.h2d(HostSrc::whole(Arc::new(payload.clone())), *region);
+            h2d_bytes += region.len as u64;
+        }
+        for (w, region) in self.streamed_inputs.iter().zip(&in_bufs) {
+            s.h2d(HostSrc::whole(w.host.clone()), *region);
+            h2d_bytes += region.len as u64;
+        }
+        for c in 0..chunks {
+            let mut ins: Vec<DevRegion> = self
+                .streamed_inputs
+                .iter()
+                .zip(&in_bufs)
+                .map(|(w, buf)| {
+                    let (off, len) = w.windows[c];
+                    DevRegion { buf: buf.buf, off, len }
+                })
+                .collect();
+            ins.extend(shared_regions.iter().copied());
+            let outs: Vec<DevRegion> = self
+                .output_chunk_bytes
+                .iter()
+                .zip(&out_bufs)
+                .map(|(&b, buf)| DevRegion { buf: buf.buf, off: c * b, len: b })
+                .collect();
+            s.kex_with(self.artifact, ins, outs, self.flops_per_chunk, 1);
+        }
+        for (region, dst) in out_bufs.iter().zip(&dsts) {
+            s.d2h(*region, dst.clone());
+        }
+        s.sync();
+        let wall = timer.elapsed();
+
+        let outputs: Vec<Vec<u8>> = dsts.iter().map(|d| d.data.lock().unwrap().clone()).collect();
+        for r in in_bufs.iter().chain(&out_bufs).chain(&shared_regions) {
+            ctx.free(r.buf)?;
+        }
+        Ok((wall, outputs, h2d_bytes))
+    }
+
+    /// Multi-stream port: per-task windows (redundant halo bytes ride
+    /// along), tasks round-robined over `n` streams.
+    fn execute_streamed(&self, ctx: &Context, n: usize) -> Result<(Duration, Vec<Vec<u8>>, u64)> {
+        let chunks = self.chunks();
+        let shared_regions = self.alloc_shared(ctx)?;
+
+        // Per-task device buffers.
+        let mut task_in: Vec<Vec<DevRegion>> = Vec::with_capacity(chunks);
+        let mut task_out: Vec<Vec<DevRegion>> = Vec::with_capacity(chunks);
+        for c in 0..chunks {
+            let ins = self
+                .streamed_inputs
+                .iter()
+                .map(|w| {
+                    let (_, len) = w.windows[c];
+                    Ok(DevRegion::whole(ctx.alloc(len)?, len))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outs = self
+                .output_chunk_bytes
+                .iter()
+                .map(|&b| Ok(DevRegion::whole(ctx.alloc(b)?, b)))
+                .collect::<Result<Vec<_>>>()?;
+            task_in.push(ins);
+            task_out.push(outs);
+        }
+        let dsts: Vec<crate::device::HostDst> =
+            self.output_chunk_bytes.iter().map(|&b| crate::hstreams::host_dst(b * chunks)).collect();
+
+        let timer = crate::metrics::Timer::start();
+        let mut streams: Vec<_> = (0..n).map(|_| ctx.stream()).collect();
+        let mut h2d_bytes = 0u64;
+
+        // Broadcast inputs ride stream 0; every other stream's first op
+        // waits on them (hStreams would use an event here too).
+        let mut shared_events = Vec::new();
+        for (payload, region) in self.shared_inputs.iter().zip(&shared_regions) {
+            let e = streams[0].h2d(HostSrc::whole(Arc::new(payload.clone())), *region);
+            h2d_bytes += region.len as u64;
+            shared_events.push(e);
+        }
+        for (s, stream) in streams.iter_mut().enumerate().skip(1) {
+            if s > 0 {
+                for e in &shared_events {
+                    stream.wait_event(e.clone());
+                }
+            }
+        }
+
+        for c in 0..chunks {
+            let s = &mut streams[c % n];
+            for (w, region) in self.streamed_inputs.iter().zip(&task_in[c]) {
+                let (off, len) = w.windows[c];
+                s.h2d(HostSrc { data: w.host.clone(), off, len }, *region);
+                h2d_bytes += len as u64;
+            }
+            let mut ins = task_in[c].clone();
+            ins.extend(shared_regions.iter().copied());
+            s.kex_with(self.artifact, ins, task_out[c].clone(), self.flops_per_chunk, 1);
+            for ((region, dst), &b) in
+                task_out[c].iter().zip(&dsts).zip(&self.output_chunk_bytes)
+            {
+                s.d2h(*region, crate::device::HostDst { data: dst.data.clone(), off: c * b });
+            }
+        }
+        for s in &streams {
+            s.sync();
+        }
+        let wall = timer.elapsed();
+
+        let outputs: Vec<Vec<u8>> = dsts.iter().map(|d| d.data.lock().unwrap().clone()).collect();
+        for regions in task_in.iter().chain(&task_out) {
+            for r in regions {
+                ctx.free(r.buf)?;
+            }
+        }
+        for r in &shared_regions {
+            ctx.free(r.buf)?;
+        }
+        Ok((wall, outputs, h2d_bytes))
+    }
+}
+
+/// Deterministic pseudo-random f32s in [-1, 1) (xorshift; seeded).
+pub fn gen_f32(n: usize, seed: u64) -> Vec<f32> {
+    let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    (0..n)
+        .map(|_| {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            ((state >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+        })
+        .collect()
+}
+
+/// Deterministic pseudo-random i32s in [0, bound).
+pub fn gen_i32(n: usize, bound: i32, seed: u64) -> Vec<i32> {
+    let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    (0..n)
+        .map(|_| {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            ((state >> 33) as i32).rem_euclid(bound)
+        })
+        .collect()
+}
+
+/// Max |a-b| over two f32 byte buffers.
+pub fn max_abs_diff(a: &[u8], b: &[u8]) -> f32 {
+    let av = crate::runtime::bytes::to_f32(a);
+    let bv = crate::runtime::bytes::to_f32(b);
+    av.iter().zip(&bv).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}

@@ -1,0 +1,232 @@
+//! Rodinia `nw` (Needleman–Wunsch) — the paper's True Dependent
+//! exemplar (Fig. 8): tiles execute diagonal-by-diagonal; tiles on one
+//! diagonal ride different streams concurrently, and each tile's kernel
+//! waits (cross-stream events) on its north / west / northwest
+//! neighbours.  Edges move device-to-device: each tile kernel emits its
+//! south row and east column as separate contiguous outputs that the
+//! dependent tiles read in place.
+
+use std::sync::Arc;
+
+use crate::device::{DevRegion, HostSrc};
+use crate::hstreams::Context;
+use crate::partition::diagonals;
+use crate::runtime::bytes;
+use crate::Result;
+
+use super::{gen_i32, oracle, Benchmark, Mode, RunStats};
+
+/// Tile side — must match the `nw_tile` AOT artifact.
+pub const TILE: usize = 32;
+/// Rodinia's gap penalty (baked into the kernel).
+pub const PENALTY: i32 = 10;
+
+pub struct NeedlemanWunsch {
+    /// Tile-grid side: the score matrix is (grid*TILE)^2.
+    grid: usize,
+}
+
+impl NeedlemanWunsch {
+    pub fn new(scale: usize) -> Self {
+        Self { grid: 8 * scale.max(1) }
+    }
+
+    pub fn matrix_size(&self) -> usize {
+        self.grid * TILE
+    }
+}
+
+impl Benchmark for NeedlemanWunsch {
+    fn name(&self) -> &'static str {
+        "nw"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["nw_tile"]
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let g = self.grid;
+        let size = g * TILE;
+        let tile_bytes = TILE * TILE * 4;
+        let edge_bytes = TILE * 4;
+        let n_streams = match mode {
+            Mode::Baseline => 1,
+            Mode::Streamed(n) => n.max(1),
+        };
+
+        // Substitution scores for the whole matrix (Rodinia fills these
+        // from the two sequences' reference table).
+        let sub = gen_i32(size * size, 15, 0xBEEF);
+        let sub_i32: Vec<i32> = sub.iter().map(|&v| v - 5).collect(); // scores in [-5, 10)
+
+        // Per-tile substitution payloads (row-major within the tile).
+        let mut tile_sub: Vec<Vec<i32>> = Vec::with_capacity(g * g);
+        for bi in 0..g {
+            for bj in 0..g {
+                let mut t = Vec::with_capacity(TILE * TILE);
+                for r in 0..TILE {
+                    let row0 = (bi * TILE + r) * size + bj * TILE;
+                    t.extend_from_slice(&sub_i32[row0..row0 + TILE]);
+                }
+                tile_sub.push(t);
+            }
+        }
+
+        // Boundary vectors: score row/col 0 are -penalty * (1-based idx).
+        let north_boundary: Vec<i32> = (0..size as i32).map(|j| -PENALTY * (j + 1)).collect();
+        let west_boundary: Vec<i32> = (0..size as i32).map(|i| -PENALTY * (i + 1)).collect();
+        let corner_zero: Vec<i32> = vec![0];
+
+        // Device allocations: boundaries + per tile (sub, out, south, east).
+        let nb = DevRegion::whole(ctx.alloc(size * 4)?, size * 4);
+        let wb = DevRegion::whole(ctx.alloc(size * 4)?, size * 4);
+        let cz = DevRegion::whole(ctx.alloc(4)?, 4);
+        let mut sub_bufs = Vec::with_capacity(g * g);
+        let mut out_bufs = Vec::with_capacity(g * g);
+        let mut south_bufs = Vec::with_capacity(g * g);
+        let mut east_bufs = Vec::with_capacity(g * g);
+        for _ in 0..g * g {
+            sub_bufs.push(DevRegion::whole(ctx.alloc(tile_bytes)?, tile_bytes));
+            out_bufs.push(DevRegion::whole(ctx.alloc(tile_bytes)?, tile_bytes));
+            south_bufs.push(DevRegion::whole(ctx.alloc(edge_bytes)?, edge_bytes));
+            east_bufs.push(DevRegion::whole(ctx.alloc(edge_bytes)?, edge_bytes));
+        }
+        let dst = crate::hstreams::host_dst(g * g * tile_bytes);
+
+        let timer = crate::metrics::Timer::start();
+        let mut streams: Vec<_> = (0..n_streams).map(|_| ctx.stream()).collect();
+
+        // Prologue: boundaries ride stream 0; other streams wait on them.
+        let mut boundary_events = Vec::new();
+        boundary_events.push(
+            streams[0].h2d(HostSrc::whole(Arc::new(bytes::from_i32(&north_boundary))), nb),
+        );
+        boundary_events
+            .push(streams[0].h2d(HostSrc::whole(Arc::new(bytes::from_i32(&west_boundary))), wb));
+        boundary_events
+            .push(streams[0].h2d(HostSrc::whole(Arc::new(bytes::from_i32(&corner_zero))), cz));
+        for s in streams.iter_mut().skip(1) {
+            for e in &boundary_events {
+                s.wait_event(e.clone());
+            }
+        }
+
+        // Wavefront: diagonals in order; tiles within a diagonal
+        // round-robin across streams ("the number of streams changes on
+        // different diagonals").
+        let mut kex_events: Vec<Option<crate::hstreams::Event>> = vec![None; g * g];
+        let mut h2d_bytes = (2 * size * 4 + 4) as u64;
+        for diag in diagonals(g, g) {
+            for (slot, tc) in diag.tiles.iter().enumerate() {
+                let (bi, bj) = (tc.bi, tc.bj);
+                let t = bi * g + bj;
+                let s = &mut streams[slot % n_streams];
+
+                // Upload this tile's substitution scores.
+                s.h2d(
+                    HostSrc::whole(Arc::new(bytes::from_i32(&tile_sub[t]))),
+                    sub_bufs[t],
+                );
+                h2d_bytes += tile_bytes as u64;
+
+                // Edge inputs: neighbours' contiguous outputs or boundary
+                // slices; cross-stream deps on the producing kernels.
+                let north = if bi == 0 {
+                    DevRegion { buf: nb.buf, off: bj * TILE * 4, len: edge_bytes }
+                } else {
+                    let up = (bi - 1) * g + bj;
+                    if let Some(e) = &kex_events[up] {
+                        s.wait_event(e.clone());
+                    }
+                    south_bufs[up]
+                };
+                let west = if bj == 0 {
+                    DevRegion { buf: wb.buf, off: bi * TILE * 4, len: edge_bytes }
+                } else {
+                    let left = bi * g + bj - 1;
+                    if let Some(e) = &kex_events[left] {
+                        s.wait_event(e.clone());
+                    }
+                    east_bufs[left]
+                };
+                let corner = match (bi, bj) {
+                    (0, 0) => cz,
+                    (0, j) => DevRegion { buf: nb.buf, off: (j * TILE - 1) * 4, len: 4 },
+                    (i, 0) => DevRegion { buf: wb.buf, off: (i * TILE - 1) * 4, len: 4 },
+                    (i, j) => {
+                        let diag_nb = (i - 1) * g + j - 1;
+                        if let Some(e) = &kex_events[diag_nb] {
+                            s.wait_event(e.clone());
+                        }
+                        DevRegion {
+                            buf: south_bufs[diag_nb].buf,
+                            off: (TILE - 1) * 4,
+                            len: 4,
+                        }
+                    }
+                };
+
+                // Device time per tile (anti-diagonal sweeps are
+                // latency-bound on the MIC, well above the raw FLOPs).
+                let e = s.kex_with(
+                    "nw_tile",
+                    vec![north, west, corner, sub_bufs[t]],
+                    vec![out_bufs[t], south_bufs[t], east_bufs[t]],
+                    Some(450_000),
+                    1,
+                );
+                kex_events[t] = Some(e);
+
+                s.d2h(
+                    out_bufs[t],
+                    crate::device::HostDst { data: dst.data.clone(), off: t * tile_bytes },
+                );
+            }
+        }
+        for s in &streams {
+            s.sync();
+        }
+        let wall = timer.elapsed();
+
+        // Reassemble and validate against the full-matrix DP oracle.
+        let flat = bytes::to_i32(&dst.data.lock().unwrap());
+        let want = oracle::nw_full(&sub_i32, size, PENALTY);
+        let mut ok = true;
+        'outer: for bi in 0..g {
+            for bj in 0..g {
+                let t = bi * g + bj;
+                for r in 0..TILE {
+                    for c in 0..TILE {
+                        let got = flat[t * TILE * TILE + r * TILE + c];
+                        let exp = want[(bi * TILE + r) * size + bj * TILE + c];
+                        if got != exp {
+                            ok = false;
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+        }
+
+        for r in sub_bufs
+            .iter()
+            .chain(&out_bufs)
+            .chain(&south_bufs)
+            .chain(&east_bufs)
+            .chain([&nb, &wb, &cz])
+        {
+            ctx.free(r.buf)?;
+        }
+
+        Ok(RunStats {
+            name: "nw".into(),
+            mode,
+            wall,
+            h2d_bytes,
+            d2h_bytes: (g * g * tile_bytes) as u64,
+            tasks: g * g,
+            validated: ok,
+        })
+    }
+}

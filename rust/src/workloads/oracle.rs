@@ -1,0 +1,346 @@
+//! Host-side Rust oracles for validating driver outputs.
+//!
+//! Independent reimplementations (no XLA, no chunking) of each
+//! benchmark's math, so a partitioning bug and a kernel bug can't
+//! cancel.
+
+/// Euclidean distances of (lat, lng) records to a target.
+pub fn nn_dist(records: &[f32], target: [f32; 2]) -> Vec<f32> {
+    records
+        .chunks_exact(2)
+        .map(|r| ((r[0] - target[0]).powi(2) + (r[1] - target[1]).powi(2)).sqrt())
+        .collect()
+}
+
+/// c = a + b.
+pub fn vector_add(a: &[f32], b: &[f32]) -> Vec<f32> {
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// In-place iterative Walsh–Hadamard transform of a power-of-two block.
+pub fn fwt_block(x: &mut [f32]) {
+    let n = x.len();
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(h * 2) {
+            for j in i..i + h {
+                let (a, b) = (x[j], x[j + h]);
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// Transpose an r x c row-major matrix.
+pub fn transpose(x: &[f32], r: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        for j in 0..c {
+            out[j * r + i] = x[i * c + j];
+        }
+    }
+    out
+}
+
+/// Naive matmul: (m x k) @ (k x n), f64 accumulation.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for p in 0..k {
+                acc += a[i * k + p] as f64 * b[p * n + j] as f64;
+            }
+            out[i * n + j] = acc as f32;
+        }
+    }
+    out
+}
+
+/// Inclusive prefix sum (f64 accumulation).
+pub fn prefix_sum(x: &[f32]) -> Vec<f32> {
+    let mut acc = 0.0f64;
+    x.iter()
+        .map(|&v| {
+            acc += v as f64;
+            acc as f32
+        })
+        .collect()
+}
+
+/// 256-bin histogram.
+pub fn histogram(x: &[i32]) -> Vec<i32> {
+    let mut bins = vec![0i32; 256];
+    for &v in x {
+        bins[v as usize] += 1;
+    }
+    bins
+}
+
+/// Abramowitz–Stegun 7.1.26 erf approximation (|err| < 1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+fn cnd(d: f64) -> f64 {
+    0.5 * (1.0 + erf(d / std::f64::consts::SQRT_2))
+}
+
+/// Black–Scholes call/put prices (SDK constants r=0.02, v=0.30).
+pub fn black_scholes(s: &[f32], k: &[f32], t: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    const R: f64 = 0.02;
+    const V: f64 = 0.30;
+    let mut call = Vec::with_capacity(s.len());
+    let mut put = Vec::with_capacity(s.len());
+    for i in 0..s.len() {
+        let (s, k, t) = (s[i] as f64, k[i] as f64, t[i] as f64);
+        let sqrt_t = t.sqrt();
+        let d1 = ((s / k).ln() + (R + 0.5 * V * V) * t) / (V * sqrt_t);
+        let d2 = d1 - V * sqrt_t;
+        let e = (-R * t).exp();
+        call.push((s * cnd(d1) - k * e * cnd(d2)) as f32);
+        put.push((k * e * cnd(-d2) - s * cnd(-d1)) as f32);
+    }
+    (call, put)
+}
+
+/// 5-point Jacobi step over a (rows+2) x cols padded field.
+pub fn stencil2d(padded: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    const C0: f32 = 0.5;
+    const C1: f32 = 0.125;
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let center = padded[(r + 1) * cols + c];
+            let north = padded[r * cols + c];
+            let south = padded[(r + 2) * cols + c];
+            let west = if c > 0 { padded[(r + 1) * cols + c - 1] } else { 0.0 };
+            let east = if c + 1 < cols { padded[(r + 1) * cols + c + 1] } else { 0.0 };
+            out[r * cols + c] = C0 * center + C1 * (north + south + west + east);
+        }
+    }
+    out
+}
+
+/// Separable convolution over a halo-padded band (matches
+/// `kernels/convsep.py`: zero row-padding inside the row pass).
+pub fn conv_sep(padded: &[f32], rows: usize, cols: usize, krow: &[f32], kcol: &[f32]) -> Vec<f32> {
+    let h = (krow.len() - 1) / 2;
+    let mut mid = vec![0.0f64; rows * cols];
+    for k in 0..2 * h + 1 {
+        for r in 0..rows {
+            for c in 0..cols {
+                mid[r * cols + c] += padded[(r + k) * cols + c] as f64 * kcol[k] as f64;
+            }
+        }
+    }
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let mut acc = 0.0f64;
+            for k in 0..2 * h + 1 {
+                let cc = c as isize + k as isize - h as isize;
+                if cc >= 0 && (cc as usize) < cols {
+                    acc += mid[r * cols + cc as usize] * krow[k] as f64;
+                }
+            }
+            out[r * cols + c] = acc as f32;
+        }
+    }
+    out
+}
+
+/// lavaMD window potential over a halo-padded particle line.
+pub fn lavamd(padded: &[f32], n: usize, h: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let c = padded[h + i] as f64;
+            let mut acc = 0.0f64;
+            for j in i..i + 2 * h + 1 {
+                let d2 = (c - padded[j] as f64).powi(2);
+                acc += 1.0 / (1.0 + d2);
+            }
+            (acc - 1.0) as f32
+        })
+        .collect()
+}
+
+/// Full Needleman–Wunsch score matrix with Rodinia boundary conditions
+/// (first row/col = -penalty * 1-based index).
+pub fn nw_full(sub: &[i32], size: usize, penalty: i32) -> Vec<i32> {
+    let mut e = vec![0i64; (size + 1) * (size + 1)];
+    for j in 0..=size {
+        e[j] = -(penalty as i64) * j as i64;
+    }
+    for i in 0..=size {
+        e[i * (size + 1)] = -(penalty as i64) * i as i64;
+    }
+    for i in 1..=size {
+        for j in 1..=size {
+            let diag = e[(i - 1) * (size + 1) + j - 1] + sub[(i - 1) * size + j - 1] as i64;
+            let up = e[(i - 1) * (size + 1) + j] - penalty as i64;
+            let left = e[i * (size + 1) + j - 1] - penalty as i64;
+            e[i * (size + 1) + j] = diag.max(up).max(left);
+        }
+    }
+    let mut out = vec![0i32; size * size];
+    for i in 0..size {
+        for j in 0..size {
+            out[i * size + j] = e[(i + 1) * (size + 1) + j + 1] as i32;
+        }
+    }
+    out
+}
+
+/// Circular 2D convolution (naive O(T^4) — test-sized tiles only).
+pub fn cfft2d_circular(tile: &[f32], filt: &[f32], t: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; t * t];
+    for oi in 0..t {
+        for oj in 0..t {
+            let mut acc = 0.0f64;
+            for ki in 0..t {
+                for kj in 0..t {
+                    let si = (oi + t - ki) % t;
+                    let sj = (oj + t - kj) % t;
+                    acc += tile[si * t + sj] as f64 * filt[ki * t + kj] as f64;
+                }
+            }
+            out[oi * t + oj] = acc as f32;
+        }
+    }
+    out
+}
+
+/// Blockwise 8x8 orthonormal DCT-II (f64 accumulation).
+pub fn dct8x8(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    // Basis C[k][n] = s(k)/2 * cos(pi (2n+1) k / 16).
+    let mut c = [[0.0f64; 8]; 8];
+    for k in 0..8 {
+        for n in 0..8 {
+            let v = (std::f64::consts::PI * (2 * n + 1) as f64 * k as f64 / 16.0).cos();
+            c[k][n] = 0.5 * if k == 0 { v / std::f64::consts::SQRT_2 } else { v };
+        }
+    }
+    let mut out = vec![0.0f32; rows * cols];
+    for bi in 0..rows / 8 {
+        for bj in 0..cols / 8 {
+            // tmp = C @ B
+            let mut tmp = [[0.0f64; 8]; 8];
+            for i in 0..8 {
+                for j in 0..8 {
+                    let mut acc = 0.0;
+                    for p in 0..8 {
+                        acc += c[i][p] * x[(bi * 8 + p) * cols + bj * 8 + j] as f64;
+                    }
+                    tmp[i][j] = acc;
+                }
+            }
+            // out = tmp @ C^T
+            for i in 0..8 {
+                for j in 0..8 {
+                    let mut acc = 0.0;
+                    for p in 0..8 {
+                        acc += tmp[i][p] * c[j][p];
+                    }
+                    out[(bi * 8 + i) * cols + bj * 8 + j] = acc as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One hotspot diffusion step over an n x n grid (boundary preserved).
+pub fn hotspot_step(temp: &[f32], power: &[f32], n: usize) -> Vec<f32> {
+    const K: f64 = 0.1;
+    let mut out = temp.to_vec();
+    for r in 1..n - 1 {
+        for c in 1..n - 1 {
+            let t = temp[r * n + c] as f64;
+            let lap = temp[(r - 1) * n + c] as f64
+                + temp[(r + 1) * n + c] as f64
+                + temp[r * n + c - 1] as f64
+                + temp[r * n + c + 1] as f64
+                - 4.0 * t;
+            out[r * n + c] = (t + K * (power[r * n + c] as f64 + lap)) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_accuracy() {
+        // Known values: erf(1) = 0.8427007929.
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!(erf(0.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn fwt_involution() {
+        let orig: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut x = orig.clone();
+        fwt_block(&mut x);
+        fwt_block(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b * 16.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let t = transpose(&x, 3, 4);
+        let back = transpose(&t, 4, 3);
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn nw_full_zero_sub_huge_penalty() {
+        // Diagonal walk only: diag of output accumulates sub scores (0).
+        let size = 4;
+        let out = nw_full(&vec![0; 16], size, 10);
+        for i in 0..size {
+            assert_eq!(out[i * size + i], 0);
+        }
+    }
+
+    #[test]
+    fn dct8x8_constant_block_is_dc_only() {
+        let x = vec![3.0f32; 64];
+        let out = dct8x8(&x, 8, 8);
+        assert!((out[0] - 24.0).abs() < 1e-3, "DC = 8*3 = {}", out[0]);
+        let rest: f32 = out[1..].iter().map(|v| v.abs()).sum();
+        assert!(rest < 1e-3, "energy outside DC: {rest}");
+    }
+
+    #[test]
+    fn hotspot_uniform_zero_power_is_fixed_point() {
+        let t = vec![5.0f32; 256];
+        let p = vec![0.0f32; 256];
+        assert_eq!(hotspot_step(&t, &p, 16), t);
+    }
+
+    #[test]
+    fn histogram_conserves() {
+        let x = vec![3, 3, 255, 0];
+        let h = histogram(&x);
+        assert_eq!(h[3], 2);
+        assert_eq!(h[255], 1);
+        assert_eq!(h.iter().sum::<i32>(), 4);
+    }
+}

@@ -1,0 +1,105 @@
+//! NVIDIA `Reduction` v1/v2 — the Fig. 3 code-variant study: v1 reduces
+//! fully on the device (scalar D2H), v2 ships per-block partials back
+//! for a host final pass (256x the D2H traffic).
+
+use std::sync::Arc;
+
+use crate::hstreams::Context;
+use crate::runtime::bytes;
+use crate::Result;
+
+use super::{gen_f32, Benchmark, GenericWorkload, Mode, RunStats, Windows};
+
+pub const CHUNK: usize = 65536;
+pub const BLOCKS: usize = 256;
+
+fn run_variant(
+    name: &'static str,
+    artifact: &'static str,
+    out_bytes: usize,
+    chunks: usize,
+    ctx: &Context,
+    mode: Mode,
+) -> Result<RunStats> {
+    let total = chunks * CHUNK;
+    let x = gen_f32(total, 111);
+
+    let wl = GenericWorkload {
+        name,
+        artifact,
+        streamed_inputs: vec![Windows::disjoint(Arc::new(bytes::from_f32(&x)), chunks)],
+        shared_inputs: vec![],
+        output_chunk_bytes: vec![out_bytes],
+        flops_per_chunk: None,
+    };
+    let timer = crate::metrics::Timer::start();
+    let (_, outputs, h2d) = wl.execute(ctx, mode)?;
+
+    // Host final pass: sum whatever came back (1 or 256 partials/chunk).
+    let partials = bytes::to_f32(&outputs[0]);
+    let got: f64 = partials.iter().map(|&v| v as f64).sum();
+    let wall = timer.elapsed();
+
+    let want: f64 = x.iter().map(|&v| v as f64).sum();
+    let ok = (got - want).abs() <= 1e-2 + 1e-4 * want.abs();
+
+    Ok(RunStats {
+        name: name.into(),
+        mode,
+        wall,
+        h2d_bytes: h2d,
+        d2h_bytes: (chunks * out_bytes) as u64,
+        tasks: chunks,
+        validated: ok,
+    })
+}
+
+/// Variant 1: whole reduction on the accelerator.
+pub struct ReductionV1 {
+    chunks: usize,
+}
+
+impl ReductionV1 {
+    pub fn new(scale: usize) -> Self {
+        Self { chunks: 8 * scale.max(1) }
+    }
+}
+
+impl Benchmark for ReductionV1 {
+    fn name(&self) -> &'static str {
+        "Reduction"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["reduction_v1"]
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        run_variant("Reduction", "reduction_v1", 4, self.chunks, ctx, mode)
+    }
+}
+
+/// Variant 2: partial sums return to the host.
+pub struct ReductionV2 {
+    chunks: usize,
+}
+
+impl ReductionV2 {
+    pub fn new(scale: usize) -> Self {
+        Self { chunks: 8 * scale.max(1) }
+    }
+}
+
+impl Benchmark for ReductionV2 {
+    fn name(&self) -> &'static str {
+        "Reduction-2"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["reduction_v2"]
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        run_variant("Reduction-2", "reduction_v2", BLOCKS * 4, self.chunks, ctx, mode)
+    }
+}

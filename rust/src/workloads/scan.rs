@@ -1,0 +1,81 @@
+//! AMD `PrefixSum` / `ScanLargeArrays` — independent chunk scans with a
+//! host-side carry pass (the paper's `ps`).
+
+use std::sync::Arc;
+
+use crate::hstreams::Context;
+use crate::runtime::bytes;
+use crate::Result;
+
+use super::{gen_f32, oracle, Benchmark, GenericWorkload, Mode, RunStats, Windows};
+
+pub const CHUNK: usize = 16384;
+
+pub struct PrefixSum {
+    chunks: usize,
+}
+
+impl PrefixSum {
+    pub fn new(scale: usize) -> Self {
+        Self { chunks: 16 * scale.max(1) }
+    }
+}
+
+impl Benchmark for PrefixSum {
+    fn name(&self) -> &'static str {
+        "PrefixSum"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["prefix_sum"]
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let total = self.chunks * CHUNK;
+        let x = gen_f32(total, 31);
+
+        let wl = GenericWorkload {
+            name: "PrefixSum",
+            artifact: "prefix_sum",
+            streamed_inputs: vec![Windows::disjoint(Arc::new(bytes::from_f32(&x)), self.chunks)],
+            shared_inputs: vec![],
+            // Output 0: per-chunk scans; output 1: per-chunk totals.
+            output_chunk_bytes: vec![CHUNK * 4, 4],
+            // Multi-pass device scan time per chunk.
+            flops_per_chunk: Some(1_500_000),
+        };
+        let timer = crate::metrics::Timer::start();
+        let (_, outputs, h2d) = wl.execute(ctx, mode)?;
+
+        // Host carry propagation (the scan's tiny middle pass).
+        let mut scans = bytes::to_f32(&outputs[0]);
+        let totals = bytes::to_f32(&outputs[1]);
+        let mut carry = 0.0f32;
+        for c in 0..self.chunks {
+            if carry != 0.0 {
+                for v in &mut scans[c * CHUNK..(c + 1) * CHUNK] {
+                    *v += carry;
+                }
+            }
+            carry += totals[c];
+        }
+        let wall = timer.elapsed();
+
+        let want = oracle::prefix_sum(&x);
+        // Scan accumulates rounding; scale tolerance with prefix length.
+        let ok = scans
+            .iter()
+            .zip(&want)
+            .all(|(a, b)| (a - b).abs() <= 2e-2 + 1e-3 * b.abs());
+
+        Ok(RunStats {
+            name: "PrefixSum".into(),
+            mode,
+            wall,
+            h2d_bytes: h2d,
+            d2h_bytes: (total * 4 + self.chunks * 4) as u64,
+            tasks: self.chunks,
+            validated: ok,
+        })
+    }
+}

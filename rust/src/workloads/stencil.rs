@@ -1,0 +1,73 @@
+//! Parboil `stencil` — False Dependent with the smallest possible halo
+//! (one row per side): the favourable end of the Fig. 7 spectrum.
+
+use std::sync::Arc;
+
+use crate::hstreams::Context;
+use crate::runtime::bytes;
+use crate::Result;
+
+use super::{gen_f32, oracle, Benchmark, GenericWorkload, Mode, RunStats, Windows};
+
+/// Band geometry — must match the `stencil2d` AOT artifact.
+pub const ROWS: usize = 128;
+pub const COLS: usize = 512;
+
+pub struct Stencil {
+    chunks: usize,
+}
+
+impl Stencil {
+    pub fn new(scale: usize) -> Self {
+        Self { chunks: 8 * scale.max(1) }
+    }
+}
+
+impl Benchmark for Stencil {
+    fn name(&self) -> &'static str {
+        "stencil"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["stencil2d"]
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let rows = self.chunks * ROWS;
+        let field = gen_f32(rows * COLS, 81);
+        let mut padded = vec![0.0f32; (rows + 2) * COLS];
+        padded[COLS..(rows + 1) * COLS].copy_from_slice(&field);
+
+        let wl = GenericWorkload {
+            name: "stencil",
+            artifact: "stencil2d",
+            streamed_inputs: vec![Windows::halo(
+                Arc::new(bytes::from_f32(&padded)),
+                self.chunks,
+                COLS * 4,
+            )],
+            shared_inputs: vec![],
+            output_chunk_bytes: vec![ROWS * COLS * 4],
+            // Memory-bound 5-point sweep: device time per band.
+            flops_per_chunk: Some(7_100_000),
+        };
+        let (wall, outputs, h2d) = wl.execute(ctx, mode)?;
+
+        let got = bytes::to_f32(&outputs[0]);
+        let want = oracle::stencil2d(&padded, rows, COLS);
+        let ok = got
+            .iter()
+            .zip(&want)
+            .all(|(a, b)| (a - b).abs() <= 1e-4 + 1e-4 * b.abs());
+
+        Ok(RunStats {
+            name: "stencil".into(),
+            mode,
+            wall,
+            h2d_bytes: h2d,
+            d2h_bytes: (rows * COLS * 4) as u64,
+            tasks: self.chunks,
+            validated: ok,
+        })
+    }
+}

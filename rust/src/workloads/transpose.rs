@@ -1,0 +1,78 @@
+//! NVIDIA `Transpose` — independent row bands; the paper's moderate-R
+//! case (R ≈ 14–20%, gain 8–14% depending on dataset).
+
+use std::sync::Arc;
+
+use crate::hstreams::Context;
+use crate::runtime::bytes;
+use crate::Result;
+
+use super::{gen_f32, oracle, Benchmark, GenericWorkload, Mode, RunStats, Windows};
+
+/// Band geometry — must match the `transpose` AOT artifact.
+pub const ROWS: usize = 128;
+pub const COLS: usize = 1024;
+
+/// Device-side transpose is memory-bound; this effective FLOP count
+/// models its device time (≈ 60 "flop-equivalents"/element at the MIC
+/// profile's GFLOP/s — see DESIGN.md §2).
+const FLOPS_PER_CHUNK: u64 = (84 * ROWS * COLS) as u64;
+
+pub struct Transpose {
+    chunks: usize,
+}
+
+impl Transpose {
+    pub fn new(scale: usize) -> Self {
+        Self { chunks: 8 * scale.max(1) }
+    }
+}
+
+impl Benchmark for Transpose {
+    fn name(&self) -> &'static str {
+        "Transpose"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["transpose"]
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let total = self.chunks * ROWS * COLS;
+        let x = gen_f32(total, 7);
+
+        let wl = GenericWorkload {
+            name: "Transpose",
+            artifact: "transpose",
+            streamed_inputs: vec![Windows::disjoint(Arc::new(bytes::from_f32(&x)), self.chunks)],
+            shared_inputs: vec![],
+            output_chunk_bytes: vec![ROWS * COLS * 4],
+            flops_per_chunk: Some(FLOPS_PER_CHUNK),
+        };
+        let (wall, outputs, h2d) = wl.execute(ctx, mode)?;
+
+        // Output is a sequence of transposed [COLS, ROWS] strips; strip i
+        // holds columns of band i.  Validate each strip.
+        let got = bytes::to_f32(&outputs[0]);
+        let mut ok = true;
+        for c in 0..self.chunks {
+            let band = &x[c * ROWS * COLS..(c + 1) * ROWS * COLS];
+            let want = oracle::transpose(band, ROWS, COLS);
+            let strip = &got[c * ROWS * COLS..(c + 1) * ROWS * COLS];
+            if strip != want.as_slice() {
+                ok = false;
+                break;
+            }
+        }
+
+        Ok(RunStats {
+            name: "Transpose".into(),
+            mode,
+            wall,
+            h2d_bytes: h2d,
+            d2h_bytes: (total * 4) as u64,
+            tasks: self.chunks,
+            validated: ok,
+        })
+    }
+}

@@ -1,0 +1,66 @@
+//! NVIDIA `VectorAdd` — minimal independent streamed code; R is very
+//! high (transfer-dominated), the paper's "is offload even worth it"
+//! regime.
+
+use std::sync::Arc;
+
+use crate::hstreams::Context;
+use crate::runtime::bytes;
+use crate::Result;
+
+use super::{gen_f32, oracle, Benchmark, GenericWorkload, Mode, RunStats, Windows};
+
+pub const CHUNK: usize = 65536;
+
+pub struct VectorAdd {
+    chunks: usize,
+}
+
+impl VectorAdd {
+    pub fn new(scale: usize) -> Self {
+        Self { chunks: 8 * scale.max(1) }
+    }
+}
+
+impl Benchmark for VectorAdd {
+    fn name(&self) -> &'static str {
+        "VectorAdd"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["vector_add"]
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let total = self.chunks * CHUNK;
+        let a = gen_f32(total, 1);
+        let b = gen_f32(total, 2);
+
+        let wl = GenericWorkload {
+            name: "VectorAdd",
+            artifact: "vector_add",
+            streamed_inputs: vec![
+                Windows::disjoint(Arc::new(bytes::from_f32(&a)), self.chunks),
+                Windows::disjoint(Arc::new(bytes::from_f32(&b)), self.chunks),
+            ],
+            shared_inputs: vec![],
+            output_chunk_bytes: vec![CHUNK * 4],
+            flops_per_chunk: None,
+        };
+        let (wall, outputs, h2d) = wl.execute(ctx, mode)?;
+
+        let got = bytes::to_f32(&outputs[0]);
+        let want = oracle::vector_add(&a, &b);
+        let ok = got == want; // addition is exact in f32
+
+        Ok(RunStats {
+            name: "VectorAdd".into(),
+            mode,
+            wall,
+            h2d_bytes: h2d,
+            d2h_bytes: (total * 4) as u64,
+            tasks: self.chunks,
+            validated: ok,
+        })
+    }
+}

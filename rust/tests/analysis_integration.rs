@@ -1,0 +1,148 @@
+//! Analysis integration: the stage-by-stage engine measurement agrees
+//! with the analytic device model, and the experiment tables carry the
+//! paper's key shapes.
+
+use hetstream::analysis::{decide, fraction_at_or_below, Decision};
+use hetstream::corpus::{all_configs, configs_for};
+use hetstream::device::DeviceProfile;
+use hetstream::experiments::{analytic_stage_times, fig4, offload_spec, table2};
+use hetstream::hstreams::ContextBuilder;
+
+#[test]
+fn engine_stage_times_match_the_device_model() {
+    // A transfer-heavy and a compute-heavy spec, measured through the
+    // engines (5-run medians), must land near the dilated model.
+    let ctx = ContextBuilder::new().only_artifacts(["burner_64"]).build().expect("context");
+    let p = ctx.profile().clone();
+
+    // FLOP budgets sit well above the burner's real execution floor
+    // (~1.3 ms/call) so the modeled pacing governs (max(real, modeled)).
+    for (h2d, flops) in [(1 << 20, 10_000_000u64), (1 << 16, 40_000_000u64)] {
+        let spec = hetstream::analysis::OffloadSpec {
+            name: "model-check".into(),
+            h2d: vec![h2d],
+            kex: vec![hetstream::analysis::KexCall {
+                artifact: "burner_64".into(),
+                flops,
+                repeats: 1,
+            }],
+            d2h: vec![h2d / 2],
+        };
+        let st = hetstream::analysis::measure_stages(&ctx, &spec, 5);
+        let want_h2d = p.transfer_time(h2d, true) + p.alloc_time(h2d);
+        let want_kex = p.kex_time(flops);
+        let h2d_err = (st.h2d.as_secs_f64() - want_h2d.as_secs_f64()).abs() / want_h2d.as_secs_f64();
+        let kex_err = (st.kex.as_secs_f64() - want_kex.as_secs_f64()).abs() / want_kex.as_secs_f64();
+        assert!(h2d_err < 0.25, "h2d {:?} vs model {:?}", st.h2d, want_h2d);
+        assert!(kex_err < 0.35, "kex {:?} vs model {:?}", st.kex, want_kex);
+    }
+}
+
+#[test]
+fn engine_r_matches_analytic_r_on_corpus_sample() {
+    let ctx = ContextBuilder::new().only_artifacts(["burner_64"]).build().expect("context");
+    let paper = DeviceProfile::mic31sp();
+    // A few configs spanning the R spectrum.
+    let sample: Vec<_> = all_configs().into_iter().step_by(47).take(5).collect();
+    for cfg in sample {
+        let st = hetstream::analysis::measure_stages(&ctx, &offload_spec(&cfg), 5);
+        let model = analytic_stage_times(&cfg, &paper);
+        // Iterative caps + dilated latencies allow coarse agreement only.
+        let err = (st.r_h2d() - model.r_h2d()).abs();
+        assert!(
+            err < 0.22,
+            "{}/{}: engine R {:.3} vs analytic {:.3}",
+            cfg.app,
+            cfg.config,
+            st.r_h2d(),
+            model.r_h2d()
+        );
+    }
+}
+
+#[test]
+fn fig1_headline_shape_holds() {
+    // Paper: >50% of configs have R_H2D <= 0.1; D2H fraction even larger.
+    let p = DeviceProfile::mic31sp();
+    let rs: Vec<f64> = all_configs().iter().map(|c| analytic_stage_times(c, &p).r_h2d()).collect();
+    let ds: Vec<f64> = all_configs().iter().map(|c| analytic_stage_times(c, &p).r_d2h()).collect();
+    let h = fraction_at_or_below(&rs, 0.1);
+    let d = fraction_at_or_below(&ds, 0.1);
+    assert!(h > 0.5, "CDF(R_H2D<=0.1) = {h}");
+    assert!(d > h, "D2H fraction ({d}) should exceed H2D ({h})");
+    assert!(d > 0.6, "CDF(R_D2H<=0.1) = {d}");
+}
+
+#[test]
+fn fig2_dataset_shape_holds() {
+    let p = DeviceProfile::mic31sp();
+    let lbm = configs_for("lbm");
+    let short = analytic_stage_times(&lbm[0], &p).r_h2d();
+    let long = analytic_stage_times(&lbm[1], &p).r_h2d();
+    assert!(short > 3.0 * long, "lbm: R(short) {short} >> R(long) {long}");
+
+    let fdtd = configs_for("FDTD3d");
+    let rs: Vec<f64> = fdtd.iter().map(|c| analytic_stage_times(c, &p).r_h2d()).collect();
+    for w in rs.windows(2) {
+        assert!(w[0] > w[1], "FDTD3d R must fall as timesteps rise: {rs:?}");
+    }
+}
+
+#[test]
+fn fig3_variant_shape_holds() {
+    let p = DeviceProfile::mic31sp();
+    let v1 = configs_for("Reduction");
+    let v2 = configs_for("Reduction-2");
+    for (a, b) in v1.iter().zip(&v2) {
+        let r1 = analytic_stage_times(a, &p).r_d2h();
+        let r2 = analytic_stage_times(b, &p).r_d2h();
+        assert!(r2 > r1, "v2 must ship more back: {r1} vs {r2}");
+    }
+}
+
+#[test]
+fn fig4_platform_shape_holds() {
+    let mic = DeviceProfile::mic31sp();
+    let k80 = DeviceProfile::k80();
+    let mut mic_kex = 0.0;
+    let mut k80_kex = 0.0;
+    let cfgs = configs_for("nn");
+    for c in &cfgs {
+        mic_kex += analytic_stage_times(c, &mic).r_kex();
+        k80_kex += analytic_stage_times(c, &k80).r_kex();
+    }
+    mic_kex /= cfgs.len() as f64;
+    k80_kex /= cfgs.len() as f64;
+    // Paper: ~33% on MIC vs ~2% on the GPU.
+    assert!((0.2..0.5).contains(&mic_kex), "MIC KEX fraction {mic_kex}");
+    assert!(k80_kex < 0.1, "K80 KEX fraction {k80_kex}");
+    assert!(mic_kex > 4.0 * k80_kex);
+    // And the table renders.
+    assert!(fig4().markdown().contains("MEAN"));
+}
+
+#[test]
+fn decision_rule_flags_both_extremes() {
+    let p = DeviceProfile::mic31sp();
+    let mut low = 0;
+    let mut high = 0;
+    for c in all_configs() {
+        match decide(analytic_stage_times(&c, &p).r_h2d()) {
+            Decision::NotWorthLowR => low += 1,
+            Decision::NotWorthHighR => high += 1,
+            Decision::Worthwhile => {}
+        }
+    }
+    assert!(low > 100, "most corpus configs are not worth streaming (paper: >50%)");
+    assert!(high > 0, "some configs are transfer-bound beyond help");
+}
+
+#[test]
+fn table2_lists_every_suite_and_exemplar() {
+    let md = table2().markdown();
+    for s in ["Rodinia", "Parboil", "NVIDIA SDK", "AMD SDK"] {
+        assert!(md.contains(s), "missing suite {s}");
+    }
+    assert!(md.contains("nn"));
+    assert!(md.contains("FastWalshTransform"));
+}

@@ -1,0 +1,184 @@
+//! Property-based invariants (seeded sweeps via `util::prop`):
+//! partition coverage, wavefront topology, arena safety, CDF
+//! monotonicity, JSON round-trips.
+
+use std::collections::HashSet;
+
+use hetstream::analysis::cdf_points;
+use hetstream::device::DeviceArena;
+use hetstream::partition::{chunk_ranges, diagonals, halo_chunks, tile_coords};
+use hetstream::util::json::{escape, Json};
+use hetstream::util::prop::{check, Rng};
+
+#[test]
+fn prop_chunk_ranges_exactly_cover() {
+    check(200, |rng: &mut Rng| {
+        let total = rng.range(0, 10_000);
+        let chunks = rng.range(1, 64);
+        let rs = chunk_ranges(total, chunks);
+        assert_eq!(rs.len(), chunks);
+        let mut pos = 0;
+        for (i, r) in rs.iter().enumerate() {
+            assert_eq!(r.index, i);
+            assert_eq!(r.start, pos, "contiguous");
+            pos += r.len;
+        }
+        assert_eq!(pos, total, "exact cover");
+        let min = rs.iter().map(|r| r.len).min().unwrap();
+        let max = rs.iter().map(|r| r.len).max().unwrap();
+        assert!(max - min <= 1, "balanced");
+    });
+}
+
+#[test]
+fn prop_halo_windows_contain_owned_range() {
+    check(200, |rng: &mut Rng| {
+        let total = rng.range(64, 50_000);
+        let chunks = rng.range(1, 32);
+        let halo = rng.range(0, 512);
+        let hs = halo_chunks(total, chunks, halo);
+        assert_eq!(hs.iter().map(|h| h.len).sum::<usize>(), total);
+        for h in &hs {
+            // In padded coordinates the owned range [start+halo, ..] sits
+            // strictly inside the transferred window.
+            assert_eq!(h.xfer_start, h.start);
+            assert_eq!(h.xfer_len, h.len + 2 * halo);
+        }
+    });
+}
+
+#[test]
+fn prop_wavefront_is_a_topological_order() {
+    check(60, |rng: &mut Rng| {
+        let rows = rng.range(1, 12);
+        let cols = rng.range(1, 12);
+        let order = tile_coords(rows, cols);
+        assert_eq!(order.len(), rows * cols);
+        let mut pos = vec![vec![0usize; cols]; rows];
+        let uniq: HashSet<_> = order.iter().collect();
+        assert_eq!(uniq.len(), order.len(), "no duplicates");
+        for (i, c) in order.iter().enumerate() {
+            pos[c.bi][c.bj] = i;
+        }
+        for c in &order {
+            if c.bi > 0 {
+                assert!(pos[c.bi - 1][c.bj] < pos[c.bi][c.bj]);
+            }
+            if c.bj > 0 {
+                assert!(pos[c.bi][c.bj - 1] < pos[c.bi][c.bj]);
+            }
+            if c.bi > 0 && c.bj > 0 {
+                assert!(pos[c.bi - 1][c.bj - 1] < pos[c.bi][c.bj]);
+            }
+        }
+        // Diagonal widths: grow by 1, plateau, shrink by 1.
+        let ds = diagonals(rows, cols);
+        let widths: Vec<usize> = ds.iter().map(|d| d.tiles.len()).collect();
+        for w in widths.windows(2) {
+            let delta = w[1] as isize - w[0] as isize;
+            assert!((-1..=1).contains(&delta), "widths change by at most 1: {widths:?}");
+        }
+        assert_eq!(widths.iter().sum::<usize>(), rows * cols);
+    });
+}
+
+#[test]
+fn prop_arena_never_leaks_or_overlaps() {
+    check(50, |rng: &mut Rng| {
+        let cap = 1 << 20;
+        let mut arena = DeviceArena::new(cap);
+        let mut live: Vec<(hetstream::device::BufId, usize, u8)> = Vec::new();
+        for step in 0..rng.range(10, 120) {
+            if live.is_empty() || rng.below(2) == 0 {
+                let len = rng.range(1, 32_768);
+                if let Ok(id) = arena.alloc(len) {
+                    let tag = (step % 251) as u8;
+                    arena
+                        .write(hetstream::device::DevRegion::whole(id, len), &vec![tag; len])
+                        .unwrap();
+                    live.push((id, len, tag));
+                }
+            } else {
+                let idx = rng.below(live.len() as u64) as usize;
+                let (id, len, tag) = live.swap_remove(idx);
+                // Buffer still holds exactly its own bytes (no overlap
+                // with any other allocation).
+                let back = arena.read(hetstream::device::DevRegion::whole(id, len)).unwrap();
+                assert!(back.iter().all(|&b| b == tag), "buffer integrity");
+                arena.free(id).unwrap();
+            }
+            assert!(arena.used() <= cap, "capacity respected");
+        }
+        for (id, len, tag) in live {
+            let back = arena.read(hetstream::device::DevRegion::whole(id, len)).unwrap();
+            assert!(back.iter().all(|&b| b == tag));
+            arena.free(id).unwrap();
+        }
+        assert_eq!(arena.used(), 0, "all memory returned");
+        assert_eq!(arena.live_buffers(), 0);
+    });
+}
+
+#[test]
+fn prop_cdf_is_monotone_and_normalized() {
+    check(100, |rng: &mut Rng| {
+        let n = rng.range(1, 500);
+        let vals: Vec<f64> = (0..n).map(|_| rng.unit_f64() * 2.0 - 0.5).collect();
+        let pts = cdf_points(&vals);
+        assert_eq!(pts.len(), n);
+        assert!((pts.last().unwrap().fraction - 1.0).abs() < 1e-12);
+        for w in pts.windows(2) {
+            assert!(w[0].value <= w[1].value);
+            assert!(w[0].fraction < w[1].fraction + 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_json_string_roundtrip() {
+    check(200, |rng: &mut Rng| {
+        let len = rng.range(0, 60);
+        let s: String = (0..len)
+            .map(|_| {
+                let c = rng.below(128) as u8;
+                if c.is_ascii_graphic() || c == b' ' {
+                    c as char
+                } else {
+                    match c % 5 {
+                        0 => '"',
+                        1 => '\\',
+                        2 => '\n',
+                        3 => '\t',
+                        _ => 'é',
+                    }
+                }
+            })
+            .collect();
+        let doc = format!("{{\"k\": \"{}\"}}", escape(&s));
+        let parsed = Json::parse(&doc).unwrap();
+        assert_eq!(parsed.get("k").unwrap().as_str(), Some(s.as_str()));
+    });
+}
+
+#[test]
+fn prop_json_numbers_roundtrip() {
+    check(200, |rng: &mut Rng| {
+        let v = (rng.unit_f64() - 0.5) * 1e9;
+        let doc = format!("{{\"n\": {v}}}");
+        let parsed = Json::parse(&doc).unwrap();
+        let got = parsed.get("n").unwrap().as_f64().unwrap();
+        assert!((got - v).abs() <= 1e-6 * v.abs().max(1.0));
+    });
+}
+
+#[test]
+fn prop_halo_overhead_ratio_predicts_cases() {
+    use hetstream::partition::halo_overhead_ratio;
+    check(100, |rng: &mut Rng| {
+        let chunk = rng.range(1, 1 << 20);
+        let halo = rng.range(0, 1 << 12);
+        let r = halo_overhead_ratio(chunk, halo);
+        assert!(r >= 0.0);
+        assert!((r - 2.0 * halo as f64 / chunk as f64).abs() < 1e-12);
+    });
+}

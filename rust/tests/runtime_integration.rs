@@ -1,0 +1,128 @@
+//! Runtime integration: every AOT artifact loads, compiles and executes
+//! through the PJRT CPU client, with numerics spot-checked against
+//! in-test oracles.  Requires `make artifacts` first.
+
+use hetstream::runtime::{bytes, ArtifactStore, Manifest};
+
+fn store(names: &[&str]) -> ArtifactStore {
+    ArtifactStore::load_subset(&hetstream::artifacts_dir(), names).expect("load artifacts")
+}
+
+#[test]
+fn manifest_loads_and_covers_all_artifacts() {
+    let m = Manifest::load(&hetstream::artifacts_dir()).expect("manifest");
+    assert!(m.artifacts.len() >= 18, "expected the full artifact set");
+    for a in &m.artifacts {
+        assert!(!a.inputs.is_empty(), "{} has inputs", a.name);
+        assert!(!a.outputs.is_empty(), "{} has outputs", a.name);
+        assert!(a.flops_per_call > 0, "{} has a FLOP estimate", a.name);
+    }
+}
+
+#[test]
+fn every_artifact_executes_with_correct_output_arity() {
+    let m = Manifest::load(&hetstream::artifacts_dir()).expect("manifest");
+    let s = ArtifactStore::load(&hetstream::artifacts_dir()).expect("load all");
+    for a in &m.artifacts {
+        let inputs: Vec<Vec<u8>> = a.inputs.iter().map(|io| vec![0u8; io.bytes()]).collect();
+        let refs: Vec<&[u8]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let outs = s.execute_bytes(&a.name, &refs).unwrap_or_else(|e| panic!("{}: {e}", a.name));
+        assert_eq!(outs.len(), a.outputs.len(), "{} output arity", a.name);
+        for (out, spec) in outs.iter().zip(&a.outputs) {
+            assert_eq!(out.len(), spec.bytes(), "{} output size", a.name);
+        }
+    }
+}
+
+#[test]
+fn vector_add_numerics() {
+    let s = store(&["vector_add"]);
+    let n = 65536;
+    let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+    let b: Vec<f32> = (0..n).map(|i| 1.0 - i as f32).collect();
+    let out = s
+        .execute_bytes("vector_add", &[&bytes::from_f32(&a), &bytes::from_f32(&b)])
+        .expect("execute");
+    let c = bytes::to_f32(&out[0]);
+    for i in (0..n).step_by(1111) {
+        assert_eq!(c[i], a[i] + b[i]);
+    }
+}
+
+#[test]
+fn matmul_identity_numerics() {
+    let s = store(&["matmul"]);
+    // a @ I (embedded in a 256x256 b with the top-left 256x256 identity).
+    let a: Vec<f32> = (0..128 * 256).map(|i| (i % 97) as f32 * 0.25).collect();
+    let mut b = vec![0.0f32; 256 * 256];
+    for i in 0..256 {
+        b[i * 256 + i] = 1.0;
+    }
+    let out = s
+        .execute_bytes("matmul", &[&bytes::from_f32(&a), &bytes::from_f32(&b)])
+        .expect("execute");
+    let c = bytes::to_f32(&out[0]);
+    assert_eq!(c.len(), 128 * 256);
+    for i in (0..c.len()).step_by(997) {
+        assert!((c[i] - a[i]).abs() < 1e-4, "identity matmul at {i}");
+    }
+}
+
+#[test]
+fn reduction_variants_agree() {
+    let s = store(&["reduction_v1", "reduction_v2"]);
+    let x: Vec<f32> = (0..65536).map(|i| ((i * 37) % 101) as f32 * 0.01 - 0.5).collect();
+    let xb = bytes::from_f32(&x);
+    let v1 = bytes::to_f32(&s.execute_bytes("reduction_v1", &[&xb]).unwrap()[0]);
+    let v2 = bytes::to_f32(&s.execute_bytes("reduction_v2", &[&xb]).unwrap()[0]);
+    assert_eq!(v1.len(), 1);
+    assert_eq!(v2.len(), 256);
+    let v2sum: f32 = v2.iter().sum();
+    assert!((v1[0] - v2sum).abs() < 0.5, "v1 {} vs v2 {}", v1[0], v2sum);
+}
+
+#[test]
+fn prefix_sum_total_matches_scan() {
+    let s = store(&["prefix_sum"]);
+    let x: Vec<f32> = (0..16384).map(|i| ((i % 13) as f32) - 6.0).collect();
+    let outs = s.execute_bytes("prefix_sum", &[&bytes::from_f32(&x)]).unwrap();
+    let scan = bytes::to_f32(&outs[0]);
+    let tot = bytes::to_f32(&outs[1]);
+    assert!((scan[16383] - tot[0]).abs() < 1e-2);
+    // spot-check against a host prefix
+    let want: f32 = x[..1000].iter().sum();
+    assert!((scan[999] - want).abs() < 1e-2);
+}
+
+#[test]
+fn histogram_counts_conserved() {
+    let s = store(&["histogram"]);
+    let x: Vec<i32> = (0..16384).map(|i| (i * 7 % 256) as i32).collect();
+    let outs = s.execute_bytes("histogram", &[&bytes::from_i32(&x)]).unwrap();
+    let h = bytes::to_i32(&outs[0]);
+    assert_eq!(h.len(), 256);
+    assert_eq!(h.iter().map(|&c| c as i64).sum::<i64>(), 16384);
+}
+
+#[test]
+fn wrong_input_count_rejected() {
+    let s = store(&["vector_add"]);
+    let a = vec![0u8; 65536 * 4];
+    let err = s.execute_bytes("vector_add", &[&a]).unwrap_err();
+    assert!(err.to_string().contains("signature"), "{err}");
+}
+
+#[test]
+fn wrong_input_size_rejected() {
+    let s = store(&["vector_add"]);
+    let a = vec![0u8; 16];
+    let err = s.execute_bytes("vector_add", &[&a, &a]).unwrap_err();
+    assert!(err.to_string().contains("signature"), "{err}");
+}
+
+#[test]
+fn unknown_artifact_rejected() {
+    let s = store(&["vector_add"]);
+    let a = vec![0u8; 4];
+    assert!(s.execute_bytes("definitely_not_a_kernel", &[&a]).is_err());
+}

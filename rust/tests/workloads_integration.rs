@@ -1,0 +1,175 @@
+//! Workload integration: all 13 streamed benchmarks + both Reduction
+//! variants run end-to-end (bulk and multi-stream) on an un-paced
+//! device and validate against their host oracles.
+//!
+//! Pacing is irrelevant to correctness, so these use the `instant`
+//! profile to keep the suite fast; the paced timing behaviour is
+//! covered by benches and `analysis_integration`.
+
+use hetstream::device::DeviceProfile;
+use hetstream::hstreams::{Context, ContextBuilder};
+use hetstream::workloads::{fig9_benchmarks, Benchmark, Mode};
+
+fn ctx_for(b: &dyn Benchmark) -> Context {
+    ContextBuilder::new()
+        .profile(DeviceProfile::instant())
+        .only_artifacts(b.artifacts().into_iter().map(String::from).collect::<Vec<_>>())
+        .build()
+        .expect("context")
+}
+
+fn check(b: &dyn Benchmark) {
+    let ctx = ctx_for(b);
+    let base = b.run(&ctx, Mode::Baseline).expect("baseline run");
+    assert!(base.validated, "{}: baseline failed validation", b.name());
+    for streams in [1, 3, 4] {
+        let s = b.run(&ctx, Mode::Streamed(streams)).expect("streamed run");
+        assert!(s.validated, "{}: {streams}-stream failed validation", b.name());
+        assert!(
+            s.h2d_bytes >= base.h2d_bytes,
+            "{}: streamed H2D can only add (halo) bytes",
+            b.name()
+        );
+    }
+}
+
+// One test per benchmark so failures localize.
+
+#[test]
+fn nn_validates() {
+    check(&hetstream::workloads::Nn::new(1));
+}
+
+#[test]
+fn fwt_validates() {
+    check(&hetstream::workloads::Fwt::new(1));
+}
+
+#[test]
+fn cfft2d_validates() {
+    check(&hetstream::workloads::ConvFft2d::new(1));
+}
+
+#[test]
+fn nw_validates() {
+    check(&hetstream::workloads::NeedlemanWunsch::new(1));
+}
+
+#[test]
+fn lavamd_validates() {
+    check(&hetstream::workloads::LavaMd::new(1));
+}
+
+#[test]
+fn convsep_validates() {
+    check(&hetstream::workloads::ConvSep::new(1));
+}
+
+#[test]
+fn transpose_validates() {
+    check(&hetstream::workloads::Transpose::new(1));
+}
+
+#[test]
+fn prefix_sum_validates() {
+    check(&hetstream::workloads::PrefixSum::new(1));
+}
+
+#[test]
+fn histogram_validates() {
+    check(&hetstream::workloads::Histogram::new(1));
+}
+
+#[test]
+fn matmul_validates() {
+    check(&hetstream::workloads::MatMul::new(1));
+}
+
+#[test]
+fn vecadd_validates() {
+    check(&hetstream::workloads::VectorAdd::new(1));
+}
+
+#[test]
+fn blackscholes_validates() {
+    check(&hetstream::workloads::BlackScholes::new(1));
+}
+
+#[test]
+fn stencil_validates() {
+    check(&hetstream::workloads::Stencil::new(1));
+}
+
+#[test]
+fn reduction_variants_validate() {
+    check(&hetstream::workloads::ReductionV1::new(1));
+    check(&hetstream::workloads::ReductionV2::new(1));
+}
+
+#[test]
+fn fig9_registry_is_the_papers_thirteen() {
+    let benches = fig9_benchmarks(1);
+    assert_eq!(benches.len(), 13);
+    let names: Vec<&str> = benches.iter().map(|b| b.name()).collect();
+    for expect in ["nn", "FastWalshTransform", "ConvolutionFFT2D", "nw", "lavaMD"] {
+        assert!(names.contains(&expect), "missing {expect}");
+    }
+}
+
+#[test]
+fn halo_benchmarks_ship_redundant_bytes() {
+    // The False Dependent ports must transfer more than the bulk port
+    // (Fig. 7's redundant boundary transfer) — and lavaMD's ratio must
+    // be close to the paper's ~1.9x.
+    let b = hetstream::workloads::LavaMd::new(1);
+    let ctx = ctx_for(&b);
+    let base = b.run(&ctx, Mode::Baseline).unwrap();
+    let strm = b.run(&ctx, Mode::Streamed(4)).unwrap();
+    let ratio = strm.h2d_bytes as f64 / base.h2d_bytes as f64;
+    assert!(ratio > 1.5 && ratio < 2.0, "lavaMD halo ratio {ratio}");
+
+    let b = hetstream::workloads::Stencil::new(1);
+    let ctx = ctx_for(&b);
+    let base = b.run(&ctx, Mode::Baseline).unwrap();
+    let strm = b.run(&ctx, Mode::Streamed(4)).unwrap();
+    let ratio = strm.h2d_bytes as f64 / base.h2d_bytes as f64;
+    assert!(ratio > 1.0 && ratio < 1.1, "stencil halo ratio {ratio} should be tiny");
+}
+
+#[test]
+fn nw_scales_to_larger_grids() {
+    // True Dependent wavefront at 2x grid still equals the DP oracle.
+    let b = hetstream::workloads::NeedlemanWunsch::new(2);
+    let ctx = ctx_for(&b);
+    let r = b.run(&ctx, Mode::Streamed(6)).expect("run");
+    assert!(r.validated);
+    assert_eq!(r.tasks, 16 * 16);
+}
+
+#[test]
+fn dct8x8_validates() {
+    check(&hetstream::workloads::Dct8x8::new(1));
+}
+
+#[test]
+fn dotproduct_validates() {
+    check(&hetstream::workloads::DotProduct::new(1));
+}
+
+#[test]
+fn hotspot_iterative_validates() {
+    // The Iterative control: correctness of the device ping-pong chain
+    // against the iterated host oracle, in both modes.
+    check(&hetstream::workloads::Hotspot::new(1));
+}
+
+#[test]
+fn hotspot_dependency_chain_is_ordered() {
+    // Each step's kernel must retire after its predecessor (RAW chain).
+    use hetstream::workloads::Hotspot;
+    let b = Hotspot::new(1);
+    let ctx = ctx_for(&b);
+    let r = b.run(&ctx, Mode::Streamed(8)).expect("run");
+    assert!(r.validated);
+    assert_eq!(r.tasks, b.steps());
+}
