@@ -78,15 +78,17 @@ fn main() {
         s.sync();
     });
 
-    // --- raw PJRT execute (the real KEX floor) ---
+    // --- raw kernel-backend execute (the real KEX floor) ---
     let store = ArtifactStore::load_subset(&hetstream::artifacts_dir(), &["vector_add"]).unwrap();
     let raw = vec![0u8; 65536 * 4];
-    bench("pjrt: execute_bytes vector_add 64Ki", 200, || {
+    let label = format!("{}: execute_bytes vector_add 64Ki", store.platform());
+    bench(&label, 200, || {
         let _ = store.execute_bytes("vector_add", &[&raw, &raw]).unwrap();
     });
 
     // --- manifest parse (startup path) ---
-    let text = std::fs::read_to_string(hetstream::artifacts_dir().join("manifest.json")).unwrap();
+    let text = std::fs::read_to_string(hetstream::artifacts_dir().join("manifest.json"))
+        .unwrap_or_else(|_| hetstream::runtime::builtin_manifest_json().to_string());
     bench("manifest: parse", 2_000, || {
         let _ = hetstream::runtime::Manifest::parse(&text).unwrap();
     });

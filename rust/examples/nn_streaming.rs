@@ -42,7 +42,6 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .collect::<Result<_, _>>()?;
     let dst = hetstream::hstreams::host_dst(total * 4);
 
-    let t0 = std::time::Instant::now();
     let mut streams: Vec<_> = (0..n_streams).map(|_| ctx.stream()).collect();
 
     // Broadcast the target on stream 0; others wait for it.
@@ -63,7 +62,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     for s in &streams {
         s.sync();
     }
-    let wall = t0.elapsed();
+    // Modeled pipeline makespan (virtual timeline under the default
+    // TimeMode::Virtual; measured span under wallclock mode).
+    let wall = hetstream::hstreams::makespan(streams.iter().flat_map(|s| s.events()));
 
     // Host-side k-NN selection over the streamed distances.
     let dists = bytes::to_f32(&dst.data.lock().unwrap());

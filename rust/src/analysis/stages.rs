@@ -124,30 +124,30 @@ pub fn measure_stages(ctx: &Context, spec: &OffloadSpec, runs: usize) -> StageTi
             .map(|&n| DevRegion::whole(ctx.alloc(n).expect("d2h alloc"), n))
             .collect();
 
+        // Each stage's duration is the timeline makespan of its ops —
+        // exact under TimeMode::Virtual, measured under Wallclock.
+
         // --- H2D stage ---
-        let t = crate::metrics::Timer::start();
         {
             let mut s = ctx.stream();
             for (payload, region) in h2d_payloads.iter().zip(&in_bufs) {
                 s.h2d(crate::device::HostSrc::whole(payload.clone()), *region);
             }
             s.sync();
+            h2d_samples.push(crate::hstreams::makespan(s.events()));
         }
-        h2d_samples.push(t.elapsed());
 
         // --- KEX stage ---
-        let t = crate::metrics::Timer::start();
         {
             let mut s = ctx.stream();
             for (call, (artifact, ins, outs)) in spec.kex.iter().zip(&scratch) {
                 s.kex_with(artifact.clone(), ins.clone(), outs.clone(), Some(call.flops), call.repeats);
             }
             s.sync();
+            kex_samples.push(crate::hstreams::makespan(s.events()));
         }
-        kex_samples.push(t.elapsed());
 
         // --- D2H stage ---
-        let t = crate::metrics::Timer::start();
         {
             let mut s = ctx.stream();
             for region in &out_bufs {
@@ -155,8 +155,8 @@ pub fn measure_stages(ctx: &Context, spec: &OffloadSpec, runs: usize) -> StageTi
                 s.d2h(*region, dst);
             }
             s.sync();
+            d2h_samples.push(crate::hstreams::makespan(s.events()));
         }
-        d2h_samples.push(t.elapsed());
 
         for r in in_bufs.iter().chain(&out_bufs) {
             ctx.free(r.buf).expect("free");

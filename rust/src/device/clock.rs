@@ -1,0 +1,436 @@
+//! `SimClock` — the discrete-event virtual clock behind the engines.
+//!
+//! Under [`TimeMode::Virtual`] (the default) no engine ever sleeps:
+//! every op's virtual interval is *computed* instead of *waited out*,
+//! from exactly the quantities the hardware model defines —
+//!
+//! ```text
+//! start = max(resource available, latest dependency end)
+//! end   = start + modeled duration
+//! ```
+//!
+//! Resources are the same ones the thread structure models: one DMA
+//! lane per direction (or a shared lane for half-duplex profiles) and
+//! `workers` kernel queues.  Transfer lanes are single-threaded FIFOs,
+//! so their availability is owned by the lane thread and the timeline
+//! follows submission order by construction.  Kernel jobs may be
+//! claimed by racing OS workers, so the clock *admits* them in
+//! submission order (`kex_seq`) and assigns each to the earliest-free
+//! modeled worker (ties to the lowest index) — a greedy list schedule
+//! that is deterministic regardless of which OS thread runs the math.
+//!
+//! The result: a full multi-stream simulation is byte-reproducible
+//! run-to-run and completes as fast as the host can do the memcpys and
+//! kernel math — milliseconds of wall time for seconds of modeled time.
+//!
+//! Under [`TimeMode::Wallclock`] the engines keep the original
+//! behaviour (`pace_to` spin/sleep to the modeled deadline) and the
+//! clock merely translates `Instant`s into offsets from the context
+//! epoch, so both modes publish the same [`SimTime`]-based samples.
+//!
+//! The clock can also record a trace of every retired op
+//! ([`TraceEntry`]), sorted by submission sequence — the basis of the
+//! golden-trace regression test and `repro`'s timeline dumps.
+
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// How the engines account time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeMode {
+    /// Discrete-event virtual time: deterministic, instant replay.
+    Virtual,
+    /// Original behaviour: ops occupy their modeled duration in real
+    /// time (`pace_to`), timestamps are wall-clock offsets.
+    Wallclock,
+}
+
+impl TimeMode {
+    /// Session default: `Virtual`, unless `HETSTREAM_TIME=wallclock`
+    /// opts the paper-fidelity benches back into real pacing.
+    pub fn from_env_default() -> Self {
+        match std::env::var("HETSTREAM_TIME").as_deref() {
+            Ok("wallclock") | Ok("wall") | Ok("real") => TimeMode::Wallclock,
+            _ => TimeMode::Virtual,
+        }
+    }
+}
+
+/// A point on the simulation timeline: nanoseconds since the context
+/// epoch.  Total-ordered, `Copy`, and mode-agnostic — wall-clock mode
+/// publishes the same type, measured from the same epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_nanos(ns: u64) -> Self {
+        SimTime(ns)
+    }
+
+    pub fn as_nanos(self) -> u64 {
+        self.0
+    }
+
+    /// Offset from the epoch as a `Duration`.
+    pub fn as_duration(self) -> Duration {
+        Duration::from_nanos(self.0)
+    }
+
+    /// `self - earlier`, saturating at zero.
+    pub fn since(self, earlier: SimTime) -> Duration {
+        Duration::from_nanos(self.0.saturating_sub(earlier.0))
+    }
+}
+
+impl std::ops::Add<Duration> for SimTime {
+    type Output = SimTime;
+
+    fn add(self, d: Duration) -> SimTime {
+        SimTime(self.0.saturating_add(d.as_nanos() as u64))
+    }
+}
+
+impl std::ops::Sub<SimTime> for SimTime {
+    type Output = Duration;
+
+    fn sub(self, rhs: SimTime) -> Duration {
+        self.since(rhs)
+    }
+}
+
+/// What kind of op a trace entry describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    H2d,
+    D2h,
+    Kex,
+}
+
+impl OpKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            OpKind::H2d => "h2d",
+            OpKind::D2h => "d2h",
+            OpKind::Kex => "kex",
+        }
+    }
+}
+
+/// One retired op on the virtual timeline.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    /// Context-wide submission sequence (the deterministic sort key).
+    pub seq: u64,
+    pub kind: OpKind,
+    /// Modeled resource: `"h2d"`, `"d2h"`, or `"kex<N>"`.
+    pub lane: String,
+    /// Logical stream that enqueued the op.
+    pub stream: u64,
+    /// Artifact name for KEX, empty for transfers.
+    pub label: String,
+    /// Payload bytes for transfers, 0 for KEX.
+    pub bytes: u64,
+    /// FLOP budget for KEX (repeats included), 0 for transfers.
+    pub flops: u64,
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+impl TraceEntry {
+    /// One canonical JSON object (stable field order, no whitespace
+    /// variation) — the golden-trace format.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"seq\":{},\"kind\":\"{}\",\"lane\":\"{}\",\"stream\":{},\"label\":\"{}\",\
+             \"bytes\":{},\"flops\":{},\"start_ns\":{},\"end_ns\":{}}}",
+            self.seq,
+            self.kind.label(),
+            crate::util::json::escape(&self.lane),
+            self.stream,
+            crate::util::json::escape(&self.label),
+            self.bytes,
+            self.flops,
+            self.start.as_nanos(),
+            self.end.as_nanos(),
+        )
+    }
+}
+
+/// Descriptor the engines hand the clock alongside each schedule call
+/// (trace metadata; has no effect on the timeline itself).
+#[derive(Debug, Clone)]
+pub struct OpDesc {
+    pub seq: u64,
+    pub kind: OpKind,
+    pub stream: u64,
+    pub label: String,
+    pub bytes: u64,
+    pub flops: u64,
+}
+
+struct ClockInner {
+    /// Transfer-lane availability: `[h2d-thread, d2h-thread]`.  A
+    /// half-duplex profile routes both directions through lane 0.
+    xfer_avail: [u64; 2],
+    /// Modeled kernel-queue availability, one slot per worker.
+    workers: Vec<u64>,
+    /// Next kernel submission sequence allowed to schedule (admission
+    /// gate making multi-worker timelines deterministic).
+    next_kex_admit: u64,
+    /// Sequences abandoned by a panicking worker — skipped by the
+    /// admission gate so one dead kernel cannot wedge the engine.
+    abandoned_kex: std::collections::BTreeSet<u64>,
+    /// High-water mark of the timeline (virtual mode).
+    horizon: u64,
+    trace: Option<Vec<TraceEntry>>,
+}
+
+/// The context-wide time authority shared by both engines.
+pub struct SimClock {
+    mode: TimeMode,
+    epoch: Instant,
+    /// Immutable after construction; lets wall-clock retire paths skip
+    /// the mutex entirely when tracing is off.
+    trace_enabled: bool,
+    inner: Mutex<ClockInner>,
+    admit_cv: Condvar,
+}
+
+impl SimClock {
+    /// A clock for `workers` modeled kernel queues.  `record_trace`
+    /// keeps a [`TraceEntry`] per retired op.
+    pub fn new(mode: TimeMode, workers: usize, record_trace: bool) -> Self {
+        Self {
+            mode,
+            epoch: Instant::now(),
+            trace_enabled: record_trace,
+            inner: Mutex::new(ClockInner {
+                xfer_avail: [0; 2],
+                workers: vec![0; workers.max(1)],
+                next_kex_admit: 0,
+                abandoned_kex: std::collections::BTreeSet::new(),
+                horizon: 0,
+                trace: if record_trace { Some(Vec::new()) } else { None },
+            }),
+            admit_cv: Condvar::new(),
+        }
+    }
+
+    pub fn mode(&self) -> TimeMode {
+        self.mode
+    }
+
+    /// Translate a wall-clock instant into a timeline point (wall mode).
+    pub fn wall(&self, t: Instant) -> SimTime {
+        SimTime(t.saturating_duration_since(self.epoch).as_nanos() as u64)
+    }
+
+    /// Latest point any op has reached on the timeline.
+    pub fn now(&self) -> SimTime {
+        match self.mode {
+            TimeMode::Virtual => SimTime(self.inner.lock().unwrap().horizon),
+            TimeMode::Wallclock => self.wall(Instant::now()),
+        }
+    }
+
+    /// Virtual-mode transfer scheduling: FIFO lane `lane` (0 = the
+    /// h2d-queue thread, 1 = the d2h-queue thread), earliest start after
+    /// `deps_end`, occupying `dur`.
+    pub fn schedule_transfer(
+        &self,
+        lane: usize,
+        lane_name: &str,
+        deps_end: SimTime,
+        dur: Duration,
+        desc: &OpDesc,
+    ) -> (SimTime, SimTime) {
+        debug_assert!(self.mode == TimeMode::Virtual);
+        let mut inner = self.inner.lock().unwrap();
+        let start = inner.xfer_avail[lane.min(1)].max(deps_end.0);
+        let end = start.saturating_add(dur.as_nanos() as u64);
+        inner.xfer_avail[lane.min(1)] = end;
+        inner.horizon = inner.horizon.max(end);
+        Self::push_trace(&mut inner, desc, lane_name.to_string(), start, end);
+        (SimTime(start), SimTime(end))
+    }
+
+    /// Virtual-mode kernel scheduling.  Blocks until every kernel with a
+    /// smaller `kex_seq` has been scheduled (submission-order admission),
+    /// then assigns the job to the earliest-available modeled worker.
+    pub fn schedule_kex(
+        &self,
+        kex_seq: u64,
+        deps_end: SimTime,
+        dur: Duration,
+        desc: &OpDesc,
+    ) -> (SimTime, SimTime) {
+        debug_assert!(self.mode == TimeMode::Virtual);
+        let mut inner = self.inner.lock().unwrap();
+        while inner.next_kex_admit != kex_seq {
+            inner = self.admit_cv.wait(inner).unwrap();
+        }
+        // Greedy list schedule: earliest-free worker, ties to index 0.
+        let (w, _) = inner
+            .workers
+            .iter()
+            .copied()
+            .enumerate()
+            .min_by_key(|&(i, avail)| (avail, i))
+            .expect("at least one worker");
+        let start = inner.workers[w].max(deps_end.0);
+        let end = start.saturating_add(dur.as_nanos() as u64);
+        inner.workers[w] = end;
+        inner.horizon = inner.horizon.max(end);
+        inner.next_kex_admit += 1;
+        Self::drain_abandoned(&mut inner);
+        Self::push_trace(&mut inner, desc, format!("kex{w}"), start, end);
+        drop(inner);
+        self.admit_cv.notify_all();
+        (SimTime(start), SimTime(end))
+    }
+
+    /// Mark a kernel sequence as never-to-schedule (its worker is
+    /// unwinding).  The admission gate skips it so later kernels — and
+    /// engine shutdown — are not wedged behind a dead job.
+    pub fn abandon_kex(&self, kex_seq: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.abandoned_kex.insert(kex_seq);
+        Self::drain_abandoned(&mut inner);
+        drop(inner);
+        self.admit_cv.notify_all();
+    }
+
+    fn drain_abandoned(inner: &mut ClockInner) {
+        while inner.abandoned_kex.remove(&inner.next_kex_admit) {
+            inner.next_kex_admit += 1;
+        }
+    }
+
+    /// Wall-clock mode: record an already-timed span (trace parity with
+    /// virtual mode; the timeline state is not consulted).  A no-op
+    /// without tracing — wall-clock retire paths must not contend on
+    /// the clock mutex, that mode exists for timing fidelity.
+    pub fn record_wall(&self, lane: &str, start: SimTime, end: SimTime, desc: &OpDesc) {
+        if !self.trace_enabled {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.horizon = inner.horizon.max(end.0);
+        Self::push_trace(&mut inner, desc, lane.to_string(), start, end);
+    }
+
+    fn push_trace(
+        inner: &mut ClockInner,
+        desc: &OpDesc,
+        lane: String,
+        start: u64,
+        end: u64,
+    ) {
+        if let Some(trace) = &mut inner.trace {
+            trace.push(TraceEntry {
+                seq: desc.seq,
+                kind: desc.kind,
+                lane,
+                stream: desc.stream,
+                label: desc.label.clone(),
+                bytes: desc.bytes,
+                flops: desc.flops,
+                start: SimTime(start),
+                end: SimTime(end),
+            });
+        }
+    }
+
+    /// The recorded trace, sorted by submission sequence (deterministic
+    /// regardless of which OS thread retired which op).  Empty when
+    /// trace recording is off.
+    pub fn trace(&self) -> Vec<TraceEntry> {
+        let inner = self.inner.lock().unwrap();
+        let mut t = inner.trace.clone().unwrap_or_default();
+        t.sort_by_key(|e| e.seq);
+        t
+    }
+
+    /// Serialize the trace as canonical JSON (one event object per
+    /// line) — the golden-trace interchange format.
+    pub fn trace_json(&self) -> String {
+        let entries = self.trace();
+        let mut out = String::from("{\"version\":1,\"events\":[\n");
+        for (i, e) in entries.iter().enumerate() {
+            out.push_str(&e.to_json());
+            if i + 1 < entries.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("]}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn desc(seq: u64) -> OpDesc {
+        OpDesc { seq, kind: OpKind::H2d, stream: 0, label: String::new(), bytes: 0, flops: 0 }
+    }
+
+    #[test]
+    fn lane_is_fifo_and_respects_deps() {
+        let c = SimClock::new(TimeMode::Virtual, 1, false);
+        let (s0, e0) =
+            c.schedule_transfer(0, "h2d", SimTime::ZERO, Duration::from_nanos(100), &desc(0));
+        assert_eq!(s0, SimTime::ZERO);
+        assert_eq!(e0.as_nanos(), 100);
+        // Lane busy until 100 even though deps are ready at 0.
+        let (s1, e1) =
+            c.schedule_transfer(0, "h2d", SimTime::ZERO, Duration::from_nanos(50), &desc(1));
+        assert_eq!(s1.as_nanos(), 100);
+        assert_eq!(e1.as_nanos(), 150);
+        // A dependency beyond the lane availability delays the start.
+        let later = SimTime::from_nanos(400);
+        let (s2, _) = c.schedule_transfer(0, "h2d", later, Duration::from_nanos(10), &desc(2));
+        assert_eq!(s2.as_nanos(), 400);
+        // The other lane is independent.
+        let (s3, _) =
+            c.schedule_transfer(1, "d2h", SimTime::ZERO, Duration::from_nanos(10), &desc(3));
+        assert_eq!(s3, SimTime::ZERO);
+    }
+
+    #[test]
+    fn kex_picks_earliest_worker() {
+        let c = SimClock::new(TimeMode::Virtual, 2, false);
+        let (s0, e0) = c.schedule_kex(0, SimTime::ZERO, Duration::from_nanos(100), &desc(0));
+        assert_eq!((s0.as_nanos(), e0.as_nanos()), (0, 100));
+        // Second job lands on the idle worker 1.
+        let (s1, _) = c.schedule_kex(1, SimTime::ZERO, Duration::from_nanos(100), &desc(1));
+        assert_eq!(s1.as_nanos(), 0);
+        // Third job waits for the earliest of the two.
+        let (s2, _) = c.schedule_kex(2, SimTime::ZERO, Duration::from_nanos(10), &desc(2));
+        assert_eq!(s2.as_nanos(), 100);
+    }
+
+    #[test]
+    fn trace_sorted_by_submission_seq() {
+        let c = SimClock::new(TimeMode::Virtual, 1, true);
+        c.schedule_transfer(0, "h2d", SimTime::ZERO, Duration::from_nanos(5), &desc(2));
+        c.schedule_transfer(1, "h2d", SimTime::ZERO, Duration::from_nanos(5), &desc(0));
+        c.schedule_transfer(0, "h2d", SimTime::ZERO, Duration::from_nanos(5), &desc(1));
+        let t = c.trace();
+        let seqs: Vec<u64> = t.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sim_time_arithmetic() {
+        let a = SimTime::from_nanos(250);
+        let b = a + Duration::from_nanos(50);
+        assert_eq!(b.as_nanos(), 300);
+        assert_eq!(b - a, Duration::from_nanos(50));
+        assert_eq!(a - b, Duration::ZERO, "saturating");
+        assert_eq!(b.as_duration(), Duration::from_nanos(300));
+    }
+}

@@ -1,10 +1,14 @@
 //! Compute engine: the "coprocessor" — worker thread(s) executing the
-//! AOT-compiled XLA/Pallas artifacts through PJRT.
+//! AOT-compiled kernels through the [`crate::runtime::ArtifactStore`]
+//! (pure-Rust interpreter by default, PJRT under `--features pjrt`).
 //!
-//! Each worker owns its own [`ArtifactStore`] (PJRT handles are not
-//! `Send`).  One worker models one coprocessor kernel queue; more
-//! workers model hStreams-style core partitioning where small kernels
-//! from different streams run concurrently (an ablation knob).
+//! One worker models one coprocessor kernel queue; more workers model
+//! hStreams-style core partitioning where small kernels from different
+//! streams run concurrently (an ablation knob).  Timing is delegated to
+//! the context's [`SimClock`]: virtual mode computes each launch's
+//! discrete-event interval (deterministic even with racing OS workers,
+//! thanks to submission-order admission), wall-clock mode paces with
+//! `max(real execution, modeled)` as before.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -18,6 +22,7 @@ use crate::hstreams::{Event, Sample};
 use crate::runtime::ArtifactStore;
 
 use super::arena::{DevRegion, DeviceArena};
+use super::clock::{OpDesc, OpKind, SimClock, SimTime, TimeMode};
 use super::pacing::pace_to;
 use super::profile::DeviceProfile;
 
@@ -35,16 +40,36 @@ pub struct KernelJob {
     pub repeats: u32,
     pub deps: Vec<Event>,
     pub done: Event,
+    /// Context-wide submission sequence (trace ordering).
+    pub seq: u64,
+    /// Logical stream that enqueued the job (trace metadata).
+    pub stream: u64,
+}
+
+struct SeqJob {
+    job: KernelJob,
+    /// Dense per-engine submission index — the clock's admission order.
+    kex_seq: u64,
 }
 
 enum Msg {
-    Job(KernelJob),
+    Job(SeqJob),
     Quit,
+}
+
+/// Submission side of the kernel queue.  Sequence assignment and send
+/// live behind one lock so channel order always equals `kex_seq`
+/// order — the clock's admission gate relies on claimed jobs arriving
+/// in submission order, and keeping the counter inside the mutex makes
+/// that invariant structural rather than conventional.
+struct KexQueue {
+    tx: Sender<Msg>,
+    next_seq: u64,
 }
 
 /// The device's kernel-execution resource.
 pub struct ComputeEngine {
-    tx: Sender<Msg>,
+    queue: Mutex<KexQueue>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -58,34 +83,42 @@ impl ComputeEngine {
         dir: PathBuf,
         workers: usize,
         artifact_subset: Option<Vec<String>>,
+        clock: Arc<SimClock>,
     ) -> Self {
         let (tx, rx) = channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = Vec::new();
         for w in 0..workers.max(1) {
             let (a, p, d, s) = (arena.clone(), profile.clone(), dir.clone(), artifact_subset.clone());
+            let c = clock.clone();
             // std mpsc receivers are single-consumer; workers share one
             // behind a mutex and claim jobs first-come, first-served.
             let worker_rx = rx.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("hetstream-kex-{w}"))
-                    .spawn(move || worker_loop(worker_rx, a, p, d, s))
+                    .spawn(move || worker_loop(worker_rx, a, p, d, s, c, w))
                     .expect("spawn kex worker"),
             );
         }
-        Self { tx, handles }
+        Self { queue: Mutex::new(KexQueue { tx, next_seq: 0 }), handles }
     }
 
     /// Enqueue a kernel launch (FIFO; a worker waits the job's deps).
     pub fn submit(&self, job: KernelJob) {
-        self.tx.send(Msg::Job(job)).expect("kex queue alive");
+        let mut q = self.queue.lock().unwrap();
+        let kex_seq = q.next_seq;
+        q.next_seq += 1;
+        q.tx.send(Msg::Job(SeqJob { job, kex_seq })).expect("kex queue alive");
     }
 
     /// Stop the workers and join.
     pub fn shutdown(&mut self) {
-        for _ in 0..self.handles.len() {
-            let _ = self.tx.send(Msg::Quit);
+        {
+            let q = self.queue.lock().unwrap();
+            for _ in 0..self.handles.len() {
+                let _ = q.tx.send(Msg::Quit);
+            }
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -99,14 +132,34 @@ impl Drop for ComputeEngine {
     }
 }
 
+/// Releases a claimed admission slot if the worker unwinds before
+/// scheduling (a panicking kernel must not wedge the admission gate —
+/// later kernels and engine shutdown would block forever).
+struct AdmitGuard<'a> {
+    clock: &'a SimClock,
+    kex_seq: u64,
+    armed: bool,
+}
+
+impl Drop for AdmitGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.clock.abandon_kex(self.kex_seq);
+        }
+    }
+}
+
 fn worker_loop(
     rx: Arc<Mutex<Receiver<Msg>>>,
     arena: Arc<Mutex<DeviceArena>>,
     profile: DeviceProfile,
     dir: PathBuf,
     subset: Option<Vec<String>>,
+    clock: Arc<SimClock>,
+    worker: usize,
 ) {
-    // PJRT client + compiled executables live on this thread.
+    // The kernel backend lives on this thread (PJRT handles are !Send;
+    // the sim interpreter simply has no shared state).
     let store = match &subset {
         Some(names) => {
             let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
@@ -116,16 +169,26 @@ fn worker_loop(
     }
     .expect("load artifacts");
 
+    // Wallclock mode records the physical queue; computed once, not
+    // per retire (the no-trace retire path must stay allocation-free).
+    let wall_lane = format!("kex{worker}");
+
     loop {
         let msg = { rx.lock().unwrap().recv() };
-        let job = match msg {
+        let SeqJob { job, kex_seq } = match msg {
             Ok(Msg::Job(j)) => j,
             _ => return,
         };
+        let mut guard = AdmitGuard {
+            clock: &clock,
+            kex_seq,
+            armed: clock.mode() == TimeMode::Virtual,
+        };
+        let mut deps_end = SimTime::ZERO;
         for dep in &job.deps {
-            dep.wait();
+            deps_end = deps_end.max(dep.wait().end);
         }
-        let start = Instant::now();
+        let wall_start = Instant::now();
 
         // Read inputs out of device memory (brief lock), execute, write
         // outputs back.  The copy is the host-side shadow of the device's
@@ -150,7 +213,32 @@ fn worker_loop(
         let flops = job.flops.unwrap_or_else(|| {
             store.meta(&job.artifact).map(|m| m.flops_per_call).unwrap_or(0)
         }) * job.repeats.max(1) as u64;
-        pace_to(start, profile.kex_time(flops));
-        job.done.complete(Sample { start, end: Instant::now() });
+        let modeled = profile.kex_time(flops);
+        let desc = OpDesc {
+            seq: job.seq,
+            kind: OpKind::Kex,
+            stream: job.stream,
+            label: job.artifact.clone(),
+            bytes: 0,
+            flops,
+        };
+        let sample = match clock.mode() {
+            TimeMode::Virtual => {
+                let (start, end) = clock.schedule_kex(kex_seq, deps_end, modeled, &desc);
+                guard.armed = false;
+                Sample { start, end }
+            }
+            TimeMode::Wallclock => {
+                pace_to(wall_start, modeled);
+                let start = clock.wall(wall_start);
+                let end = clock.wall(Instant::now());
+                // In wall-clock mode the OS worker *is* the physical
+                // queue — same `kex<N>` vocabulary as virtual mode.
+                clock.record_wall(&wall_lane, start, end, &desc);
+                Sample { start, end }
+            }
+        };
+        drop(guard);
+        job.done.complete(sample);
     }
 }

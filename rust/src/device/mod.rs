@@ -20,14 +20,22 @@
 //! one task genuinely overlaps KEX of another — multi-stream speedups
 //! measured on this simulator are real wall-clock effects, not modeled
 //! arithmetic.
+//!
+//! Time itself is owned by the [`SimClock`]: `TimeMode::Virtual` (the
+//! default) replaces pacing with a deterministic discrete-event
+//! timeline so full experiment sweeps replay instantly and
+//! byte-identically; `TimeMode::Wallclock` keeps the original
+//! paced-in-real-time behaviour (see DESIGN.md §Time).
 
 mod arena;
+mod clock;
 mod compute;
 mod pacing;
 mod profile;
 mod transfer;
 
 pub use arena::{BufId, DevRegion, DeviceArena};
+pub use clock::{OpDesc, OpKind, SimClock, SimTime, TimeMode, TraceEntry};
 pub use compute::{ComputeEngine, KernelJob};
 pub use pacing::pace_to;
 pub use profile::{DeviceProfile, DILATION};

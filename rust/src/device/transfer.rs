@@ -1,5 +1,10 @@
-//! DMA transfer engine: dedicated thread(s) moving bytes host↔device,
-//! paced to the modeled PCIe link.
+//! DMA transfer engine: dedicated thread(s) moving bytes host↔device.
+//!
+//! Timing is delegated to the context's [`SimClock`]: under
+//! `TimeMode::Virtual` the lane computes each job's discrete-event
+//! interval and never sleeps; under `TimeMode::Wallclock` the copy is
+//! paced to the modeled PCIe link with `pace_to` (the original
+//! behaviour).
 
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -11,6 +16,7 @@ use std::sync::Mutex;
 use crate::hstreams::{Event, Sample};
 
 use super::arena::{DevRegion, DeviceArena};
+use super::clock::{OpDesc, OpKind, SimClock, SimTime, TimeMode};
 use super::pacing::pace_to;
 use super::profile::DeviceProfile;
 
@@ -55,6 +61,10 @@ pub struct TransferJob {
     /// explicit cross-stream waits).
     pub deps: Vec<Event>,
     pub done: Event,
+    /// Context-wide submission sequence (trace ordering).
+    pub seq: u64,
+    /// Logical stream that enqueued the job (trace metadata).
+    pub stream: u64,
 }
 
 enum Msg {
@@ -71,25 +81,29 @@ pub struct TransferEngine {
 }
 
 impl TransferEngine {
-    pub fn new(arena: Arc<Mutex<DeviceArena>>, profile: DeviceProfile) -> Self {
+    pub fn new(
+        arena: Arc<Mutex<DeviceArena>>,
+        profile: DeviceProfile,
+        clock: Arc<SimClock>,
+    ) -> Self {
         let (h2d_tx, h2d_rx) = channel::<Msg>();
         let mut handles = Vec::new();
         let d2h_tx;
         if profile.duplex {
             let (tx, d2h_rx) = channel::<Msg>();
             d2h_tx = tx;
-            let (a1, p1) = (arena.clone(), profile.clone());
+            let (a1, p1, c1) = (arena.clone(), profile.clone(), clock.clone());
             handles.push(
                 std::thread::Builder::new()
                     .name("hetstream-dma-h2d".into())
-                    .spawn(move || lane_loop(h2d_rx, a1, p1))
+                    .spawn(move || lane_loop(h2d_rx, a1, p1, c1, 0))
                     .expect("spawn dma h2d"),
             );
             let (a2, p2) = (arena, profile);
             handles.push(
                 std::thread::Builder::new()
                     .name("hetstream-dma-d2h".into())
-                    .spawn(move || lane_loop(d2h_rx, a2, p2))
+                    .spawn(move || lane_loop(d2h_rx, a2, p2, clock, 1))
                     .expect("spawn dma d2h"),
             );
         } else {
@@ -98,7 +112,7 @@ impl TransferEngine {
             handles.push(
                 std::thread::Builder::new()
                     .name("hetstream-dma".into())
-                    .spawn(move || lane_loop(h2d_rx, arena, profile))
+                    .spawn(move || lane_loop(h2d_rx, arena, profile, clock, 0))
                     .expect("spawn dma"),
             );
         }
@@ -130,14 +144,27 @@ impl Drop for TransferEngine {
     }
 }
 
-fn lane_loop(rx: std::sync::mpsc::Receiver<Msg>, arena: Arc<Mutex<DeviceArena>>, profile: DeviceProfile) {
+fn lane_loop(
+    rx: std::sync::mpsc::Receiver<Msg>,
+    arena: Arc<Mutex<DeviceArena>>,
+    profile: DeviceProfile,
+    clock: Arc<SimClock>,
+    lane: usize,
+) {
+    let lane_name = match (profile.duplex, lane) {
+        (true, 0) => "h2d",
+        (true, _) => "d2h",
+        // Half-duplex: one physical lane carries both directions.
+        (false, _) => "dma",
+    };
     while let Ok(Msg::Job(job)) = rx.recv() {
         // In-order lane semantics: the lane head blocks on its deps,
         // exactly like a hardware DMA queue waiting on an event.
+        let mut deps_end = SimTime::ZERO;
         for dep in &job.deps {
-            dep.wait();
+            deps_end = deps_end.max(dep.wait().end);
         }
-        let start = Instant::now();
+        let wall_start = Instant::now();
         let mut modeled = profile.transfer_time(job.dev.len, job.dir == Direction::H2D);
         match job.dir {
             Direction::H2D => {
@@ -163,7 +190,31 @@ fn lane_loop(rx: std::sync::mpsc::Receiver<Msg>, arena: Arc<Mutex<DeviceArena>>,
                 out[dst.off..dst.off + bytes.len()].copy_from_slice(&bytes);
             }
         }
-        pace_to(start, modeled);
-        job.done.complete(Sample { start, end: Instant::now() });
+        let desc = OpDesc {
+            seq: job.seq,
+            kind: match job.dir {
+                Direction::H2D => OpKind::H2d,
+                Direction::D2H => OpKind::D2h,
+            },
+            stream: job.stream,
+            label: String::new(),
+            bytes: job.dev.len as u64,
+            flops: 0,
+        };
+        let sample = match clock.mode() {
+            TimeMode::Virtual => {
+                let (start, end) =
+                    clock.schedule_transfer(lane, lane_name, deps_end, modeled, &desc);
+                Sample { start, end }
+            }
+            TimeMode::Wallclock => {
+                pace_to(wall_start, modeled);
+                let start = clock.wall(wall_start);
+                let end = clock.wall(Instant::now());
+                clock.record_wall(lane_name, start, end, &desc);
+                Sample { start, end }
+            }
+        };
+        job.done.complete(sample);
     }
 }

@@ -1,12 +1,14 @@
 //! Context: owns the simulated device and hands out streams.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use std::sync::Mutex;
 
 use crate::device::{
-    BufId, ComputeEngine, DevRegion, DeviceArena, DeviceProfile, TransferEngine,
+    BufId, ComputeEngine, DevRegion, DeviceArena, DeviceProfile, SimClock, SimTime, TimeMode,
+    TransferEngine,
 };
 use crate::Result;
 
@@ -19,6 +21,8 @@ pub struct ContextBuilder {
     device_mem: usize,
     compute_workers: usize,
     artifact_subset: Option<Vec<String>>,
+    time_mode: TimeMode,
+    record_trace: bool,
 }
 
 impl ContextBuilder {
@@ -29,6 +33,8 @@ impl ContextBuilder {
             device_mem: 2 << 30, // 2 GiB of simulated device memory
             compute_workers: 1,
             artifact_subset: None,
+            time_mode: TimeMode::from_env_default(),
+            record_trace: false,
         }
     }
 
@@ -66,22 +72,47 @@ impl ContextBuilder {
         self
     }
 
+    /// How the engines account time (default: `TimeMode::Virtual`, or
+    /// `HETSTREAM_TIME=wallclock` from the environment).  Virtual mode
+    /// runs the discrete-event clock — deterministic timelines, no
+    /// real-time sleeping; wall-clock mode paces every op to its
+    /// modeled duration like the original runtime.
+    pub fn time_mode(mut self, mode: TimeMode) -> Self {
+        self.time_mode = mode;
+        self
+    }
+
+    /// Record a [`crate::device::TraceEntry`] per retired op, readable
+    /// via [`Context::trace`] / [`Context::trace_json`].
+    pub fn record_trace(mut self, on: bool) -> Self {
+        self.record_trace = on;
+        self
+    }
+
     pub fn build(self) -> Result<Context> {
+        let clock = Arc::new(SimClock::new(
+            self.time_mode,
+            self.compute_workers,
+            self.record_trace,
+        ));
         let arena = Arc::new(Mutex::new(DeviceArena::new(self.device_mem)));
-        let dma = TransferEngine::new(arena.clone(), self.profile.clone());
+        let dma = TransferEngine::new(arena.clone(), self.profile.clone(), clock.clone());
         let kex = ComputeEngine::new(
             arena.clone(),
             self.profile.clone(),
             self.artifacts_dir.clone(),
             self.compute_workers,
             self.artifact_subset.clone(),
+            clock.clone(),
         );
         Ok(Context {
             arena,
             dma,
             kex,
+            clock,
             profile: self.profile,
-            next_stream: std::sync::atomic::AtomicU64::new(0),
+            next_stream: AtomicU64::new(0),
+            next_op_seq: AtomicU64::new(0),
         })
     }
 }
@@ -93,13 +124,15 @@ impl Default for ContextBuilder {
 }
 
 /// The heterogeneous-platform handle: device memory plus the two engine
-/// kinds every stream op is routed to.
+/// kinds every stream op is routed to, under one simulation clock.
 pub struct Context {
     pub(crate) arena: Arc<Mutex<DeviceArena>>,
     pub(crate) dma: TransferEngine,
     pub(crate) kex: ComputeEngine,
+    pub(crate) clock: Arc<SimClock>,
     profile: DeviceProfile,
-    next_stream: std::sync::atomic::AtomicU64,
+    next_stream: AtomicU64,
+    next_op_seq: AtomicU64,
 }
 
 impl Context {
@@ -110,13 +143,39 @@ impl Context {
 
     /// Create a new logical stream.
     pub fn stream(&self) -> Stream<'_> {
-        let id = self.next_stream.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
         Stream::new(self, id)
     }
 
     /// The device profile this context models.
     pub fn profile(&self) -> &DeviceProfile {
         &self.profile
+    }
+
+    /// How this context accounts time.
+    pub fn time_mode(&self) -> TimeMode {
+        self.clock.mode()
+    }
+
+    /// Latest point any op has reached on the simulation timeline.
+    pub fn now(&self) -> SimTime {
+        self.clock.now()
+    }
+
+    /// The recorded op trace (submission order).  Empty unless the
+    /// context was built with [`ContextBuilder::record_trace`].
+    pub fn trace(&self) -> Vec<crate::device::TraceEntry> {
+        self.clock.trace()
+    }
+
+    /// The recorded op trace as canonical JSON (golden-trace format).
+    pub fn trace_json(&self) -> String {
+        self.clock.trace_json()
+    }
+
+    /// Next context-wide op submission sequence (trace ordering).
+    pub(crate) fn next_seq(&self) -> u64 {
+        self.next_op_seq.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Reserve a device buffer (lazy-alloc cost charged on first H2D).

@@ -1,19 +1,26 @@
 //! Completion events — the cross-stream synchronization primitive.
 
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::Duration;
 
-/// Timing sample recorded when an op retires.
+use crate::device::SimTime;
+
+/// Timing sample recorded when an op retires: a span on the context's
+/// simulation timeline.  Under `TimeMode::Virtual` these are
+/// discrete-event timestamps (deterministic, bit-identical across
+/// runs); under `TimeMode::Wallclock` they are wall-clock offsets from
+/// the context epoch.  Either way they are totally ordered and
+/// directly comparable across streams and engines.
 #[derive(Debug, Clone, Copy)]
 pub struct Sample {
-    /// When the engine started executing the op (after dep waits).
-    pub start: Instant,
-    /// When the op retired (pacing included).
-    pub end: Instant,
+    /// When the op started occupying its engine (after dep waits).
+    pub start: SimTime,
+    /// When the op retired (modeled duration included).
+    pub end: SimTime,
 }
 
 impl Sample {
-    pub fn duration(&self) -> std::time::Duration {
+    pub fn duration(&self) -> Duration {
         self.end - self.start
     }
 }
@@ -64,10 +71,36 @@ impl Event {
     }
 }
 
+/// Timeline span covered by a set of completed events:
+/// `max(end) - min(start)`.  Events that have not completed are
+/// skipped; an empty or all-pending set yields zero.  This is the
+/// mode-agnostic "wall" of a run — in virtual mode it is the modeled
+/// makespan, in wall-clock mode the measured one.
+pub fn makespan<'a, I>(events: I) -> Duration
+where
+    I: IntoIterator<Item = &'a Event>,
+{
+    let mut lo: Option<SimTime> = None;
+    let mut hi: Option<SimTime> = None;
+    for e in events {
+        if let Some(s) = e.sample() {
+            lo = Some(lo.map_or(s.start, |v| v.min(s.start)));
+            hi = Some(hi.map_or(s.end, |v| v.max(s.end)));
+        }
+    }
+    match (lo, hi) {
+        (Some(a), Some(b)) => b - a,
+        _ => Duration::ZERO,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
+
+    fn at(start: u64, end: u64) -> Sample {
+        Sample { start: SimTime::from_nanos(start), end: SimTime::from_nanos(end) }
+    }
 
     #[test]
     fn wait_blocks_until_complete() {
@@ -75,12 +108,12 @@ mod tests {
         let e2 = e.clone();
         let h = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(20));
-            let now = Instant::now();
-            e2.complete(Sample { start: now, end: now });
+            e2.complete(at(0, 5));
         });
         assert!(!e.is_done());
-        e.wait();
+        let s = e.wait();
         assert!(e.is_done());
+        assert_eq!(s.duration(), Duration::from_nanos(5));
         h.join().unwrap();
     }
 
@@ -88,8 +121,20 @@ mod tests {
     #[should_panic(expected = "completed twice")]
     fn double_complete_panics() {
         let e = Event::new();
-        let now = Instant::now();
-        e.complete(Sample { start: now, end: now });
-        e.complete(Sample { start: now, end: now });
+        e.complete(at(0, 0));
+        e.complete(at(0, 0));
+    }
+
+    #[test]
+    fn makespan_spans_completed_events() {
+        let a = Event::new();
+        let b = Event::new();
+        a.complete(at(100, 250));
+        b.complete(at(200, 900));
+        assert_eq!(makespan([&a, &b]), Duration::from_nanos(800));
+        // Pending events are skipped; empty sets are zero.
+        let pending = Event::new();
+        assert_eq!(makespan([&pending]), Duration::ZERO);
+        assert_eq!(makespan([&a, &pending]), Duration::from_nanos(150));
     }
 }

@@ -17,5 +17,5 @@ mod event;
 mod stream;
 
 pub use context::{Context, ContextBuilder};
-pub use event::{Event, Sample};
+pub use event::{makespan, Event, Sample};
 pub use stream::{host_dst, host_src_f32, host_src_i32, Stream};

@@ -58,6 +58,8 @@ impl<'c> Stream<'c> {
             dev,
             deps,
             done: done.clone(),
+            seq: self.ctx.next_seq(),
+            stream: self.id,
         });
         self.record(&done);
         done
@@ -93,6 +95,8 @@ impl<'c> Stream<'c> {
             repeats,
             deps,
             done: done.clone(),
+            seq: self.ctx.next_seq(),
+            stream: self.id,
         });
         self.record(&done);
         done
@@ -109,6 +113,8 @@ impl<'c> Stream<'c> {
             dev,
             deps,
             done: done.clone(),
+            seq: self.ctx.next_seq(),
+            stream: self.id,
         });
         self.record(&done);
         done

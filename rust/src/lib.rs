@@ -11,9 +11,12 @@
 //!
 //! - [`device`] — a simulated heterogeneous platform: a device-memory
 //!   arena with the paper's lazy-allocation semantics, a DMA
-//!   [`device::TransferEngine`] paced to a modeled PCIe link, and a
-//!   [`device::ComputeEngine`] that runs the AOT-compiled XLA/Pallas
-//!   kernels through the PJRT CPU client (the "coprocessor").
+//!   [`device::TransferEngine`] and a [`device::ComputeEngine`]
+//!   executing the kernels (pure-Rust interpreter by default, PJRT
+//!   under `--features pjrt`), all timed by the [`device::SimClock`]
+//!   discrete-event virtual clock (`TimeMode::Virtual`, the default:
+//!   deterministic, sleep-free instant replay; `TimeMode::Wallclock`
+//!   paces ops to their modeled durations in real time).
 //! - [`hstreams`] — the multi-stream programming model: [`hstreams::Context`],
 //!   in-order [`hstreams::Stream`]s, cross-stream [`hstreams::Event`]s.
 //! - [`partition`] — the paper's three streaming transformations:

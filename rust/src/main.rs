@@ -3,14 +3,21 @@
 //! One subcommand per paper experiment (fig1..fig9, table2, lavamd) plus
 //! generic `stream` / `survey` commands.  Run `repro help` for usage.
 
-use anyhow::{anyhow, Result};
-
 use hetstream::config::RunConfig;
 use hetstream::device::DeviceProfile;
 use hetstream::experiments;
 use hetstream::hstreams::{Context, ContextBuilder};
 use hetstream::util::cli::Args;
 use hetstream::workloads::{extended_benchmarks, fig9_benchmarks, Benchmark, Mode};
+
+/// CLI-level result: any error renders via `Display` (no external
+/// error-handling crate; the crate's own `hetstream::Error` converts
+/// through the std blanket impl).
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
+fn cli_err(msg: String) -> Box<dyn std::error::Error> {
+    msg.into()
+}
 
 const USAGE: &str = "\
 repro — hetstream launcher (reproduction of 'Streaming Applications on \
@@ -33,33 +40,53 @@ COMMANDS:
   autotune NAME  Pick the best stream count for a benchmark (paper §6
                  future work): analytic prediction + measured ladder
   survey      Full corpus CSV (analytic R + category + decision)
+  trace NAME  Dump one benchmark's virtual event timeline as JSON
+                [--streams N=4] [--scale S=2] [--out PATH]
   quickstart  Smoke run: vector_add through the full stack
 
 GLOBAL OPTIONS:
   --config PATH   JSON run config
   --device NAME   mic31sp | k80 | instant | slow-link
   --runs N        measurement repetitions (median; paper uses 11)
+  --time MODE     virtual (default: deterministic, no sleeping) | wallclock
 ";
 
 fn profile_from(args: &Args, cfg: &RunConfig) -> Result<DeviceProfile> {
     if let Some(name) = args.get("device") {
-        return DeviceProfile::preset(name).ok_or_else(|| anyhow!("unknown device preset `{name}`"));
+        return DeviceProfile::preset(name).ok_or_else(|| cli_err(format!("unknown device preset `{name}`")));
     }
-    cfg.device_profile().map_err(|e| anyhow!(e.to_string()))
+    cfg.device_profile().map_err(|e| cli_err(e.to_string()))
 }
 
-fn make_ctx(profile: DeviceProfile, artifacts: Option<Vec<String>>) -> Result<Context> {
-    let mut b = ContextBuilder::new().profile(profile);
+fn time_mode_from(args: &Args) -> Result<hetstream::device::TimeMode> {
+    match args.get("time") {
+        None => Ok(hetstream::device::TimeMode::from_env_default()),
+        Some("virtual") => Ok(hetstream::device::TimeMode::Virtual),
+        Some("wallclock") | Some("wall") => Ok(hetstream::device::TimeMode::Wallclock),
+        Some(other) => Err(cli_err(format!("unknown time mode `{other}`"))),
+    }
+}
+
+fn make_ctx_with(
+    args: &Args,
+    profile: DeviceProfile,
+    artifacts: Option<Vec<String>>,
+    record_trace: bool,
+) -> Result<Context> {
+    let mut b = ContextBuilder::new()
+        .profile(profile)
+        .time_mode(time_mode_from(args)?)
+        .record_trace(record_trace);
     if let Some(names) = artifacts {
         b = b.only_artifacts(names);
     }
-    b.build().map_err(|e| anyhow!(e.to_string()))
+    b.build().map_err(|e| cli_err(e.to_string()))
 }
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     let cfg = match args.get("config") {
-        Some(path) => RunConfig::load(path).map_err(|e| anyhow!(e.to_string()))?,
+        Some(path) => RunConfig::load(path).map_err(|e| cli_err(e.to_string()))?,
         None => RunConfig::default(),
     };
     let runs = args.get_usize("runs", cfg.measure.runs);
@@ -70,7 +97,7 @@ fn main() -> Result<()> {
     match args.cmd.as_deref() {
         Some("fig1") => {
             let (table, rows) = if args.flag("engine") {
-                let ctx = make_ctx(profile, Some(vec!["burner_64".into()]))?;
+                let ctx = make_ctx_with(&args, profile, Some(vec!["burner_64".into()]), false)?;
                 let subset = args.get("subset").and_then(|s| s.parse().ok());
                 experiments::fig1_engine(&ctx, runs, subset)
             } else {
@@ -95,7 +122,7 @@ fn main() -> Result<()> {
         }
         Some("fig2") => {
             let table = if args.flag("engine") {
-                let ctx = make_ctx(profile.clone(), Some(vec!["burner_64".into()]))?;
+                let ctx = make_ctx_with(&args, profile.clone(), Some(vec!["burner_64".into()]), false)?;
                 experiments::fig2(Some(&ctx), &profile, runs)
             } else {
                 experiments::fig2(None, &profile, runs)
@@ -104,7 +131,7 @@ fn main() -> Result<()> {
         }
         Some("fig3") => {
             let table = if args.flag("engine") {
-                let ctx = make_ctx(profile.clone(), Some(vec!["burner_64".into()]))?;
+                let ctx = make_ctx_with(&args, profile.clone(), Some(vec!["burner_64".into()]), false)?;
                 experiments::fig3(Some(&ctx), &profile, runs)
             } else {
                 experiments::fig3(None, &profile, runs)
@@ -114,41 +141,45 @@ fn main() -> Result<()> {
         Some("fig4") => println!("{}", experiments::fig4().markdown()),
         Some("table2") => println!("{}", experiments::table2().markdown()),
         Some("fig9") => {
-            let ctx = make_ctx(profile, None)?;
+            let ctx = make_ctx_with(&args, profile, None, false)?;
             let (table, _) = experiments::fig9(&ctx, scale, streams, runs)
-                .map_err(|e| anyhow!(e.to_string()))?;
+                .map_err(|e| cli_err(e.to_string()))?;
             println!("{}", table.markdown());
             println!(
                 "paper: improvements of 8%..90%; nn ≈ 85%, fwt ≈ 39%, cFFT ≈ 38%, nw ≈ 52%; lavaMD negative"
             );
         }
         Some("lavamd") => {
-            let ctx = make_ctx(profile, Some(vec!["lavamd_box".into()]))?;
+            let ctx = make_ctx_with(&args, profile, Some(vec!["lavamd_box".into()]), false)?;
             let table = experiments::lavamd_negative(&ctx, scale, streams, runs)
-                .map_err(|e| anyhow!(e.to_string()))?;
+                .map_err(|e| cli_err(e.to_string()))?;
             println!("{}", table.markdown());
         }
         Some("rgain") => {
-            let ctx = make_ctx(profile, Some(vec!["conv_sep".into(), "transpose".into()]))?;
+            let ctx = make_ctx_with(&args, profile, Some(vec!["conv_sep".into(), "transpose".into()]), false)?;
             let table = experiments::rgain(&ctx, scale, streams, runs)
-                .map_err(|e| anyhow!(e.to_string()))?;
+                .map_err(|e| cli_err(e.to_string()))?;
             println!("{}", table.markdown());
         }
         Some("stream") => {
             let name = args
                 .positional
                 .first()
-                .ok_or_else(|| anyhow!("usage: repro stream <NAME> [--streams N]"))?;
+                .ok_or_else(|| cli_err(format!("usage: repro stream <NAME> [--streams N]")))?;
             let mut benches = fig9_benchmarks(scale);
             benches.extend(extended_benchmarks(scale));
             let b = benches
                 .iter()
                 .find(|b| b.name().eq_ignore_ascii_case(name))
-                .ok_or_else(|| anyhow!("unknown benchmark `{name}`"))?;
-            let ctx =
-                make_ctx(profile, Some(b.artifacts().iter().map(|s| s.to_string()).collect()))?;
-            let base = b.run(&ctx, Mode::Baseline).map_err(|e| anyhow!(e.to_string()))?;
-            let strm = b.run(&ctx, Mode::Streamed(streams)).map_err(|e| anyhow!(e.to_string()))?;
+                .ok_or_else(|| cli_err(format!("unknown benchmark `{name}`")))?;
+            let ctx = make_ctx_with(
+                &args,
+                profile,
+                Some(b.artifacts().iter().map(|s| s.to_string()).collect()),
+                false,
+            )?;
+            let base = b.run(&ctx, Mode::Baseline).map_err(|e| cli_err(e.to_string()))?;
+            let strm = b.run(&ctx, Mode::Streamed(streams)).map_err(|e| cli_err(e.to_string()))?;
             println!(
                 "{name}: baseline {:.2} ms | {streams} streams {:.2} ms | improvement {:+.1}% | validated {}",
                 base.wall.as_secs_f64() * 1e3,
@@ -161,22 +192,26 @@ fn main() -> Result<()> {
             let name = args
                 .positional
                 .first()
-                .ok_or_else(|| anyhow!("usage: repro autotune <NAME> [--scale S]"))?;
+                .ok_or_else(|| cli_err(format!("usage: repro autotune <NAME> [--scale S]")))?;
             let mut benches = fig9_benchmarks(scale);
             benches.extend(extended_benchmarks(scale));
             let b = benches
                 .iter()
                 .find(|b| b.name().eq_ignore_ascii_case(name))
-                .ok_or_else(|| anyhow!("unknown benchmark `{name}`"))?;
-            let ctx =
-                make_ctx(profile, Some(b.artifacts().iter().map(|s| s.to_string()).collect()))?;
+                .ok_or_else(|| cli_err(format!("unknown benchmark `{name}`")))?;
+            let ctx = make_ctx_with(
+                &args,
+                profile,
+                Some(b.artifacts().iter().map(|s| s.to_string()).collect()),
+                false,
+            )?;
             let result = hetstream::analysis::autotune_streams(
                 &ctx,
                 b.as_ref(),
                 &[1, 2, 4, 8],
                 runs.min(5),
             )
-            .map_err(|e| anyhow!(e.to_string()))?;
+            .map_err(|e| cli_err(e.to_string()))?;
             for (n, ms) in &result.ladder {
                 println!("  {n:2} streams: {ms:8.2} ms");
             }
@@ -202,11 +237,44 @@ fn main() -> Result<()> {
             }
             print!("{}", t.csv());
         }
+        Some("trace") => {
+            let name = args
+                .positional
+                .first()
+                .ok_or_else(|| cli_err("usage: repro trace <NAME> [--out PATH]".into()))?;
+            let mut benches = fig9_benchmarks(scale);
+            benches.extend(extended_benchmarks(scale));
+            let b = benches
+                .iter()
+                .find(|b| b.name().eq_ignore_ascii_case(name))
+                .ok_or_else(|| cli_err(format!("unknown benchmark `{name}`")))?;
+            let ctx = make_ctx_with(
+                &args,
+                profile,
+                Some(b.artifacts().iter().map(|s| s.to_string()).collect()),
+                true,
+            )?;
+            let r = b.run(&ctx, Mode::Streamed(streams)).map_err(|e| cli_err(e.to_string()))?;
+            let json = ctx.trace_json();
+            match args.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &json)?;
+                    println!(
+                        "wrote {} events ({} bytes) to {path} — makespan {:.3} ms, validated {}",
+                        ctx.trace().len(),
+                        json.len(),
+                        r.wall.as_secs_f64() * 1e3,
+                        r.validated,
+                    );
+                }
+                None => print!("{json}"),
+            }
+        }
         Some("quickstart") => {
-            let ctx = make_ctx(profile, Some(vec!["vector_add".into()]))?;
+            let ctx = make_ctx_with(&args, profile, Some(vec!["vector_add".into()]), false)?;
             let b = hetstream::workloads::VectorAdd::new(1);
-            let base = b.run(&ctx, Mode::Baseline).map_err(|e| anyhow!(e.to_string()))?;
-            let strm = b.run(&ctx, Mode::Streamed(4)).map_err(|e| anyhow!(e.to_string()))?;
+            let base = b.run(&ctx, Mode::Baseline).map_err(|e| cli_err(e.to_string()))?;
+            let strm = b.run(&ctx, Mode::Streamed(4)).map_err(|e| cli_err(e.to_string()))?;
             println!(
                 "quickstart OK — baseline {:.2} ms, 4 streams {:.2} ms, validated {}",
                 base.wall.as_secs_f64() * 1e3,

@@ -84,8 +84,16 @@ pub struct Manifest {
 
 impl Manifest {
     /// Load and validate `manifest.json` from an artifacts directory.
+    ///
+    /// When the directory carries no manifest (no `make artifacts` run —
+    /// e.g. a PJRT-less checkout driving the pure-Rust sim backend), the
+    /// compiled-in [`builtin_manifest_json`] is used instead: the same
+    /// shapes and FLOP estimates `aot.py` would emit.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
+        if !path.exists() {
+            return Self::parse(builtin_manifest_json());
+        }
         let text = std::fs::read_to_string(&path)
             .map_err(|e| Error::Manifest(format!("read {}: {e}", path.display())))?;
         let m = Self::parse(&text)?;
@@ -155,6 +163,88 @@ impl Manifest {
     }
 }
 
+/// The manifest `python/compile/aot.py` emits, compiled in: shapes and
+/// per-call FLOP estimates for every artifact, mirroring `_spec_list()`.
+/// Keeps the sim backend (and every test/bench) runnable without the
+/// Python AOT step; `file` entries are never opened on the sim path.
+pub fn builtin_manifest_json() -> &'static str {
+    r#"{
+  "format": "hlo-text/v1",
+  "artifacts": [
+    {"name": "nn_dist", "file": "nn_dist.hlo.txt",
+     "inputs": [{"shape": [16384, 2], "dtype": "f32"}, {"shape": [2], "dtype": "f32"}],
+     "outputs": [{"shape": [16384], "dtype": "f32"}], "flops_per_call": 98304},
+    {"name": "vector_add", "file": "vector_add.hlo.txt",
+     "inputs": [{"shape": [65536], "dtype": "f32"}, {"shape": [65536], "dtype": "f32"}],
+     "outputs": [{"shape": [65536], "dtype": "f32"}], "flops_per_call": 65536},
+    {"name": "transpose", "file": "transpose.hlo.txt",
+     "inputs": [{"shape": [128, 1024], "dtype": "f32"}],
+     "outputs": [{"shape": [1024, 128], "dtype": "f32"}], "flops_per_call": 131072},
+    {"name": "matmul", "file": "matmul.hlo.txt",
+     "inputs": [{"shape": [128, 256], "dtype": "f32"}, {"shape": [256, 256], "dtype": "f32"}],
+     "outputs": [{"shape": [128, 256], "dtype": "f32"}], "flops_per_call": 16777216},
+    {"name": "prefix_sum", "file": "prefix_sum.hlo.txt",
+     "inputs": [{"shape": [16384], "dtype": "f32"}],
+     "outputs": [{"shape": [16384], "dtype": "f32"}, {"shape": [1], "dtype": "f32"}],
+     "flops_per_call": 16384},
+    {"name": "histogram", "file": "histogram.hlo.txt",
+     "inputs": [{"shape": [16384], "dtype": "i32"}],
+     "outputs": [{"shape": [256], "dtype": "i32"}], "flops_per_call": 32768},
+    {"name": "black_scholes", "file": "black_scholes.hlo.txt",
+     "inputs": [{"shape": [16384], "dtype": "f32"}, {"shape": [16384], "dtype": "f32"},
+                {"shape": [16384], "dtype": "f32"}],
+     "outputs": [{"shape": [16384], "dtype": "f32"}, {"shape": [16384], "dtype": "f32"}],
+     "flops_per_call": 983040},
+    {"name": "dct8x8", "file": "dct8x8.hlo.txt",
+     "inputs": [{"shape": [64, 512], "dtype": "f32"}, {"shape": [8, 8], "dtype": "f32"}],
+     "outputs": [{"shape": [64, 512], "dtype": "f32"}], "flops_per_call": 1048576},
+    {"name": "dot_product", "file": "dot_product.hlo.txt",
+     "inputs": [{"shape": [65536], "dtype": "f32"}, {"shape": [65536], "dtype": "f32"}],
+     "outputs": [{"shape": [1], "dtype": "f32"}], "flops_per_call": 131072},
+    {"name": "hotspot_step", "file": "hotspot_step.hlo.txt",
+     "inputs": [{"shape": [128, 128], "dtype": "f32"}, {"shape": [128, 128], "dtype": "f32"}],
+     "outputs": [{"shape": [128, 128], "dtype": "f32"}], "flops_per_call": 131072},
+    {"name": "fwt", "file": "fwt.hlo.txt",
+     "inputs": [{"shape": [4096], "dtype": "f32"}],
+     "outputs": [{"shape": [4096], "dtype": "f32"}], "flops_per_call": 98304},
+    {"name": "conv_sep", "file": "conv_sep.hlo.txt",
+     "inputs": [{"shape": [144, 256], "dtype": "f32"}, {"shape": [17], "dtype": "f32"},
+                {"shape": [17], "dtype": "f32"}],
+     "outputs": [{"shape": [128, 256], "dtype": "f32"}], "flops_per_call": 2228224},
+    {"name": "stencil2d", "file": "stencil2d.hlo.txt",
+     "inputs": [{"shape": [130, 512], "dtype": "f32"}],
+     "outputs": [{"shape": [128, 512], "dtype": "f32"}], "flops_per_call": 393216},
+    {"name": "lavamd_box", "file": "lavamd_box.hlo.txt",
+     "inputs": [{"shape": [478], "dtype": "f32"}],
+     "outputs": [{"shape": [256], "dtype": "f32"}], "flops_per_call": 285440},
+    {"name": "cfft2d", "file": "cfft2d.hlo.txt",
+     "inputs": [{"shape": [128, 128], "dtype": "f32"}, {"shape": [128, 128], "dtype": "f32"}],
+     "outputs": [{"shape": [128, 128], "dtype": "f32"}], "flops_per_call": 3440640},
+    {"name": "nw_tile", "file": "nw_tile.hlo.txt",
+     "inputs": [{"shape": [32], "dtype": "i32"}, {"shape": [32], "dtype": "i32"},
+                {"shape": [1], "dtype": "i32"}, {"shape": [32, 32], "dtype": "i32"}],
+     "outputs": [{"shape": [32, 32], "dtype": "i32"}, {"shape": [32], "dtype": "i32"},
+                 {"shape": [32], "dtype": "i32"}],
+     "flops_per_call": 5120},
+    {"name": "reduction_v1", "file": "reduction_v1.hlo.txt",
+     "inputs": [{"shape": [65536], "dtype": "f32"}],
+     "outputs": [{"shape": [1], "dtype": "f32"}], "flops_per_call": 65536},
+    {"name": "reduction_v2", "file": "reduction_v2.hlo.txt",
+     "inputs": [{"shape": [65536], "dtype": "f32"}],
+     "outputs": [{"shape": [256], "dtype": "f32"}], "flops_per_call": 65536},
+    {"name": "burner_8", "file": "burner_8.hlo.txt",
+     "inputs": [{"shape": [65536], "dtype": "f32"}],
+     "outputs": [{"shape": [65536], "dtype": "f32"}], "flops_per_call": 1048576},
+    {"name": "burner_64", "file": "burner_64.hlo.txt",
+     "inputs": [{"shape": [65536], "dtype": "f32"}],
+     "outputs": [{"shape": [65536], "dtype": "f32"}], "flops_per_call": 8388608},
+    {"name": "burner_512", "file": "burner_512.hlo.txt",
+     "inputs": [{"shape": [65536], "dtype": "f32"}],
+     "outputs": [{"shape": [65536], "dtype": "f32"}], "flops_per_call": 67108864}
+  ]
+}"#
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,5 +282,21 @@ mod tests {
         let spec = IoSpec { shape: vec![], dtype: DType::F32 };
         assert_eq!(spec.elements(), 1);
         assert_eq!(spec.bytes(), 4);
+    }
+
+    #[test]
+    fn builtin_manifest_parses_and_is_complete() {
+        let m = Manifest::parse(builtin_manifest_json()).unwrap();
+        assert!(m.artifacts.len() >= 18, "full artifact set, got {}", m.artifacts.len());
+        for a in &m.artifacts {
+            assert!(!a.inputs.is_empty(), "{} inputs", a.name);
+            assert!(!a.outputs.is_empty(), "{} outputs", a.name);
+            assert!(a.flops_per_call > 0, "{} flops", a.name);
+        }
+        // Spot-check a shape against the aot.py spec list.
+        let nw = m.get("nw_tile").unwrap();
+        assert_eq!(nw.inputs.len(), 4);
+        assert_eq!(nw.outputs[0].shape, vec![32, 32]);
+        assert_eq!(m.get("lavamd_box").unwrap().inputs[0].shape, vec![478]);
     }
 }

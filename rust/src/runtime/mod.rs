@@ -1,6 +1,10 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Kernel runtime: load AOT artifact metadata and execute kernels by
+//! name.
 //!
-//! The interchange format is HLO **text** produced by
+//! Two interchangeable backends (see [`ArtifactStore`]): the default
+//! pure-Rust interpreter ([`simkern`], no external toolchain), and the
+//! original XLA/PJRT path under `--features pjrt`.  The PJRT
+//! interchange format is HLO **text** produced by
 //! `python/compile/aot.py` — not a serialized `HloModuleProto`, because
 //! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids (see DESIGN.md).
@@ -10,7 +14,8 @@
 //! [`crate::device::ComputeEngine`] worker owns one).
 
 mod manifest;
+mod simkern;
 mod store;
 
-pub use manifest::{ArtifactMeta, DType, IoSpec, Manifest};
+pub use manifest::{builtin_manifest_json, ArtifactMeta, DType, IoSpec, Manifest};
 pub use store::{bytes, ArtifactStore};

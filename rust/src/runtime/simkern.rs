@@ -1,0 +1,566 @@
+//! Pure-Rust kernel interpreter — the default `ArtifactStore` backend.
+//!
+//! One function per AOT artifact, semantically identical to the JAX
+//! reference implementations in `python/compile/kernels/ref.py` (f64
+//! accumulation where the reference uses float64, f32 element types at
+//! the interface).  This keeps the whole Rust stack runnable — and the
+//! virtual-clock simulation exact — on machines without the XLA/PJRT
+//! toolchain; enabling `--features pjrt` swaps in the real compiled
+//! artifacts without touching any caller.
+//!
+//! Timing is *not* modeled here: kernels run at host speed and the
+//! engines charge the modeled KEX duration through the `SimClock`
+//! (virtual) or `pace_to` (wall-clock).
+
+use crate::runtime::bytes;
+use crate::{Error, Result};
+
+use super::manifest::ArtifactMeta;
+
+/// Execute artifact `meta.name` on raw little-endian input payloads.
+/// Payload arity/sizes are validated by the caller (`ArtifactStore`).
+pub fn execute(meta: &ArtifactMeta, inputs: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+    let name = meta.name.as_str();
+    if let Some(iters) = name.strip_prefix("burner_") {
+        let iters: u32 = iters
+            .parse()
+            .map_err(|_| Error::Manifest(format!("bad burner variant `{name}`")))?;
+        return Ok(vec![bytes::from_f32(&burner(&bytes::to_f32(inputs[0]), iters))]);
+    }
+    match name {
+        "vector_add" => {
+            let (a, b) = (bytes::to_f32(inputs[0]), bytes::to_f32(inputs[1]));
+            let c: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+            Ok(vec![bytes::from_f32(&c)])
+        }
+        "nn_dist" => {
+            let recs = bytes::to_f32(inputs[0]);
+            let t = bytes::to_f32(inputs[1]);
+            let d: Vec<f32> = recs
+                .chunks_exact(2)
+                .map(|r| ((r[0] - t[0]).powi(2) + (r[1] - t[1]).powi(2)).sqrt())
+                .collect();
+            Ok(vec![bytes::from_f32(&d)])
+        }
+        "transpose" => {
+            let x = bytes::to_f32(inputs[0]);
+            let (r, c) = dims2(meta, 0)?;
+            let mut out = vec![0.0f32; r * c];
+            for i in 0..r {
+                for j in 0..c {
+                    out[j * r + i] = x[i * c + j];
+                }
+            }
+            Ok(vec![bytes::from_f32(&out)])
+        }
+        "matmul" => {
+            let a = bytes::to_f32(inputs[0]);
+            let b = bytes::to_f32(inputs[1]);
+            let (m, k) = dims2(meta, 0)?;
+            let (_, n) = dims2(meta, 1)?;
+            let mut out = vec![0.0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f64;
+                    for p in 0..k {
+                        acc += a[i * k + p] as f64 * b[p * n + j] as f64;
+                    }
+                    out[i * n + j] = acc as f32;
+                }
+            }
+            Ok(vec![bytes::from_f32(&out)])
+        }
+        "prefix_sum" => {
+            let x = bytes::to_f32(inputs[0]);
+            let mut acc = 0.0f64;
+            let scan: Vec<f32> = x
+                .iter()
+                .map(|&v| {
+                    acc += v as f64;
+                    acc as f32
+                })
+                .collect();
+            let total = vec![*scan.last().unwrap_or(&0.0)];
+            Ok(vec![bytes::from_f32(&scan), bytes::from_f32(&total)])
+        }
+        "histogram" => {
+            let x = bytes::to_i32(inputs[0]);
+            let bins = meta.outputs[0].elements();
+            let mut h = vec![0i32; bins];
+            for &v in &x {
+                let b = (v.max(0) as usize).min(bins - 1);
+                h[b] += 1;
+            }
+            Ok(vec![bytes::from_i32(&h)])
+        }
+        "black_scholes" => {
+            let s = bytes::to_f32(inputs[0]);
+            let k = bytes::to_f32(inputs[1]);
+            let t = bytes::to_f32(inputs[2]);
+            let (call, put) = black_scholes(&s, &k, &t);
+            Ok(vec![bytes::from_f32(&call), bytes::from_f32(&put)])
+        }
+        "dct8x8" => {
+            let x = bytes::to_f32(inputs[0]);
+            let basis = bytes::to_f32(inputs[1]);
+            let (rows, cols) = dims2(meta, 0)?;
+            Ok(vec![bytes::from_f32(&dct8x8(&x, &basis, rows, cols))])
+        }
+        "dot_product" => {
+            let (a, b) = (bytes::to_f32(inputs[0]), bytes::to_f32(inputs[1]));
+            let acc: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+            Ok(vec![bytes::from_f32(&[acc as f32])])
+        }
+        "hotspot_step" => {
+            let temp = bytes::to_f32(inputs[0]);
+            let power = bytes::to_f32(inputs[1]);
+            let (n, _) = dims2(meta, 0)?;
+            Ok(vec![bytes::from_f32(&hotspot_step(&temp, &power, n))])
+        }
+        "fwt" => {
+            let x = bytes::to_f32(inputs[0]);
+            Ok(vec![bytes::from_f32(&fwt(&x))])
+        }
+        "conv_sep" => {
+            let img = bytes::to_f32(inputs[0]);
+            let krow = bytes::to_f32(inputs[1]);
+            let kcol = bytes::to_f32(inputs[2]);
+            let (rows, cols) = dims2_of(&meta.outputs[0])?;
+            Ok(vec![bytes::from_f32(&conv_sep(&img, rows, cols, &krow, &kcol))])
+        }
+        "stencil2d" => {
+            let x = bytes::to_f32(inputs[0]);
+            let (rows, cols) = dims2_of(&meta.outputs[0])?;
+            Ok(vec![bytes::from_f32(&stencil2d(&x, rows, cols))])
+        }
+        "lavamd_box" => {
+            let x = bytes::to_f32(inputs[0]);
+            let n = meta.outputs[0].elements();
+            Ok(vec![bytes::from_f32(&lavamd(&x, n))])
+        }
+        "cfft2d" => {
+            let tile = bytes::to_f32(inputs[0]);
+            let filt = bytes::to_f32(inputs[1]);
+            let (t, _) = dims2(meta, 0)?;
+            Ok(vec![bytes::from_f32(&cfft2d(&tile, &filt, t)?)])
+        }
+        "nw_tile" => {
+            let north = bytes::to_i32(inputs[0]);
+            let west = bytes::to_i32(inputs[1]);
+            let corner = bytes::to_i32(inputs[2]);
+            let sub = bytes::to_i32(inputs[3]);
+            let (tile, south, east) = nw_tile(&north, &west, corner[0], &sub);
+            Ok(vec![bytes::from_i32(&tile), bytes::from_i32(&south), bytes::from_i32(&east)])
+        }
+        "reduction_v1" => {
+            let x = bytes::to_f32(inputs[0]);
+            let acc: f64 = x.iter().map(|&v| v as f64).sum();
+            Ok(vec![bytes::from_f32(&[acc as f32])])
+        }
+        "reduction_v2" => {
+            let x = bytes::to_f32(inputs[0]);
+            let blocks = meta.outputs[0].elements();
+            let per = x.len() / blocks.max(1);
+            let sums: Vec<f32> = (0..blocks)
+                .map(|b| x[b * per..(b + 1) * per].iter().map(|&v| v as f64).sum::<f64>() as f32)
+                .collect();
+            Ok(vec![bytes::from_f32(&sums)])
+        }
+        other => Err(Error::Manifest(format!("no sim kernel for artifact `{other}`"))),
+    }
+}
+
+fn dims2(meta: &ArtifactMeta, input: usize) -> Result<(usize, usize)> {
+    dims2_of(&meta.inputs[input])
+}
+
+fn dims2_of(spec: &super::manifest::IoSpec) -> Result<(usize, usize)> {
+    if spec.shape.len() != 2 {
+        return Err(Error::Manifest(format!("expected rank-2 shape, got {:?}", spec.shape)));
+    }
+    Ok((spec.shape[0], spec.shape[1]))
+}
+
+/// `iters` FMA sweeps over the block (the calibrated synthetic kernel).
+fn burner(x: &[f32], iters: u32) -> Vec<f32> {
+    let mut v = x.to_vec();
+    for _ in 0..iters {
+        for e in &mut v {
+            *e = *e * 1.000001f32 + 1e-7f32;
+        }
+    }
+    v
+}
+
+/// Iterative Walsh–Hadamard transform, f64 accumulation (ref.py `fwt`).
+fn fwt(x: &[f32]) -> Vec<f32> {
+    let n = x.len();
+    let mut v: Vec<f64> = x.iter().map(|&e| e as f64).collect();
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(h * 2) {
+            for j in i..i + h {
+                let (a, b) = (v[j], v[j + h]);
+                v[j] = a + b;
+                v[j + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+    v.into_iter().map(|e| e as f32).collect()
+}
+
+/// Blockwise 8x8 DCT via the broadcast basis: `out = C @ B @ C^T`.
+fn dct8x8(x: &[f32], basis: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let c = |i: usize, j: usize| basis[i * 8 + j] as f64;
+    let mut out = vec![0.0f32; rows * cols];
+    for bi in 0..rows / 8 {
+        for bj in 0..cols / 8 {
+            let mut tmp = [[0.0f64; 8]; 8];
+            for i in 0..8 {
+                for j in 0..8 {
+                    let mut acc = 0.0;
+                    for p in 0..8 {
+                        acc += c(i, p) * x[(bi * 8 + p) * cols + bj * 8 + j] as f64;
+                    }
+                    tmp[i][j] = acc;
+                }
+            }
+            for i in 0..8 {
+                for j in 0..8 {
+                    let mut acc = 0.0;
+                    for p in 0..8 {
+                        acc += tmp[i][p] * c(j, p);
+                    }
+                    out[(bi * 8 + i) * cols + bj * 8 + j] = acc as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Black–Scholes call/put prices (r = 0.02, v = 0.30), deliberately
+/// *not* delegated to `workloads::oracle` — the drivers validate
+/// against the oracle, so the kernel must be an independent
+/// implementation.  The normal CDF here is the Zelen–Severo polynomial
+/// (A&S 26.2.17, |err| < 7.5e-8), a different construction from the
+/// oracle's erf-based path.
+fn black_scholes(s: &[f32], k: &[f32], t: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    const R: f64 = 0.02;
+    const V: f64 = 0.30;
+    fn cnd(x: f64) -> f64 {
+        let ax = x.abs();
+        let t = 1.0 / (1.0 + 0.2316419 * ax);
+        let phi = (-0.5 * ax * ax).exp() / (2.0 * std::f64::consts::PI).sqrt();
+        let poly = t
+            * (0.319381530
+                + t * (-0.356563782 + t * (1.781477937 + t * (-1.821255978 + t * 1.330274429))));
+        let upper = 1.0 - phi * poly;
+        if x >= 0.0 {
+            upper
+        } else {
+            1.0 - upper
+        }
+    }
+    let mut call = Vec::with_capacity(s.len());
+    let mut put = Vec::with_capacity(s.len());
+    for i in 0..s.len() {
+        let (s, k, t) = (s[i] as f64, k[i] as f64, t[i] as f64);
+        let sqrt_t = t.sqrt();
+        let d1 = ((s / k).ln() + (R + 0.5 * V * V) * t) / (V * sqrt_t);
+        let d2 = d1 - V * sqrt_t;
+        let e = (-R * t).exp();
+        call.push((s * cnd(d1) - k * e * cnd(d2)) as f32);
+        put.push((k * e * cnd(-d2) - s * cnd(-d1)) as f32);
+    }
+    (call, put)
+}
+
+/// One hotspot diffusion step (k = 0.1, boundary preserved).
+fn hotspot_step(temp: &[f32], power: &[f32], n: usize) -> Vec<f32> {
+    const K: f64 = 0.1;
+    let mut out = temp.to_vec();
+    for r in 1..n - 1 {
+        for c in 1..n - 1 {
+            let t = temp[r * n + c] as f64;
+            let lap = temp[(r - 1) * n + c] as f64
+                + temp[(r + 1) * n + c] as f64
+                + temp[r * n + c - 1] as f64
+                + temp[r * n + c + 1] as f64
+                - 4.0 * t;
+            out[r * n + c] = (t + K * (power[r * n + c] as f64 + lap)) as f32;
+        }
+    }
+    out
+}
+
+/// Separable convolution over a halo-padded band: vertical pass inside
+/// the halo, horizontal pass zero-padded (ref.py `conv_sep`).
+fn conv_sep(padded: &[f32], rows: usize, cols: usize, krow: &[f32], kcol: &[f32]) -> Vec<f32> {
+    let h = (krow.len() - 1) / 2;
+    let mut mid = vec![0.0f64; rows * cols];
+    for k in 0..2 * h + 1 {
+        for r in 0..rows {
+            for c in 0..cols {
+                mid[r * cols + c] += padded[(r + k) * cols + c] as f64 * kcol[k] as f64;
+            }
+        }
+    }
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let mut acc = 0.0f64;
+            for k in 0..2 * h + 1 {
+                let cc = c as isize + k as isize - h as isize;
+                if cc >= 0 && (cc as usize) < cols {
+                    acc += mid[r * cols + cc as usize] * krow[k] as f64;
+                }
+            }
+            out[r * cols + c] = acc as f32;
+        }
+    }
+    out
+}
+
+/// 5-point Jacobi step over a `(rows+2) x cols` padded field.
+fn stencil2d(padded: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    const C0: f64 = 0.5;
+    const C1: f64 = 0.125;
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let center = padded[(r + 1) * cols + c] as f64;
+            let north = padded[r * cols + c] as f64;
+            let south = padded[(r + 2) * cols + c] as f64;
+            let west = if c > 0 { padded[(r + 1) * cols + c - 1] as f64 } else { 0.0 };
+            let east = if c + 1 < cols { padded[(r + 1) * cols + c + 1] as f64 } else { 0.0 };
+            out[r * cols + c] = (C0 * center + C1 * (north + south + west + east)) as f32;
+        }
+    }
+    out
+}
+
+/// lavaMD window potential over a halo-padded particle line.
+fn lavamd(padded: &[f32], n: usize) -> Vec<f32> {
+    let h = (padded.len() - n) / 2;
+    (0..n)
+        .map(|i| {
+            let c = padded[h + i] as f64;
+            let mut acc = 0.0f64;
+            for j in i..i + 2 * h + 1 {
+                let d2 = (c - padded[j] as f64).powi(2);
+                acc += 1.0 / (1.0 + d2);
+            }
+            (acc - 1.0) as f32
+        })
+        .collect()
+}
+
+/// One NW DP tile from its north/west/corner edges (penalty 10).
+fn nw_tile(north: &[i32], west: &[i32], corner: i32, sub: &[i32]) -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+    const PENALTY: i64 = 10;
+    let t = north.len();
+    let w = t + 1;
+    let mut e = vec![0i64; w * w];
+    e[0] = corner as i64;
+    for j in 0..t {
+        e[j + 1] = north[j] as i64;
+    }
+    for i in 0..t {
+        e[(i + 1) * w] = west[i] as i64;
+    }
+    for i in 1..=t {
+        for j in 1..=t {
+            let diag = e[(i - 1) * w + j - 1] + sub[(i - 1) * t + j - 1] as i64;
+            let up = e[(i - 1) * w + j] - PENALTY;
+            let left = e[i * w + j - 1] - PENALTY;
+            e[i * w + j] = diag.max(up).max(left);
+        }
+    }
+    let mut tile = vec![0i32; t * t];
+    for i in 0..t {
+        for j in 0..t {
+            tile[i * t + j] = e[(i + 1) * w + j + 1] as i32;
+        }
+    }
+    let south = tile[(t - 1) * t..].to_vec();
+    let east: Vec<i32> = (0..t).map(|i| tile[i * t + t - 1]).collect();
+    (tile, south, east)
+}
+
+/// Circular 2D convolution of `tile` with `filt` via FFT (both `t x t`).
+fn cfft2d(tile: &[f32], filt: &[f32], t: usize) -> Result<Vec<f32>> {
+    if !t.is_power_of_two() {
+        return Err(Error::Manifest(format!("cfft2d tile side {t} must be a power of two")));
+    }
+    let mut a = Complex2d::from_f32(tile, t);
+    let mut b = Complex2d::from_f32(filt, t);
+    a.fft2(false);
+    b.fft2(false);
+    for i in 0..t * t {
+        let (ar, ai) = (a.re[i], a.im[i]);
+        let (br, bi) = (b.re[i], b.im[i]);
+        a.re[i] = ar * br - ai * bi;
+        a.im[i] = ar * bi + ai * br;
+    }
+    a.fft2(true);
+    Ok(a.re.iter().map(|&v| v as f32).collect())
+}
+
+/// Square complex grid with in-place radix-2 FFT over rows and columns.
+struct Complex2d {
+    t: usize,
+    re: Vec<f64>,
+    im: Vec<f64>,
+}
+
+impl Complex2d {
+    fn from_f32(x: &[f32], t: usize) -> Self {
+        Self { t, re: x.iter().map(|&v| v as f64).collect(), im: vec![0.0; t * t] }
+    }
+
+    fn fft2(&mut self, invert: bool) {
+        let t = self.t;
+        let mut row_re = vec![0.0; t];
+        let mut row_im = vec![0.0; t];
+        // Rows.
+        for r in 0..t {
+            row_re.copy_from_slice(&self.re[r * t..(r + 1) * t]);
+            row_im.copy_from_slice(&self.im[r * t..(r + 1) * t]);
+            fft1d(&mut row_re, &mut row_im, invert);
+            self.re[r * t..(r + 1) * t].copy_from_slice(&row_re);
+            self.im[r * t..(r + 1) * t].copy_from_slice(&row_im);
+        }
+        // Columns.
+        for c in 0..t {
+            for r in 0..t {
+                row_re[r] = self.re[r * t + c];
+                row_im[r] = self.im[r * t + c];
+            }
+            fft1d(&mut row_re, &mut row_im, invert);
+            for r in 0..t {
+                self.re[r * t + c] = row_re[r];
+                self.im[r * t + c] = row_im[r];
+            }
+        }
+    }
+}
+
+/// Iterative radix-2 Cooley–Tukey FFT (`invert` divides by n).
+fn fft1d(re: &mut [f64], im: &mut [f64], invert: bool) {
+    let n = re.len();
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let mut len = 2;
+    while len <= n {
+        let ang = 2.0 * std::f64::consts::PI / len as f64 * if invert { 1.0 } else { -1.0 };
+        let (wr, wi) = (ang.cos(), ang.sin());
+        for i in (0..n).step_by(len) {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let (xr, xi) = (re[i + k + len / 2], im[i + k + len / 2]);
+                let (vr, vi) = (xr * cr - xi * ci, xr * ci + xi * cr);
+                re[i + k] = ur + vr;
+                im[i + k] = ui + vi;
+                re[i + k + len / 2] = ur - vr;
+                im[i + k + len / 2] = ui - vi;
+                let t = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = t;
+            }
+        }
+        len <<= 1;
+    }
+    if invert {
+        for v in re.iter_mut() {
+            *v /= n as f64;
+        }
+        for v in im.iter_mut() {
+            *v /= n as f64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_roundtrip_recovers_signal() {
+        let n = 16;
+        let orig: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut re = orig.clone();
+        let mut im = vec![0.0; n];
+        fft1d(&mut re, &mut im, false);
+        fft1d(&mut re, &mut im, true);
+        for (a, b) in re.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+        assert!(im.iter().all(|v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn cfft2d_delta_filter_is_circular_shift() {
+        let t = 8;
+        let tile: Vec<f32> = (0..t * t).map(|i| (i as f32 * 0.13).cos()).collect();
+        let mut filt = vec![0.0f32; t * t];
+        filt[1 * t + 3] = 1.0; // delta at (1, 3)
+        let out = cfft2d(&tile, &filt, t).unwrap();
+        for i in 0..t {
+            for j in 0..t {
+                let want = tile[((i + t - 1) % t) * t + (j + t - 3) % t];
+                assert!((out[i * t + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn nw_tile_matches_whole_matrix_dp() {
+        // A single tile with Rodinia boundaries equals the full oracle.
+        let t = 4;
+        let sub: Vec<i32> = (0..t * t).map(|i| (i as i32 % 7) - 3).collect();
+        let north: Vec<i32> = (0..t as i32).map(|j| -10 * (j + 1)).collect();
+        let west: Vec<i32> = (0..t as i32).map(|i| -10 * (i + 1)).collect();
+        let (tile, south, east) = nw_tile(&north, &west, 0, &sub);
+        let want = crate::workloads::oracle::nw_full(&sub, t, 10);
+        assert_eq!(tile, want);
+        assert_eq!(south, &want[(t - 1) * t..]);
+        let want_east: Vec<i32> = (0..t).map(|i| want[i * t + t - 1]).collect();
+        assert_eq!(east, want_east);
+    }
+
+    #[test]
+    fn black_scholes_matches_the_independent_oracle() {
+        // Different CND constructions (Zelen–Severo here, A&S erf in the
+        // oracle) must agree to well under the drivers' tolerance.
+        let s = [5.0f32, 12.5, 30.0, 20.0];
+        let k = [1.0f32, 50.0, 100.0, 20.0];
+        let t = [0.25f32, 2.0, 10.0, 1.0];
+        let (call, put) = black_scholes(&s, &k, &t);
+        let (wcall, wput) = crate::workloads::oracle::black_scholes(&s, &k, &t);
+        for i in 0..s.len() {
+            assert!((call[i] - wcall[i]).abs() < 1e-3, "call {i}: {} vs {}", call[i], wcall[i]);
+            assert!((put[i] - wput[i]).abs() < 1e-3, "put {i}: {} vs {}", put[i], wput[i]);
+        }
+    }
+
+    #[test]
+    fn burner_applies_fma_sweeps() {
+        let out = burner(&[1.0, -0.5], 2);
+        let step = |v: f32| v * 1.000001 + 1e-7;
+        assert_eq!(out, vec![step(step(1.0)), step(step(-0.5))]);
+    }
+}

@@ -1,54 +1,82 @@
-//! Compiled-artifact store: one PJRT CPU client + every manifest entry
-//! compiled once at startup, executed by name with raw byte buffers.
+//! Compiled-artifact store: every manifest entry executable by name
+//! with raw byte buffers.
+//!
+//! Two backends share one call surface:
+//!
+//! - **sim** (default) — the in-crate pure-Rust interpreter
+//!   ([`super::simkern`]), semantically matched to the JAX reference
+//!   kernels.  No external toolchain, nothing to compile at startup.
+//! - **pjrt** (`--features pjrt`) — one PJRT CPU client per store with
+//!   every artifact compiled from its HLO text at load time (the
+//!   original backend; requires the `xla` crate and `make artifacts`).
+//!
+//! Signature validation (input arity and byte sizes against the
+//! manifest) is backend-independent, so a sim-validated program runs
+//! unchanged on PJRT.
 
-use std::collections::HashMap;
 use std::path::Path;
 
 use crate::{Error, Result};
 
 use super::manifest::{ArtifactMeta, Manifest};
+use super::simkern;
 
-/// Owns the PJRT client and the compiled executables.  `!Send` — keep it
-/// on the thread that created it.
+/// Owns the kernel backend and the manifest.  With the PJRT backend the
+/// store is `!Send` (PJRT handles wrap raw C pointers) — keep it on the
+/// thread that created it; the sim backend imposes no such constraint
+/// but the engines treat both identically.
 pub struct ArtifactStore {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// §Perf: per-artifact input literals, created once and refilled
-    /// with `copy_raw_from` on every call (saves an allocation + shape
-    /// setup per input per call; see EXPERIMENTS.md §Perf).
-    input_cache: std::cell::RefCell<HashMap<String, Vec<xla::Literal>>>,
+    backend: Backend,
+}
+
+enum Backend {
+    Sim,
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtBackend),
 }
 
 impl ArtifactStore {
-    /// Load the manifest and compile every artifact on the CPU PJRT
-    /// client.  Compilation happens once; execution is pure dispatch.
+    /// Load the manifest and ready every artifact for execution.  The
+    /// PJRT backend compiles each HLO text once here; the sim backend
+    /// is dispatch-only.
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        let mut executables = HashMap::new();
-        for art in &manifest.artifacts {
-            let proto = xla::HloModuleProto::from_text_file(dir.join(&art.file))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            executables.insert(art.name.clone(), exe);
-        }
-        Ok(Self { client, manifest, executables, input_cache: Default::default() })
+        Self::with_manifest(dir, manifest)
     }
 
-    /// Load only the named artifacts (faster startup for focused runs).
+    /// Load only the named artifacts (faster PJRT startup for focused
+    /// runs; validates the names either way).
     pub fn load_subset(dir: &Path, names: &[&str]) -> Result<Self> {
         let mut manifest = Manifest::load(dir)?;
         manifest.artifacts.retain(|a| names.contains(&a.name.as_str()));
-        let client = xla::PjRtClient::cpu()?;
-        let mut executables = HashMap::new();
-        for art in &manifest.artifacts {
-            let proto = xla::HloModuleProto::from_text_file(dir.join(&art.file))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            executables.insert(art.name.clone(), exe);
-        }
-        Ok(Self { client, manifest, executables, input_cache: Default::default() })
+        Self::with_manifest(dir, manifest)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn with_manifest(_dir: &Path, manifest: Manifest) -> Result<Self> {
+        Ok(Self { manifest, backend: Backend::Sim })
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn with_manifest(dir: &Path, manifest: Manifest) -> Result<Self> {
+        // Fall back to the sim interpreter when the HLO artifacts are
+        // not materialized on disk (manifest came from the builtin).
+        // A pjrt build asking for missing artifacts is almost always a
+        // forgotten `make artifacts` — say so rather than silently
+        // reporting interpreter numbers as PJRT ones.
+        let have_artifacts = manifest.artifacts.iter().all(|a| dir.join(&a.file).exists());
+        let backend = if have_artifacts {
+            Backend::Pjrt(pjrt::PjrtBackend::compile(dir, &manifest)?)
+        } else {
+            eprintln!(
+                "hetstream: HLO artifacts missing under {} — falling back to the \
+                 sim interpreter (run `make artifacts` for the PJRT backend)",
+                dir.display()
+            );
+            Backend::Sim
+        };
+        Ok(Self { manifest, backend })
     }
 
     /// Metadata for an artifact.
@@ -63,108 +91,171 @@ impl ArtifactStore {
         self.manifest.artifacts.iter().map(|a| a.name.as_str()).collect()
     }
 
-    /// PJRT platform string (for diagnostics).
+    /// Backend platform string (for diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Sim => "sim-cpu".to_string(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.platform(),
+        }
     }
 
     /// Execute artifact `name` with raw little-endian byte payloads, one
     /// per input, shaped per the manifest.  Returns one byte payload per
     /// output.  Payload lengths are validated against the signature.
     pub fn execute_bytes(&self, name: &str, inputs: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
-        let meta = self.meta(name)?.clone();
+        let meta = self.meta(name)?;
         if inputs.len() != meta.inputs.len() {
             return Err(Error::Signature {
                 artifact: name.into(),
                 detail: format!("got {} inputs, want {}", inputs.len(), meta.inputs.len()),
             });
         }
-        let mut cache = self.input_cache.borrow_mut();
-        let literals = cache.entry(name.to_string()).or_insert_with(|| {
-            meta.inputs
-                .iter()
-                .map(|spec| {
-                    let ty = match spec.dtype {
-                        super::DType::F32 => xla::PrimitiveType::F32,
-                        super::DType::I32 => xla::PrimitiveType::S32,
-                    };
-                    xla::Literal::create_from_shape(ty, &spec.shape)
-                })
-                .collect()
-        });
-        for ((spec, bytes), lit) in meta.inputs.iter().zip(inputs).zip(literals.iter_mut()) {
+        for (spec, bytes) in meta.inputs.iter().zip(inputs) {
             if bytes.len() != spec.bytes() {
                 return Err(Error::Signature {
                     artifact: name.into(),
                     detail: format!("input bytes {} != expected {}", bytes.len(), spec.bytes()),
                 });
             }
-            // Refill the cached literal in place (§Perf).
-            match spec.dtype {
-                super::DType::F32 => {
-                    let src: &[f32] = unsafe {
-                        std::slice::from_raw_parts(bytes.as_ptr() as *const f32, spec.elements())
-                    };
-                    lit.copy_raw_from(src)?;
-                }
-                super::DType::I32 => {
-                    let src: &[i32] = unsafe {
-                        std::slice::from_raw_parts(bytes.as_ptr() as *const i32, spec.elements())
-                    };
-                    lit.copy_raw_from(src)?;
-                }
-            }
         }
-        let exe = self
-            .executables
-            .get(name)
-            .ok_or_else(|| Error::Manifest(format!("artifact `{name}` not compiled")))?;
-        let result = exe.execute::<xla::Literal>(&literals)?;
-        let lit = result[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: always a tuple at top level.
-        let parts = lit.to_tuple()?;
-        if parts.len() != meta.outputs.len() {
+        let outs = match &self.backend {
+            Backend::Sim => simkern::execute(meta, inputs)?,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.execute(meta, inputs)?,
+        };
+        if outs.len() != meta.outputs.len() {
             return Err(Error::Signature {
                 artifact: name.into(),
-                detail: format!("got {} outputs, want {}", parts.len(), meta.outputs.len()),
+                detail: format!("got {} outputs, want {}", outs.len(), meta.outputs.len()),
             });
         }
-        let mut outs = Vec::with_capacity(parts.len());
-        for (spec, part) in meta.outputs.iter().zip(parts) {
-            // §Perf: copy the literal straight into the output byte
-            // buffer (one copy) instead of to_vec + recopy (two copies
-            // plus an allocation) — see EXPERIMENTS.md §Perf.
-            let mut bytes = vec![0u8; spec.bytes()];
-            match spec.dtype {
-                super::DType::F32 => {
-                    let dst: &mut [f32] = unsafe {
-                        std::slice::from_raw_parts_mut(
-                            bytes.as_mut_ptr() as *mut f32,
-                            spec.elements(),
-                        )
-                    };
-                    part.copy_raw_to(dst)?;
-                }
-                super::DType::I32 => {
-                    let dst: &mut [i32] = unsafe {
-                        std::slice::from_raw_parts_mut(
-                            bytes.as_mut_ptr() as *mut i32,
-                            spec.elements(),
-                        )
-                    };
-                    part.copy_raw_to(dst)?;
+        Ok(outs)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    //! The original XLA/PJRT execution path (HLO-text artifacts through
+    //! the PJRT CPU client), unchanged semantics.
+
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use crate::runtime::manifest::{ArtifactMeta, Manifest};
+    use crate::Result;
+
+    pub struct PjrtBackend {
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
+        /// §Perf: per-artifact input literals, created once and refilled
+        /// with `copy_raw_from` on every call (saves an allocation +
+        /// shape setup per input per call; see EXPERIMENTS.md §Perf).
+        input_cache: std::cell::RefCell<HashMap<String, Vec<xla::Literal>>>,
+    }
+
+    impl PjrtBackend {
+        pub fn compile(dir: &Path, manifest: &Manifest) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()?;
+            let mut executables = HashMap::new();
+            for art in &manifest.artifacts {
+                let proto = xla::HloModuleProto::from_text_file(dir.join(&art.file))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp)?;
+                executables.insert(art.name.clone(), exe);
+            }
+            Ok(Self { client, executables, input_cache: Default::default() })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn execute(&self, meta: &ArtifactMeta, inputs: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+            use crate::runtime::DType;
+            let mut cache = self.input_cache.borrow_mut();
+            let literals = cache.entry(meta.name.clone()).or_insert_with(|| {
+                meta.inputs
+                    .iter()
+                    .map(|spec| {
+                        let ty = match spec.dtype {
+                            DType::F32 => xla::PrimitiveType::F32,
+                            DType::I32 => xla::PrimitiveType::S32,
+                        };
+                        xla::Literal::create_from_shape(ty, &spec.shape)
+                    })
+                    .collect()
+            });
+            for ((spec, bytes), lit) in meta.inputs.iter().zip(inputs).zip(literals.iter_mut()) {
+                // Refill the cached literal in place (§Perf).
+                match spec.dtype {
+                    DType::F32 => {
+                        let src: &[f32] = unsafe {
+                            std::slice::from_raw_parts(
+                                bytes.as_ptr() as *const f32,
+                                spec.elements(),
+                            )
+                        };
+                        lit.copy_raw_from(src)?;
+                    }
+                    DType::I32 => {
+                        let src: &[i32] = unsafe {
+                            std::slice::from_raw_parts(
+                                bytes.as_ptr() as *const i32,
+                                spec.elements(),
+                            )
+                        };
+                        lit.copy_raw_from(src)?;
+                    }
                 }
             }
-            outs.push(bytes);
+            let exe = self
+                .executables
+                .get(&meta.name)
+                .ok_or_else(|| {
+                    crate::Error::Manifest(format!("artifact `{}` not compiled", meta.name))
+                })?;
+            let result = exe.execute::<xla::Literal>(literals)?;
+            let lit = result[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: always a tuple at top.
+            let parts = lit.to_tuple()?;
+            let mut outs = Vec::with_capacity(parts.len());
+            for (spec, part) in meta.outputs.iter().zip(parts) {
+                // §Perf: copy the literal straight into the output byte
+                // buffer (one copy) instead of to_vec + recopy.
+                let mut bytes = vec![0u8; spec.bytes()];
+                match spec.dtype {
+                    DType::F32 => {
+                        let dst: &mut [f32] = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                bytes.as_mut_ptr() as *mut f32,
+                                spec.elements(),
+                            )
+                        };
+                        part.copy_raw_to(dst)?;
+                    }
+                    DType::I32 => {
+                        let dst: &mut [i32] = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                bytes.as_mut_ptr() as *mut i32,
+                                spec.elements(),
+                            )
+                        };
+                        part.copy_raw_to(dst)?;
+                    }
+                }
+                outs.push(bytes);
+            }
+            Ok(outs)
         }
-        Ok(outs)
     }
 }
 
 /// Helpers to view typed slices as byte slices and back — used throughout
 /// the workload drivers.
 pub mod bytes {
-    // §Perf: bulk memcpy conversions.  PJRT literals and this host are
+    // §Perf: bulk memcpy conversions.  Kernel backends and this host are
     // both native-endian, so per-element to/from_le_bytes loops (the
     // original implementation) only cost time; a compile-time check
     // keeps the little-endian assumption explicit.
@@ -207,5 +298,42 @@ pub mod bytes {
             std::ptr::copy_nonoverlapping(b.as_ptr(), out.as_mut_ptr() as *mut u8, n * 4);
         }
         out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim_store(names: &[&str]) -> ArtifactStore {
+        // A directory with no manifest.json -> builtin manifest + sim.
+        ArtifactStore::load_subset(Path::new("/nonexistent-artifacts"), names).unwrap()
+    }
+
+    #[test]
+    fn sim_backend_loads_without_artifacts_dir() {
+        let s = sim_store(&["vector_add"]);
+        assert_eq!(s.platform(), "sim-cpu");
+        assert_eq!(s.names(), vec!["vector_add"]);
+    }
+
+    #[test]
+    fn sim_vector_add_numerics() {
+        let s = sim_store(&["vector_add"]);
+        let a = vec![1.5f32; 65536];
+        let b = vec![-0.25f32; 65536];
+        let out = s
+            .execute_bytes("vector_add", &[&bytes::from_f32(&a), &bytes::from_f32(&b)])
+            .unwrap();
+        let c = bytes::to_f32(&out[0]);
+        assert!(c.iter().all(|&v| v == 1.25));
+    }
+
+    #[test]
+    fn signature_still_enforced() {
+        let s = sim_store(&["vector_add"]);
+        let short = vec![0u8; 16];
+        let err = s.execute_bytes("vector_add", &[&short, &short]).unwrap_err();
+        assert!(err.to_string().contains("signature"), "{err}");
     }
 }

@@ -47,13 +47,11 @@ impl Benchmark for DotProduct {
             output_chunk_bytes: vec![4],
             flops_per_chunk: Some(1_000_000),
         };
-        let timer = crate::metrics::Timer::start();
-        let (_, outputs, h2d) = wl.execute(ctx, mode)?;
+        let (wall, outputs, h2d) = wl.execute(ctx, mode)?;
 
         // Host final reduce over the partials.
         let partials = bytes::to_f32(&outputs[0]);
         let got: f64 = partials.iter().map(|&v| v as f64).sum();
-        let wall = timer.elapsed();
 
         let want: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
         let ok = (got - want).abs() <= 0.5 + 1e-3 * want.abs();

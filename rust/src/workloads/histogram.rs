@@ -44,8 +44,7 @@ impl Benchmark for Histogram {
             // Privatized-histogram merge passes on the device.
             flops_per_chunk: Some(6_500_000),
         };
-        let timer = crate::metrics::Timer::start();
-        let (_, outputs, h2d) = wl.execute(ctx, mode)?;
+        let (wall, outputs, h2d) = wl.execute(ctx, mode)?;
 
         // Host merge of the per-chunk histograms.
         let parts = bytes::to_i32(&outputs[0]);
@@ -55,7 +54,6 @@ impl Benchmark for Histogram {
                 merged[b] += parts[c * BINS + b];
             }
         }
-        let wall = timer.elapsed();
 
         let ok = merged == oracle::histogram(&x);
 

@@ -61,7 +61,6 @@ impl Benchmark for Hotspot {
             Mode::Streamed(n) => n.max(1),
         };
 
-        let timer = crate::metrics::Timer::start();
         let mut streams: Vec<_> = (0..n_streams.max(2).min(2)).map(|_| ctx.stream()).collect();
 
         // All the overlap this category permits: the two uploads ride
@@ -88,7 +87,7 @@ impl Benchmark for Hotspot {
         for s in &streams {
             s.sync();
         }
-        let wall = timer.elapsed();
+        let wall = crate::hstreams::makespan(streams.iter().flat_map(|s| s.events()));
 
         // Validate against the host oracle iterated the same number of
         // steps (f32 kernel vs f64 oracle: tolerance grows mildly).

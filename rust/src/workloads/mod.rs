@@ -216,7 +216,6 @@ impl GenericWorkload {
         let dsts: Vec<crate::device::HostDst> =
             self.output_chunk_bytes.iter().map(|&b| crate::hstreams::host_dst(b * chunks)).collect();
 
-        let timer = crate::metrics::Timer::start();
         let mut s = ctx.stream();
         let mut h2d_bytes = 0u64;
         for (payload, region) in self.shared_inputs.iter().zip(&shared_regions) {
@@ -250,7 +249,9 @@ impl GenericWorkload {
             s.d2h(*region, dst.clone());
         }
         s.sync();
-        let wall = timer.elapsed();
+        // Timeline makespan of the offload: virtual (deterministic) under
+        // TimeMode::Virtual, measured wall span under Wallclock.
+        let wall = crate::hstreams::makespan(s.events());
 
         let outputs: Vec<Vec<u8>> = dsts.iter().map(|d| d.data.lock().unwrap().clone()).collect();
         for r in in_bufs.iter().chain(&out_bufs).chain(&shared_regions) {
@@ -288,7 +289,6 @@ impl GenericWorkload {
         let dsts: Vec<crate::device::HostDst> =
             self.output_chunk_bytes.iter().map(|&b| crate::hstreams::host_dst(b * chunks)).collect();
 
-        let timer = crate::metrics::Timer::start();
         let mut streams: Vec<_> = (0..n).map(|_| ctx.stream()).collect();
         let mut h2d_bytes = 0u64;
 
@@ -327,7 +327,7 @@ impl GenericWorkload {
         for s in &streams {
             s.sync();
         }
-        let wall = timer.elapsed();
+        let wall = crate::hstreams::makespan(streams.iter().flat_map(|s| s.events()));
 
         let outputs: Vec<Vec<u8>> = dsts.iter().map(|d| d.data.lock().unwrap().clone()).collect();
         for regions in task_in.iter().chain(&task_out) {

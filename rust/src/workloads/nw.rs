@@ -94,7 +94,6 @@ impl Benchmark for NeedlemanWunsch {
         }
         let dst = crate::hstreams::host_dst(g * g * tile_bytes);
 
-        let timer = crate::metrics::Timer::start();
         let mut streams: Vec<_> = (0..n_streams).map(|_| ctx.stream()).collect();
 
         // Prologue: boundaries ride stream 0; other streams wait on them.
@@ -187,7 +186,7 @@ impl Benchmark for NeedlemanWunsch {
         for s in &streams {
             s.sync();
         }
-        let wall = timer.elapsed();
+        let wall = crate::hstreams::makespan(streams.iter().flat_map(|s| s.events()));
 
         // Reassemble and validate against the full-matrix DP oracle.
         let flat = bytes::to_i32(&dst.data.lock().unwrap());

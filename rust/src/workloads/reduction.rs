@@ -32,13 +32,11 @@ fn run_variant(
         output_chunk_bytes: vec![out_bytes],
         flops_per_chunk: None,
     };
-    let timer = crate::metrics::Timer::start();
-    let (_, outputs, h2d) = wl.execute(ctx, mode)?;
+    let (wall, outputs, h2d) = wl.execute(ctx, mode)?;
 
     // Host final pass: sum whatever came back (1 or 256 partials/chunk).
     let partials = bytes::to_f32(&outputs[0]);
     let got: f64 = partials.iter().map(|&v| v as f64).sum();
-    let wall = timer.elapsed();
 
     let want: f64 = x.iter().map(|&v| v as f64).sum();
     let ok = (got - want).abs() <= 1e-2 + 1e-4 * want.abs();

@@ -1,0 +1,123 @@
+//! Virtual-clock invariants at workload level: multi-stream overlap
+//! wins exactly where the paper says it should, the halo-overhead
+//! analysis predicts the lavaMD negative case, and a corpus-style sweep
+//! runs with no real-time sleeping and bit-identical timelines.
+//!
+//! Every assertion here is exact (integer nanoseconds / byte counts),
+//! not tolerance-based — that is the point of `TimeMode::Virtual`.
+
+use hetstream::device::{DeviceProfile, TimeMode};
+use hetstream::hstreams::{Context, ContextBuilder};
+use hetstream::partition::halo_overhead_ratio;
+use hetstream::workloads::{Benchmark, LavaMd, Mode, Nn};
+
+fn virtual_ctx(artifacts: &[&str]) -> Context {
+    ContextBuilder::new()
+        .profile(DeviceProfile::mic31sp())
+        .only_artifacts(artifacts.to_vec())
+        .time_mode(TimeMode::Virtual)
+        .build()
+        .expect("context")
+}
+
+#[test]
+fn nn_multi_stream_beats_single_stream_exactly() {
+    // Embarrassingly Independent via partition::independent: the
+    // streamed port's virtual makespan must strictly beat the
+    // serialized pipeline — an exact u64 comparison, no tolerances.
+    let b = Nn::new(1);
+    let ctx = virtual_ctx(&["nn_dist"]);
+    let single = b.run(&ctx, Mode::Streamed(1)).expect("1-stream run");
+    let multi = b.run(&ctx, Mode::Streamed(4)).expect("4-stream run");
+    assert!(single.validated && multi.validated);
+    let (s, m) = (single.wall.as_nanos(), multi.wall.as_nanos());
+    assert!(m < s, "4-stream virtual makespan {m} must beat 1-stream {s}");
+}
+
+#[test]
+fn virtual_makespan_is_deterministic_across_runs_and_contexts() {
+    let b = Nn::new(1);
+    let runs: Vec<u128> = (0..2)
+        .map(|_| {
+            let ctx = virtual_ctx(&["nn_dist"]);
+            let base = b.run(&ctx, Mode::Baseline).expect("baseline");
+            let strm = b.run(&ctx, Mode::Streamed(4)).expect("streamed");
+            assert!(base.validated && strm.validated);
+            base.wall.as_nanos() * 1_000_000_007 + strm.wall.as_nanos()
+        })
+        .collect();
+    assert_eq!(runs[0], runs[1], "identical programs must yield identical timelines");
+}
+
+#[test]
+fn halo_overhead_predicts_the_lavamd_negative_case() {
+    // §5: lavaMD's halo (2*111) is comparable to its task (256), so the
+    // streamed port ships ~1.9x the bytes.  Byte counts are exact.
+    let b = LavaMd::new(1);
+    let ctx = virtual_ctx(&["lavamd_box"]);
+    let base = b.run(&ctx, Mode::Baseline).expect("baseline");
+    let strm = b.run(&ctx, Mode::Streamed(4)).expect("streamed");
+    assert!(base.validated && strm.validated);
+
+    let chunks = 64; // LavaMd::new(1)
+    let (chunk, halo) = (256usize, 111usize);
+    assert_eq!(base.h2d_bytes, ((chunks * chunk + 2 * halo) * 4) as u64, "bulk = padded array");
+    assert_eq!(
+        strm.h2d_bytes,
+        (chunks * (chunk + 2 * halo) * 4) as u64,
+        "streamed = every task ships its halo window"
+    );
+    assert!(halo_overhead_ratio(chunk, halo) > 0.85, "halo ≈ task size");
+
+    // The redundant bytes + per-task DMA latency must erode lavaMD's
+    // streaming gain below nn's (the paper's contrast: ~85% vs a loss).
+    let nn = Nn::new(1);
+    let nn_ctx = virtual_ctx(&["nn_dist"]);
+    let nn_base = nn.run(&nn_ctx, Mode::Baseline).expect("nn baseline");
+    let nn_strm = nn.run(&nn_ctx, Mode::Streamed(4)).expect("nn streamed");
+    let gain = |b: u128, s: u128| b as f64 / s.max(1) as f64;
+    assert!(
+        gain(nn_base.wall.as_nanos(), nn_strm.wall.as_nanos())
+            > gain(base.wall.as_nanos(), strm.wall.as_nanos()),
+        "nn's streaming gain must exceed lavaMD's (halo overhead predicts the loss)"
+    );
+}
+
+#[test]
+fn virtual_sweep_sleeps_through_nothing() {
+    // On a deliberately glacial profile the modeled makespan is
+    // minutes; the run must still finish in interactive time (wall ≪
+    // modeled).  Margins are huge on both sides so debug builds and
+    // loaded CI machines cannot flake this: wall-clock pacing would
+    // need > 8 minutes, the real interpreter work is well under 60 s.
+    let glacial = DeviceProfile {
+        name: "glacial-sim".into(), // -sim: used as-is, no dilation
+        h2d_gbps: 1e-3,             // 128 KiB chunk upload ≈ 130 ms modeled
+        d2h_gbps: 1e-3,
+        latency_us: 0.0,
+        alloc_us_per_mb: 0.0,
+        gflops: 1e-5, // 650k-FLOP chunk kernel ≈ 65 s modeled
+        launch_us: 0.0,
+        duplex: true,
+    };
+    let ctx = ContextBuilder::new()
+        .profile(glacial)
+        .only_artifacts(["nn_dist"])
+        .time_mode(TimeMode::Virtual)
+        .build()
+        .expect("context");
+    let b = Nn::new(1); // 8 chunks => >= 8 * 65 s of modeled kernel time
+    let t0 = std::time::Instant::now();
+    let r = b.run(&ctx, Mode::Streamed(4)).expect("run");
+    let real = t0.elapsed();
+    assert!(r.validated);
+    assert!(
+        r.wall > std::time::Duration::from_secs(8 * 60),
+        "modeled makespan should be minutes, got {:?}",
+        r.wall
+    );
+    assert!(
+        real < std::time::Duration::from_secs(60),
+        "virtual run must not sleep through modeled time (took {real:?})"
+    );
+}

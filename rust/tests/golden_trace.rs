@@ -1,0 +1,135 @@
+//! Golden-trace regression: the virtual event timeline of a fig1-style
+//! two-stream pipelined offload, serialized to JSON and compared
+//! byte-for-byte against a checked-in golden file.
+//!
+//! The scenario uses a round-number profile (1 GB/s, 1 GFLOP/s, zero
+//! latencies) so every modeled duration is an exact integer nanosecond
+//! count and the whole timeline is hand-checkable:
+//!
+//! - each 256 KiB transfer takes exactly 262144 ns,
+//! - each kernel (1e6-FLOP override) takes exactly 1000000 ns,
+//! - chunk task = h2d a, h2d b, kex vector_add, d2h — 4 chunks
+//!   round-robined over 2 streams, so chunk i+1's uploads overlap
+//!   chunk i's kernel exactly as in the paper's Fig. 5.
+//!
+//! Regenerate after an intentional model change with:
+//! `UPDATE_GOLDEN=1 cargo test --test golden_trace`.
+
+use std::sync::Arc;
+
+use hetstream::device::{DevRegion, DeviceProfile, HostSrc, TimeMode};
+use hetstream::hstreams::{host_dst, ContextBuilder};
+use hetstream::runtime::bytes;
+
+const N: usize = 65536; // vector_add artifact elements
+const CHUNKS: usize = 4;
+const STREAMS: usize = 2;
+
+fn golden_profile() -> DeviceProfile {
+    DeviceProfile {
+        // `-sim` suffix opts out of auto-dilation: used as-is.
+        name: "golden-sim".into(),
+        h2d_gbps: 1.0,
+        d2h_gbps: 1.0,
+        latency_us: 0.0,
+        alloc_us_per_mb: 0.0,
+        gflops: 1.0,
+        launch_us: 0.0,
+        duplex: true,
+    }
+}
+
+/// Run the pipeline once on a fresh context; returns (trace JSON,
+/// makespan ns, outputs valid).
+fn run_pipeline() -> (String, u64, bool) {
+    let ctx = ContextBuilder::new()
+        .profile(golden_profile())
+        .only_artifacts(["vector_add"])
+        .time_mode(TimeMode::Virtual)
+        .record_trace(true)
+        .build()
+        .expect("context");
+
+    let a: Vec<f32> = (0..N).map(|i| i as f32 * 0.25).collect();
+    let b: Vec<f32> = (0..N).map(|i| (N - i) as f32).collect();
+    let pa = Arc::new(bytes::from_f32(&a));
+    let pb = Arc::new(bytes::from_f32(&b));
+
+    let mut streams: Vec<_> = (0..STREAMS).map(|_| ctx.stream()).collect();
+    let mut dsts = Vec::new();
+    for c in 0..CHUNKS {
+        let s = &mut streams[c % STREAMS];
+        let da = DevRegion::whole(ctx.alloc(N * 4).unwrap(), N * 4);
+        let db = DevRegion::whole(ctx.alloc(N * 4).unwrap(), N * 4);
+        let dc = DevRegion::whole(ctx.alloc(N * 4).unwrap(), N * 4);
+        s.h2d(HostSrc::whole(pa.clone()), da);
+        s.h2d(HostSrc::whole(pb.clone()), db);
+        s.kex_with("vector_add", vec![da, db], vec![dc], Some(1_000_000), 1);
+        let dst = host_dst(N * 4);
+        s.d2h(dc, dst.clone());
+        dsts.push(dst);
+    }
+    for s in &streams {
+        s.sync();
+    }
+
+    let makespan = hetstream::hstreams::makespan(streams.iter().flat_map(|s| s.events()));
+    let valid = dsts.iter().all(|d| {
+        let got = bytes::to_f32(&d.data.lock().unwrap());
+        got.iter().enumerate().all(|(i, &v)| v == a[i] + b[i])
+    });
+    (ctx.trace_json(), makespan.as_nanos() as u64, valid)
+}
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/fig1_pipeline_trace.json")
+}
+
+#[test]
+fn virtual_timeline_matches_checked_in_golden() {
+    let (json, makespan_ns, valid) = run_pipeline();
+    assert!(valid, "pipeline outputs must equal a + b");
+    // Hand-computed end of the last D2H (see module docs).
+    assert_eq!(makespan_ns, 4_786_432, "modeled makespan");
+
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::write(golden_path(), &json).expect("write golden");
+        return;
+    }
+    let golden = std::fs::read_to_string(golden_path()).expect(
+        "golden file missing — run with UPDATE_GOLDEN=1 to create it",
+    );
+    assert_eq!(
+        json, golden,
+        "virtual trace diverged from golden (UPDATE_GOLDEN=1 regenerates after an \
+         intentional model change)"
+    );
+}
+
+#[test]
+fn virtual_timeline_is_byte_identical_across_runs() {
+    let (a, ns_a, _) = run_pipeline();
+    let (b, ns_b, _) = run_pipeline();
+    assert_eq!(ns_a, ns_b);
+    assert_eq!(a, b, "two identical simulations must serialize identically");
+}
+
+#[test]
+fn overlap_is_visible_in_the_trace() {
+    // Chunk 1's H2D (seq 4, stream 1) must start strictly before chunk
+    // 0's KEX (seq 2, stream 0) ends — the paper's overlap, read off
+    // the recorded timeline rather than asserted via sleeps.
+    let (json, _, _) = run_pipeline();
+    let parsed = hetstream::util::json::Json::parse(&json).expect("trace parses");
+    let events = parsed.get("events").and_then(|e| e.as_arr()).expect("events");
+    let field = |i: usize, k: &str| -> u64 {
+        events[i].get(k).and_then(|v| v.as_u64()).unwrap_or_else(|| panic!("{k} of event {i}"))
+    };
+    assert_eq!(events.len(), (CHUNKS) * 4);
+    let kex0_end = field(2, "end_ns");
+    let h2d1_start = field(4, "start_ns");
+    assert!(
+        h2d1_start < kex0_end,
+        "stream 1 upload ({h2d1_start}) must overlap stream 0 kernel (ends {kex0_end})"
+    );
+}

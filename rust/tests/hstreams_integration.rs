@@ -95,7 +95,9 @@ fn cross_stream_wait_event_orders_work() {
 fn transfers_overlap_compute_on_paced_device() {
     // Two streams on a paced profile: stream B's H2D must start before
     // stream A's KEX finishes — the paper's overlap, observed directly
-    // from the event samples.
+    // from the event samples.  Under the virtual clock the modeled
+    // milliseconds cost no real time and the assertion is exact instead
+    // of OS-scheduler dependent.
     let mut profile = DeviceProfile::instant();
     profile.name = "paced-test-sim".into(); // opt out of auto-dilation
     profile.h2d_gbps = 0.05; // 256KiB ≈ 5 ms
@@ -103,6 +105,7 @@ fn transfers_overlap_compute_on_paced_device() {
     let ctx = ContextBuilder::new()
         .profile(profile)
         .only_artifacts(["vector_add"])
+        .time_mode(hetstream::device::TimeMode::Virtual)
         .build()
         .expect("context");
 

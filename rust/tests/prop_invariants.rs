@@ -171,6 +171,199 @@ fn prop_json_numbers_roundtrip() {
     });
 }
 
+// --- virtual-clock scheduler properties ---------------------------------
+
+mod sched {
+    use std::sync::Arc;
+
+    use hetstream::device::{DevRegion, DeviceProfile, HostSrc, TimeMode};
+    use hetstream::hstreams::{host_dst, Context, ContextBuilder, Event};
+    use hetstream::util::prop::Rng;
+
+    const BURNER_BYTES: usize = 65536 * 4;
+
+    /// One op of a randomly generated multi-stream program.
+    #[derive(Debug, Clone)]
+    pub enum Op {
+        H2d { stream: usize, len: usize },
+        D2h { stream: usize, len: usize },
+        Kex { stream: usize, flops: u64 },
+        /// Make `stream`'s next op wait on issued op `dep`.
+        Wait { stream: usize, dep: usize },
+    }
+
+    /// Generate a program: `streams` in-order pipelines with random
+    /// transfers, kernels and cross-stream waits on *earlier* ops.
+    pub fn gen_program(rng: &mut Rng, streams: usize) -> Vec<Op> {
+        let n_ops = rng.range(6, 28);
+        let mut ops = Vec::with_capacity(n_ops);
+        let mut issued = 0usize;
+        for _ in 0..n_ops {
+            let stream = rng.range(0, streams - 1);
+            match rng.below(8) {
+                0 | 1 | 2 => {
+                    ops.push(Op::H2d { stream, len: rng.range(64, 65536) });
+                    issued += 1;
+                }
+                3 | 4 => {
+                    ops.push(Op::D2h { stream, len: rng.range(64, 65536) });
+                    issued += 1;
+                }
+                5 | 6 => {
+                    ops.push(Op::Kex { stream, flops: rng.range(1_000, 400_000) as u64 });
+                    issued += 1;
+                }
+                _ => {
+                    if issued > 0 {
+                        ops.push(Op::Wait { stream, dep: rng.range(0, issued - 1) });
+                    }
+                }
+            }
+        }
+        ops
+    }
+
+    /// Fresh virtual-mode context on a small paced profile (`-sim`
+    /// suffix: used as-is, no auto-dilation).
+    pub fn virtual_ctx(workers: usize) -> Context {
+        ContextBuilder::new()
+            .profile(DeviceProfile {
+                name: "prop-sim".into(),
+                h2d_gbps: 0.5,
+                d2h_gbps: 0.4,
+                latency_us: 10.0,
+                alloc_us_per_mb: 50.0,
+                gflops: 1.0,
+                launch_us: 5.0,
+                duplex: true,
+            })
+            .only_artifacts(["burner_8"])
+            .compute_workers(workers)
+            .time_mode(TimeMode::Virtual)
+            .build()
+            .expect("context")
+    }
+
+    /// Execute the program; returns per issued op: (stream, explicit
+    /// cross-stream dep indices, completion event).
+    pub fn run_program(
+        ctx: &Context,
+        streams: usize,
+        ops: &[Op],
+    ) -> Vec<(usize, Vec<usize>, Event)> {
+        let payload = Arc::new(vec![0x4du8; 65536]);
+        let xfer = DevRegion::whole(ctx.alloc(65536).unwrap(), 65536);
+        let kin = DevRegion::whole(ctx.alloc(BURNER_BYTES).unwrap(), BURNER_BYTES);
+        let kout = DevRegion::whole(ctx.alloc(BURNER_BYTES).unwrap(), BURNER_BYTES);
+
+        let mut ss: Vec<_> = (0..streams).map(|_| ctx.stream()).collect();
+        let mut issued: Vec<(usize, Vec<usize>, Event)> = Vec::new();
+        let mut pending: Vec<Vec<usize>> = vec![Vec::new(); streams];
+        for op in ops {
+            match op {
+                Op::H2d { stream, len } => {
+                    let region = DevRegion { buf: xfer.buf, off: 0, len: *len };
+                    let src = HostSrc { data: payload.clone(), off: 0, len: *len };
+                    let e = ss[*stream].h2d(src, region);
+                    issued.push((*stream, std::mem::take(&mut pending[*stream]), e));
+                }
+                Op::D2h { stream, len } => {
+                    let region = DevRegion { buf: xfer.buf, off: 0, len: *len };
+                    let e = ss[*stream].d2h(region, host_dst(*len));
+                    issued.push((*stream, std::mem::take(&mut pending[*stream]), e));
+                }
+                Op::Kex { stream, flops } => {
+                    let e = ss[*stream].kex_with(
+                        "burner_8",
+                        vec![kin],
+                        vec![kout],
+                        Some(*flops),
+                        1,
+                    );
+                    issued.push((*stream, std::mem::take(&mut pending[*stream]), e));
+                }
+                Op::Wait { stream, dep } => {
+                    ss[*stream].wait_event(issued[*dep].2.clone());
+                    pending[*stream].push(*dep);
+                }
+            }
+        }
+        for s in &ss {
+            s.sync();
+        }
+        issued
+    }
+}
+
+#[test]
+fn prop_virtual_stream_order_is_fifo() {
+    use hetstream::util::prop::{check, Rng};
+    check(25, |rng: &mut Rng| {
+        let streams = rng.range(1, 3);
+        let prog = sched::gen_program(rng, streams);
+        let ctx = sched::virtual_ctx(2);
+        let issued = sched::run_program(&ctx, streams, &prog);
+        // Per-stream FIFO: each op starts no earlier than its stream
+        // predecessor retires (in-order pipeline semantics), exactly.
+        let mut last_end = vec![None; streams];
+        for (stream, _, e) in &issued {
+            let s = e.sample().expect("synced");
+            if let Some(end) = last_end[*stream] {
+                assert!(s.start >= end, "stream {stream} op started before predecessor retired");
+            }
+            assert!(s.end >= s.start);
+            last_end[*stream] = Some(s.end);
+        }
+    });
+}
+
+#[test]
+fn prop_no_op_fires_before_its_deps() {
+    use hetstream::util::prop::{check, Rng};
+    check(25, |rng: &mut Rng| {
+        let streams = rng.range(2, 3);
+        let prog = sched::gen_program(rng, streams);
+        let ctx = sched::virtual_ctx(1);
+        let issued = sched::run_program(&ctx, streams, &prog);
+        for (_, deps, e) in &issued {
+            let s = e.sample().expect("synced");
+            for &d in deps {
+                let dep = issued[d].2.sample().expect("dep synced");
+                assert!(
+                    s.start >= dep.end,
+                    "op started at {:?} before its cross-stream dep retired at {:?}",
+                    s.start,
+                    dep.end
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_virtual_timeline_identical_across_runs() {
+    use hetstream::util::prop::{check, Rng};
+    // Two fresh contexts (2 kernel workers — the racy case the clock's
+    // admission gate makes deterministic) replay one seeded program;
+    // every op's (start, end) must match bit-for-bit.
+    check(12, |rng: &mut Rng| {
+        let streams = rng.range(1, 3);
+        let prog = sched::gen_program(rng, streams);
+        let timeline = |ctx: &hetstream::hstreams::Context| -> Vec<(u64, u64)> {
+            sched::run_program(ctx, streams, &prog)
+                .iter()
+                .map(|(_, _, e)| {
+                    let s = e.sample().unwrap();
+                    (s.start.as_nanos(), s.end.as_nanos())
+                })
+                .collect()
+        };
+        let a = timeline(&sched::virtual_ctx(2));
+        let b = timeline(&sched::virtual_ctx(2));
+        assert_eq!(a, b, "virtual timeline must be reproducible");
+    });
+}
+
 #[test]
 fn prop_halo_overhead_ratio_predicts_cases() {
     use hetstream::partition::halo_overhead_ratio;
