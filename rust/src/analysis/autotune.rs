@@ -19,6 +19,16 @@ use crate::Result;
 
 use super::stages::StageTimes;
 
+/// Analytic stream-count suggestion straight from a lowered plan: the
+/// IR's byte/FLOP annotations give the stage balance without running
+/// anything (the per-plan features the ML-tuning line needs).
+pub fn predict_streams_for_plan(
+    plan: &crate::plan::StreamPlan,
+    profile: &crate::device::DeviceProfile,
+) -> usize {
+    predict_streams(&plan.stage_times(profile))
+}
+
 /// Analytic stream-count suggestion from a stage-by-stage measurement.
 pub fn predict_streams(st: &StageTimes) -> usize {
     let total = st.total().as_secs_f64();

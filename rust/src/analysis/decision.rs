@@ -21,6 +21,15 @@ pub enum Decision {
     NotWorthHighR,
 }
 
+/// Apply the paper's rule to a lowered plan on a given device: R comes
+/// from the plan's own byte/FLOP annotations.
+pub fn decide_plan(
+    plan: &crate::plan::StreamPlan,
+    profile: &crate::device::DeviceProfile,
+) -> Decision {
+    decide(plan.stage_times(profile).r_h2d())
+}
+
 /// Apply the paper's rule to a measured R.
 pub fn decide(r: f64) -> Decision {
     if r < LO_THRESHOLD {

@@ -8,8 +8,8 @@ mod cdf;
 mod decision;
 mod stages;
 
-pub use autotune::{autotune_streams, predict_streams, AutotuneResult};
+pub use autotune::{autotune_streams, predict_streams, predict_streams_for_plan, AutotuneResult};
 pub use categorize::{categorize, Category, DependencyFacts, TaskDep};
 pub use cdf::{cdf_points, fraction_at_or_below, CdfPoint};
-pub use decision::{decide, Decision, HI_THRESHOLD, LO_THRESHOLD};
+pub use decision::{decide, decide_plan, Decision, HI_THRESHOLD, LO_THRESHOLD};
 pub use stages::{measure_stages, KexCall, OffloadSpec, StageTimes};

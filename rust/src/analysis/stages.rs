@@ -25,7 +25,9 @@ pub struct KexCall {
 }
 
 /// A stage-by-stage measurable offload: what moves in, what runs, what
-/// moves out.
+/// moves out.  Derivable from any lowered workload via
+/// [`crate::plan::StreamPlan::offload_spec`], so the measurement
+/// protocol consumes the same IR the executor runs.
 #[derive(Debug, Clone)]
 pub struct OffloadSpec {
     pub name: String,

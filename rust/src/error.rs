@@ -15,6 +15,8 @@ pub enum Error {
     Arena(String),
     /// Stream/engine machinery failure (disconnected queue, poisoned op).
     Stream(String),
+    /// A malformed `StreamPlan` (forward dep, out-of-buffer region, ...).
+    Plan(String),
     /// Configuration / CLI errors.
     Config(String),
     /// I/O (manifest and artifact loading).
@@ -33,6 +35,7 @@ impl fmt::Display for Error {
             }
             Error::Arena(m) => write!(f, "device arena error: {m}"),
             Error::Stream(m) => write!(f, "stream error: {m}"),
+            Error::Plan(m) => write!(f, "plan error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }

@@ -1,6 +1,6 @@
 //! E1 / Fig. 1: CDF of R_H2D and R_D2H over the 223-config corpus.
 
-use crate::analysis::{fraction_at_or_below, KexCall, OffloadSpec};
+use crate::analysis::{fraction_at_or_below, OffloadSpec};
 use crate::corpus::{all_configs, BenchConfig};
 use crate::device::DeviceProfile;
 use crate::hstreams::Context;
@@ -51,8 +51,10 @@ pub fn fig1_engine(
     (summarize(&rows), rows)
 }
 
-/// Map a corpus descriptor to a stage-measurable offload (burner-backed
-/// KEX under the descriptor's FLOP budget).
+/// Map a corpus descriptor to a stage-measurable offload: lower it to
+/// its bulk [`crate::plan::StreamPlan`] and read the spec off the IR's
+/// op annotations (burner-backed KEX under the descriptor's FLOP
+/// budget).
 ///
 /// Bytes and FLOPs are scaled down by the engine time-dilation factor so
 /// one engine-measured config costs about what the paper-scale analytic
@@ -60,21 +62,10 @@ pub fn fig1_engine(
 /// the analytic model up to the (dilated) fixed latencies.  Iterative
 /// kernels are capped at 20 repeats to keep the 223-config sweep
 /// tractable (R for heavily iterative apps is then an upper bound on
-/// R_H2D — they are non-streamable either way).
+/// R_H2D — they are non-streamable either way).  The scaling rules live
+/// in [`crate::plan::lower_corpus_bulk`].
 pub fn offload_spec(c: &BenchConfig) -> OffloadSpec {
-    let dil = crate::device::DILATION;
-    let repeats = c.kex_iterations.clamp(1, 20);
-    let flops_per_iter = (c.flops_per_iteration() as f64 / dil) as u64;
-    OffloadSpec {
-        name: format!("{}/{}", c.app, c.config),
-        h2d: vec![((c.h2d_bytes as f64 / dil) as usize).max(4)],
-        kex: vec![KexCall {
-            artifact: "burner_64".into(),
-            flops: flops_per_iter.min(300_000_000),
-            repeats,
-        }],
-        d2h: vec![((c.d2h_bytes as f64 / dil) as usize).max(4)],
-    }
+    crate::plan::lower_corpus_bulk(c, "burner_64").offload_spec()
 }
 
 fn summarize(rows: &[Fig1Row]) -> Table {

@@ -8,6 +8,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod fig9;
 pub mod lavamd;
+pub mod sweep;
 pub mod table2;
 
 pub use fig1::{fig1_analytic, fig1_engine, offload_spec, Fig1Row};
@@ -16,6 +17,7 @@ pub use fig3::fig3;
 pub use fig4::fig4;
 pub use fig9::{fig9, measure_one, rgain, Fig9Row};
 pub use lavamd::lavamd_negative;
+pub use sweep::{sweep_corpus, SweepRow};
 pub use table2::table2;
 
 use crate::corpus::BenchConfig;

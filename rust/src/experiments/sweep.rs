@@ -1,0 +1,153 @@
+//! The full-corpus streaming sweep (`repro sweep --corpus`): every
+//! Table-1 application lowers to its [`crate::plan::StreamPlan`] and
+//! runs through the one executor across a stream-count ladder, under
+//! the virtual clock — sleep-free, deterministic, per-commit cheap.
+//!
+//! Validation is executor-level: the outputs of every ladder point must
+//! equal the 1-stream run bit-for-bit (same kernels over the same
+//! bytes, any placement).  A structural `plan.validate()` failure or a
+//! mis-validated run marks the row failed; the CLI exits non-zero if
+//! any row fails, which is what the CI smoke job checks.
+
+use crate::analysis::predict_streams_for_plan;
+use crate::corpus::{all_configs, BenchConfig};
+use crate::hstreams::Context;
+use crate::metrics::Table;
+use crate::plan::{lower_corpus_streamed, outputs_match, Executor, CORPUS_BURNER};
+use crate::Result;
+
+/// One corpus app's ladder measurement.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub suite: &'static str,
+    pub app: &'static str,
+    pub config: String,
+    pub category: &'static str,
+    pub tasks: usize,
+    /// (streams, modeled ms) per ladder point; index 0 is the 1-stream
+    /// reference.
+    pub ladder: Vec<(usize, f64)>,
+    pub best_streams: usize,
+    /// Paper metric vs the 1-stream pipeline: (t1 / t_best − 1) · 100.
+    pub improvement_pct: f64,
+    /// Analytic §6 stream-count suggestion from the plan features.
+    pub predicted_streams: usize,
+    pub validated: bool,
+    pub error: Option<String>,
+}
+
+fn sweep_one(ctx: &Context, c: &BenchConfig, ladder: &[usize]) -> SweepRow {
+    let mut row = SweepRow {
+        suite: c.suite.label(),
+        app: c.app,
+        config: c.config.clone(),
+        category: c.category().label(),
+        tasks: 0,
+        ladder: Vec::new(),
+        best_streams: 1,
+        improvement_pct: 0.0,
+        predicted_streams: 0,
+        validated: false,
+        error: None,
+    };
+    let plan = lower_corpus_streamed(c, CORPUS_BURNER);
+    if let Err(e) = plan.validate() {
+        row.error = Some(e.to_string());
+        return row;
+    }
+    row.tasks = plan.tasks();
+    row.predicted_streams = predict_streams_for_plan(&plan, ctx.profile());
+    let exec = Executor::new(ctx);
+
+    let reference = match exec.run(&plan, 1) {
+        Ok(r) => r,
+        Err(e) => {
+            row.error = Some(e.to_string());
+            return row;
+        }
+    };
+    let t1 = reference.wall.as_secs_f64() * 1e3;
+    row.ladder.push((1, t1));
+    row.validated = true;
+
+    for &n in ladder.iter().filter(|&&n| n > 1) {
+        match exec.run(&plan, n) {
+            Ok(r) if outputs_match(&reference, &r) => {
+                row.ladder.push((n, r.wall.as_secs_f64() * 1e3));
+            }
+            // Mis-validated points stay out of the ladder — a "best"
+            // time from a run with wrong outputs is not a result — and
+            // the first failure cause is the one reported.
+            Ok(_) => {
+                row.validated = false;
+                row.error.get_or_insert_with(|| format!("outputs diverge at {n} streams"));
+            }
+            Err(e) => {
+                row.validated = false;
+                row.error.get_or_insert_with(|| e.to_string());
+            }
+        }
+    }
+
+    let (bn, bt) = row
+        .ladder
+        .iter()
+        .copied()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap_or((1, t1));
+    row.best_streams = bn;
+    row.improvement_pct = (t1 / bt - 1.0) * 100.0;
+    row
+}
+
+/// Sweep the corpus: one representative (first) configuration per app,
+/// or every configuration with `all_cfgs`.  Returns the rendered table,
+/// the rows, and the number of failed rows.
+pub fn sweep_corpus(
+    ctx: &Context,
+    ladder: &[usize],
+    all_cfgs: bool,
+) -> Result<(Table, Vec<SweepRow>, usize)> {
+    let mut configs = all_configs();
+    if !all_cfgs {
+        let mut seen = std::collections::HashSet::new();
+        configs.retain(|c| seen.insert((c.app, c.suite)));
+    }
+
+    let rows: Vec<SweepRow> = configs.iter().map(|c| sweep_one(ctx, c, ladder)).collect();
+
+    let ladder_label = ladder.iter().map(|n| n.to_string()).collect::<Vec<_>>().join("/");
+    let mut t = Table::new(
+        format!("Corpus sweep — StreamPlan executor, {ladder_label} streams"),
+        &[
+            "suite", "app", "config", "category", "tasks", "1-stream (ms)", "best", "improvement",
+            "predicted", "valid",
+        ],
+    );
+    for r in &rows {
+        let t1 = r.ladder.first().map(|&(_, ms)| ms).unwrap_or(f64::NAN);
+        let best = r
+            .ladder
+            .iter()
+            .find(|&&(n, _)| n == r.best_streams)
+            .map(|&(n, ms)| format!("{ms:.2} ms @{n}"))
+            .unwrap_or_else(|| "-".into());
+        t.row(&[
+            r.suite.to_string(),
+            r.app.to_string(),
+            r.config.clone(),
+            r.category.to_string(),
+            r.tasks.to_string(),
+            format!("{t1:.2}"),
+            best,
+            format!("{:+.1}%", r.improvement_pct),
+            r.predicted_streams.to_string(),
+            match &r.error {
+                Some(e) => format!("FAIL: {e}"),
+                None => r.validated.to_string(),
+            },
+        ]);
+    }
+    let failures = rows.iter().filter(|r| r.error.is_some() || !r.validated).count();
+    Ok((t, rows, failures))
+}

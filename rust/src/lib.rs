@@ -25,6 +25,10 @@
 //! - [`analysis`] — the stage-by-stage analyzer that measures the data
 //!   transfer ratio *R* (11-run medians), the CDF builder behind Fig. 1,
 //!   the streaming-necessity decision rule, and the Table-2 categorizer.
+//! - [`plan`] — the unified `StreamPlan` IR: every workload lowers to
+//!   a task DAG of typed H2D/KEX/D2H ops with byte/FLOP annotations,
+//!   executed by one scheduler ([`plan::Executor`]) that maps any plan
+//!   onto `n` streams.
 //! - [`corpus`] — all 56 benchmarks × 223 input configurations of
 //!   Table 1 as workload descriptors.
 //! - [`workloads`] — the 13 streamed benchmark drivers of Fig. 9 plus
@@ -44,6 +48,7 @@ pub mod experiments;
 pub mod hstreams;
 pub mod metrics;
 pub mod partition;
+pub mod plan;
 pub mod runtime;
 pub mod util;
 pub mod workloads;

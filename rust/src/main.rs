@@ -40,6 +40,10 @@ COMMANDS:
   autotune NAME  Pick the best stream count for a benchmark (paper §6
                  future work): analytic prediction + measured ladder
   survey      Full corpus CSV (analytic R + category + decision)
+  sweep       Run the corpus through the StreamPlan executor across a
+              stream ladder (virtual clock; exits non-zero on any
+              validation failure)
+                --corpus [--ladder 1,2,4,8] [--all-configs] [--csv PATH]
   trace NAME  Dump one benchmark's virtual event timeline as JSON
                 [--streams N=4] [--scale S=2] [--out PATH]
   quickstart  Smoke run: vector_add through the full stack
@@ -236,6 +240,41 @@ fn main() -> Result<()> {
                 ]);
             }
             print!("{}", t.csv());
+        }
+        Some("sweep") => {
+            if !args.flag("corpus") {
+                return Err(cli_err("usage: repro sweep --corpus [--ladder 1,2,4,8]".into()));
+            }
+            let ladder: Vec<usize> = match args.get("ladder") {
+                Some(spec) => spec
+                    .split(',')
+                    .map(|tok| tok.trim().parse::<usize>())
+                    .collect::<std::result::Result<_, _>>()
+                    .map_err(|_| cli_err(format!("bad --ladder `{spec}`")))?,
+                None => vec![1, 2, 4, 8],
+            };
+            let ctx = make_ctx_with(
+                &args,
+                profile,
+                Some(vec![hetstream::plan::CORPUS_BURNER.into()]),
+                false,
+            )?;
+            let (table, rows, failures) =
+                hetstream::experiments::sweep_corpus(&ctx, &ladder, args.flag("all-configs"))
+                    .map_err(|e| cli_err(e.to_string()))?;
+            println!("{}", table.markdown());
+            if let Some(path) = args.get("csv") {
+                std::fs::write(path, table.csv())?;
+                println!("wrote {path}");
+            }
+            println!(
+                "swept {} corpus rows through the plan executor (ladder {:?})",
+                rows.len(),
+                ladder
+            );
+            if failures > 0 {
+                return Err(cli_err(format!("{failures} corpus row(s) failed validation")));
+            }
         }
         Some("trace") => {
             let name = args

@@ -1,0 +1,165 @@
+//! The one scheduler: map any [`StreamPlan`] onto `n` hstreams.
+//!
+//! Placement policy (DESIGN.md §Plan):
+//!
+//! - `Slot::Broadcast` ops ride stream 0; every *other* stream's first
+//!   op waits on their completion events (broadcast fan-out, exactly
+//!   the hStreams idiom the hand-rolled drivers used).
+//! - `Slot::Task(lane)` ops ride stream `lane % n`.  Independent and
+//!   halo lowerings pass the task index as lane (round-robin);
+//!   wavefront lowerings pass the slot within the anti-diagonal, so
+//!   concurrency per diagonal follows the paper's Fig. 8.
+//! - Explicit `deps` become `wait_event`s on the producing op's event —
+//!   cross-stream RAW edges; same-stream deps are timing-neutral under
+//!   the FIFO engine queues.
+//!
+//! Ops are submitted in plan order (a topological order by
+//! construction), the executor owns every device buffer's lifetime and
+//! assembles host outputs from the D2H ops, and all byte accounting
+//! comes from the op annotations.
+
+use std::time::Duration;
+
+use crate::device::{DevRegion, HostDst, HostSrc};
+use crate::hstreams::{Context, Event};
+use crate::Result;
+
+use super::{PlanOpKind, Slot, StreamPlan};
+
+/// Outcome of one plan execution.
+#[derive(Debug, Clone)]
+pub struct PlanRun {
+    /// Timeline makespan across all streams (virtual under
+    /// `TimeMode::Virtual`, measured under `Wallclock`).
+    pub wall: Duration,
+    /// The assembled host outputs, one per [`StreamPlan::outputs`] entry.
+    pub outputs: Vec<Vec<u8>>,
+    /// Host→device bytes actually transferred (incl. halo redundancy).
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    /// Pipeline tasks executed (`Task`-slot kernels).
+    pub tasks: usize,
+}
+
+/// Executes plans on a [`Context`].
+pub struct Executor<'c> {
+    ctx: &'c Context,
+}
+
+impl<'c> Executor<'c> {
+    pub fn new(ctx: &'c Context) -> Self {
+        Self { ctx }
+    }
+
+    /// Run `plan` on `streams` streams (clamped to ≥ 1) and return the
+    /// makespan, assembled outputs and byte counts.
+    pub fn run(&self, plan: &StreamPlan, streams: usize) -> Result<PlanRun> {
+        plan.validate()?;
+        let n = streams.max(1);
+        let ctx = self.ctx;
+
+        // Allocate every plan buffer up front; on a mid-way failure
+        // (arena exhaustion) release what was taken — callers like the
+        // corpus sweep treat executor errors as per-plan outcomes and
+        // keep using the same context, so a failed plan must not leak.
+        let mut bufs: Vec<DevRegion> = Vec::with_capacity(plan.bufs.len());
+        for &b in &plan.bufs {
+            match ctx.alloc(b) {
+                Ok(id) => bufs.push(DevRegion::whole(id, b)),
+                Err(e) => {
+                    for r in &bufs {
+                        let _ = ctx.free(r.buf);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let region = |r: &super::PlanRegion| DevRegion {
+            buf: bufs[r.buf].buf,
+            off: r.off,
+            len: r.len,
+        };
+        let dsts: Vec<HostDst> =
+            plan.outputs.iter().map(|&b| crate::hstreams::host_dst(b)).collect();
+
+        let mut ss: Vec<_> = (0..n).map(|_| ctx.stream()).collect();
+        let mut events: Vec<Event> = Vec::with_capacity(plan.ops.len());
+        let mut broadcast_events: Vec<Event> = Vec::new();
+        let mut started = vec![false; n];
+        let mut h2d_bytes = 0u64;
+        let mut d2h_bytes = 0u64;
+
+        for op in &plan.ops {
+            let si = match op.slot {
+                Slot::Broadcast => 0,
+                Slot::Task(lane) => lane % n,
+            };
+            let s = &mut ss[si];
+            // Broadcast fan-out: a non-zero stream's first op waits on
+            // every broadcast op (stream 0 is ordered after them by its
+            // own FIFO program order).
+            if !started[si] {
+                started[si] = true;
+                if si != 0 {
+                    for e in &broadcast_events {
+                        s.wait_event(e.clone());
+                    }
+                }
+            }
+            for &d in &op.deps {
+                s.wait_event(events[d].clone());
+            }
+            let e = match &op.kind {
+                PlanOpKind::H2d { src, dst } => {
+                    h2d_bytes += dst.len as u64;
+                    s.h2d(
+                        HostSrc { data: src.data.clone(), off: src.off, len: src.len },
+                        region(dst),
+                    )
+                }
+                PlanOpKind::Kex { artifact, inputs, outputs, flops, repeats } => s.kex_with(
+                    artifact.clone(),
+                    inputs.iter().map(&region).collect(),
+                    outputs.iter().map(&region).collect(),
+                    *flops,
+                    *repeats,
+                ),
+                PlanOpKind::D2h { src, output, off } => {
+                    d2h_bytes += src.len as u64;
+                    s.d2h(region(src), HostDst { data: dsts[*output].data.clone(), off: *off })
+                }
+            };
+            if matches!(op.slot, Slot::Broadcast) {
+                broadcast_events.push(e.clone());
+            }
+            events.push(e);
+        }
+
+        for s in &ss {
+            s.sync();
+        }
+        let wall = crate::hstreams::makespan(ss.iter().flat_map(|s| s.events()));
+
+        let outputs: Vec<Vec<u8>> = dsts.iter().map(|d| d.data.lock().unwrap().clone()).collect();
+        // Free everything even if one free fails (can only happen on a
+        // foreign double-free); report the first error afterwards.
+        let mut free_err = None;
+        for r in &bufs {
+            if let Err(e) = ctx.free(r.buf) {
+                free_err.get_or_insert(e);
+            }
+        }
+        if let Some(e) = free_err {
+            return Err(e);
+        }
+        Ok(PlanRun { wall, outputs, h2d_bytes, d2h_bytes, tasks: plan.tasks() })
+    }
+}
+
+/// Bit-for-bit output equality between two runs — the executor-level
+/// oracle: a streamed mapping must reproduce the single-stream (or
+/// bulk-lowered) outputs exactly, whatever the dtype, because every
+/// task executes the same kernels on the same bytes.
+pub fn outputs_match(a: &PlanRun, b: &PlanRun) -> bool {
+    a.outputs == b.outputs
+}

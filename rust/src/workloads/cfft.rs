@@ -50,7 +50,7 @@ impl Benchmark for ConvFft2d {
                 Arc::new(bytes::from_f32(&tiles)),
                 self.chunks,
             )],
-            shared_inputs: vec![bytes::from_f32(&filt)],
+            shared_inputs: vec![Arc::new(bytes::from_f32(&filt))],
             output_chunk_bytes: vec![elems * 4],
             // FFT -> pointwise -> IFFT device time per tile.
             flops_per_chunk: Some(2_000_000),

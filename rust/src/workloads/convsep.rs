@@ -51,7 +51,7 @@ impl Benchmark for ConvSep {
                 self.chunks,
                 HALO * COLS * 4,
             )],
-            shared_inputs: vec![bytes::from_f32(&krow), bytes::from_f32(&kcol)],
+            shared_inputs: vec![Arc::new(bytes::from_f32(&krow)), Arc::new(bytes::from_f32(&kcol))],
             output_chunk_bytes: vec![ROWS * COLS * 4],
             // Device time of both passes on the simulated MIC (paper §5:
             // R ≈ 19%, gain ≈ 45%).

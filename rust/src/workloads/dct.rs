@@ -50,7 +50,7 @@ impl Benchmark for Dct8x8 {
             name: "DCT8x8",
             artifact: "dct8x8",
             streamed_inputs: vec![Windows::disjoint(Arc::new(bytes::from_f32(&x)), self.chunks)],
-            shared_inputs: vec![bytes::from_f32(&basis)],
+            shared_inputs: vec![Arc::new(bytes::from_f32(&basis))],
             output_chunk_bytes: vec![ROWS * COLS * 4],
             // Two basis matmuls per block on the device.
             flops_per_chunk: Some(2_100_000),

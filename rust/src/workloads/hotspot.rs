@@ -6,14 +6,16 @@
 //! stream to overlap beyond the initial upload.  The paper (§4.1):
 //! "such cases can be streamed by overlapping the data transfer and the
 //! first iteration … the overlapping brings no performance benefit for
-//! a large number of iterations."  This driver measures exactly that:
-//! `Streamed` splits the two uploads across streams (everything the
-//! category permits) and the gain collapses toward zero as steps grow.
+//! a large number of iterations."  The lowering encodes exactly that:
+//! the two uploads carry different lanes (everything the category
+//! permits — on one stream they serialize, on two they overlap), and
+//! the kernel chain is a pure dependency chain on lane 0, so the gain
+//! collapses toward zero as steps grow.
 
 use std::sync::Arc;
 
-use crate::device::DevRegion;
 use crate::hstreams::Context;
+use crate::plan::{Executor, HostSlice, PlanRegion, Slot, StreamPlan};
 use crate::runtime::bytes;
 use crate::Result;
 
@@ -35,6 +37,51 @@ impl Hotspot {
     pub fn steps(&self) -> usize {
         self.steps
     }
+
+    /// Lower the ping-pong chain to the task-DAG IR.
+    pub fn lower(&self, temp0: &[f32], power: &[f32]) -> StreamPlan {
+        let bytes_n = N * N * 4;
+        let mut p = StreamPlan::new("hotspot");
+        let out = p.output(bytes_n);
+        let ta = p.buf(bytes_n);
+        let tb = p.buf(bytes_n);
+        let pw = p.buf(bytes_n);
+
+        // The two uploads take different lanes: on one stream they
+        // serialize (bulk port), on two they overlap — all the
+        // concurrency the Iterative category permits.
+        let e_t = p.h2d(
+            Slot::Task(0),
+            HostSlice::whole(Arc::new(bytes::from_f32(temp0))),
+            PlanRegion::whole(ta, bytes_n),
+            vec![],
+        );
+        let e_p = p.h2d(
+            Slot::Task(1),
+            HostSlice::whole(Arc::new(bytes::from_f32(power))),
+            PlanRegion::whole(pw, bytes_n),
+            vec![],
+        );
+
+        // Ping-pong chain: step k reads step k-1's output — a pure
+        // RAW chain on lane 0, serialized regardless of stream count.
+        let (mut src, mut dst) = (ta, tb);
+        for step in 0..self.steps {
+            let deps = if step == 0 { vec![e_t, e_p] } else { Vec::new() };
+            p.kex(
+                Slot::Task(0),
+                "hotspot_step",
+                vec![PlanRegion::whole(src, bytes_n), PlanRegion::whole(pw, bytes_n)],
+                vec![PlanRegion::whole(dst, bytes_n)],
+                None,
+                1,
+                deps,
+            );
+            std::mem::swap(&mut src, &mut dst);
+        }
+        p.d2h(Slot::Task(0), PlanRegion::whole(src, bytes_n), out, 0, vec![]);
+        p
+    }
 }
 
 impl Benchmark for Hotspot {
@@ -47,51 +94,19 @@ impl Benchmark for Hotspot {
     }
 
     fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
-        let bytes_n = N * N * 4;
         let temp0 = gen_f32(N * N, 221);
         let power = gen_f32(N * N, 222);
-
-        let ta = DevRegion::whole(ctx.alloc(bytes_n)?, bytes_n);
-        let tb = DevRegion::whole(ctx.alloc(bytes_n)?, bytes_n);
-        let pw = DevRegion::whole(ctx.alloc(bytes_n)?, bytes_n);
-        let dst = crate::hstreams::host_dst(bytes_n);
-
         let n_streams = match mode {
             Mode::Baseline => 1,
-            Mode::Streamed(n) => n.max(1),
+            Mode::Streamed(n) => n.max(1).min(2),
         };
 
-        let mut streams: Vec<_> = (0..n_streams.max(2).min(2)).map(|_| ctx.stream()).collect();
-
-        // All the overlap this category permits: the two uploads ride
-        // different streams when streamed.
-        let e_t = streams[0].h2d(
-            crate::device::HostSrc::whole(Arc::new(bytes::from_f32(&temp0))),
-            ta,
-        );
-        let up_stream = if n_streams > 1 && streams.len() > 1 { 1 } else { 0 };
-        let e_p = streams[up_stream].h2d(
-            crate::device::HostSrc::whole(Arc::new(bytes::from_f32(&power))),
-            pw,
-        );
-        // Ping-pong chain: step k reads step k-1's output — a pure
-        // dependency chain, serialized regardless of stream count.
-        streams[0].wait_event(e_t.clone());
-        streams[0].wait_event(e_p.clone());
-        let (mut src, mut dst_buf) = (ta, tb);
-        for _ in 0..self.steps {
-            streams[0].kex("hotspot_step", vec![src, pw], vec![dst_buf]);
-            std::mem::swap(&mut src, &mut dst_buf);
-        }
-        streams[0].d2h(src, dst.clone());
-        for s in &streams {
-            s.sync();
-        }
-        let wall = crate::hstreams::makespan(streams.iter().flat_map(|s| s.events()));
+        let plan = self.lower(&temp0, &power);
+        let run = Executor::new(ctx).run(&plan, n_streams)?;
 
         // Validate against the host oracle iterated the same number of
         // steps (f32 kernel vs f64 oracle: tolerance grows mildly).
-        let got = bytes::to_f32(&dst.data.lock().unwrap());
+        let got = bytes::to_f32(&run.outputs[0]);
         let mut want = temp0.clone();
         for _ in 0..self.steps {
             want = oracle::hotspot_step(&want, &power, N);
@@ -101,17 +116,13 @@ impl Benchmark for Hotspot {
             .zip(&want)
             .all(|(a, b)| (a - b).abs() <= 1e-2 + 1e-3 * b.abs());
 
-        for r in [ta, tb, pw] {
-            ctx.free(r.buf)?;
-        }
-
         Ok(RunStats {
             name: "hotspot".into(),
             mode,
-            wall,
-            h2d_bytes: 2 * bytes_n as u64,
-            d2h_bytes: bytes_n as u64,
-            tasks: self.steps,
+            wall: run.wall,
+            h2d_bytes: run.h2d_bytes,
+            d2h_bytes: run.d2h_bytes,
+            tasks: run.tasks,
             validated: ok,
         })
     }

@@ -42,7 +42,7 @@ impl Benchmark for MatMul {
             name: "MatrixMul",
             artifact: "matmul",
             streamed_inputs: vec![Windows::disjoint(Arc::new(bytes::from_f32(&a)), self.chunks)],
-            shared_inputs: vec![bytes::from_f32(&b)],
+            shared_inputs: vec![Arc::new(bytes::from_f32(&b))],
             output_chunk_bytes: vec![M * N * 4],
             // Effective device GEMM time per band (the paper's 8% regime:
             // compute-bound, small R).

@@ -1,23 +1,30 @@
 //! The streamed benchmark drivers (paper §5 / Fig. 9).
 //!
-//! Every driver runs in two modes:
+//! Every driver *lowers* to a [`crate::plan::StreamPlan`] — the unified
+//! task-DAG IR — and executes through the one [`crate::plan::Executor`]:
 //!
-//! - [`Mode::Baseline`] — the classic non-streamed port: one bulk H2D of
-//!   each input, the kernel grid, one bulk D2H.  No redundant halo
-//!   bytes, no per-task DMA latency — the strongest fair baseline.
-//! - [`Mode::Streamed`] — the paper's multi-stream port: the input is
-//!   partitioned into tasks ([`crate::partition`]); each task's H2D /
-//!   KEX / D2H ride one of `n` streams, so transfers of task *i+1*
-//!   overlap the kernel of task *i*.
+//! - [`Mode::Baseline`] lowers to the classic non-streamed port: one
+//!   bulk H2D of each input, the kernel grid over device windows, one
+//!   bulk D2H.  No redundant halo bytes, no per-task DMA latency — the
+//!   strongest fair baseline.
+//! - [`Mode::Streamed`] lowers to the paper's multi-stream port: the
+//!   input partitions into tasks ([`crate::partition`]); each task's
+//!   H2D / KEX / D2H chain carries a round-robin lane, so the executor
+//!   overlaps transfers of task *i+1* with the kernel of task *i* on
+//!   `n` streams.
 //!
-//! Both modes produce real outputs validated against host oracles
+//! Both plans produce real outputs validated against host oracles
 //! ([`oracle`]); `Streamed` must equal `Baseline` bit-for-bit for
-//! integer kernels and to float tolerance otherwise.
+//! integer kernels and to float tolerance otherwise (and, since both
+//! run the same per-chunk kernels on the same bytes, the plan executor
+//! in fact reproduces baseline outputs bit-for-bit for every
+//! [`GenericWorkload`] — `tests/plan_integration.rs` asserts it).
 //!
 //! Most benchmarks instantiate [`GenericWorkload`] — per-chunk input
 //! *windows* (which may overlap: that is exactly the false-dependent
-//! redundant-boundary transfer of Fig. 7) plus shared broadcast inputs.
-//! Needleman–Wunsch has its own wavefront driver ([`nw`]).
+//! redundant-boundary transfer of Fig. 7) plus shared broadcast inputs
+//! that lower to `Slot::Broadcast` ops.  Needleman–Wunsch lowers its
+//! wavefront (diagonal lanes, cross-tile RAW deps) in [`nw`].
 
 pub mod oracle;
 
@@ -60,8 +67,8 @@ pub use vecadd::VectorAdd;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::device::{DevRegion, HostSrc};
 use crate::hstreams::Context;
+use crate::plan::{Executor, HostSlice, PlanRegion, Slot, StreamPlan};
 use crate::Result;
 
 /// Execution mode of a driver.
@@ -156,7 +163,8 @@ impl Windows {
 }
 
 /// A declaratively-specified streamed benchmark: per-chunk windows over
-/// N streamed inputs, M broadcast inputs, K per-chunk outputs.
+/// N streamed inputs, M broadcast inputs, K per-chunk outputs.  Both
+/// execution modes are thin lowerings to the [`StreamPlan`] IR.
 ///
 /// Artifact signature convention: streamed inputs first, then shared
 /// inputs — all AOT kernels in this repo follow it.
@@ -164,7 +172,9 @@ pub struct GenericWorkload {
     pub name: &'static str,
     pub artifact: &'static str,
     pub streamed_inputs: Vec<Windows>,
-    pub shared_inputs: Vec<Vec<u8>>,
+    /// Broadcast payloads, shared by every task (uploaded once; the
+    /// `Arc` is handed straight to the DMA engine — never deep-cloned).
+    pub shared_inputs: Vec<Arc<Vec<u8>>>,
     /// Per-chunk byte length of each output.
     pub output_chunk_bytes: Vec<usize>,
     /// KEX pacing override (models device-side memory-bound kernels
@@ -177,168 +187,125 @@ impl GenericWorkload {
         self.streamed_inputs[0].windows.len()
     }
 
-    /// Execute; returns (wall, per-output concatenated host bytes,
-    /// streamed h2d bytes).
-    pub fn execute(&self, ctx: &Context, mode: Mode) -> Result<(Duration, Vec<Vec<u8>>, u64)> {
+    /// Lower to the task-DAG IR for the given mode.
+    pub fn lower(&self, mode: Mode) -> StreamPlan {
         match mode {
-            Mode::Baseline => self.execute_baseline(ctx),
-            Mode::Streamed(n) => self.execute_streamed(ctx, n.max(1)),
+            Mode::Baseline => self.lower_baseline(),
+            Mode::Streamed(_) => self.lower_streamed(),
         }
     }
 
-    fn alloc_shared(&self, ctx: &Context) -> Result<Vec<DevRegion>> {
+    /// Execute through the plan executor; returns (wall, per-output
+    /// concatenated host bytes, streamed h2d bytes).
+    pub fn execute(&self, ctx: &Context, mode: Mode) -> Result<(Duration, Vec<Vec<u8>>, u64)> {
+        let n = match mode {
+            Mode::Baseline => 1,
+            Mode::Streamed(n) => n.max(1),
+        };
+        let run = Executor::new(ctx).run(&self.lower(mode), n)?;
+        Ok((run.wall, run.outputs, run.h2d_bytes))
+    }
+
+    /// Shared inputs lower to broadcast H2Ds into dedicated buffers;
+    /// returns their device regions.
+    fn lower_shared(&self, p: &mut StreamPlan) -> Vec<PlanRegion> {
         self.shared_inputs
             .iter()
             .map(|payload| {
-                Ok(DevRegion::whole(ctx.alloc(payload.len())?, payload.len()))
+                let region = PlanRegion::whole(p.buf(payload.len()), payload.len());
+                p.h2d(Slot::Broadcast, HostSlice::whole(payload.clone()), region, vec![]);
+                region
             })
             .collect()
     }
 
     /// Bulk port: whole-array H2D, chunk kernels over device windows,
     /// bulk D2H.
-    fn execute_baseline(&self, ctx: &Context) -> Result<(Duration, Vec<Vec<u8>>, u64)> {
+    fn lower_baseline(&self) -> StreamPlan {
         let chunks = self.chunks();
-        let shared_regions = self.alloc_shared(ctx)?;
+        let mut p = StreamPlan::new(self.name);
+        let shared = self.lower_shared(&mut p);
 
-        // One big device buffer per streamed input.
-        let in_bufs: Vec<DevRegion> = self
+        // One big device buffer per streamed input, uploaded whole.
+        let in_bufs: Vec<usize> = self
             .streamed_inputs
             .iter()
-            .map(|w| Ok(DevRegion::whole(ctx.alloc(w.host.len())?, w.host.len())))
-            .collect::<Result<_>>()?;
+            .map(|w| {
+                let b = p.buf(w.host.len());
+                p.h2d(
+                    Slot::Task(0),
+                    HostSlice::whole(w.host.clone()),
+                    PlanRegion::whole(b, w.host.len()),
+                    vec![],
+                );
+                b
+            })
+            .collect();
         // One big device buffer per output (chunks back-to-back).
-        let out_bufs: Vec<DevRegion> = self
-            .output_chunk_bytes
-            .iter()
-            .map(|&b| Ok(DevRegion::whole(ctx.alloc(b * chunks)?, b * chunks)))
-            .collect::<Result<_>>()?;
-        let dsts: Vec<crate::device::HostDst> =
-            self.output_chunk_bytes.iter().map(|&b| crate::hstreams::host_dst(b * chunks)).collect();
+        let out_bufs: Vec<usize> =
+            self.output_chunk_bytes.iter().map(|&b| p.buf(b * chunks)).collect();
+        let outs: Vec<usize> =
+            self.output_chunk_bytes.iter().map(|&b| p.output(b * chunks)).collect();
 
-        let mut s = ctx.stream();
-        let mut h2d_bytes = 0u64;
-        for (payload, region) in self.shared_inputs.iter().zip(&shared_regions) {
-            s.h2d(HostSrc::whole(Arc::new(payload.clone())), *region);
-            h2d_bytes += region.len as u64;
-        }
-        for (w, region) in self.streamed_inputs.iter().zip(&in_bufs) {
-            s.h2d(HostSrc::whole(w.host.clone()), *region);
-            h2d_bytes += region.len as u64;
-        }
         for c in 0..chunks {
-            let mut ins: Vec<DevRegion> = self
+            let mut ins: Vec<PlanRegion> = self
                 .streamed_inputs
                 .iter()
                 .zip(&in_bufs)
-                .map(|(w, buf)| {
+                .map(|(w, &buf)| {
                     let (off, len) = w.windows[c];
-                    DevRegion { buf: buf.buf, off, len }
+                    PlanRegion { buf, off, len }
                 })
                 .collect();
-            ins.extend(shared_regions.iter().copied());
-            let outs: Vec<DevRegion> = self
+            ins.extend(shared.iter().copied());
+            let kouts: Vec<PlanRegion> = self
                 .output_chunk_bytes
                 .iter()
                 .zip(&out_bufs)
-                .map(|(&b, buf)| DevRegion { buf: buf.buf, off: c * b, len: b })
+                .map(|(&b, &buf)| PlanRegion { buf, off: c * b, len: b })
                 .collect();
-            s.kex_with(self.artifact, ins, outs, self.flops_per_chunk, 1);
+            p.kex(Slot::Task(0), self.artifact, ins, kouts, self.flops_per_chunk, 1, vec![]);
         }
-        for (region, dst) in out_bufs.iter().zip(&dsts) {
-            s.d2h(*region, dst.clone());
+        for ((&b, &buf), &out) in self.output_chunk_bytes.iter().zip(&out_bufs).zip(&outs) {
+            p.d2h(Slot::Task(0), PlanRegion::whole(buf, b * chunks), out, 0, vec![]);
         }
-        s.sync();
-        // Timeline makespan of the offload: virtual (deterministic) under
-        // TimeMode::Virtual, measured wall span under Wallclock.
-        let wall = crate::hstreams::makespan(s.events());
-
-        let outputs: Vec<Vec<u8>> = dsts.iter().map(|d| d.data.lock().unwrap().clone()).collect();
-        for r in in_bufs.iter().chain(&out_bufs).chain(&shared_regions) {
-            ctx.free(r.buf)?;
-        }
-        Ok((wall, outputs, h2d_bytes))
+        p
     }
 
     /// Multi-stream port: per-task windows (redundant halo bytes ride
-    /// along), tasks round-robined over `n` streams.
-    fn execute_streamed(&self, ctx: &Context, n: usize) -> Result<(Duration, Vec<Vec<u8>>, u64)> {
+    /// along), tasks carrying round-robin lanes.
+    fn lower_streamed(&self) -> StreamPlan {
         let chunks = self.chunks();
-        let shared_regions = self.alloc_shared(ctx)?;
+        let mut p = StreamPlan::new(self.name);
+        let shared = self.lower_shared(&mut p);
+        let outs: Vec<usize> =
+            self.output_chunk_bytes.iter().map(|&b| p.output(b * chunks)).collect();
 
-        // Per-task device buffers.
-        let mut task_in: Vec<Vec<DevRegion>> = Vec::with_capacity(chunks);
-        let mut task_out: Vec<Vec<DevRegion>> = Vec::with_capacity(chunks);
         for c in 0..chunks {
-            let ins = self
+            let slot = Slot::Task(c);
+            let task_in: Vec<PlanRegion> = self
                 .streamed_inputs
                 .iter()
                 .map(|w| {
-                    let (_, len) = w.windows[c];
-                    Ok(DevRegion::whole(ctx.alloc(len)?, len))
+                    let (off, len) = w.windows[c];
+                    let region = PlanRegion::whole(p.buf(len), len);
+                    p.h2d(slot, HostSlice { data: w.host.clone(), off, len }, region, vec![]);
+                    region
                 })
-                .collect::<Result<Vec<_>>>()?;
-            let outs = self
+                .collect();
+            let mut ins = task_in;
+            ins.extend(shared.iter().copied());
+            let kouts: Vec<PlanRegion> = self
                 .output_chunk_bytes
                 .iter()
-                .map(|&b| Ok(DevRegion::whole(ctx.alloc(b)?, b)))
-                .collect::<Result<Vec<_>>>()?;
-            task_in.push(ins);
-            task_out.push(outs);
-        }
-        let dsts: Vec<crate::device::HostDst> =
-            self.output_chunk_bytes.iter().map(|&b| crate::hstreams::host_dst(b * chunks)).collect();
-
-        let mut streams: Vec<_> = (0..n).map(|_| ctx.stream()).collect();
-        let mut h2d_bytes = 0u64;
-
-        // Broadcast inputs ride stream 0; every other stream's first op
-        // waits on them (hStreams would use an event here too).
-        let mut shared_events = Vec::new();
-        for (payload, region) in self.shared_inputs.iter().zip(&shared_regions) {
-            let e = streams[0].h2d(HostSrc::whole(Arc::new(payload.clone())), *region);
-            h2d_bytes += region.len as u64;
-            shared_events.push(e);
-        }
-        for (s, stream) in streams.iter_mut().enumerate().skip(1) {
-            if s > 0 {
-                for e in &shared_events {
-                    stream.wait_event(e.clone());
-                }
+                .map(|&b| PlanRegion::whole(p.buf(b), b))
+                .collect();
+            p.kex(slot, self.artifact, ins, kouts.clone(), self.flops_per_chunk, 1, vec![]);
+            for ((region, &out), &b) in kouts.iter().zip(&outs).zip(&self.output_chunk_bytes) {
+                p.d2h(slot, *region, out, c * b, vec![]);
             }
         }
-
-        for c in 0..chunks {
-            let s = &mut streams[c % n];
-            for (w, region) in self.streamed_inputs.iter().zip(&task_in[c]) {
-                let (off, len) = w.windows[c];
-                s.h2d(HostSrc { data: w.host.clone(), off, len }, *region);
-                h2d_bytes += len as u64;
-            }
-            let mut ins = task_in[c].clone();
-            ins.extend(shared_regions.iter().copied());
-            s.kex_with(self.artifact, ins, task_out[c].clone(), self.flops_per_chunk, 1);
-            for ((region, dst), &b) in
-                task_out[c].iter().zip(&dsts).zip(&self.output_chunk_bytes)
-            {
-                s.d2h(*region, crate::device::HostDst { data: dst.data.clone(), off: c * b });
-            }
-        }
-        for s in &streams {
-            s.sync();
-        }
-        let wall = crate::hstreams::makespan(streams.iter().flat_map(|s| s.events()));
-
-        let outputs: Vec<Vec<u8>> = dsts.iter().map(|d| d.data.lock().unwrap().clone()).collect();
-        for regions in task_in.iter().chain(&task_out) {
-            for r in regions {
-                ctx.free(r.buf)?;
-            }
-        }
-        for r in &shared_regions {
-            ctx.free(r.buf)?;
-        }
-        Ok((wall, outputs, h2d_bytes))
+        p
     }
 }
 

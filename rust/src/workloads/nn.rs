@@ -43,7 +43,7 @@ impl Benchmark for Nn {
                 Arc::new(bytes::from_f32(&records)),
                 self.chunks,
             )],
-            shared_inputs: vec![bytes::from_f32(&target)],
+            shared_inputs: vec![Arc::new(bytes::from_f32(&target))],
             output_chunk_bytes: vec![CHUNK * 4],
             // Paper Fig. 4: KEX ≈ 33% for nn on MIC — the distance kernel's
             // device time is memory-bound, not FLOP-bound.

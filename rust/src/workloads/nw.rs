@@ -1,16 +1,18 @@
 //! Rodinia `nw` (Needleman–Wunsch) — the paper's True Dependent
-//! exemplar (Fig. 8): tiles execute diagonal-by-diagonal; tiles on one
-//! diagonal ride different streams concurrently, and each tile's kernel
-//! waits (cross-stream events) on its north / west / northwest
-//! neighbours.  Edges move device-to-device: each tile kernel emits its
-//! south row and east column as separate contiguous outputs that the
-//! dependent tiles read in place.
+//! exemplar (Fig. 8), lowered to the [`StreamPlan`] IR: tiles execute
+//! diagonal-by-diagonal ([`crate::partition::wavefront`]); tiles on one
+//! diagonal carry their slot-within-diagonal as the plan lane, so the
+//! executor spreads them across streams, and each tile's kernel carries
+//! explicit RAW deps on its north / west / northwest neighbours (the
+//! executor turns them into cross-stream events).  Edges move
+//! device-to-device: each tile kernel emits its south row and east
+//! column as separate contiguous outputs that the dependent tiles read
+//! in place.
 
 use std::sync::Arc;
 
-use crate::device::{DevRegion, HostSrc};
 use crate::hstreams::Context;
-use crate::partition::diagonals;
+use crate::plan::{wire_wavefront, Executor, HostSlice, PlanRegion, Slot, StreamPlan};
 use crate::runtime::bytes;
 use crate::Result;
 
@@ -20,6 +22,9 @@ use super::{gen_i32, oracle, Benchmark, Mode, RunStats};
 pub const TILE: usize = 32;
 /// Rodinia's gap penalty (baked into the kernel).
 pub const PENALTY: i32 = 10;
+/// Device time per tile (anti-diagonal sweeps are latency-bound on the
+/// MIC, well above the raw FLOPs).
+const TILE_FLOPS: u64 = 450_000;
 
 pub struct NeedlemanWunsch {
     /// Tile-grid side: the score matrix is (grid*TILE)^2.
@@ -31,8 +36,141 @@ impl NeedlemanWunsch {
         Self { grid: 8 * scale.max(1) }
     }
 
+    /// Exact tile-grid side (property tests exercise small grids).
+    pub fn with_grid(grid: usize) -> Self {
+        Self { grid: grid.max(1) }
+    }
+
     pub fn matrix_size(&self) -> usize {
         self.grid * TILE
+    }
+
+    /// The substitution scores the run is defined over (deterministic).
+    fn sub_scores(&self) -> Vec<i32> {
+        let size = self.matrix_size();
+        gen_i32(size * size, 15, 0xBEEF).iter().map(|&v| v - 5).collect() // scores in [-5, 10)
+    }
+
+    /// Lower the wavefront to the task-DAG IR.  One plan serves every
+    /// stream count: `Baseline` is the same DAG on one stream.
+    pub fn lower(&self) -> StreamPlan {
+        self.lower_with(&self.sub_scores())
+    }
+
+    /// Lowering over caller-provided substitution scores (lets `run`
+    /// share one `sub_scores()` computation with the oracle).
+    fn lower_with(&self, sub_i32: &[i32]) -> StreamPlan {
+        let g = self.grid;
+        let size = g * TILE;
+        let tile_bytes = TILE * TILE * 4;
+        let edge_bytes = TILE * 4;
+
+        // Per-tile substitution payloads (row-major within the tile).
+        let mut tile_sub: Vec<Arc<Vec<u8>>> = Vec::with_capacity(g * g);
+        for bi in 0..g {
+            for bj in 0..g {
+                let mut t = Vec::with_capacity(TILE * TILE);
+                for r in 0..TILE {
+                    let row0 = (bi * TILE + r) * size + bj * TILE;
+                    t.extend_from_slice(&sub_i32[row0..row0 + TILE]);
+                }
+                tile_sub.push(Arc::new(bytes::from_i32(&t)));
+            }
+        }
+
+        // Boundary vectors: score row/col 0 are -penalty * (1-based idx).
+        let north_boundary: Vec<i32> = (0..size as i32).map(|j| -PENALTY * (j + 1)).collect();
+        let west_boundary: Vec<i32> = (0..size as i32).map(|i| -PENALTY * (i + 1)).collect();
+
+        let mut p = StreamPlan::new("nw");
+        let out = p.output(g * g * tile_bytes);
+
+        // Boundaries are broadcast inputs: stream 0, fan-out waits.
+        let nb = p.buf(size * 4);
+        let wb = p.buf(size * 4);
+        let cz = p.buf(4);
+        p.h2d(
+            Slot::Broadcast,
+            HostSlice::whole(Arc::new(bytes::from_i32(&north_boundary))),
+            PlanRegion::whole(nb, size * 4),
+            vec![],
+        );
+        p.h2d(
+            Slot::Broadcast,
+            HostSlice::whole(Arc::new(bytes::from_i32(&west_boundary))),
+            PlanRegion::whole(wb, size * 4),
+            vec![],
+        );
+        p.h2d(
+            Slot::Broadcast,
+            HostSlice::whole(Arc::new(bytes::from_i32(&[0i32]))),
+            PlanRegion::whole(cz, 4),
+            vec![],
+        );
+
+        // Per-tile device buffers (sub, out, south edge, east edge).
+        let sub_bufs: Vec<usize> = (0..g * g).map(|_| p.buf(tile_bytes)).collect();
+        let out_bufs: Vec<usize> = (0..g * g).map(|_| p.buf(tile_bytes)).collect();
+        let south_bufs: Vec<usize> = (0..g * g).map(|_| p.buf(edge_bytes)).collect();
+        let east_bufs: Vec<usize> = (0..g * g).map(|_| p.buf(edge_bytes)).collect();
+
+        // Wavefront: `wire_wavefront` walks the diagonals, assigns each
+        // tile its slot-within-diagonal lane and the RAW deps on its
+        // north/west/northwest kernels.
+        wire_wavefront(g, |tc, lane, deps| {
+            let (bi, bj) = (tc.bi, tc.bj);
+            let t = bi * g + bj;
+
+            p.h2d(
+                lane,
+                HostSlice::whole(tile_sub[t].clone()),
+                PlanRegion::whole(sub_bufs[t], tile_bytes),
+                vec![],
+            );
+
+            // Edge inputs: neighbours' contiguous outputs (their
+            // producing kernels are already in `deps`) or boundary
+            // slices.
+            let north = if bi == 0 {
+                PlanRegion { buf: nb, off: bj * TILE * 4, len: edge_bytes }
+            } else {
+                PlanRegion::whole(south_bufs[(bi - 1) * g + bj], edge_bytes)
+            };
+            let west = if bj == 0 {
+                PlanRegion { buf: wb, off: bi * TILE * 4, len: edge_bytes }
+            } else {
+                PlanRegion::whole(east_bufs[bi * g + bj - 1], edge_bytes)
+            };
+            let corner = match (bi, bj) {
+                (0, 0) => PlanRegion::whole(cz, 4),
+                (0, j) => PlanRegion { buf: nb, off: (j * TILE - 1) * 4, len: 4 },
+                (i, 0) => PlanRegion { buf: wb, off: (i * TILE - 1) * 4, len: 4 },
+                (i, j) => PlanRegion {
+                    buf: south_bufs[(i - 1) * g + j - 1],
+                    off: (TILE - 1) * 4,
+                    len: 4,
+                },
+            };
+
+            let kex = p.kex(
+                lane,
+                "nw_tile",
+                vec![north, west, corner, PlanRegion::whole(sub_bufs[t], tile_bytes)],
+                vec![
+                    PlanRegion::whole(out_bufs[t], tile_bytes),
+                    PlanRegion::whole(south_bufs[t], edge_bytes),
+                    PlanRegion::whole(east_bufs[t], edge_bytes),
+                ],
+                Some(TILE_FLOPS),
+                1,
+                deps,
+            );
+
+            let out_region = PlanRegion::whole(out_bufs[t], tile_bytes);
+            p.d2h(lane, out_region, out, t * tile_bytes, vec![]);
+            kex
+        });
+        p
     }
 }
 
@@ -49,147 +187,17 @@ impl Benchmark for NeedlemanWunsch {
         let g = self.grid;
         let size = g * TILE;
         let tile_bytes = TILE * TILE * 4;
-        let edge_bytes = TILE * 4;
         let n_streams = match mode {
             Mode::Baseline => 1,
             Mode::Streamed(n) => n.max(1),
         };
 
-        // Substitution scores for the whole matrix (Rodinia fills these
-        // from the two sequences' reference table).
-        let sub = gen_i32(size * size, 15, 0xBEEF);
-        let sub_i32: Vec<i32> = sub.iter().map(|&v| v - 5).collect(); // scores in [-5, 10)
-
-        // Per-tile substitution payloads (row-major within the tile).
-        let mut tile_sub: Vec<Vec<i32>> = Vec::with_capacity(g * g);
-        for bi in 0..g {
-            for bj in 0..g {
-                let mut t = Vec::with_capacity(TILE * TILE);
-                for r in 0..TILE {
-                    let row0 = (bi * TILE + r) * size + bj * TILE;
-                    t.extend_from_slice(&sub_i32[row0..row0 + TILE]);
-                }
-                tile_sub.push(t);
-            }
-        }
-
-        // Boundary vectors: score row/col 0 are -penalty * (1-based idx).
-        let north_boundary: Vec<i32> = (0..size as i32).map(|j| -PENALTY * (j + 1)).collect();
-        let west_boundary: Vec<i32> = (0..size as i32).map(|i| -PENALTY * (i + 1)).collect();
-        let corner_zero: Vec<i32> = vec![0];
-
-        // Device allocations: boundaries + per tile (sub, out, south, east).
-        let nb = DevRegion::whole(ctx.alloc(size * 4)?, size * 4);
-        let wb = DevRegion::whole(ctx.alloc(size * 4)?, size * 4);
-        let cz = DevRegion::whole(ctx.alloc(4)?, 4);
-        let mut sub_bufs = Vec::with_capacity(g * g);
-        let mut out_bufs = Vec::with_capacity(g * g);
-        let mut south_bufs = Vec::with_capacity(g * g);
-        let mut east_bufs = Vec::with_capacity(g * g);
-        for _ in 0..g * g {
-            sub_bufs.push(DevRegion::whole(ctx.alloc(tile_bytes)?, tile_bytes));
-            out_bufs.push(DevRegion::whole(ctx.alloc(tile_bytes)?, tile_bytes));
-            south_bufs.push(DevRegion::whole(ctx.alloc(edge_bytes)?, edge_bytes));
-            east_bufs.push(DevRegion::whole(ctx.alloc(edge_bytes)?, edge_bytes));
-        }
-        let dst = crate::hstreams::host_dst(g * g * tile_bytes);
-
-        let mut streams: Vec<_> = (0..n_streams).map(|_| ctx.stream()).collect();
-
-        // Prologue: boundaries ride stream 0; other streams wait on them.
-        let mut boundary_events = Vec::new();
-        boundary_events.push(
-            streams[0].h2d(HostSrc::whole(Arc::new(bytes::from_i32(&north_boundary))), nb),
-        );
-        boundary_events
-            .push(streams[0].h2d(HostSrc::whole(Arc::new(bytes::from_i32(&west_boundary))), wb));
-        boundary_events
-            .push(streams[0].h2d(HostSrc::whole(Arc::new(bytes::from_i32(&corner_zero))), cz));
-        for s in streams.iter_mut().skip(1) {
-            for e in &boundary_events {
-                s.wait_event(e.clone());
-            }
-        }
-
-        // Wavefront: diagonals in order; tiles within a diagonal
-        // round-robin across streams ("the number of streams changes on
-        // different diagonals").
-        let mut kex_events: Vec<Option<crate::hstreams::Event>> = vec![None; g * g];
-        let mut h2d_bytes = (2 * size * 4 + 4) as u64;
-        for diag in diagonals(g, g) {
-            for (slot, tc) in diag.tiles.iter().enumerate() {
-                let (bi, bj) = (tc.bi, tc.bj);
-                let t = bi * g + bj;
-                let s = &mut streams[slot % n_streams];
-
-                // Upload this tile's substitution scores.
-                s.h2d(
-                    HostSrc::whole(Arc::new(bytes::from_i32(&tile_sub[t]))),
-                    sub_bufs[t],
-                );
-                h2d_bytes += tile_bytes as u64;
-
-                // Edge inputs: neighbours' contiguous outputs or boundary
-                // slices; cross-stream deps on the producing kernels.
-                let north = if bi == 0 {
-                    DevRegion { buf: nb.buf, off: bj * TILE * 4, len: edge_bytes }
-                } else {
-                    let up = (bi - 1) * g + bj;
-                    if let Some(e) = &kex_events[up] {
-                        s.wait_event(e.clone());
-                    }
-                    south_bufs[up]
-                };
-                let west = if bj == 0 {
-                    DevRegion { buf: wb.buf, off: bi * TILE * 4, len: edge_bytes }
-                } else {
-                    let left = bi * g + bj - 1;
-                    if let Some(e) = &kex_events[left] {
-                        s.wait_event(e.clone());
-                    }
-                    east_bufs[left]
-                };
-                let corner = match (bi, bj) {
-                    (0, 0) => cz,
-                    (0, j) => DevRegion { buf: nb.buf, off: (j * TILE - 1) * 4, len: 4 },
-                    (i, 0) => DevRegion { buf: wb.buf, off: (i * TILE - 1) * 4, len: 4 },
-                    (i, j) => {
-                        let diag_nb = (i - 1) * g + j - 1;
-                        if let Some(e) = &kex_events[diag_nb] {
-                            s.wait_event(e.clone());
-                        }
-                        DevRegion {
-                            buf: south_bufs[diag_nb].buf,
-                            off: (TILE - 1) * 4,
-                            len: 4,
-                        }
-                    }
-                };
-
-                // Device time per tile (anti-diagonal sweeps are
-                // latency-bound on the MIC, well above the raw FLOPs).
-                let e = s.kex_with(
-                    "nw_tile",
-                    vec![north, west, corner, sub_bufs[t]],
-                    vec![out_bufs[t], south_bufs[t], east_bufs[t]],
-                    Some(450_000),
-                    1,
-                );
-                kex_events[t] = Some(e);
-
-                s.d2h(
-                    out_bufs[t],
-                    crate::device::HostDst { data: dst.data.clone(), off: t * tile_bytes },
-                );
-            }
-        }
-        for s in &streams {
-            s.sync();
-        }
-        let wall = crate::hstreams::makespan(streams.iter().flat_map(|s| s.events()));
+        let sub_i32 = self.sub_scores();
+        let plan = self.lower_with(&sub_i32);
+        let run = Executor::new(ctx).run(&plan, n_streams)?;
 
         // Reassemble and validate against the full-matrix DP oracle.
-        let flat = bytes::to_i32(&dst.data.lock().unwrap());
+        let flat = bytes::to_i32(&run.outputs[0]);
         let want = oracle::nw_full(&sub_i32, size, PENALTY);
         let mut ok = true;
         'outer: for bi in 0..g {
@@ -208,23 +216,13 @@ impl Benchmark for NeedlemanWunsch {
             }
         }
 
-        for r in sub_bufs
-            .iter()
-            .chain(&out_bufs)
-            .chain(&south_bufs)
-            .chain(&east_bufs)
-            .chain([&nb, &wb, &cz])
-        {
-            ctx.free(r.buf)?;
-        }
-
         Ok(RunStats {
             name: "nw".into(),
             mode,
-            wall,
-            h2d_bytes,
-            d2h_bytes: (g * g * tile_bytes) as u64,
-            tasks: g * g,
+            wall: run.wall,
+            h2d_bytes: run.h2d_bytes,
+            d2h_bytes: run.d2h_bytes,
+            tasks: run.tasks,
             validated: ok,
         })
     }

@@ -47,10 +47,19 @@ fn engine_r_matches_analytic_r_on_corpus_sample() {
     for cfg in sample {
         let st = hetstream::analysis::measure_stages(&ctx, &offload_spec(&cfg), 5);
         let model = analytic_stage_times(&cfg, &paper);
-        // Iterative caps + dilated latencies allow coarse agreement only.
+        // Virtual-clock engine times are exact, so the only divergence
+        // left is structural: dilated fixed latencies (the engine pays
+        // 16x the paper's per-op latency/launch while bytes/FLOPs scale
+        // down 16x) and the iteration/FLOP caps on heavily iterative
+        // apps.  Both sides are closed-form (engine = the modeled
+        // durations themselves under TimeMode::Virtual), and evaluating
+        // them over this sample gives a worst case of ~0.032 (MatVecMul
+        // n=4, latency-dominated); 0.06 leaves ~2x margin without
+        // masking a model regression the old 0.22 bound would have let
+        // slip.
         let err = (st.r_h2d() - model.r_h2d()).abs();
         assert!(
-            err < 0.22,
+            err < 0.06,
             "{}/{}: engine R {:.3} vs analytic {:.3}",
             cfg.app,
             cfg.config,

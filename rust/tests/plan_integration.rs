@@ -1,0 +1,154 @@
+//! Plan-lowering integration: the single `plan::Executor` must
+//! reproduce the bulk-lowered outputs **bit-for-bit** at every stream
+//! count, for all three partition shapes (independent, halo,
+//! wavefront) — every task runs the same kernels over the same bytes,
+//! so even float kernels admit exact equality.  Also: the descriptor
+//! corpus executes through plans with streamed-vs-1-stream validation.
+
+use std::sync::Arc;
+
+use hetstream::device::DeviceProfile;
+use hetstream::hstreams::{Context, ContextBuilder};
+use hetstream::plan::{lower_corpus_streamed, outputs_match, Executor, CORPUS_BURNER};
+use hetstream::runtime::bytes;
+use hetstream::util::prop::{check, Rng};
+use hetstream::workloads::{gen_f32, gen_i32, GenericWorkload, Mode, NeedlemanWunsch, Windows};
+
+fn instant_ctx(artifacts: &[&str]) -> Context {
+    ContextBuilder::new()
+        .profile(DeviceProfile::instant())
+        .only_artifacts(artifacts.to_vec())
+        .build()
+        .expect("context")
+}
+
+/// Histogram-shaped independent workload (integer kernel).
+fn independent_wl(chunks: usize, seed: u64) -> GenericWorkload {
+    let x = gen_i32(chunks * 16384, 256, seed);
+    GenericWorkload {
+        name: "prop-histogram",
+        artifact: "histogram",
+        streamed_inputs: vec![Windows::disjoint(Arc::new(bytes::from_i32(&x)), chunks)],
+        shared_inputs: vec![],
+        output_chunk_bytes: vec![256 * 4],
+        flops_per_chunk: None,
+    }
+}
+
+/// Stencil-shaped halo workload (one row of halo per side).
+fn halo_wl(chunks: usize, seed: u64) -> GenericWorkload {
+    let (rows, cols) = (chunks * 128, 512);
+    let field = gen_f32(rows * cols, seed);
+    let mut padded = vec![0.0f32; (rows + 2) * cols];
+    padded[cols..(rows + 1) * cols].copy_from_slice(&field);
+    GenericWorkload {
+        name: "prop-stencil",
+        artifact: "stencil2d",
+        streamed_inputs: vec![Windows::halo(Arc::new(bytes::from_f32(&padded)), chunks, cols * 4)],
+        shared_inputs: vec![],
+        output_chunk_bytes: vec![128 * cols * 4],
+        flops_per_chunk: Some(7_100_000),
+    }
+}
+
+#[test]
+fn prop_independent_streamed_equals_baseline_bitwise() {
+    let ctx = instant_ctx(&["histogram"]);
+    check(6, |rng: &mut Rng| {
+        let wl = independent_wl(rng.range(2, 5), rng.next_u64());
+        let (_, base, base_bytes) = wl.execute(&ctx, Mode::Baseline).expect("baseline");
+        let streams = rng.range(1, 5);
+        let (_, strm, strm_bytes) = wl.execute(&ctx, Mode::Streamed(streams)).expect("streamed");
+        assert_eq!(base, strm, "independent outputs must match bit-for-bit");
+        assert_eq!(base_bytes, strm_bytes, "disjoint windows ship no extra bytes");
+    });
+}
+
+#[test]
+fn prop_halo_streamed_equals_baseline_bitwise() {
+    let ctx = instant_ctx(&["stencil2d"]);
+    check(5, |rng: &mut Rng| {
+        let wl = halo_wl(rng.range(2, 4), rng.next_u64());
+        let (_, base, base_bytes) = wl.execute(&ctx, Mode::Baseline).expect("baseline");
+        let streams = rng.range(1, 5);
+        let (_, strm, strm_bytes) = wl.execute(&ctx, Mode::Streamed(streams)).expect("streamed");
+        assert_eq!(base, strm, "halo outputs must match bit-for-bit");
+        assert!(strm_bytes > base_bytes, "halo windows must ship redundant bytes");
+    });
+}
+
+#[test]
+fn prop_wavefront_streamed_equals_single_stream_bitwise() {
+    let ctx = instant_ctx(&["nw_tile"]);
+    check(4, |rng: &mut Rng| {
+        let nw = NeedlemanWunsch::with_grid(rng.range(2, 4));
+        let plan = nw.lower();
+        plan.validate().expect("well-formed wavefront plan");
+        let exec = Executor::new(&ctx);
+        let reference = exec.run(&plan, 1).expect("1-stream run");
+        let n = rng.range(2, 6);
+        let multi = exec.run(&plan, n).expect("n-stream run");
+        assert!(
+            outputs_match(&reference, &multi),
+            "wavefront outputs diverged at {n} streams"
+        );
+        assert_eq!(reference.h2d_bytes, multi.h2d_bytes);
+    });
+}
+
+#[test]
+fn broadcast_inputs_upload_once_whatever_the_stream_count() {
+    // Shared (broadcast) payloads must be transferred exactly once; the
+    // executor fan-out replaces per-task re-uploads.
+    let ctx = instant_ctx(&["nn_dist"]);
+    let records = gen_f32(4 * 16384 * 2, 0xA11CE);
+    let target = [0.25f32, -0.5f32];
+    let wl = GenericWorkload {
+        name: "prop-nn",
+        artifact: "nn_dist",
+        streamed_inputs: vec![Windows::disjoint(Arc::new(bytes::from_f32(&records)), 4)],
+        shared_inputs: vec![Arc::new(bytes::from_f32(&target))],
+        output_chunk_bytes: vec![16384 * 4],
+        flops_per_chunk: Some(650_000),
+    };
+    let payload_bytes = (4 * 16384 * 2 * 4) as u64;
+    let shared_bytes = 8u64;
+    for mode in [Mode::Baseline, Mode::Streamed(1), Mode::Streamed(4)] {
+        let (_, _, h2d) = wl.execute(&ctx, mode).expect("run");
+        assert_eq!(h2d, payload_bytes + shared_bytes, "{mode:?}");
+    }
+}
+
+#[test]
+fn corpus_descriptors_execute_through_plans_with_validation() {
+    // A stratified slice of the 223 descriptors (the full-corpus sweep
+    // runs in CI via `repro sweep --corpus`): lower, execute the ladder,
+    // and demand bit-identical outputs vs the 1-stream reference.
+    let ctx = instant_ctx(&[CORPUS_BURNER]);
+    let exec = Executor::new(&ctx);
+    let sample: Vec<_> = hetstream::corpus::all_configs().into_iter().step_by(31).collect();
+    assert!(sample.len() >= 7);
+    for cfg in sample {
+        let plan = lower_corpus_streamed(&cfg, CORPUS_BURNER);
+        plan.validate().unwrap_or_else(|e| panic!("{}/{}: {e}", cfg.app, cfg.config));
+        let reference = exec.run(&plan, 1).expect("1-stream run");
+        for n in [2, 4] {
+            let r = exec.run(&plan, n).expect("n-stream run");
+            assert!(
+                outputs_match(&reference, &r),
+                "{}/{} diverged at {n} streams",
+                cfg.app,
+                cfg.config
+            );
+        }
+    }
+}
+
+#[test]
+fn executor_frees_every_device_buffer() {
+    let ctx = instant_ctx(&["histogram"]);
+    let wl = independent_wl(3, 7);
+    let before = ctx.device_mem_used();
+    wl.execute(&ctx, Mode::Streamed(3)).expect("run");
+    assert_eq!(ctx.device_mem_used(), before, "plan buffers must be released");
+}

@@ -365,6 +365,62 @@ fn prop_virtual_timeline_identical_across_runs() {
 }
 
 #[test]
+fn prop_wavefront_plan_deps_are_exactly_the_grid_neighbours() {
+    // The NW lowering must emit, for every tile kernel, explicit RAW
+    // deps on precisely its north / west / northwest neighbour kernels
+    // — and list ops in a topological order (deps point backwards).
+    use hetstream::plan::{PlanOpKind, Slot};
+    check(10, |rng: &mut Rng| {
+        let g = rng.range(1, 5);
+        let plan = hetstream::workloads::NeedlemanWunsch::with_grid(g).lower();
+        plan.validate().expect("lowered plan is well-formed");
+
+        // Kex ops appear in wavefront order: zip them with tile coords.
+        let kex_ids: Vec<usize> = plan
+            .ops
+            .iter()
+            .enumerate()
+            .filter(|(_, op)| matches!(op.kind, PlanOpKind::Kex { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        let coords = tile_coords(g, g);
+        assert_eq!(kex_ids.len(), coords.len(), "one kernel per tile");
+
+        let mut kex_of = vec![vec![usize::MAX; g]; g];
+        for (id, c) in kex_ids.iter().zip(&coords) {
+            kex_of[c.bi][c.bj] = *id;
+        }
+        for (id, c) in kex_ids.iter().zip(&coords) {
+            let mut want = Vec::new();
+            if c.bi > 0 {
+                want.push(kex_of[c.bi - 1][c.bj]);
+            }
+            if c.bj > 0 {
+                want.push(kex_of[c.bi][c.bj - 1]);
+            }
+            if c.bi > 0 && c.bj > 0 {
+                want.push(kex_of[c.bi - 1][c.bj - 1]);
+            }
+            let mut got = plan.ops[*id].deps.clone();
+            got.sort_unstable();
+            want.sort_unstable();
+            assert_eq!(got, want, "tile ({}, {}) deps", c.bi, c.bj);
+            assert!(got.iter().all(|&d| d < *id), "deps must point backwards");
+            // Diagonal-aware placement: the tile's lane is its slot
+            // within the anti-diagonal.
+            match plan.ops[*id].slot {
+                Slot::Task(lane) => {
+                    let d = c.bi + c.bj;
+                    let slot_in_diag = c.bi - d.saturating_sub(g - 1);
+                    assert_eq!(lane, slot_in_diag, "tile ({}, {}) lane", c.bi, c.bj);
+                }
+                Slot::Broadcast => panic!("tile kernels must not be broadcast"),
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_halo_overhead_ratio_predicts_cases() {
     use hetstream::partition::halo_overhead_ratio;
     check(100, |rng: &mut Rng| {
