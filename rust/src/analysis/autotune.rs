@@ -1,21 +1,38 @@
-//! Stream-count auto-tuning — the paper's §6 future work ("we will
-//! further investigate how to get optimal performance by setting a
-//! proper task and/or resource granularity … autotune these
-//! parameters").
+//! Joint (streams × task-granularity) plan auto-tuning — the paper's
+//! §6 future work ("we will further investigate how to get optimal
+//! performance by setting a proper task and/or resource granularity …
+//! autotune these parameters").
 //!
-//! Two strategies:
+//! Three strategies, from free to exact:
 //!
 //! - [`predict_streams`] — zero-cost analytic rule from the stage
 //!   balance: with one DMA lane per direction and one kernel queue, the
 //!   pipeline saturates once every lane is busy, so the useful stream
 //!   count is ⌈serial / bottleneck⌉ (+1 fill margin), clamped to [2, 8].
-//! - [`autotune_streams`] — empirical: measure a candidate ladder and
-//!   return the argmin (the paper's "leveraging machine learning" is a
-//!   measured search here — exact, since the space is tiny).
+//! - [`predict_plan_point`] — the joint analytic seed over a lowered
+//!   [`StreamPlan`]: stream count as above, task granularity from the
+//!   fill/drain-vs-overhead balance `m* = √(overlappable / c_task)`
+//!   where `overlappable` is the serial time outside the bottleneck
+//!   stage and `c_task` the per-task fixed cost of the bottleneck lane
+//!   (DMA latency for transfer-bound plans, launch overhead for
+//!   compute-bound) — finer tasks shrink pipeline fill/drain by
+//!   `overlappable/m` but add `m·c_task` of fixed overhead.
+//! - [`autotune_streams`] / [`autotune_plan`] — empirical: measure a
+//!   candidate ladder (or the full streams × granularity grid, each
+//!   point re-lowered and validated bitwise against the bulk
+//!   reference) under the virtual clock and return the argmin.  The
+//!   paper's "leveraging machine learning" is a measured search here —
+//!   exact, since the space is tiny and the clock is deterministic.
+//!
+//! Tuning paths are panic-safe: empty candidate ladders are
+//! [`crate::Error::Stream`] errors (not index panics) and argmin
+//! comparisons use `f64::total_cmp` (a NaN median cannot crash the
+//! search).
 
 use crate::hstreams::Context;
+use crate::plan::{outputs_match, Executor, Granularity, StreamPlan};
 use crate::workloads::{Benchmark, Mode};
-use crate::Result;
+use crate::{Error, Result};
 
 use super::stages::StageTimes;
 
@@ -23,7 +40,7 @@ use super::stages::StageTimes;
 /// IR's byte/FLOP annotations give the stage balance without running
 /// anything (the per-plan features the ML-tuning line needs).
 pub fn predict_streams_for_plan(
-    plan: &crate::plan::StreamPlan,
+    plan: &StreamPlan,
     profile: &crate::device::DeviceProfile,
 ) -> usize {
     predict_streams(&plan.stage_times(profile))
@@ -40,7 +57,33 @@ pub fn predict_streams(st: &StageTimes) -> usize {
     depth.clamp(2, 8)
 }
 
-/// Result of an empirical sweep.
+/// Joint analytic seed `(streams, granularity)` for a lowered plan —
+/// the grid point the measured search grows around (module docs).
+/// The granularity is a **pipeline task count**; callers tuning a
+/// lowering whose knob is in other units (a wavefront's grid side)
+/// must map it (e.g. `√tasks`) before building a candidate ladder —
+/// `experiments::tune_corpus` does.
+pub fn predict_plan_point(
+    plan: &StreamPlan,
+    profile: &crate::device::DeviceProfile,
+) -> (usize, usize) {
+    let st = plan.stage_times(profile);
+    let streams = predict_streams(&st);
+    let (h2d, kex, d2h) = (st.h2d.as_secs_f64(), st.kex.as_secs_f64(), st.d2h.as_secs_f64());
+    let bottleneck = h2d.max(kex).max(d2h);
+    // Per-task fixed cost of the bottleneck lane.
+    let c_task = if bottleneck == kex { profile.launch_us } else { profile.latency_us } * 1e-6;
+    let overlappable = (h2d + kex + d2h) - bottleneck;
+    let gran = if c_task > 0.0 && overlappable > 0.0 {
+        ((overlappable / c_task).sqrt().round() as usize).clamp(1, 64)
+    } else {
+        streams
+    };
+    // At least one task per stream, or the pipeline can't fill.
+    (streams, gran.max(streams))
+}
+
+/// Result of an empirical stream-count sweep.
 #[derive(Debug, Clone)]
 pub struct AutotuneResult {
     pub best_streams: usize,
@@ -50,13 +93,20 @@ pub struct AutotuneResult {
 }
 
 /// Measure `bench` at each candidate stream count (median of `runs`)
-/// and return the fastest.
+/// and return the fastest.  Errors (never panics) on an empty ladder.
 pub fn autotune_streams(
     ctx: &Context,
     bench: &dyn Benchmark,
     candidates: &[usize],
     runs: usize,
 ) -> Result<AutotuneResult> {
+    if candidates.is_empty() {
+        return Err(Error::Stream(format!(
+            "autotune {}: empty stream-candidate ladder",
+            bench.name()
+        )));
+    }
+    let runs = runs.max(1);
     // Warmup (absorb PJRT first-execution cost).
     bench.run(ctx, Mode::Streamed(candidates[0]))?;
     let mut ladder = Vec::with_capacity(candidates.len());
@@ -65,7 +115,7 @@ pub fn autotune_streams(
         for _ in 0..runs {
             let r = bench.run(ctx, Mode::Streamed(n))?;
             if !r.validated {
-                return Err(crate::Error::Stream(format!(
+                return Err(Error::Stream(format!(
                     "{} failed validation at {n} streams",
                     bench.name()
                 )));
@@ -75,9 +125,126 @@ pub fn autotune_streams(
         let med = crate::metrics::median_duration(&mut samples).as_secs_f64() * 1e3;
         ladder.push((n, med));
     }
-    let (best_streams, best_ms) =
-        ladder.iter().copied().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+    let (best_streams, best_ms) = argmin(ladder.iter().copied()).expect("non-empty ladder");
     Ok(AutotuneResult { best_streams, best_ms, ladder })
+}
+
+/// Result of a joint (streams × granularity) grid search.  Seeds are
+/// the caller's concern ([`predict_plan_point`] + the lowering's knob
+/// mapping — see `experiments::tune_corpus`), not duplicated here.
+#[derive(Debug, Clone)]
+pub struct PlanTuneResult {
+    pub best_streams: usize,
+    pub best_gran: usize,
+    pub best_ms: f64,
+    /// Bulk (non-streamed) reference makespan, ms.
+    pub bulk_ms: f64,
+    /// (streams, granularity, median ms) for every measured grid point
+    /// (stream counts normalized to ≥ 1 and deduped, ascending).
+    pub surface: Vec<(usize, usize, f64)>,
+}
+
+/// Measure the full (streams × granularity) grid of a re-lowerable
+/// workload and return the argmin plus the whole surface.
+///
+/// `bulk` is the single-offload reference plan; every grid point is
+/// re-lowered via `lower`, executed under the context's clock, and its
+/// assembled outputs validated **bitwise** against the bulk run —
+/// granularity must move when bytes travel, never what the result
+/// holds.  A divergence or an empty ladder is an error, never a panic.
+///
+/// Candidates are measured exactly as given: if the lowering clamps
+/// the knob (tile-grid sides, per-lane minimums), map the ladder
+/// through the effective values and dedupe first — e.g. via
+/// `plan::effective_corpus_granularity`, as `experiments::tune_corpus`
+/// does — or aliased points are measured twice under two labels.
+pub fn autotune_plan(
+    ctx: &Context,
+    bulk: &StreamPlan,
+    lower: &dyn Fn(Granularity) -> StreamPlan,
+    streams: &[usize],
+    grans: &[usize],
+    runs: usize,
+) -> Result<PlanTuneResult> {
+    if streams.is_empty() || grans.is_empty() {
+        return Err(Error::Stream(format!(
+            "autotune {}: empty (streams × granularity) candidate grid",
+            bulk.name
+        )));
+    }
+    let runs = runs.max(1);
+    // Normalize stream counts to what the executor actually maps (≥ 1)
+    // and dedupe, so the surface never labels a point with a stream
+    // count that doesn't exist (e.g. --ladder 0,1 aliasing 1 twice).
+    let streams: Vec<usize> = {
+        let mut v: Vec<usize> = streams.iter().map(|&n| n.max(1)).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let exec = Executor::new(ctx);
+    // Bulk reference: same median-of-runs methodology as every grid
+    // point (one wallclock outlier must not skew all the comparisons);
+    // the first run's outputs serve as the bitwise oracle.
+    let reference = exec.run(bulk, 1)?;
+    let mut bulk_samples = vec![reference.wall];
+    for _ in 1..runs {
+        bulk_samples.push(exec.run(bulk, 1)?.wall);
+    }
+    let bulk_ms = crate::metrics::median_duration(&mut bulk_samples).as_secs_f64() * 1e3;
+
+    let mut surface = Vec::with_capacity(streams.len() * grans.len());
+    for &g in grans {
+        let plan = lower(Granularity::new(g));
+        plan.validate()?;
+        for &n in &streams {
+            let mut samples = Vec::with_capacity(runs);
+            for i in 0..runs {
+                let r = exec.run(&plan, n)?;
+                // Outputs are a pure function of (plan, bytes), not of
+                // the clock: one bitwise check per grid point suffices,
+                // repetitions only re-sample the timing.
+                if i == 0 && !outputs_match(&reference, &r) {
+                    return Err(Error::Stream(format!(
+                        "{}: outputs diverge from bulk at {n} streams × granularity {g}",
+                        plan.name
+                    )));
+                }
+                samples.push(r.wall);
+            }
+            let med = crate::metrics::median_duration(&mut samples).as_secs_f64() * 1e3;
+            surface.push((n, g, med));
+        }
+    }
+    let ((best_streams, best_gran), best_ms) =
+        argmin(surface.iter().map(|&(n, g, ms)| ((n, g), ms))).expect("non-empty grid");
+    Ok(PlanTuneResult { best_streams, best_gran, best_ms, bulk_ms, surface })
+}
+
+/// Granularity candidate ladder grown around an analytic seed: the
+/// usual powers of two plus the seed's neighbourhood, sorted, deduped.
+pub fn gran_ladder(seed: usize) -> Vec<usize> {
+    let s = seed.clamp(1, 64);
+    let mut v = vec![1, 2, 4, 8, 16, (s / 2).max(1), s, (s * 2).min(64)];
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// First-seen argmin under `f64::total_cmp` (NaN orders above every
+/// real time, so a poisoned sample can never win or crash the search);
+/// `None` on an empty iterator.  Shared by every tuning/sweep argmin
+/// so tie-breaks agree across tables (first-seen = smallest candidate
+/// when ladders are ascending).
+pub(crate) fn argmin<K: Copy>(points: impl IntoIterator<Item = (K, f64)>) -> Option<(K, f64)> {
+    let mut best: Option<(K, f64)> = None;
+    for (k, v) in points {
+        match &best {
+            Some((_, b)) if v.total_cmp(b) != std::cmp::Ordering::Less => {}
+            _ => best = Some((k, v)),
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -109,5 +276,25 @@ mod tests {
     fn prediction_clamped() {
         assert!(predict_streams(&st(1, 1000, 1)) >= 2);
         assert!(predict_streams(&st(1, 1, 1)) <= 8);
+    }
+
+    #[test]
+    fn argmin_is_nan_safe_and_first_seen() {
+        let pts = [(1usize, f64::NAN), (2, 3.0), (3, 1.0), (4, 1.0)];
+        let (k, v) = argmin(pts.iter().copied()).expect("non-empty");
+        assert_eq!(k, 3, "ties keep the first-seen point");
+        assert_eq!(v, 1.0);
+        assert!(argmin(std::iter::empty::<((), f64)>()).is_none());
+        // All-NaN still returns a point rather than panicking.
+        assert_eq!(argmin([(7usize, f64::NAN)].into_iter()).map(|p| p.0), Some(7));
+    }
+
+    #[test]
+    fn gran_ladder_contains_seed_and_defaults() {
+        let l = gran_ladder(11);
+        assert!(l.contains(&1) && l.contains(&8) && l.contains(&11) && l.contains(&22));
+        assert!(l.windows(2).all(|w| w[0] < w[1]), "sorted, deduped: {l:?}");
+        assert!(gran_ladder(0).contains(&1));
+        assert!(gran_ladder(1000).iter().all(|&g| g <= 64));
     }
 }

@@ -8,7 +8,11 @@ mod cdf;
 mod decision;
 mod stages;
 
-pub use autotune::{autotune_streams, predict_streams, predict_streams_for_plan, AutotuneResult};
+pub use autotune::{
+    autotune_plan, autotune_streams, gran_ladder, predict_plan_point, predict_streams,
+    predict_streams_for_plan, AutotuneResult, PlanTuneResult,
+};
+pub(crate) use autotune::argmin;
 pub use categorize::{categorize, Category, DependencyFacts, TaskDep};
 pub use cdf::{cdf_points, fraction_at_or_below, CdfPoint};
 pub use decision::{decide, decide_plan, Decision, HI_THRESHOLD, LO_THRESHOLD};

@@ -17,7 +17,7 @@ pub use fig3::fig3;
 pub use fig4::fig4;
 pub use fig9::{fig9, measure_one, rgain, Fig9Row};
 pub use lavamd::lavamd_negative;
-pub use sweep::{sweep_corpus, SweepRow};
+pub use sweep::{sweep_corpus, tune_corpus, tune_rows_json, SweepRow, TuneRow};
 pub use table2::table2;
 
 use crate::corpus::BenchConfig;

@@ -1,19 +1,30 @@
-//! The full-corpus streaming sweep (`repro sweep --corpus`): every
+//! The full-corpus streaming sweep (`repro sweep --corpus`) and the
+//! joint (streams × granularity) tuner (`repro tune --corpus`): every
 //! Table-1 application lowers to its [`crate::plan::StreamPlan`] and
-//! runs through the one executor across a stream-count ladder, under
-//! the virtual clock — sleep-free, deterministic, per-commit cheap.
+//! runs through the one executor across a stream-count ladder — or the
+//! whole tuning grid — under the virtual clock: sleep-free,
+//! deterministic, per-commit cheap.
 //!
-//! Validation is executor-level: the outputs of every ladder point must
-//! equal the 1-stream run bit-for-bit (same kernels over the same
-//! bytes, any placement).  A structural `plan.validate()` failure or a
-//! mis-validated run marks the row failed; the CLI exits non-zero if
-//! any row fails, which is what the CI smoke job checks.
+//! Validation is executor-level: the outputs of every sweep ladder
+//! point must equal the 1-stream run bit-for-bit, and every tuning
+//! grid point must equal the *bulk* lowering bit-for-bit (same kernels
+//! over the same bytes, any placement, any granularity).  A structural
+//! `plan.validate()` failure or a mis-validated run marks the row
+//! failed; the CLI exits non-zero if any row fails, which is what the
+//! CI smoke jobs check.
 
-use crate::analysis::predict_streams_for_plan;
+use crate::analysis::{
+    argmin, autotune_plan, gran_ladder, predict_plan_point, predict_streams_for_plan, Category,
+    PlanTuneResult,
+};
 use crate::corpus::{all_configs, BenchConfig};
 use crate::hstreams::Context;
 use crate::metrics::Table;
-use crate::plan::{lower_corpus_streamed, outputs_match, Executor, CORPUS_BURNER};
+use crate::plan::{
+    default_corpus_granularity, effective_corpus_granularity, lower_corpus_bulk,
+    lower_corpus_streamed, lower_corpus_streamed_at, outputs_match, Executor, Granularity,
+    CORPUS_BURNER,
+};
 use crate::Result;
 
 /// One corpus app's ladder measurement.
@@ -34,6 +45,18 @@ pub struct SweepRow {
     pub predicted_streams: usize,
     pub validated: bool,
     pub error: Option<String>,
+}
+
+/// The corpus rows a sweep/tune covers: every configuration, or the
+/// first (representative) one per (app, suite) — one policy for both
+/// tables so they always cover the same population.
+fn representative_configs(all_cfgs: bool) -> Vec<BenchConfig> {
+    let mut configs = all_configs();
+    if !all_cfgs {
+        let mut seen = std::collections::HashSet::new();
+        configs.retain(|c| seen.insert((c.app, c.suite)));
+    }
+    configs
 }
 
 fn sweep_one(ctx: &Context, c: &BenchConfig, ladder: &[usize]) -> SweepRow {
@@ -89,12 +112,10 @@ fn sweep_one(ctx: &Context, c: &BenchConfig, ladder: &[usize]) -> SweepRow {
         }
     }
 
-    let (bn, bt) = row
-        .ladder
-        .iter()
-        .copied()
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-        .unwrap_or((1, t1));
+    // Shared NaN-safe argmin (total order; first-seen tie-break, so
+    // exact virtual-clock ties report the smallest stream count, like
+    // the tuner).
+    let (bn, bt) = argmin(row.ladder.iter().copied()).unwrap_or((1, t1));
     row.best_streams = bn;
     row.improvement_pct = (t1 / bt - 1.0) * 100.0;
     row
@@ -108,12 +129,7 @@ pub fn sweep_corpus(
     ladder: &[usize],
     all_cfgs: bool,
 ) -> Result<(Table, Vec<SweepRow>, usize)> {
-    let mut configs = all_configs();
-    if !all_cfgs {
-        let mut seen = std::collections::HashSet::new();
-        configs.retain(|c| seen.insert((c.app, c.suite)));
-    }
-
+    let configs = representative_configs(all_cfgs);
     let rows: Vec<SweepRow> = configs.iter().map(|c| sweep_one(ctx, c, ladder)).collect();
 
     let ladder_label = ladder.iter().map(|n| n.to_string()).collect::<Vec<_>>().join("/");
@@ -150,4 +166,208 @@ pub fn sweep_corpus(
     }
     let failures = rows.iter().filter(|r| r.error.is_some() || !r.validated).count();
     Ok((t, rows, failures))
+}
+
+/// One corpus app's joint (streams × granularity) tuning outcome.
+#[derive(Debug, Clone)]
+pub struct TuneRow {
+    pub suite: &'static str,
+    pub app: &'static str,
+    pub config: String,
+    pub category: &'static str,
+    /// Analytic seed (streams, granularity) from the plan features.
+    pub seed: (usize, usize),
+    pub best_streams: usize,
+    pub best_gran: usize,
+    pub best_ms: f64,
+    /// Best time over the stream ladder at the *fixed* pre-tuner
+    /// granularity (the PR-2 sweep baseline).
+    pub fixed_ms: f64,
+    /// Bulk (non-streamed) reference, ms.
+    pub bulk_ms: f64,
+    /// (t_fixed / t_best − 1) · 100: what the granularity knob buys on
+    /// top of stream-count tuning alone.
+    pub improvement_pct: f64,
+    /// Full measured surface: (streams, granularity, ms).
+    pub surface: Vec<(usize, usize, f64)>,
+    pub validated: bool,
+    pub error: Option<String>,
+}
+
+fn tune_one(
+    ctx: &Context,
+    c: &BenchConfig,
+    streams: &[usize],
+    grans: &[usize],
+    runs: usize,
+) -> TuneRow {
+    let mut row = TuneRow {
+        suite: c.suite.label(),
+        app: c.app,
+        config: c.config.clone(),
+        category: c.category().label(),
+        seed: (0, 0),
+        best_streams: 1,
+        best_gran: 1,
+        best_ms: f64::NAN,
+        fixed_ms: f64::NAN,
+        bulk_ms: f64::NAN,
+        improvement_pct: 0.0,
+        surface: Vec::new(),
+        validated: false,
+        error: None,
+    };
+    let bulk = lower_corpus_bulk(c, CORPUS_BURNER);
+
+    // Analytic seed, mapped from pipeline tasks into the category's
+    // knob units (a wavefront's knob is the grid side, not the task
+    // count) and clamped to what the lowering will actually use.
+    let (seed_streams, seed_tasks) = predict_plan_point(&bulk, ctx.profile());
+    let seed_knob = match c.category() {
+        Category::TrueDependent => (seed_tasks as f64).sqrt().ceil() as usize,
+        _ => seed_tasks,
+    };
+    let seed_gran = effective_corpus_granularity(c, Granularity::new(seed_knob)).get();
+    row.seed = (seed_streams, seed_gran);
+
+    // Candidate grid: the caller's ladder grown around the analytic
+    // seed, plus the fixed pre-tuner granularity (so the improvement
+    // column compares like with like) — everything mapped to effective
+    // knob values and deduped, or aliased points would be measured
+    // twice under different labels (and sync/iterative apps, which
+    // ignore the knob, would re-measure one plan per candidate).
+    let fixed_gran =
+        effective_corpus_granularity(c, default_corpus_granularity(c.category())).get();
+    let mut grans: Vec<usize> = grans
+        .iter()
+        .copied()
+        .chain(gran_ladder(seed_gran))
+        .chain([fixed_gran])
+        .map(|g| effective_corpus_granularity(c, Granularity::new(g)).get())
+        .collect();
+    grans.sort_unstable();
+    grans.dedup();
+
+    let result: Result<PlanTuneResult> = autotune_plan(
+        ctx,
+        &bulk,
+        &|g| lower_corpus_streamed_at(c, CORPUS_BURNER, g),
+        streams,
+        &grans,
+        runs,
+    );
+    match result {
+        Ok(r) => {
+            row.best_streams = r.best_streams;
+            row.best_gran = r.best_gran;
+            row.best_ms = r.best_ms;
+            row.bulk_ms = r.bulk_ms;
+            row.fixed_ms = argmin(
+                r.surface
+                    .iter()
+                    .filter(|&&(_, g, _)| g == fixed_gran)
+                    .map(|&(n, _, ms)| (n, ms)),
+            )
+            .map(|(_, ms)| ms)
+            .unwrap_or(f64::NAN);
+            row.improvement_pct = (row.fixed_ms / row.best_ms - 1.0) * 100.0;
+            row.surface = r.surface;
+            row.validated = true;
+        }
+        Err(e) => row.error = Some(e.to_string()),
+    }
+    row
+}
+
+/// Tune the corpus: one representative (first) configuration per app,
+/// or every configuration with `all_cfgs`.  Every grid point is
+/// validated bitwise against the bulk lowering.  Returns the rendered
+/// per-app tuning table, the rows (with full surfaces), and the number
+/// of failed rows.
+pub fn tune_corpus(
+    ctx: &Context,
+    streams: &[usize],
+    grans: &[usize],
+    all_cfgs: bool,
+    runs: usize,
+) -> Result<(Table, Vec<TuneRow>, usize)> {
+    let configs = representative_configs(all_cfgs);
+    let rows: Vec<TuneRow> =
+        configs.iter().map(|c| tune_one(ctx, c, streams, grans, runs)).collect();
+
+    let mut t = Table::new(
+        format!(
+            "Corpus joint tuner — streams {:?} × granularity {:?}, validated vs bulk",
+            streams, grans
+        ),
+        &[
+            "suite", "app", "config", "category", "seed (s,g)", "best (s,g)", "best (ms)",
+            "fixed-g (ms)", "gain", "valid",
+        ],
+    );
+    for r in &rows {
+        t.row(&[
+            r.suite.to_string(),
+            r.app.to_string(),
+            r.config.clone(),
+            r.category.to_string(),
+            format!("({}, {})", r.seed.0, r.seed.1),
+            format!("({}, {})", r.best_streams, r.best_gran),
+            format!("{:.2}", r.best_ms),
+            format!("{:.2}", r.fixed_ms),
+            format!("{:+.1}%", r.improvement_pct),
+            match &r.error {
+                Some(e) => format!("FAIL: {e}"),
+                None => r.validated.to_string(),
+            },
+        ]);
+    }
+    let failures = rows.iter().filter(|r| r.error.is_some() || !r.validated).count();
+    Ok((t, rows, failures))
+}
+
+/// JSON rendering of the tuning rows (full surfaces included): the
+/// feature/label set the ROADMAP's learned-tuner line consumes.
+pub fn tune_rows_json(rows: &[TuneRow]) -> String {
+    use crate::util::json::escape;
+    // JSON has no NaN: failed rows carry null metrics.
+    let num = |v: f64| if v.is_finite() { format!("{v:.6}") } else { "null".into() };
+    let mut s = String::from("{\"rows\":[");
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"suite\":\"{}\",\"app\":\"{}\",\"config\":\"{}\",\"category\":\"{}\",\
+             \"seed\":[{},{}],\"best\":{{\"streams\":{},\"gran\":{},\"ms\":{}}},\
+             \"fixed_ms\":{},\"bulk_ms\":{},\"improvement_pct\":{},\
+             \"validated\":{},\"error\":{},\"surface\":[",
+            escape(r.suite),
+            escape(r.app),
+            escape(&r.config),
+            escape(r.category),
+            r.seed.0,
+            r.seed.1,
+            r.best_streams,
+            r.best_gran,
+            num(r.best_ms),
+            num(r.fixed_ms),
+            num(r.bulk_ms),
+            num(r.improvement_pct),
+            r.validated,
+            match &r.error {
+                Some(e) => format!("\"{}\"", escape(e)),
+                None => "null".into(),
+            },
+        ));
+        for (j, &(n, g, ms)) in r.surface.iter().enumerate() {
+            if j > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("[{n},{g},{}]", num(ms)));
+        }
+        s.push_str("]}");
+    }
+    s.push_str("]}");
+    s
 }

@@ -28,7 +28,10 @@
 //! - [`plan`] — the unified `StreamPlan` IR: every workload lowers to
 //!   a task DAG of typed H2D/KEX/D2H ops with byte/FLOP annotations,
 //!   executed by one scheduler ([`plan::Executor`]) that maps any plan
-//!   onto `n` streams.
+//!   onto `n` streams.  Lowerings take a [`plan::Granularity`] knob and
+//!   re-derive at any task count with bitwise-identical outputs, which
+//!   the joint (streams × granularity) tuner
+//!   ([`analysis::autotune_plan`], `repro tune --corpus`) exploits.
 //! - [`corpus`] — all 56 benchmarks × 223 input configurations of
 //!   Table 1 as workload descriptors.
 //! - [`workloads`] — the 13 streamed benchmark drivers of Fig. 9 plus

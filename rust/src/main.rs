@@ -44,6 +44,12 @@ COMMANDS:
               stream ladder (virtual clock; exits non-zero on any
               validation failure)
                 --corpus [--ladder 1,2,4,8] [--all-configs] [--csv PATH]
+  tune        Joint (streams x granularity) plan autotuner: re-lower
+              every corpus app across the whole grid, validate each
+              point bitwise against the bulk lowering, report the
+              argmin + analytic seed (paper §6 future work)
+                --corpus [--ladder 1,2,4,8] [--grans 1,2,4,8,16]
+                [--all-configs] [--json] [--csv PATH]
   trace NAME  Dump one benchmark's virtual event timeline as JSON
                 [--streams N=4] [--scale S=2] [--out PATH]
   quickstart  Smoke run: vector_add through the full stack
@@ -68,6 +74,18 @@ fn time_mode_from(args: &Args) -> Result<hetstream::device::TimeMode> {
         Some("virtual") => Ok(hetstream::device::TimeMode::Virtual),
         Some("wallclock") | Some("wall") => Ok(hetstream::device::TimeMode::Wallclock),
         Some(other) => Err(cli_err(format!("unknown time mode `{other}`"))),
+    }
+}
+
+/// Parse a `--flag 1,2,4` integer-list option, with a default.
+fn usize_list(args: &Args, flag: &str, default: &[usize]) -> Result<Vec<usize>> {
+    match args.get(flag) {
+        Some(spec) => spec
+            .split(',')
+            .map(|tok| tok.trim().parse::<usize>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|_| cli_err(format!("bad --{flag} `{spec}`"))),
+        None => Ok(default.to_vec()),
     }
 }
 
@@ -245,14 +263,7 @@ fn main() -> Result<()> {
             if !args.flag("corpus") {
                 return Err(cli_err("usage: repro sweep --corpus [--ladder 1,2,4,8]".into()));
             }
-            let ladder: Vec<usize> = match args.get("ladder") {
-                Some(spec) => spec
-                    .split(',')
-                    .map(|tok| tok.trim().parse::<usize>())
-                    .collect::<std::result::Result<_, _>>()
-                    .map_err(|_| cli_err(format!("bad --ladder `{spec}`")))?,
-                None => vec![1, 2, 4, 8],
-            };
+            let ladder = usize_list(&args, "ladder", &[1, 2, 4, 8])?;
             let ctx = make_ctx_with(
                 &args,
                 profile,
@@ -274,6 +285,66 @@ fn main() -> Result<()> {
             );
             if failures > 0 {
                 return Err(cli_err(format!("{failures} corpus row(s) failed validation")));
+            }
+        }
+        Some("tune") => {
+            if !args.flag("corpus") {
+                return Err(cli_err(
+                    "usage: repro tune --corpus [--ladder 1,2,4,8] [--grans 1,2,4,8,16]".into(),
+                ));
+            }
+            let ladder = usize_list(&args, "ladder", &[1, 2, 4, 8])?;
+            let grans = usize_list(&args, "grans", &[1, 2, 4, 8, 16])?;
+            let ctx = make_ctx_with(
+                &args,
+                profile,
+                Some(vec![hetstream::plan::CORPUS_BURNER.into()]),
+                false,
+            )?;
+            // Under the virtual clock every repetition is bit-identical,
+            // so medians carry no information — one run per grid point.
+            let runs = match ctx.time_mode() {
+                hetstream::device::TimeMode::Virtual => 1,
+                hetstream::device::TimeMode::Wallclock => runs,
+            };
+            let (table, rows, failures) = hetstream::experiments::tune_corpus(
+                &ctx,
+                &ladder,
+                &grans,
+                args.flag("all-configs"),
+                runs,
+            )
+            .map_err(|e| cli_err(e.to_string()))?;
+            let json = args.flag("json");
+            if json {
+                println!("{}", hetstream::experiments::tune_rows_json(&rows));
+            } else {
+                println!("{}", table.markdown());
+            }
+            if let Some(path) = args.get("csv") {
+                std::fs::write(path, table.csv())?;
+                // Keep --json stdout machine-parseable.
+                if json {
+                    eprintln!("wrote {path}");
+                } else {
+                    println!("wrote {path}");
+                }
+            }
+            let beats_fixed = rows.iter().filter(|r| r.validated && r.best_ms < r.fixed_ms).count();
+            let summary = format!(
+                "tuned {} corpus rows over streams {:?} x granularity {:?}; \
+                 {beats_fixed} app(s) beat their fixed-granularity streamed makespan",
+                rows.len(),
+                ladder,
+                grans,
+            );
+            if json {
+                eprintln!("{summary}");
+            } else {
+                println!("{summary}");
+            }
+            if failures > 0 {
+                return Err(cli_err(format!("{failures} corpus row(s) failed tuning")));
             }
         }
         Some("trace") => {

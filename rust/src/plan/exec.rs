@@ -97,7 +97,11 @@ impl<'c> Executor<'c> {
             let s = &mut ss[si];
             // Broadcast fan-out: a non-zero stream's first op waits on
             // every broadcast op (stream 0 is ordered after them by its
-            // own FIFO program order).
+            // own FIFO program order).  This wait set is only complete
+            // because `validate()` (above) rejects any broadcast op
+            // that appears after a task op: a late broadcast would be
+            // missing from `broadcast_events` for streams that already
+            // started, silently dropping the RAW edge.
             if !started[si] {
                 started[si] = true;
                 if si != 0 {

@@ -2,22 +2,35 @@
 //!
 //! Every (app, input) descriptor becomes a task DAG driven by the
 //! calibrated synthetic `burner` kernel under the descriptor's
-//! byte/FLOP profile, shaped by its Table-2 category:
+//! byte/FLOP profile, shaped by its Table-2 category and a
+//! [`Granularity`] knob (task count / tile-grid side — see
+//! [`lower_corpus_streamed_at`]):
 //!
-//! - **Independent** — `CORPUS_TASKS` disjoint windows
-//!   ([`crate::partition::chunk_ranges`]), one `H2d → Kex → D2h` chain
-//!   per task, round-robin lanes (Fig. 6).
-//! - **False dependent** — the same, with every window inflated by the
-//!   descriptor's halo/chunk ratio: the redundant boundary bytes of
-//!   Fig. 7 ride along with each task.
-//! - **True dependent** — a `WAVEFRONT_GRID`² tile grid scheduled
+//! - **Independent** — `gran` disjoint windows, one `H2d → Kex → D2h`
+//!   chain per task, round-robin lanes (Fig. 6).
+//! - **False dependent** — the same, with every window extended by the
+//!   descriptor's halo/chunk ratio on both sides: the redundant
+//!   boundary bytes of Fig. 7 ride along with each task.
+//! - **True dependent** — a `gran`² tile grid scheduled
 //!   diagonal-by-diagonal ([`crate::partition::diagonals`]); each tile
 //!   kernel carries explicit RAW deps on its north/west/northwest
 //!   neighbours (Fig. 8).
 //! - **Sync / Iterative** — a single task (one upload, `repeats`
 //!   kernel launches on resident data, one download): nothing for a
 //!   second stream to overlap, exactly the paper's non-streamable
-//!   verdict.
+//!   verdict.  Granularity is ignored.
+//!
+//! **Granularity invariance.**  Re-lowering one descriptor at any
+//! granularity assembles bitwise-identical host outputs (the joint
+//! tuner's validation oracle).  The construction that guarantees it:
+//! the *input* payload partitions at 4-byte-aligned boundaries (so
+//! every task's burner f32 lanes line up with the bulk lowering's
+//! lanes), each task's output window is the same byte range as its
+//! input window clipped to the output size (downloaded at the
+//! window-relative offset), and output bytes past the kernel's fixed
+//! block — bytes the bulk lowering leaves zero — are downloaded from
+//! a never-written device buffer instead of the kernel output.  See
+//! DESIGN.md §Tuning.
 //!
 //! Scaling matches the stage-measurement path bit-for-bit: bytes and
 //! FLOPs divide by the engine [`crate::device::DILATION`], iterations
@@ -29,9 +42,9 @@ use std::sync::Arc;
 
 use crate::analysis::{Category, TaskDep};
 use crate::corpus::BenchConfig;
-use crate::partition::{chunk_ranges, diagonals, TileCoord};
+use crate::partition::{diagonals, TileCoord};
 
-use super::{HostSlice, PlanRegion, Slot, StreamPlan};
+use super::{Granularity, HostSlice, PlanRegion, Slot, StreamPlan};
 
 /// Walk a `g`×`g` wavefront grid in diagonal order and wire each tile's
 /// RAW deps: `emit` is called once per tile with its coordinate, its
@@ -68,14 +81,48 @@ pub fn wire_wavefront(
 /// host interpreter; KEX pacing comes from the FLOP override anyway).
 pub const CORPUS_BURNER: &str = "burner_8";
 
-/// Task count for independent / false-dependent corpus lowerings.
+/// Historical fixed task count for independent / false-dependent
+/// corpus lowerings — the default [`Granularity`] and the joint
+/// tuner's fixed-granularity baseline.
 pub const CORPUS_TASKS: usize = 8;
 
-/// Tile-grid side for true-dependent (wavefront) corpus lowerings.
-const WAVEFRONT_GRID: usize = 4;
+/// Historical fixed tile-grid side for true-dependent (wavefront)
+/// corpus lowerings — the default [`Granularity`] for that category.
+pub const WAVEFRONT_GRID: usize = 4;
 
 /// The burner artifacts' fixed block: 65536 f32 in, 65536 f32 out.
 const KEX_BYTES: usize = 65536 * 4;
+
+/// The seed repo's fixed pre-tuner settings, per category: the
+/// granularity [`lower_corpus_streamed`] uses and the baseline the
+/// joint tuner reports improvements against.
+pub fn default_corpus_granularity(cat: Category) -> Granularity {
+    match cat {
+        Category::Independent | Category::FalseDependent => Granularity::new(CORPUS_TASKS),
+        Category::TrueDependent => Granularity::new(WAVEFRONT_GRID),
+        Category::Sync | Category::Iterative => Granularity::new(1),
+    }
+}
+
+/// The knob value [`lower_corpus_streamed_at`] will actually lower
+/// `c` at: requested granularity clamped per category (at least one
+/// output lane per task for the partitioned shapes, tile-grid side in
+/// [1, 8] for wavefronts, always 1 where the knob is ignored).  Tuners
+/// should map their candidate ladders through this and dedupe, or
+/// aliased grid points get measured twice under different labels.
+pub fn effective_corpus_granularity(c: &BenchConfig, gran: Granularity) -> Granularity {
+    let s = scaled(c);
+    match c.category() {
+        Category::Sync | Category::Iterative => Granularity::new(1),
+        Category::Independent | Category::FalseDependent => {
+            // At least one input lane per task (tasks partition the
+            // payload — a 4-byte-output reduction still streams its
+            // uploads, Fig. 6).
+            Granularity::new(gran.get().min(s.h2d.max(4) / 4).max(1))
+        }
+        Category::TrueDependent => Granularity::new(gran.get().clamp(1, 8)),
+    }
+}
 
 /// Descriptor profile after engine scaling (see module docs).
 struct Scaled {
@@ -115,149 +162,195 @@ fn seed_of(c: &BenchConfig) -> u64 {
         .fold(0xCBF29CE484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001B3))
 }
 
-/// One task's chain: H2D its window, burn a fixed block of its input
-/// buffer, D2H its output window.  Buffers are padded to the burner
-/// block so the kernel signature always matches; windows shorter than
-/// the block read deterministic zero padding.
-#[allow(clippy::too_many_arguments)]
-fn task_chain(
-    p: &mut StreamPlan,
-    slot: Slot,
-    payload: &Arc<Vec<u8>>,
-    src_off: usize,
-    xfer_len: usize,
-    out_len: usize,
-    out_idx: usize,
-    out_off: usize,
-    artifact: &str,
-    flops: u64,
-    repeats: u32,
-    deps: Vec<usize>,
-) -> usize {
-    let in_buf = p.buf(xfer_len.max(KEX_BYTES));
-    let out_buf = p.buf(out_len.max(KEX_BYTES));
-    if xfer_len > 0 {
-        p.h2d(
-            slot,
-            HostSlice { data: payload.clone(), off: src_off, len: xfer_len },
-            PlanRegion { buf: in_buf, off: 0, len: xfer_len },
-            vec![],
-        );
-    }
-    let kex = p.kex(
-        slot,
-        artifact,
-        vec![PlanRegion::whole(in_buf, KEX_BYTES)],
-        vec![PlanRegion::whole(out_buf, KEX_BYTES)],
-        Some(flops),
-        repeats,
-        deps,
-    );
-    if out_len > 0 {
-        p.d2h(slot, PlanRegion { buf: out_buf, off: 0, len: out_len }, out_idx, out_off, vec![]);
-    }
-    kex
-}
-
 /// Bulk (non-streamed) lowering: one upload, `repeats` kernel
 /// launches, one download — the offload the paper's §3.3 protocol
-/// measures stage-by-stage, and the baseline every streamed corpus run
-/// is compared against analytically.
+/// measures stage-by-stage, and the reference every streamed corpus
+/// run (at every granularity) is validated against bitwise.
 pub fn lower_corpus_bulk(c: &BenchConfig, artifact: &str) -> StreamPlan {
     let s = scaled(c);
     let mut p = StreamPlan::new(format!("{}/{}", c.app, c.config));
     let out = p.output(s.d2h);
     let payload = synth_payload(s.h2d, seed_of(c));
-    task_chain(
-        &mut p,
+    let in_buf = p.buf(s.h2d.max(KEX_BYTES));
+    let out_buf = p.buf(s.d2h.max(KEX_BYTES));
+    p.h2d(
         Slot::Task(0),
-        &payload,
-        0,
-        s.h2d,
-        s.d2h,
-        out,
-        0,
+        HostSlice::whole(payload),
+        PlanRegion { buf: in_buf, off: 0, len: s.h2d },
+        vec![],
+    );
+    let kex = p.kex(
+        Slot::Task(0),
         artifact,
-        s.flops_per_iter,
+        vec![PlanRegion::whole(in_buf, KEX_BYTES)],
+        vec![PlanRegion::whole(out_buf, KEX_BYTES)],
+        Some(s.flops_per_iter),
         s.repeats,
         vec![],
     );
+    p.d2h(Slot::Task(0), PlanRegion { buf: out_buf, off: 0, len: s.d2h }, out, 0, vec![kex]);
     p
 }
 
-/// Streamed lowering: the category-shaped task DAG described in the
-/// module docs.  Executing the result on 1 stream is the serialized
-/// pipeline; the `repro sweep --corpus` ladder maps the same plan onto
-/// more streams and validates outputs bit-for-bit against it.
+/// Streamed lowering at the category's historical fixed granularity
+/// ([`default_corpus_granularity`]) — the pre-tuner behavior.
 pub fn lower_corpus_streamed(c: &BenchConfig, artifact: &str) -> StreamPlan {
+    lower_corpus_streamed_at(c, artifact, default_corpus_granularity(c.category()))
+}
+
+/// Streamed lowering at an explicit granularity: the category-shaped
+/// task DAG described in the module docs, re-derivable at any knob
+/// value with bitwise-identical assembled outputs (the joint tuner's
+/// oracle).  Executing the result on 1 stream is the serialized
+/// pipeline; `repro sweep`/`repro tune` map the same plan onto more
+/// streams and validate bit-for-bit.
+pub fn lower_corpus_streamed_at(
+    c: &BenchConfig,
+    artifact: &str,
+    gran: Granularity,
+) -> StreamPlan {
     let s = scaled(c);
-    let cat = c.category();
-    match cat {
+    let eff = effective_corpus_granularity(c, gran).get();
+    match c.category() {
         Category::Sync | Category::Iterative => lower_corpus_bulk(c, artifact),
         Category::Independent | Category::FalseDependent => {
-            // Halo inflation per window (false dependent only): the
+            // Halo ratio per window side (false dependent only): the
             // redundant boundary bytes of Fig. 7, from the descriptor's
             // recorded halo/chunk element ratio.
             let inflate = match c.facts.task_dep {
                 TaskDep::Rar { halo, chunk } => 2.0 * halo as f64 / chunk.max(1) as f64,
                 _ => 0.0,
             };
-            let k = CORPUS_TASKS.min(s.h2d / 4).max(1);
-            let owned = chunk_ranges(s.h2d, k);
-            let outs = chunk_ranges(s.d2h, k);
-            let xfer: Vec<usize> =
-                owned.iter().map(|r| r.len + (r.len as f64 * inflate) as usize).collect();
-            let payload = synth_payload(xfer.iter().sum(), seed_of(c));
-            let mut p = StreamPlan::new(format!("{}/{}", c.app, c.config));
-            let out = p.output(s.d2h);
-            let mut src_off = 0;
-            for t in 0..k {
-                task_chain(
-                    &mut p,
-                    Slot::Task(t),
-                    &payload,
-                    src_off,
-                    xfer[t],
-                    outs[t].len,
-                    out,
-                    outs[t].start,
-                    artifact,
-                    s.flops_per_iter / k as u64,
-                    s.repeats,
-                    vec![],
-                );
-                src_off += xfer[t];
-            }
-            p
+            lower_tasks(c, artifact, &s, eff, inflate, None)
         }
-        Category::TrueDependent => {
-            let g = WAVEFRONT_GRID;
-            let tiles = g * g;
-            let windows = chunk_ranges(s.h2d, tiles);
-            let outs = chunk_ranges(s.d2h, tiles);
-            let payload = synth_payload(s.h2d, seed_of(c));
-            let mut p = StreamPlan::new(format!("{}/{}", c.app, c.config));
-            let out = p.output(s.d2h);
+        Category::TrueDependent => lower_tasks(c, artifact, &s, eff * eff, 0.0, Some(eff)),
+    }
+}
+
+/// Round up to the next f32-lane boundary.
+fn lane_up(n: usize) -> usize {
+    (n + 3) & !3
+}
+
+/// The shared task construction (module docs, "Granularity
+/// invariance"): partition the payload at aligned boundaries, derive
+/// each task's output window from its input window clipped to the
+/// output size, and split any download reaching past the kernel block
+/// between the kernel output and a never-written zero buffer.
+/// `wavefront = Some(g)`
+/// wires `g`² tiles diagonal-by-diagonal with RAW deps; `None` emits
+/// independent round-robin chains in task order.
+fn lower_tasks(
+    c: &BenchConfig,
+    artifact: &str,
+    s: &Scaled,
+    m: usize,
+    inflate: f64,
+    wavefront: Option<usize>,
+) -> StreamPlan {
+    let (h, d) = (s.h2d, s.d2h);
+    let payload = synth_payload(h, seed_of(c));
+    let mut p = StreamPlan::new(format!("{}/{}", c.app, c.config));
+    let out = p.output(d);
+
+    // Input boundaries: 4-byte-aligned partition of the payload — the
+    // Fig. 6 overlap structure (every task ships a share of the input
+    // whatever the output size).  Alignment keeps every task's burner
+    // f32 lanes in phase with the bulk lowering's lanes.
+    let ix: Vec<usize> = (0..=m).map(|t| if t == m { h } else { (t * h / m) & !3 }).collect();
+    // Output boundaries follow the input partition, clipped to the
+    // output size; the tail of a larger output (d > h) rides with the
+    // last task.  A task's output window is always inside its own
+    // input window's byte positions, so its kernel computed exactly
+    // those lanes.
+    let ob: Vec<usize> = (0..=m).map(|t| if t == m { d } else { ix[t].min(d) }).collect();
+
+    // Zero source for output bytes past the kernel block (bytes the
+    // bulk lowering leaves untouched): one never-written buffer.
+    let zmax = (0..m)
+        .map(|t| ob[t + 1].saturating_sub(ob[t].max(KEX_BYTES)))
+        .max()
+        .unwrap_or(0);
+    let zeros = if zmax > 0 { Some(p.buf(zmax)) } else { None };
+
+    let flops = s.flops_per_iter / m as u64;
+    let emit_task = |p: &mut StreamPlan, t: usize, slot: Slot, deps: Vec<usize>| -> usize {
+        let (olo, ohi) = (ob[t], ob[t + 1]);
+        let (ilo, ihi) = (ix[t], ix[t + 1]);
+        // Symmetric halo extension, lane-aligned, clipped to the
+        // payload (so the window still slices the bulk payload).
+        let halo = if inflate > 0.0 && ihi > ilo {
+            lane_up((((ihi - ilo) as f64 * inflate / 2.0) as usize).max(1))
+        } else {
+            0
+        };
+        let xlo = ilo - halo.min(ilo);
+        let xhi = (ihi + halo).min(h);
+        let xfer = xhi - xlo;
+
+        let in_buf = p.buf(xfer.max(KEX_BYTES));
+        let out_buf = p.buf(KEX_BYTES);
+        if xfer > 0 {
+            p.h2d(
+                slot,
+                HostSlice { data: payload.clone(), off: xlo, len: xfer },
+                PlanRegion { buf: in_buf, off: 0, len: xfer },
+                vec![],
+            );
+        }
+        let kex = p.kex(
+            slot,
+            artifact,
+            vec![PlanRegion::whole(in_buf, KEX_BYTES)],
+            vec![PlanRegion::whole(out_buf, KEX_BYTES)],
+            Some(flops),
+            s.repeats,
+            deps,
+        );
+        // Computed part: output positions below the kernel block, read
+        // at the window-relative offset.  A non-empty output window
+        // implies a non-empty input window starting at `olo` (so there
+        // `delta` is just the halo shift, and `olo ≥ xlo` holds —
+        // outside this branch `olo - xlo` could underflow: an
+        // empty-output task has olo clamped to `d` below its `xlo`).
+        let chi = ohi.min(KEX_BYTES);
+        if chi > olo {
+            let delta = olo - xlo;
+            p.d2h(
+                slot,
+                PlanRegion { buf: out_buf, off: delta, len: chi - olo },
+                out,
+                olo,
+                vec![kex],
+            );
+        }
+        // Zero part: positions the bulk lowering leaves untouched.
+        let zlo = olo.max(KEX_BYTES);
+        if ohi > zlo {
+            p.d2h(
+                slot,
+                PlanRegion { buf: zeros.expect("zero buffer declared"), off: 0, len: ohi - zlo },
+                out,
+                zlo,
+                vec![],
+            );
+        }
+        kex
+    };
+
+    match wavefront {
+        Some(g) => {
             wire_wavefront(g, |tc, lane, deps| {
-                let t = tc.bi * g + tc.bj;
-                task_chain(
-                    &mut p,
-                    lane,
-                    &payload,
-                    windows[t].start,
-                    windows[t].len,
-                    outs[t].len,
-                    out,
-                    outs[t].start,
-                    artifact,
-                    s.flops_per_iter / tiles as u64,
-                    s.repeats,
-                    deps,
-                )
+                emit_task(&mut p, tc.bi * g + tc.bj, lane, deps)
             });
-            p
+        }
+        None => {
+            for t in 0..m {
+                emit_task(&mut p, t, Slot::Task(t), vec![]);
+            }
         }
     }
+    p
 }
 
 #[cfg(test)]
@@ -280,6 +373,26 @@ mod tests {
     }
 
     #[test]
+    fn every_granularity_keeps_the_descriptor_byte_profile() {
+        // Re-lowering at any knob value moves *when* bytes travel, not
+        // how many: D2H totals are exactly the descriptor's, H2D totals
+        // are the descriptor's plus (for false dependent) halo bytes.
+        for c in all_configs().into_iter().step_by(17) {
+            let bulk = lower_corpus_bulk(&c, CORPUS_BURNER);
+            for g in [1usize, 2, 3, 8, 16, 64] {
+                let strm = lower_corpus_streamed_at(&c, CORPUS_BURNER, Granularity::new(g));
+                strm.validate()
+                    .unwrap_or_else(|e| panic!("{}/{} gran {g}: {e}", c.app, c.config));
+                assert_eq!(strm.d2h_bytes(), bulk.d2h_bytes(), "{} gran {g}", c.app);
+                assert!(strm.h2d_bytes() >= bulk.h2d_bytes(), "{} gran {g}", c.app);
+                if c.category() == crate::analysis::Category::Independent {
+                    assert_eq!(strm.h2d_bytes(), bulk.h2d_bytes(), "{} gran {g}", c.app);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn category_shapes_the_task_dag() {
         let find = |app: &str| {
             all_configs().into_iter().find(|c| c.app == app).expect("app in corpus")
@@ -287,18 +400,28 @@ mod tests {
         // Iterative/sync collapse to one task.
         assert_eq!(lower_corpus_streamed(&find("hotspot"), CORPUS_BURNER).tasks(), 1);
         assert_eq!(lower_corpus_streamed(&find("backprop"), CORPUS_BURNER).tasks(), 1);
-        // Independent fans out.
+        // Independent fans out, and the knob re-shapes it.
         let nn = lower_corpus_streamed(&find("nn"), CORPUS_BURNER);
         assert_eq!(nn.tasks(), CORPUS_TASKS);
-        assert!(nn.ops.iter().all(|op| op.deps.is_empty()), "independent has no RAW edges");
+        let kex_dep_free = nn
+            .ops
+            .iter()
+            .filter(|op| matches!(op.kind, PlanOpKind::Kex { .. }))
+            .all(|op| op.deps.is_empty());
+        assert!(kex_dep_free, "independent kernels have no cross-task RAW edges");
+        let nn16 =
+            lower_corpus_streamed_at(&find("nn"), CORPUS_BURNER, Granularity::new(16));
+        assert_eq!(nn16.tasks(), 16);
         // False dependent ships more than the bulk payload.
         let lavamd = find("lavaMD");
         let strm = lower_corpus_streamed(&lavamd, CORPUS_BURNER);
         let bulk = lower_corpus_bulk(&lavamd, CORPUS_BURNER);
         assert!(strm.h2d_bytes() > bulk.h2d_bytes(), "halo redundancy must show up");
-        // True dependent carries wavefront deps.
+        // True dependent carries wavefront deps; the knob is the grid side.
         let wf = lower_corpus_streamed(&find("nw"), CORPUS_BURNER);
         assert_eq!(wf.tasks(), WAVEFRONT_GRID * WAVEFRONT_GRID);
+        let wf2 = lower_corpus_streamed_at(&find("nw"), CORPUS_BURNER, Granularity::new(2));
+        assert_eq!(wf2.tasks(), 4);
         let dep_edges: usize = wf
             .ops
             .iter()
@@ -306,6 +429,42 @@ mod tests {
             .map(|op| op.deps.len())
             .sum();
         assert!(dep_edges > 0, "wavefront must have RAW edges");
+    }
+
+    #[test]
+    fn effective_granularity_matches_category_clamps() {
+        let find = |app: &str| {
+            all_configs().into_iter().find(|c| c.app == app).expect("app in corpus")
+        };
+        let eff = |c: &crate::corpus::BenchConfig, g: usize| {
+            effective_corpus_granularity(c, Granularity::new(g)).get()
+        };
+        // Sync/iterative ignore the knob entirely.
+        assert_eq!(eff(&find("backprop"), 16), 1);
+        assert_eq!(eff(&find("hotspot"), 7), 1);
+        // Wavefront grid sides clamp to [1, 8].
+        assert_eq!(eff(&find("nw"), 16), 8);
+        assert_eq!(eff(&find("nw"), 3), 3);
+        // Partitioned shapes keep at least one input lane per task,
+        // and the streamed lowering's task count agrees.
+        let nn = find("nn");
+        assert_eq!(eff(&nn, 16), 16);
+        assert_eq!(
+            lower_corpus_streamed_at(&nn, CORPUS_BURNER, Granularity::new(16)).tasks(),
+            eff(&nn, 16)
+        );
+        // Tasks partition the *input*: a scalar-output reduction still
+        // streams its uploads (Fig. 6) — the knob must not collapse on
+        // tiny outputs.
+        let red = find("Reduction");
+        let strm = lower_corpus_streamed(&red, CORPUS_BURNER);
+        assert_eq!(strm.tasks(), CORPUS_TASKS, "4-byte-output app keeps its task fan-out");
+        let h2d_ops = strm
+            .ops
+            .iter()
+            .filter(|op| matches!(op.kind, PlanOpKind::H2d { .. }))
+            .count();
+        assert_eq!(h2d_ops, CORPUS_TASKS, "every task ships an input share");
     }
 
     #[test]

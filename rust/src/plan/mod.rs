@@ -38,7 +38,9 @@ mod lower;
 
 pub use exec::{outputs_match, Executor, PlanRun};
 pub use lower::{
-    lower_corpus_bulk, lower_corpus_streamed, wire_wavefront, CORPUS_BURNER, CORPUS_TASKS,
+    default_corpus_granularity, effective_corpus_granularity, lower_corpus_bulk,
+    lower_corpus_streamed, lower_corpus_streamed_at, wire_wavefront, CORPUS_BURNER, CORPUS_TASKS,
+    WAVEFRONT_GRID,
 };
 
 use std::sync::Arc;
@@ -46,6 +48,36 @@ use std::sync::Arc;
 use crate::analysis::StageTimes;
 use crate::device::DeviceProfile;
 use crate::{Error, Result};
+
+/// Task-granularity knob of a lowering (paper §6: "proper task and/or
+/// resource granularity").  One integer whose meaning is fixed per
+/// workload category (DESIGN.md §Tuning):
+///
+/// - **Independent / false dependent** — the number of pipeline tasks
+///   the transfer space is partitioned into.
+/// - **True dependent (wavefront)** — the tile-grid side (`g` ⇒ `g²`
+///   tasks scheduled diagonal-by-diagonal).
+/// - **Sync / iterative** — upload-chunking only (the kernel chain is
+///   a single RAW chain whatever the knob); corpus lowerings ignore it.
+///
+/// Every lowering that takes a `Granularity` must produce bitwise the
+/// same assembled host outputs at every value — granularity moves
+/// *when* bytes travel, never *which* bytes the result holds — so the
+/// joint (streams × granularity) tuner can validate each grid point
+/// against one bulk reference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Granularity(usize);
+
+impl Granularity {
+    /// Clamped to ≥ 1 (a zero-task plan is meaningless).
+    pub const fn new(n: usize) -> Self {
+        Self(if n == 0 { 1 } else { n })
+    }
+
+    pub const fn get(self) -> usize {
+        self.0
+    }
+}
 
 /// A borrowed window of immutable host bytes (H2D source).
 #[derive(Debug, Clone)]

@@ -15,7 +15,7 @@
 use std::sync::Arc;
 
 use crate::hstreams::Context;
-use crate::plan::{Executor, HostSlice, PlanRegion, Slot, StreamPlan};
+use crate::plan::{Executor, Granularity, HostSlice, PlanRegion, Slot, StreamPlan};
 use crate::runtime::bytes;
 use crate::Result;
 
@@ -38,36 +38,54 @@ impl Hotspot {
         self.steps
     }
 
-    /// Lower the ping-pong chain to the task-DAG IR.
+    /// Lower the ping-pong chain to the task-DAG IR (historical shape:
+    /// each upload is one op).
     pub fn lower(&self, temp0: &[f32], power: &[f32]) -> StreamPlan {
+        self.lower_at(temp0, power, Granularity::new(1))
+    }
+
+    /// Lower with the upload-granularity knob: each of the two input
+    /// arrays splits into `gran` chunked H2D ops on alternating lanes
+    /// (temperature on even, power on odd), so finer chunks interleave
+    /// the two uploads across two streams — all the concurrency the
+    /// Iterative category permits ("overlapping the data transfer and
+    /// the first iteration").  The kernel chain itself stays a pure
+    /// RAW chain whatever the knob, and the assembled output is
+    /// bitwise identical at every granularity: the same bytes land in
+    /// the same buffer regions, only *when* they travel changes.
+    pub fn lower_at(&self, temp0: &[f32], power: &[f32], gran: Granularity) -> StreamPlan {
         let bytes_n = N * N * 4;
+        let chunks = gran.get().min(bytes_n / 4).max(1);
         let mut p = StreamPlan::new("hotspot");
         let out = p.output(bytes_n);
         let ta = p.buf(bytes_n);
         let tb = p.buf(bytes_n);
         let pw = p.buf(bytes_n);
 
-        // The two uploads take different lanes: on one stream they
-        // serialize (bulk port), on two they overlap — all the
-        // concurrency the Iterative category permits.
-        let e_t = p.h2d(
-            Slot::Task(0),
-            HostSlice::whole(Arc::new(bytes::from_f32(temp0))),
-            PlanRegion::whole(ta, bytes_n),
-            vec![],
-        );
-        let e_p = p.h2d(
-            Slot::Task(1),
-            HostSlice::whole(Arc::new(bytes::from_f32(power))),
-            PlanRegion::whole(pw, bytes_n),
-            vec![],
-        );
+        let upload = |p: &mut StreamPlan, data: &[f32], buf: usize, lane0: usize| {
+            let payload = Arc::new(bytes::from_f32(data));
+            crate::partition::chunk_ranges(bytes_n, chunks)
+                .into_iter()
+                .enumerate()
+                .map(|(j, r)| {
+                    p.h2d(
+                        Slot::Task(lane0 + 2 * j),
+                        HostSlice { data: payload.clone(), off: r.start, len: r.len },
+                        PlanRegion { buf, off: r.start, len: r.len },
+                        vec![],
+                    )
+                })
+                .collect::<Vec<usize>>()
+        };
+        let mut uploads = upload(&mut p, temp0, ta, 0);
+        uploads.extend(upload(&mut p, power, pw, 1));
 
         // Ping-pong chain: step k reads step k-1's output — a pure
         // RAW chain on lane 0, serialized regardless of stream count.
+        // The first step waits on every upload chunk.
         let (mut src, mut dst) = (ta, tb);
         for step in 0..self.steps {
-            let deps = if step == 0 { vec![e_t, e_p] } else { Vec::new() };
+            let deps = if step == 0 { uploads.clone() } else { Vec::new() };
             p.kex(
                 Slot::Task(0),
                 "hotspot_step",

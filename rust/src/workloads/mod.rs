@@ -25,6 +25,12 @@
 //! redundant-boundary transfer of Fig. 7) plus shared broadcast inputs
 //! that lower to `Slot::Broadcast` ops.  Needleman–Wunsch lowers its
 //! wavefront (diagonal lanes, cross-tile RAW deps) in [`nw`].
+//!
+//! Task granularity is a first-class knob (DESIGN.md §Tuning):
+//! [`GenericWorkload::with_chunks`] re-derives the same workload at a
+//! different task count via each [`Windows`] recipe, hotspot chunks
+//! its uploads ([`hotspot::Hotspot::lower_at`]), and NW's grid side is
+//! its wavefront granularity ([`nw::NeedlemanWunsch::with_grid`]).
 
 pub mod oracle;
 
@@ -141,13 +147,27 @@ pub struct Windows {
     pub host: Arc<Vec<u8>>,
     /// (byte offset, byte length) per chunk.
     pub windows: Vec<(usize, usize)>,
+    /// How the windows were derived — kept so the granularity knob can
+    /// re-partition the same host array at a different chunk count.
+    recipe: WindowRecipe,
+}
+
+/// The partitioning rule behind a [`Windows`] (see [`Windows::rechunk`]).
+#[derive(Debug, Clone, Copy)]
+enum WindowRecipe {
+    Disjoint,
+    Halo { halo_bytes: usize },
 }
 
 impl Windows {
     /// Disjoint equal windows (independent partitioning).
     pub fn disjoint(host: Arc<Vec<u8>>, chunks: usize) -> Self {
         let ranges = crate::partition::chunk_ranges(host.len(), chunks);
-        Self { host, windows: ranges.into_iter().map(|r| (r.start, r.len)).collect() }
+        Self {
+            host,
+            windows: ranges.into_iter().map(|r| (r.start, r.len)).collect(),
+            recipe: WindowRecipe::Disjoint,
+        }
     }
 
     /// Overlapping halo windows over a pre-padded host array:
@@ -158,7 +178,29 @@ impl Windows {
         Self {
             host,
             windows: hcs.into_iter().map(|h| (h.xfer_start, h.xfer_len)).collect(),
+            recipe: WindowRecipe::Halo { halo_bytes },
         }
+    }
+
+    /// Re-partition the same host array into `chunks` windows — the
+    /// task-granularity knob.  `None` when the owned range doesn't
+    /// split into equal 4-byte-lane-aligned chunks (uneven windows
+    /// would shift kernel lanes and break bitwise re-validation).
+    pub fn rechunk(&self, chunks: usize) -> Option<Self> {
+        let chunks = chunks.max(1);
+        let owned = match self.recipe {
+            WindowRecipe::Disjoint => self.host.len(),
+            WindowRecipe::Halo { halo_bytes } => self.host.len() - 2 * halo_bytes,
+        };
+        if owned % (chunks * 4) != 0 {
+            return None;
+        }
+        Some(match self.recipe {
+            WindowRecipe::Disjoint => Self::disjoint(self.host.clone(), chunks),
+            WindowRecipe::Halo { halo_bytes } => {
+                Self::halo(self.host.clone(), chunks, halo_bytes)
+            }
+        })
     }
 }
 
@@ -193,6 +235,44 @@ impl GenericWorkload {
             Mode::Baseline => self.lower_baseline(),
             Mode::Streamed(_) => self.lower_streamed(),
         }
+    }
+
+    /// Re-derive the same workload at a different task count — the
+    /// [`crate::plan::Granularity`] knob for declaratively-specified
+    /// benchmarks.  Input windows re-partition via their recipes and
+    /// per-chunk output sizes rescale so the assembled totals are
+    /// unchanged.  `None` when any window set or output doesn't split
+    /// evenly at lane alignment.
+    ///
+    /// Bitwise output equality across chunk counts additionally
+    /// requires the kernel to be a per-element map over its windows
+    /// (`vector_add`, `black_scholes`, …); kernels with per-chunk
+    /// semantics (histogram bins, per-chunk scans) re-lower fine but
+    /// mean something different per granularity — don't tune those
+    /// against a fixed reference.
+    pub fn with_chunks(&self, chunks: usize) -> Option<GenericWorkload> {
+        let chunks = chunks.max(1);
+        let streamed_inputs: Vec<Windows> =
+            self.streamed_inputs.iter().map(|w| w.rechunk(chunks)).collect::<Option<_>>()?;
+        let old_chunks = self.chunks();
+        let output_chunk_bytes: Vec<usize> = self
+            .output_chunk_bytes
+            .iter()
+            .map(|&b| {
+                let total = b * old_chunks;
+                (total % (chunks * 4) == 0).then(|| total / chunks)
+            })
+            .collect::<Option<_>>()?;
+        Some(GenericWorkload {
+            name: self.name,
+            artifact: self.artifact,
+            streamed_inputs,
+            shared_inputs: self.shared_inputs.clone(),
+            output_chunk_bytes,
+            flops_per_chunk: self
+                .flops_per_chunk
+                .map(|f| (f * old_chunks as u64) / chunks as u64),
+        })
     }
 
     /// Execute through the plan executor; returns (wall, per-output

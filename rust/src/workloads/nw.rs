@@ -36,9 +36,20 @@ impl NeedlemanWunsch {
         Self { grid: 8 * scale.max(1) }
     }
 
-    /// Exact tile-grid side (property tests exercise small grids).
+    /// Exact tile-grid side — the wavefront's [`crate::plan::Granularity`]
+    /// knob (property tests and the joint tuner exercise small grids).
+    /// Note the tile side is fixed by the `nw_tile` artifact, so the
+    /// grid side also sets the matrix size: unlike the corpus
+    /// lowerings, two grids are two *problems*, and each must validate
+    /// against its own single-stream reference rather than one shared
+    /// bulk run.
     pub fn with_grid(grid: usize) -> Self {
         Self { grid: grid.max(1) }
+    }
+
+    /// The grid side this instance lowers at.
+    pub fn grid(&self) -> usize {
+        self.grid
     }
 
     pub fn matrix_size(&self) -> usize {

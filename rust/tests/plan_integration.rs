@@ -9,10 +9,15 @@ use std::sync::Arc;
 
 use hetstream::device::DeviceProfile;
 use hetstream::hstreams::{Context, ContextBuilder};
-use hetstream::plan::{lower_corpus_streamed, outputs_match, Executor, CORPUS_BURNER};
+use hetstream::plan::{
+    lower_corpus_bulk, lower_corpus_streamed, lower_corpus_streamed_at, outputs_match, Executor,
+    Granularity, HostSlice, PlanRegion, Slot, StreamPlan, CORPUS_BURNER,
+};
 use hetstream::runtime::bytes;
 use hetstream::util::prop::{check, Rng};
-use hetstream::workloads::{gen_f32, gen_i32, GenericWorkload, Mode, NeedlemanWunsch, Windows};
+use hetstream::workloads::{
+    gen_f32, gen_i32, GenericWorkload, Hotspot, Mode, NeedlemanWunsch, Windows,
+};
 
 fn instant_ctx(artifacts: &[&str]) -> Context {
     ContextBuilder::new()
@@ -142,6 +147,103 @@ fn corpus_descriptors_execute_through_plans_with_validation() {
             );
         }
     }
+}
+
+#[test]
+fn prop_corpus_relowering_is_granularity_invariant() {
+    // The tentpole oracle: re-lowering any descriptor at any two
+    // granularities and any stream count assembles outputs bitwise
+    // equal to the *bulk* lowering — the knob moves when bytes travel,
+    // never what the result holds.
+    let ctx = instant_ctx(&[CORPUS_BURNER]);
+    let exec = Executor::new(&ctx);
+    let cfgs = hetstream::corpus::all_configs();
+    check(10, |rng: &mut Rng| {
+        let cfg = &cfgs[rng.below(cfgs.len() as u64) as usize];
+        let bulk = lower_corpus_bulk(cfg, CORPUS_BURNER);
+        let reference = exec.run(&bulk, 1).expect("bulk run");
+        let n = rng.range(1, 8);
+        for _ in 0..2 {
+            let g = rng.range(1, 16);
+            let plan = lower_corpus_streamed_at(cfg, CORPUS_BURNER, Granularity::new(g));
+            plan.validate()
+                .unwrap_or_else(|e| panic!("{}/{} gran {g}: {e}", cfg.app, cfg.config));
+            let r = exec.run(&plan, n).expect("streamed run");
+            assert!(
+                outputs_match(&reference, &r),
+                "{}/{} diverged from bulk at granularity {g} x {n} streams",
+                cfg.app,
+                cfg.config
+            );
+        }
+    });
+}
+
+#[test]
+fn generic_workload_rechunk_is_bitwise_stable() {
+    // The GenericWorkload granularity knob: a per-element map kernel
+    // re-chunked at any dividing task count reproduces the baseline
+    // outputs bitwise at any stream count.
+    let ctx = instant_ctx(&["vector_add"]);
+    let chunk = 65536usize;
+    let a = gen_f32(8 * chunk, 0x11);
+    let b = gen_f32(8 * chunk, 0x22);
+    let wl = GenericWorkload {
+        name: "prop-vecadd",
+        artifact: "vector_add",
+        streamed_inputs: vec![
+            Windows::disjoint(Arc::new(bytes::from_f32(&a)), 8),
+            Windows::disjoint(Arc::new(bytes::from_f32(&b)), 8),
+        ],
+        shared_inputs: vec![],
+        output_chunk_bytes: vec![chunk * 4],
+        flops_per_chunk: None,
+    };
+    let (_, base, _) = wl.execute(&ctx, Mode::Baseline).expect("baseline");
+    for k in [1usize, 2, 4, 16] {
+        let re = wl.with_chunks(k).expect("dividing chunk count");
+        assert_eq!(re.chunks(), k);
+        for n in [1usize, 3] {
+            let (_, got, _) = re.execute(&ctx, Mode::Streamed(n)).expect("rechunked run");
+            assert_eq!(base, got, "vecadd diverged at {k} chunks x {n} streams");
+        }
+    }
+    // Non-dividing counts refuse rather than silently skew windows.
+    assert!(wl.with_chunks(7).is_none());
+}
+
+#[test]
+fn hotspot_upload_granularity_is_bitwise_stable() {
+    let ctx = instant_ctx(&["hotspot_step"]);
+    let hs = Hotspot::new(1);
+    let temp0 = gen_f32(hetstream::workloads::hotspot::N * hetstream::workloads::hotspot::N, 3);
+    let power = gen_f32(hetstream::workloads::hotspot::N * hetstream::workloads::hotspot::N, 4);
+    let exec = Executor::new(&ctx);
+    let reference = exec.run(&hs.lower(&temp0, &power), 1).expect("reference");
+    for g in [2usize, 5, 16] {
+        let plan = hs.lower_at(&temp0, &power, Granularity::new(g));
+        plan.validate().expect("chunked-upload plan");
+        for n in [1usize, 2] {
+            let r = exec.run(&plan, n).expect("run");
+            assert!(outputs_match(&reference, &r), "hotspot diverged at gran {g} x {n} streams");
+        }
+    }
+}
+
+#[test]
+fn executor_rejects_late_broadcast() {
+    // Regression for the broadcast fan-out ordering: the executor only
+    // snapshots broadcast events for streams that have not started, so
+    // a `Slot::Broadcast` op after any task op must be a structural
+    // error, not a silently dropped RAW edge.
+    let ctx = instant_ctx(&["histogram"]);
+    let mut p = StreamPlan::new("late-broadcast");
+    let b = p.buf(16);
+    let src = Arc::new(vec![7u8; 16]);
+    p.h2d(Slot::Task(0), HostSlice::whole(src.clone()), PlanRegion::whole(b, 16), vec![]);
+    p.h2d(Slot::Broadcast, HostSlice::whole(src), PlanRegion::whole(b, 16), vec![]);
+    let err = Executor::new(&ctx).run(&p, 4).expect_err("late broadcast must be rejected");
+    assert!(err.to_string().contains("broadcast"), "unexpected error: {err}");
 }
 
 #[test]
