@@ -21,7 +21,12 @@ fn main() {
 
     let positive = rows.iter().filter(|r| r.improvement_pct > 5.0).count();
     let lavamd = rows.iter().find(|r| r.name == "lavaMD").unwrap();
-    println!("suite in {:.1} s — {} of {} benchmarks gain >5%;", t0.elapsed().as_secs_f64(), positive, rows.len());
+    println!(
+        "suite in {:.1} s — {} of {} benchmarks gain >5%;",
+        t0.elapsed().as_secs_f64(),
+        positive,
+        rows.len()
+    );
     println!(
         "KEY SHAPE — paper: gains 8..90%, nn highest among independents, lavaMD negative \
          (here {:+.1}%, h2d ratio {:.2}x vs paper ~1.9x)",

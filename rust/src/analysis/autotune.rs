@@ -20,18 +20,31 @@
 //! - [`autotune_streams`] / [`autotune_plan`] — empirical: measure a
 //!   candidate ladder (or the full streams × granularity grid, each
 //!   point re-lowered and validated bitwise against the bulk
-//!   reference) under the virtual clock and return the argmin.  The
-//!   paper's "leveraging machine learning" is a measured search here —
-//!   exact, since the space is tiny and the clock is deterministic.
+//!   reference) under the virtual clock and return the argmin — exact,
+//!   since the clock is deterministic.
+//! - [`autotune_plan_pruned`] — the same measured search without
+//!   exhausting the grid: hill-climb the surface outward from a seed
+//!   (analytic, or the learned prediction from
+//!   [`crate::analysis::KnnTuner`]), measuring only each step's
+//!   (streams, granularity) index neighborhood.  On the 56-app corpus
+//!   this visits about a third of the full grid and lands on the
+//!   exhaustive argmin's time on 55/56 apps (the one miss is within
+//!   0.1%) — the full grid stopped being "tiny" the moment granularity
+//!   became a second axis, so the pruned walk is what `repro tune
+//!   --corpus --learned` runs.  Every visited point is still validated
+//!   bitwise against the bulk reference.
 //!
 //! Tuning paths are panic-safe: empty candidate ladders are
-//! [`crate::Error::Stream`] errors (not index panics) and argmin
+//! [`crate::Error::Stream`] errors (not index panics), argmin
 //! comparisons use `f64::total_cmp` (a NaN median cannot crash the
-//! search).
+//! search), and a degenerate zero-cost [`crate::device::DeviceProfile`]
+//! cannot walk an `inf` through the analytic seed
+//! ([`predict_plan_point`] pins `c_task <= 0` to the granularity
+//! ceiling instead of dividing by it).
 
 use crate::hstreams::Context;
 use crate::plan::{outputs_match, Executor, Granularity, StreamPlan};
-use crate::workloads::{Benchmark, Mode};
+use crate::workloads::{Benchmark, GenericWorkload, Mode};
 use crate::{Error, Result};
 
 use super::stages::StageTimes;
@@ -57,6 +70,10 @@ pub fn predict_streams(st: &StageTimes) -> usize {
     depth.clamp(2, 8)
 }
 
+/// Ceiling of the analytic granularity seed (tasks): matches the
+/// [`gran_ladder`] clamp so a seed always sits on a buildable ladder.
+pub const GRAN_CEILING: usize = 64;
+
 /// Joint analytic seed `(streams, granularity)` for a lowered plan —
 /// the grid point the measured search grows around (module docs).
 /// The granularity is a **pipeline task count**; callers tuning a
@@ -74,10 +91,18 @@ pub fn predict_plan_point(
     // Per-task fixed cost of the bottleneck lane.
     let c_task = if bottleneck == kex { profile.launch_us } else { profile.latency_us } * 1e-6;
     let overlappable = (h2d + kex + d2h) - bottleneck;
-    let gran = if c_task > 0.0 && overlappable > 0.0 {
-        ((overlappable / c_task).sqrt().round() as usize).clamp(1, 64)
-    } else {
+    let gran = if overlappable <= 0.0 {
+        // Nothing to overlap: the pipeline only needs enough tasks to
+        // fill its streams.
         streams
+    } else if c_task <= 0.0 {
+        // Degenerate profile (zero DMA latency / launch overhead):
+        // finer tasks are free, so m* is the clamp ceiling — dividing
+        // here would walk `inf` through `sqrt`/`round` and lean on the
+        // saturating `as usize` cast instead of choosing a point.
+        GRAN_CEILING
+    } else {
+        ((overlappable / c_task).sqrt().round() as usize).clamp(1, GRAN_CEILING)
     };
     // At least one task per stream, or the pipeline can't fill.
     (streams, gran.max(streams))
@@ -176,12 +201,7 @@ pub fn autotune_plan(
     // Normalize stream counts to what the executor actually maps (≥ 1)
     // and dedupe, so the surface never labels a point with a stream
     // count that doesn't exist (e.g. --ladder 0,1 aliasing 1 twice).
-    let streams: Vec<usize> = {
-        let mut v: Vec<usize> = streams.iter().map(|&n| n.max(1)).collect();
-        v.sort_unstable();
-        v.dedup();
-        v
-    };
+    let streams = normalize_ladder(streams);
     let exec = Executor::new(ctx);
     // Bulk reference: same median-of-runs methodology as every grid
     // point (one wallclock outlier must not skew all the comparisons);
@@ -221,11 +241,202 @@ pub fn autotune_plan(
     Ok(PlanTuneResult { best_streams, best_gran, best_ms, bulk_ms, surface })
 }
 
+/// Measure the (streams × granularity) surface outward from `seed`
+/// instead of exhausting it: snap the seed to the nearest grid point,
+/// then hill-climb — measure the current point's 4-neighborhood in
+/// *index* space (one step along either axis), move to the best point
+/// measured so far, stop when the current point beats every measured
+/// neighbor.  Candidates follow the same contract as [`autotune_plan`]
+/// (effective knob values, deduped); the returned surface holds only
+/// the visited points, so `surface.len()` against
+/// `streams.len() * grans.len()` is the measured fraction.  Every
+/// visited point is re-lowered and validated bitwise against the bulk
+/// reference, exactly like the full search.
+///
+/// The walk is greedy: on a non-unimodal surface it can settle on a
+/// local minimum.  Across the 56-app corpus it matches the exhaustive
+/// argmin's time on 55 apps and is within 0.1% on the last — see
+/// `tools/mirror/tuner_mirror.py` and `tests/learned_integration.rs`.
+pub fn autotune_plan_pruned(
+    ctx: &Context,
+    bulk: &StreamPlan,
+    lower: &dyn Fn(Granularity) -> StreamPlan,
+    streams: &[usize],
+    grans: &[usize],
+    seed: (usize, usize),
+    runs: usize,
+) -> Result<PlanTuneResult> {
+    if streams.is_empty() || grans.is_empty() {
+        return Err(Error::Stream(format!(
+            "autotune {}: empty (streams × granularity) candidate grid",
+            bulk.name
+        )));
+    }
+    let runs = runs.max(1);
+    // Both axes normalized: the 4-neighborhood walks *index* space, so
+    // it needs sorted, deduped, ≥ 1 candidates on each axis (the
+    // streams rule matches `autotune_plan`; grans are normalized here
+    // too because an unsorted axis would turn index neighbors into
+    // arbitrary value jumps).
+    let streams = normalize_ladder(streams);
+    let grans = normalize_ladder(grans);
+    let exec = Executor::new(ctx);
+    let reference = exec.run(bulk, 1)?;
+    let mut bulk_samples = vec![reference.wall];
+    for _ in 1..runs {
+        bulk_samples.push(exec.run(bulk, 1)?.wall);
+    }
+    let bulk_ms = crate::metrics::median_duration(&mut bulk_samples).as_secs_f64() * 1e3;
+
+    // Snap the seed to grid indices (shared rule — see [`snap_seed`]).
+    let (sn, gn) = snap_seed(&streams, &grans, seed);
+    let mut si = streams.iter().position(|&n| n == sn).expect("snapped onto the stream axis");
+    let mut gi = grans.iter().position(|&g| g == gn).expect("snapped onto the gran axis");
+
+    // Measured points, keyed (streams, granularity).  The argmin's
+    // first-seen tie-break over BTreeMap order resolves exact-time ties
+    // to the lexicographically smallest (streams, gran) point — note
+    // this is streams-major, while `autotune_plan`'s surface is
+    // gran-major, so on an exact tie the two searches can report
+    // different (equal-time) argmin coordinates.
+    let mut cache: std::collections::BTreeMap<(usize, usize), f64> = Default::default();
+    let mut plans: std::collections::BTreeMap<usize, StreamPlan> = Default::default();
+    let mut measure = |i: usize, j: usize,
+                       cache: &mut std::collections::BTreeMap<(usize, usize), f64>,
+                       plans: &mut std::collections::BTreeMap<usize, StreamPlan>|
+     -> Result<()> {
+        let (n, g) = (streams[i], grans[j]);
+        if cache.contains_key(&(n, g)) {
+            return Ok(());
+        }
+        if let std::collections::btree_map::Entry::Vacant(slot) = plans.entry(g) {
+            let plan = lower(Granularity::new(g));
+            plan.validate()?;
+            slot.insert(plan);
+        }
+        let plan = &plans[&g];
+        let mut samples = Vec::with_capacity(runs);
+        for rep in 0..runs {
+            let r = exec.run(plan, n)?;
+            if rep == 0 && !outputs_match(&reference, &r) {
+                return Err(Error::Stream(format!(
+                    "{}: outputs diverge from bulk at {n} streams × granularity {g}",
+                    plan.name
+                )));
+            }
+            samples.push(r.wall);
+        }
+        let med = crate::metrics::median_duration(&mut samples).as_secs_f64() * 1e3;
+        cache.insert((n, g), med);
+        Ok(())
+    };
+
+    measure(si, gi, &mut cache, &mut plans)?;
+    for _ in 0..streams.len() * grans.len() {
+        for (di, dj) in [(1i64, 0i64), (-1, 0), (0, 1), (0, -1)] {
+            let (i, j) = (si as i64 + di, gi as i64 + dj);
+            if i >= 0 && (i as usize) < streams.len() && j >= 0 && (j as usize) < grans.len() {
+                measure(i as usize, j as usize, &mut cache, &mut plans)?;
+            }
+        }
+        let ((bn, bg), _) =
+            argmin(cache.iter().map(|(&k, &v)| (k, v))).expect("at least the seed measured");
+        let (bi, bj) = (
+            streams.iter().position(|&n| n == bn).expect("argmin on the grid"),
+            grans.iter().position(|&g| g == bg).expect("argmin on the grid"),
+        );
+        if (bi, bj) == (si, gi) {
+            break;
+        }
+        (si, gi) = (bi, bj);
+    }
+
+    let surface: Vec<(usize, usize, f64)> =
+        cache.iter().map(|(&(n, g), &ms)| (n, g, ms)).collect();
+    let ((best_streams, best_gran), best_ms) =
+        argmin(surface.iter().map(|&(n, g, ms)| ((n, g), ms))).expect("non-empty surface");
+    Ok(PlanTuneResult { best_streams, best_gran, best_ms, bulk_ms, surface })
+}
+
+/// Joint (streams × chunk-count) autotune of a re-chunkable
+/// [`GenericWorkload`] — the granularity-aware path behind
+/// `repro autotune <NAME>` for drivers exposing
+/// [`Benchmark::tunable`].  Chunk-count candidates grow around the
+/// analytic seed and keep only counts the workload's windows actually
+/// re-partition to ([`GenericWorkload::with_chunks`] refuses
+/// non-dividing counts); the bulk (baseline) lowering is the bitwise
+/// reference for every grid point, which is sound exactly because
+/// `tunable()` is only implemented by per-element-map drivers.
+pub fn autotune_workload(
+    ctx: &Context,
+    wl: &GenericWorkload,
+    streams: &[usize],
+    runs: usize,
+) -> Result<PlanTuneResult> {
+    let bulk = wl.lower(Mode::Baseline);
+    let (_, seed_tasks) = predict_plan_point(&bulk, ctx.profile());
+    let mut grans: Vec<usize> = gran_ladder(seed_tasks)
+        .into_iter()
+        .chain([wl.chunks()])
+        .filter(|&g| wl.with_chunks(g).is_some())
+        .collect();
+    grans.sort_unstable();
+    grans.dedup();
+    autotune_plan(
+        ctx,
+        &bulk,
+        &|g| {
+            wl.with_chunks(g.get())
+                .expect("candidates pre-filtered to dividing chunk counts")
+                .lower(Mode::Streamed(1))
+        },
+        streams,
+        &grans,
+        runs,
+    )
+}
+
+/// Normalize a candidate ladder to what the executor actually maps:
+/// every entry ≥ 1, sorted ascending, deduped.  One rule shared by
+/// both grid searches and `experiments::tune_one`'s grid accounting,
+/// so the coverage denominator always counts exactly the points a
+/// search could measure.
+pub fn normalize_ladder(ladder: &[usize]) -> Vec<usize> {
+    let mut v: Vec<usize> = ladder.iter().map(|&n| n.max(1)).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Snap a `(streams, granularity)` seed onto candidate axes: nearest
+/// stream count by absolute distance, nearest granularity by log-ratio
+/// (the knob is multiplicative — 16 is "closer" to 8 than 1 is), ties
+/// to the first (smallest) candidate.  One rule shared by the pruned
+/// walk, the CV harness, and the integration tests, so "how good was
+/// the seed" is always evaluated with the walk's own snapping.
+///
+/// # Panics
+/// On an empty axis — callers validate their grids first.
+pub fn snap_seed(streams: &[usize], grans: &[usize], seed: (usize, usize)) -> (usize, usize) {
+    let (sseed, gseed) = seed;
+    let sn = *streams
+        .iter()
+        .min_by_key(|&&n| n.abs_diff(sseed))
+        .expect("non-empty stream axis");
+    // +0.5 keeps the ratio finite for a zero seed or candidate.
+    let log_dist = |g: usize, s: usize| ((g as f64 + 0.5) / (s as f64 + 0.5)).ln().abs();
+    let gn = *grans
+        .iter()
+        .min_by(|&&a, &&b| log_dist(a, gseed).total_cmp(&log_dist(b, gseed)))
+        .expect("non-empty gran axis");
+    (sn, gn)
+}
+
 /// Granularity candidate ladder grown around an analytic seed: the
 /// usual powers of two plus the seed's neighbourhood, sorted, deduped.
 pub fn gran_ladder(seed: usize) -> Vec<usize> {
-    let s = seed.clamp(1, 64);
-    let mut v = vec![1, 2, 4, 8, 16, (s / 2).max(1), s, (s * 2).min(64)];
+    let s = seed.clamp(1, GRAN_CEILING);
+    let mut v = vec![1, 2, 4, 8, 16, (s / 2).max(1), s, (s * 2).min(GRAN_CEILING)];
     v.sort_unstable();
     v.dedup();
     v
@@ -279,6 +490,48 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_profiles_cannot_poison_the_seed() {
+        use crate::plan::{HostSlice, PlanRegion, Slot, StreamPlan};
+        use std::sync::Arc;
+
+        let mut p = StreamPlan::new("degenerate");
+        let n = 1 << 20;
+        let b = p.buf(n);
+        let o = p.output(n);
+        let payload = HostSlice::whole(Arc::new(vec![0u8; n]));
+        p.h2d(Slot::Task(0), payload, PlanRegion::whole(b, n), vec![]);
+        let k = p.kex(
+            Slot::Task(0),
+            "burner_8",
+            vec![PlanRegion::whole(b, n)],
+            vec![PlanRegion::whole(b, n)],
+            Some(1_000_000),
+            1,
+            vec![],
+        );
+        p.d2h(Slot::Task(0), PlanRegion::whole(b, n), o, 0, vec![k]);
+
+        // Zero per-transfer latency but finite bandwidth: the transfer
+        // bottleneck has c_task = 0, so the balance says "finer is
+        // free" — the seed must be the clamp ceiling, not an inf walked
+        // through sqrt/round into a saturating cast (and not the old
+        // fallback to the stream count).
+        let mut zero_latency = crate::device::DeviceProfile::mic31sp().simulation();
+        zero_latency.latency_us = 0.0;
+        zero_latency.alloc_us_per_mb = 0.0;
+        let (s, g) = predict_plan_point(&p, &zero_latency);
+        assert!((2..=8).contains(&s));
+        assert_eq!(g, GRAN_CEILING, "zero c_task pins the seed to the ceiling");
+
+        // Fully instant profile: every stage is zero, nothing overlaps,
+        // and the seed stays small and finite.
+        let instant = crate::device::DeviceProfile::instant();
+        let (s, g) = predict_plan_point(&p, &instant);
+        assert_eq!(s, 2);
+        assert_eq!(g, 2, "no overlap headroom -> one task per stream");
+    }
+
+    #[test]
     fn argmin_is_nan_safe_and_first_seen() {
         let pts = [(1usize, f64::NAN), (2, 3.0), (3, 1.0), (4, 1.0)];
         let (k, v) = argmin(pts.iter().copied()).expect("non-empty");
@@ -287,6 +540,24 @@ mod tests {
         assert!(argmin(std::iter::empty::<((), f64)>()).is_none());
         // All-NaN still returns a point rather than panicking.
         assert_eq!(argmin([(7usize, f64::NAN)].into_iter()).map(|p| p.0), Some(7));
+    }
+
+    #[test]
+    fn normalize_ladder_sorts_dedupes_and_floors() {
+        assert_eq!(normalize_ladder(&[0, 1, 8, 2, 2]), vec![1, 2, 8]);
+        assert_eq!(normalize_ladder(&[4]), vec![4]);
+    }
+
+    #[test]
+    fn snap_seed_uses_abs_streams_and_log_grans() {
+        let streams = [1, 2, 4, 8];
+        let grans = [1, 2, 4, 16];
+        // Stream ties (3 is 1 away from both 2 and 4) keep the first
+        // candidate; gran 8 sits between 4 and 16 and the smoothed log
+        // distance puts it marginally nearer 4.
+        assert_eq!(snap_seed(&streams, &grans, (3, 8)), (2, 4));
+        assert_eq!(snap_seed(&streams, &grans, (9, 30)), (8, 16));
+        assert_eq!(snap_seed(&streams, &grans, (0, 0)), (1, 1));
     }
 
     #[test]

@@ -1,0 +1,359 @@
+//! The learned (streams × granularity) tuner — the arXiv:1802.02760
+//! line of work (ML-predicted stream/granularity configs for streamed
+//! coprocessor apps) over this repo's plan features, in the spirit of
+//! arXiv:2003.04294's feature-based streaming-parallelism predictor.
+//!
+//! Three layers, all zero-dependency:
+//!
+//! - [`PlanFeatures`] — a normalized feature vector extracted from a
+//!   lowered [`StreamPlan`] (category one-hots, task count, DAG
+//!   depth/width, per-stage bytes and FLOPs, the h2d:kex:d2h balance,
+//!   broadcast fraction).  Features come from the *default-granularity
+//!   streamed* lowering: it is free to build (no measurement) and,
+//!   unlike the bulk plan, exposes the DAG shape, halo inflation and
+//!   broadcast structure the tuner needs to discriminate categories.
+//! - [`Dataset`] — `(features → best_streams, best_gran)` training
+//!   rows.  `repro tune --corpus --json` is the dataset generator; its
+//!   output round-trips through [`crate::util::json`] back into rows
+//!   ([`Dataset::from_tune_json`]), and in-process callers convert
+//!   [`crate::experiments::TuneRow`]s directly.
+//! - [`KnnTuner`] — distance-weighted k-nearest-neighbors over the
+//!   normalized features, restricted to same-category neighbors.  The
+//!   prediction is the weighted geometric mean of the neighbors' optima
+//!   (both knobs are multiplicative).  An empty neighborhood returns
+//!   `None`; callers fall back to the analytic
+//!   [`super::predict_plan_point`] seed.
+//!
+//! Evaluation is leave-one-app-out cross-validation over the 56-app
+//! corpus (`repro learn --cv`, `tests/learned_integration.rs`): train
+//! on 55 apps, predict the held-out app's config, measure it, and
+//! compare against the exhaustive-grid optimum.  The learned seed also
+//! feeds [`super::autotune_plan_pruned`] (`repro tune --corpus
+//! --learned`): hill-climb from the prediction instead of measuring
+//! the whole grid.
+
+use crate::corpus::BenchConfig;
+use crate::device::DeviceProfile;
+use crate::plan::{lower_corpus_streamed, StreamPlan, CORPUS_BURNER};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::Category;
+
+/// Names of the feature dimensions, in vector order (the `repro learn`
+/// feature table and DESIGN.md §Learning use these).
+pub const FEATURE_NAMES: [&str; 14] = [
+    "cat_independent",
+    "cat_false_dep",
+    "cat_true_dep",
+    "cat_nonstream",
+    "log_tasks",
+    "depth_frac",
+    "width_frac",
+    "log_h2d_bytes",
+    "log_d2h_bytes",
+    "log_flops",
+    "r_h2d",
+    "r_kex",
+    "r_d2h",
+    "broadcast_frac",
+];
+
+/// Normalized feature vector of one lowered plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanFeatures {
+    pub category: Category,
+    /// One value per [`FEATURE_NAMES`] entry, each roughly in [0, 1].
+    pub values: Vec<f64>,
+}
+
+impl PlanFeatures {
+    /// Extract features from a lowered plan.  `category` comes from the
+    /// Table-2 categorizer (it shapes the lowering, so it is known
+    /// wherever a plan is).
+    pub fn of(plan: &StreamPlan, profile: &DeviceProfile, category: Category) -> Self {
+        let st = plan.stage_times(profile);
+        let (h2d, kex, d2h) = (st.h2d.as_secs_f64(), st.kex.as_secs_f64(), st.d2h.as_secs_f64());
+        let total = (h2d + kex + d2h).max(f64::MIN_POSITIVE);
+        let tasks = plan.tasks().max(1) as f64;
+        let h2d_bytes = plan.h2d_bytes();
+        let log10p1 = |v: u64| ((v + 1) as f64).log10();
+        let onehot = |b: bool| if b { 1.0 } else { 0.0 };
+        let values = vec![
+            onehot(category == Category::Independent),
+            onehot(category == Category::FalseDependent),
+            onehot(category == Category::TrueDependent),
+            onehot(!category.streamable()),
+            (tasks + 1.0).log10() / 2.0,
+            plan.dag_depth().max(1) as f64 / tasks,
+            plan.dag_width() as f64 / tasks,
+            log10p1(h2d_bytes) / 9.0,
+            log10p1(plan.d2h_bytes()) / 9.0,
+            log10p1(plan.kex_flops()) / 12.0,
+            h2d / total,
+            kex / total,
+            d2h / total,
+            plan.broadcast_h2d_bytes() as f64 / h2d_bytes.max(1) as f64,
+        ];
+        Self { category, values }
+    }
+
+    /// Euclidean distance in feature space.
+    pub fn distance(&self, other: &PlanFeatures) -> f64 {
+        self.values
+            .iter()
+            .zip(&other.values)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// Features of one corpus descriptor: its default-granularity streamed
+/// lowering under `profile` (no measurement involved).
+pub fn corpus_features(c: &BenchConfig, profile: &DeviceProfile) -> PlanFeatures {
+    let plan = lower_corpus_streamed(c, CORPUS_BURNER);
+    PlanFeatures::of(&plan, profile, c.category())
+}
+
+/// One training example: plan features labeled with the measured
+/// joint optimum (in the lowering's knob units).
+#[derive(Debug, Clone)]
+pub struct TrainRow {
+    pub suite: String,
+    pub app: String,
+    pub config: String,
+    pub features: PlanFeatures,
+    pub best_streams: usize,
+    pub best_gran: usize,
+}
+
+/// The training set for the learned tuner.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub rows: Vec<TrainRow>,
+}
+
+impl Dataset {
+    /// Round-trip `repro tune --corpus --json` output back into
+    /// training rows: every validated row whose `(app, config)` matches
+    /// a corpus descriptor contributes features (re-derived from the
+    /// descriptor's lowering — the JSON holds labels, not features) and
+    /// its measured best point.  Errored / mis-validated rows are
+    /// skipped: their `best` fields are the struct defaults, not
+    /// optima.
+    pub fn from_tune_json(text: &str, profile: &DeviceProfile) -> Result<Dataset> {
+        let doc = Json::parse(text).map_err(|e| Error::Config(format!("tune dataset: {e}")))?;
+        let rows_json = doc
+            .get("rows")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Config("tune dataset: missing `rows` array".into()))?;
+        let configs = crate::corpus::all_configs();
+        let mut rows = Vec::new();
+        for r in rows_json {
+            if r.get("validated").and_then(Json::as_bool) != Some(true) {
+                continue;
+            }
+            let (Some(suite), Some(app), Some(config), Some(best)) = (
+                r.get("suite").and_then(Json::as_str),
+                r.get("app").and_then(Json::as_str),
+                r.get("config").and_then(Json::as_str),
+                r.get("best"),
+            ) else {
+                continue;
+            };
+            let (Some(streams), Some(gran)) = (
+                best.get("streams").and_then(Json::as_usize),
+                best.get("gran").and_then(Json::as_usize),
+            ) else {
+                continue;
+            };
+            let Some(c) = configs
+                .iter()
+                .find(|c| c.app == app && c.config == config && c.suite.label() == suite)
+            else {
+                continue; // dataset from another corpus revision
+            };
+            rows.push(TrainRow {
+                suite: suite.into(),
+                app: app.into(),
+                config: config.into(),
+                features: corpus_features(c, profile),
+                best_streams: streams.max(1),
+                best_gran: gran.max(1),
+            });
+        }
+        Ok(Dataset { rows })
+    }
+
+    /// Serialize as the minimal labeled subset of the tune-JSON schema
+    /// (enough for [`Dataset::from_tune_json`] to round-trip).
+    pub fn to_json(&self) -> String {
+        use crate::util::json::escape;
+        let mut s = String::from("{\"rows\":[");
+        for (i, r) in self.rows.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"suite\":\"{}\",\"app\":\"{}\",\"config\":\"{}\",\"validated\":true,\
+                 \"best\":{{\"streams\":{},\"gran\":{},\"ms\":null}}}}",
+                escape(&r.suite),
+                escape(&r.app),
+                escape(&r.config),
+                r.best_streams,
+                r.best_gran,
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+/// Distance-weighted k-nearest-neighbors over plan features.
+#[derive(Debug, Clone)]
+pub struct KnnTuner {
+    k: usize,
+    rows: Vec<TrainRow>,
+}
+
+/// Default neighborhood size (5 balances the small per-category corpus
+/// populations against vote stability; see DESIGN.md §Learning).
+pub const DEFAULT_K: usize = 5;
+
+impl KnnTuner {
+    pub fn fit(dataset: Dataset, k: usize) -> Self {
+        Self { k: k.max(1), rows: dataset.rows }
+    }
+
+    pub fn rows(&self) -> &[TrainRow] {
+        &self.rows
+    }
+
+    /// Predict `(streams, granularity)` for a plan with `features`,
+    /// or `None` when no same-category training row exists (the caller
+    /// falls back to the analytic seed).  Granularity is in the same
+    /// knob units as the training labels (`tune_corpus` labels are
+    /// effective corpus-knob values).
+    pub fn predict(&self, features: &PlanFeatures) -> Option<(usize, usize)> {
+        let mut neigh: Vec<(f64, usize, usize)> = self
+            .rows
+            .iter()
+            .filter(|r| r.features.category == features.category)
+            .map(|r| (features.distance(&r.features), r.best_streams, r.best_gran))
+            .collect();
+        if neigh.is_empty() {
+            return None;
+        }
+        neigh.sort_by(|a, b| a.0.total_cmp(&b.0));
+        neigh.truncate(self.k);
+        // Distance-weighted geometric mean: both knobs are
+        // multiplicative (ladders are power-of-two-ish), so averaging
+        // their logs is the natural vote.
+        let mut wsum = 0.0;
+        let mut ls = 0.0;
+        let mut lg = 0.0;
+        for (d, s, g) in &neigh {
+            let w = 1.0 / (d + 1e-6);
+            wsum += w;
+            ls += w * (*s as f64).ln();
+            lg += w * (*g as f64).ln();
+        }
+        // No upper clamp: the vote cannot exceed the training labels'
+        // range, and callers snap onto their own candidate axes
+        // (`snap_seed`) — a fixed cap would undercut ladders above it.
+        let streams = ((ls / wsum).exp().round() as usize).max(1);
+        let gran = ((lg / wsum).exp().round() as usize).max(1);
+        Some((streams, gran))
+    }
+
+    /// Leave-one-app-out view: a tuner trained on every row whose app
+    /// differs from `app` (all of an app's input configs are held out
+    /// together — the CV protocol must not leak the app's own surface).
+    pub fn without_app(&self, app: &str) -> KnnTuner {
+        KnnTuner {
+            k: self.k,
+            rows: self.rows.iter().filter(|r| r.app != app).cloned().collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::configs_for;
+
+    fn profile() -> DeviceProfile {
+        DeviceProfile::mic31sp().simulation()
+    }
+
+    #[test]
+    fn features_are_normalized_and_category_shaped() {
+        let p = profile();
+        let nn = corpus_features(&configs_for("nn")[0], &p);
+        assert_eq!(nn.values.len(), FEATURE_NAMES.len());
+        assert!(nn.values.iter().all(|v| v.is_finite() && *v >= 0.0 && *v <= 1.5), "{nn:?}");
+        assert_eq!(nn.values[0], 1.0, "nn is independent");
+        assert!((nn.values[10] + nn.values[11] + nn.values[12] - 1.0).abs() < 1e-9);
+        // Independent fan-out: depth 1, full width.
+        assert!(nn.values[5] < 0.2 && (nn.values[6] - 1.0).abs() < 1e-9);
+
+        let wf = corpus_features(&configs_for("nw")[0], &p);
+        assert_eq!(wf.values[2], 1.0, "nw is true-dependent");
+        assert!(wf.values[5] > nn.values[5], "wavefront chains are deeper");
+
+        let it = corpus_features(&configs_for("hotspot")[0], &p);
+        assert_eq!(it.values[3], 1.0, "hotspot is non-streamable");
+        assert_eq!(it.category, Category::Iterative);
+    }
+
+    #[test]
+    fn knn_votes_within_category_and_falls_back_empty() {
+        let p = profile();
+        let mk = |app: &str, s: usize, g: usize| {
+            let c = &configs_for(app)[0];
+            TrainRow {
+                suite: c.suite.label().into(),
+                app: app.into(),
+                config: c.config.clone(),
+                features: corpus_features(c, &p),
+                best_streams: s,
+                best_gran: g,
+            }
+        };
+        // Same-category (independent) neighbors dominate the vote.
+        let ds = Dataset { rows: vec![mk("nn", 4, 8), mk("Transpose", 4, 8), mk("nw", 1, 1)] };
+        let model = KnnTuner::fit(ds, DEFAULT_K);
+        let (s, g) = model.predict(&corpus_features(&configs_for("VectorAdd")[0], &p)).unwrap();
+        assert_eq!((s, g), (4, 8), "independent query ignores the wavefront row");
+        // No true-dependent training row after holding nw out -> None.
+        let held = model.without_app("nw");
+        assert!(held.predict(&corpus_features(&configs_for("gaussian")[0], &p)).is_none());
+    }
+
+    #[test]
+    fn dataset_roundtrips_through_tune_json() {
+        let p = profile();
+        let c = &configs_for("nn")[0];
+        let ds = Dataset {
+            rows: vec![TrainRow {
+                suite: c.suite.label().into(),
+                app: c.app.into(),
+                config: c.config.clone(),
+                features: corpus_features(c, &p),
+                best_streams: 2,
+                best_gran: 4,
+            }],
+        };
+        let back = Dataset::from_tune_json(&ds.to_json(), &p).unwrap();
+        assert_eq!(back.rows.len(), 1);
+        let r = &back.rows[0];
+        assert_eq!((r.app.as_str(), r.best_streams, r.best_gran), ("nn", 2, 4));
+        assert_eq!(r.features, ds.rows[0].features, "features re-derive identically");
+        // Unvalidated rows are skipped, not trained on.
+        let doc = ds.to_json().replace("\"validated\":true", "\"validated\":false");
+        assert!(Dataset::from_tune_json(&doc, &p).unwrap().rows.is_empty());
+        // Garbage is an error, not a panic.
+        assert!(Dataset::from_tune_json("{", &p).is_err());
+    }
+}

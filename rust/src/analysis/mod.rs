@@ -6,13 +6,18 @@ mod autotune;
 mod categorize;
 mod cdf;
 mod decision;
+mod learned;
 mod stages;
 
 pub use autotune::{
-    autotune_plan, autotune_streams, gran_ladder, predict_plan_point, predict_streams,
-    predict_streams_for_plan, AutotuneResult, PlanTuneResult,
+    autotune_plan, autotune_plan_pruned, autotune_streams, autotune_workload, gran_ladder,
+    normalize_ladder, predict_plan_point, predict_streams, predict_streams_for_plan, snap_seed,
+    AutotuneResult, PlanTuneResult, GRAN_CEILING,
 };
 pub(crate) use autotune::argmin;
+pub use learned::{
+    corpus_features, Dataset, KnnTuner, PlanFeatures, TrainRow, DEFAULT_K, FEATURE_NAMES,
+};
 pub use categorize::{categorize, Category, DependencyFacts, TaskDep};
 pub use cdf::{cdf_points, fraction_at_or_below, CdfPoint};
 pub use decision::{decide, decide_plan, Decision, HI_THRESHOLD, LO_THRESHOLD};

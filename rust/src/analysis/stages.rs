@@ -143,7 +143,13 @@ pub fn measure_stages(ctx: &Context, spec: &OffloadSpec, runs: usize) -> StageTi
         {
             let mut s = ctx.stream();
             for (call, (artifact, ins, outs)) in spec.kex.iter().zip(&scratch) {
-                s.kex_with(artifact.clone(), ins.clone(), outs.clone(), Some(call.flops), call.repeats);
+                s.kex_with(
+                    artifact.clone(),
+                    ins.clone(),
+                    outs.clone(),
+                    Some(call.flops),
+                    call.repeats,
+                );
             }
             s.sync();
             kex_samples.push(crate::hstreams::makespan(s.events()));

@@ -80,6 +80,7 @@ pub fn configs() -> Vec<BenchConfig> {
     ]));
 
     // ScanLargeArrays: same scan-and-carry structure as PrefixSum.
+    #[rustfmt::skip]
     v.extend(mk(s, "ScanLargeArrays", DependencyFacts::independent(), Backing::Real("prefix_sum"), &[
         ("2^10x1", 4.0, 4.0, 1.05, 1),
         ("2^10x2", 8.0, 8.0, 2.1, 1),

@@ -9,6 +9,7 @@ pub fn configs() -> Vec<BenchConfig> {
     let mut v = Vec::new();
 
     // BlackScholes: pointwise option pricing — three arrays in, two out.
+    #[rustfmt::skip]
     v.extend(mk(s, "BlackScholes", DependencyFacts::independent(), Backing::Real("black_scholes"), &[
         ("10^6x4", 48.0, 32.0, 240.0, 1),
         ("10^6x8", 96.0, 64.0, 480.0, 1),
@@ -27,6 +28,7 @@ pub fn configs() -> Vec<BenchConfig> {
 
     // ConvolutionSeparable: row/col passes share halo rows (RAR).
     // Paper §5: R ≈ 19%, streamed gain ≈ 45%.
+    #[rustfmt::skip]
     v.extend(mk(s, "ConvolutionSeparable", DependencyFacts::rar(8, 128), Backing::Real("conv_sep"), &[
         ("2^10x1", 4.0, 4.0, 140.0, 1),
         ("2^10x2", 8.0, 8.0, 285.0, 1),
@@ -70,6 +72,7 @@ pub fn configs() -> Vec<BenchConfig> {
 
     // FastWalshTransform: block butterflies share boundary reads (RAR);
     // boundary (254) << task (1M) so streaming pays (§5).
+    #[rustfmt::skip]
     v.extend(mk(s, "FastWalshTransform", DependencyFacts::rar(127, 1 << 20), Backing::Real("fwt"), &[
         ("2^20x1", 4.0, 4.0, 44.0, 1),
         ("2^20x2", 8.0, 8.0, 92.0, 1),

@@ -235,6 +235,27 @@ impl SimClock {
         }
     }
 
+    /// Align every modeled lane to the timeline horizon (virtual mode;
+    /// a no-op under wall clock).  Call only with the engines drained —
+    /// i.e. after every submitted op has retired.  This is the
+    /// measurement-isolation barrier between independent runs: without
+    /// it, a run's makespan inherits whatever per-lane stagger the
+    /// *previous* run left behind (its D2H tail keeps that lane busy
+    /// past the point the H2D lane went idle), making measured times
+    /// depend on the order runs happen to execute in — poison for a
+    /// grid search that compares points against each other.
+    pub fn quiesce(&self) {
+        if self.mode != TimeMode::Virtual {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let h = inner.horizon;
+        inner.xfer_avail = [h; 2];
+        for w in inner.workers.iter_mut() {
+            *w = h;
+        }
+    }
+
     /// Virtual-mode transfer scheduling: FIFO lane `lane` (0 = the
     /// h2d-queue thread, 1 = the d2h-queue thread), earliest start after
     /// `deps_end`, occupying `dur`.
@@ -422,6 +443,22 @@ mod tests {
         let t = c.trace();
         let seqs: Vec<u64> = t.iter().map(|e| e.seq).collect();
         assert_eq!(seqs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn quiesce_aligns_lanes_to_horizon() {
+        let c = SimClock::new(TimeMode::Virtual, 2, false);
+        // Leave the lanes staggered: h2d busy to 100, d2h idle at 0.
+        c.schedule_transfer(0, "h2d", SimTime::ZERO, Duration::from_nanos(100), &desc(0));
+        c.schedule_kex(0, SimTime::ZERO, Duration::from_nanos(40), &desc(1));
+        c.quiesce();
+        // Every lane now starts at the horizon (100): the next op on any
+        // lane begins there, not at its own stale availability.
+        let (s, _) =
+            c.schedule_transfer(1, "d2h", SimTime::ZERO, Duration::from_nanos(10), &desc(2));
+        assert_eq!(s.as_nanos(), 100);
+        let (sk, _) = c.schedule_kex(1, SimTime::ZERO, Duration::from_nanos(10), &desc(3));
+        assert_eq!(sk.as_nanos(), 100, "both modeled workers re-aligned");
     }
 
     #[test]

@@ -89,7 +89,8 @@ impl ComputeEngine {
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = Vec::new();
         for w in 0..workers.max(1) {
-            let (a, p, d, s) = (arena.clone(), profile.clone(), dir.clone(), artifact_subset.clone());
+            let (a, p, d, s) =
+                (arena.clone(), profile.clone(), dir.clone(), artifact_subset.clone());
             let c = clock.clone();
             // std mpsc receivers are single-consumer; workers share one
             // behind a mutex and claim jobs first-come, first-served.

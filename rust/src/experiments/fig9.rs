@@ -45,11 +45,16 @@ pub fn measure_one(
     }
     let base = median_duration(&mut base_samples).as_secs_f64() * 1e3;
     let strm = median_duration(&mut strm_samples).as_secs_f64() * 1e3;
+    // Same guard as the corpus tuner: an instant-profile run (strm = 0)
+    // must report "no measurable improvement", not walk inf/NaN into
+    // the table.
+    let improvement_pct =
+        if strm > 0.0 && base.is_finite() { (base / strm - 1.0) * 100.0 } else { f64::NAN };
     Ok(Fig9Row {
         name: b.name().into(),
         baseline_ms: base,
         streamed_ms: strm,
-        improvement_pct: (base / strm - 1.0) * 100.0,
+        improvement_pct,
         h2d_baseline: h2d_b,
         h2d_streamed: h2d_s,
         validated,
@@ -57,7 +62,12 @@ pub fn measure_one(
 }
 
 /// The full Fig. 9 sweep.
-pub fn fig9(ctx: &Context, scale: usize, streams: usize, runs: usize) -> Result<(Table, Vec<Fig9Row>)> {
+pub fn fig9(
+    ctx: &Context,
+    scale: usize,
+    streams: usize,
+    runs: usize,
+) -> Result<(Table, Vec<Fig9Row>)> {
     let mut rows = Vec::new();
     for b in fig9_benchmarks(scale) {
         rows.push(measure_one(ctx, b.as_ref(), streams, runs)?);
@@ -71,7 +81,11 @@ pub fn fig9(ctx: &Context, scale: usize, streams: usize, runs: usize) -> Result<
             r.name.clone(),
             format!("{:.2}", r.baseline_ms),
             format!("{:.2}", r.streamed_ms),
-            format!("{:+.1}%", r.improvement_pct),
+            if r.improvement_pct.is_finite() {
+                format!("{:+.1}%", r.improvement_pct)
+            } else {
+                "-".into()
+            },
             format!("{:.2}x", r.h2d_streamed as f64 / r.h2d_baseline.max(1) as f64),
             r.validated.to_string(),
         ]);

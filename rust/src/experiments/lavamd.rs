@@ -13,7 +13,8 @@ use crate::Result;
 pub fn lavamd_negative(ctx: &Context, scale: usize, streams: usize, runs: usize) -> Result<Table> {
     let b = LavaMd::new(scale);
     let row = super::fig9::measure_one(ctx, &b, streams, runs)?;
-    let ratio = halo_overhead_ratio(crate::workloads::lavamd::CHUNK, crate::workloads::lavamd::HALO);
+    let ratio =
+        halo_overhead_ratio(crate::workloads::lavamd::CHUNK, crate::workloads::lavamd::HALO);
 
     let mut t = Table::new(
         "§5 — lavaMD negative case",

@@ -8,6 +8,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod fig9;
 pub mod lavamd;
+pub mod learn;
 pub mod sweep;
 pub mod table2;
 
@@ -17,7 +18,10 @@ pub use fig3::fig3;
 pub use fig4::fig4;
 pub use fig9::{fig9, measure_one, rgain, Fig9Row};
 pub use lavamd::lavamd_negative;
-pub use sweep::{sweep_corpus, tune_corpus, tune_rows_json, SweepRow, TuneRow};
+pub use learn::{dataset_from_tune_rows, dataset_table, learn_cv, learn_dataset, CvStats};
+pub use sweep::{
+    sweep_corpus, tune_corpus, tune_corpus_with, tune_rows_json, SweepRow, TuneRow, TuneStrategy,
+};
 pub use table2::table2;
 
 use crate::corpus::BenchConfig;

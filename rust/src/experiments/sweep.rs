@@ -14,8 +14,8 @@
 //! CI smoke jobs check.
 
 use crate::analysis::{
-    argmin, autotune_plan, gran_ladder, predict_plan_point, predict_streams_for_plan, Category,
-    PlanTuneResult,
+    argmin, autotune_plan, autotune_plan_pruned, corpus_features, gran_ladder, normalize_ladder,
+    predict_plan_point, predict_streams_for_plan, Category, KnnTuner, PlanTuneResult,
 };
 use crate::corpus::{all_configs, BenchConfig};
 use crate::hstreams::Context;
@@ -50,7 +50,7 @@ pub struct SweepRow {
 /// The corpus rows a sweep/tune covers: every configuration, or the
 /// first (representative) one per (app, suite) — one policy for both
 /// tables so they always cover the same population.
-fn representative_configs(all_cfgs: bool) -> Vec<BenchConfig> {
+pub(crate) fn representative_configs(all_cfgs: bool) -> Vec<BenchConfig> {
     let mut configs = all_configs();
     if !all_cfgs {
         let mut seen = std::collections::HashSet::new();
@@ -168,6 +168,17 @@ pub fn sweep_corpus(
     Ok((t, rows, failures))
 }
 
+/// How `tune_corpus_with` searches each app's candidate grid.
+#[derive(Clone, Copy)]
+pub enum TuneStrategy<'a> {
+    /// Measure the full candidate grid (`analysis::autotune_plan`).
+    Exhaustive,
+    /// Hill-climb outward from a seed (`analysis::autotune_plan_pruned`):
+    /// the k-NN prediction when a model is given and covers the app's
+    /// category, the analytic seed otherwise.
+    Pruned { model: Option<&'a KnnTuner> },
+}
+
 /// One corpus app's joint (streams × granularity) tuning outcome.
 #[derive(Debug, Clone)]
 pub struct TuneRow {
@@ -175,21 +186,32 @@ pub struct TuneRow {
     pub app: &'static str,
     pub config: String,
     pub category: &'static str,
-    /// Analytic seed (streams, granularity) from the plan features.
+    /// Seed (streams, granularity) the search started from — analytic
+    /// plan features, or the k-NN prediction when `seed_learned`.
     pub seed: (usize, usize),
+    /// Whether the seed came from the learned model (vs analytic).
+    pub seed_learned: bool,
     pub best_streams: usize,
     pub best_gran: usize,
     pub best_ms: f64,
     /// Best time over the stream ladder at the *fixed* pre-tuner
-    /// granularity (the PR-2 sweep baseline).
+    /// granularity (the PR-2 sweep baseline).  NaN when a pruned walk
+    /// never visited that column.
     pub fixed_ms: f64,
     /// Bulk (non-streamed) reference, ms.
     pub bulk_ms: f64,
     /// (t_fixed / t_best − 1) · 100: what the granularity knob buys on
-    /// top of stream-count tuning alone.
+    /// top of stream-count tuning alone.  NaN when `fixed_ms` is
+    /// unknown or the row failed — never a number fabricated from NaN
+    /// operands.
     pub improvement_pct: f64,
-    /// Full measured surface: (streams, granularity, ms).
+    /// Measured surface: (streams, granularity, ms) — the full grid for
+    /// `Exhaustive`, only visited points for `Pruned`.
     pub surface: Vec<(usize, usize, f64)>,
+    /// Size of the full candidate grid (streams × granularity) the
+    /// search could have measured; `surface.len()` over this is the
+    /// measured fraction.
+    pub grid: usize,
     pub validated: bool,
     pub error: Option<String>,
 }
@@ -200,20 +222,28 @@ fn tune_one(
     streams: &[usize],
     grans: &[usize],
     runs: usize,
+    strategy: TuneStrategy<'_>,
 ) -> TuneRow {
+    // Normalize the stream ladder with the searches' own rule so
+    // `grid` counts the points a search could actually measure —
+    // `--ladder 0,1,2` must not inflate the denominator of the
+    // measured fraction.
+    let streams = normalize_ladder(streams);
     let mut row = TuneRow {
         suite: c.suite.label(),
         app: c.app,
         config: c.config.clone(),
         category: c.category().label(),
         seed: (0, 0),
+        seed_learned: false,
         best_streams: 1,
         best_gran: 1,
         best_ms: f64::NAN,
         fixed_ms: f64::NAN,
         bulk_ms: f64::NAN,
-        improvement_pct: 0.0,
+        improvement_pct: f64::NAN,
         surface: Vec::new(),
+        grid: 0,
         validated: false,
         error: None,
     };
@@ -227,35 +257,47 @@ fn tune_one(
         Category::TrueDependent => (seed_tasks as f64).sqrt().ceil() as usize,
         _ => seed_tasks,
     };
-    let seed_gran = effective_corpus_granularity(c, Granularity::new(seed_knob)).get();
-    row.seed = (seed_streams, seed_gran);
+    let analytic_gran = effective_corpus_granularity(c, Granularity::new(seed_knob)).get();
 
-    // Candidate grid: the caller's ladder grown around the analytic
+    // The learned seed, when a model is given and has same-category
+    // training rows (its granularity labels are already effective knob
+    // units — `tune_corpus` produced them).  Analytic otherwise.
+    row.seed = (seed_streams, analytic_gran);
+    if let TuneStrategy::Pruned { model: Some(model) } = strategy {
+        if let Some((s, g)) = model.predict(&corpus_features(c, ctx.profile())) {
+            row.seed = (s, effective_corpus_granularity(c, Granularity::new(g)).get());
+            row.seed_learned = true;
+        }
+    }
+
+    // Candidate grid: the caller's ladder grown around the *analytic*
     // seed, plus the fixed pre-tuner granularity (so the improvement
     // column compares like with like) — everything mapped to effective
     // knob values and deduped, or aliased points would be measured
     // twice under different labels (and sync/iterative apps, which
-    // ignore the knob, would re-measure one plan per candidate).
+    // ignore the knob, would re-measure one plan per candidate).  The
+    // grid is strategy-independent: a pruned walk prunes *visits*, not
+    // candidates, so its measured fraction is comparable.
     let fixed_gran =
         effective_corpus_granularity(c, default_corpus_granularity(c.category())).get();
     let mut grans: Vec<usize> = grans
         .iter()
         .copied()
-        .chain(gran_ladder(seed_gran))
+        .chain(gran_ladder(analytic_gran))
         .chain([fixed_gran])
         .map(|g| effective_corpus_granularity(c, Granularity::new(g)).get())
         .collect();
     grans.sort_unstable();
     grans.dedup();
+    row.grid = streams.len() * grans.len();
 
-    let result: Result<PlanTuneResult> = autotune_plan(
-        ctx,
-        &bulk,
-        &|g| lower_corpus_streamed_at(c, CORPUS_BURNER, g),
-        streams,
-        &grans,
-        runs,
-    );
+    let lower = |g| lower_corpus_streamed_at(c, CORPUS_BURNER, g);
+    let result: Result<PlanTuneResult> = match strategy {
+        TuneStrategy::Exhaustive => autotune_plan(ctx, &bulk, &lower, &streams, &grans, runs),
+        TuneStrategy::Pruned { .. } => {
+            autotune_plan_pruned(ctx, &bulk, &lower, &streams, &grans, row.seed, runs)
+        }
+    };
     match result {
         Ok(r) => {
             row.best_streams = r.best_streams;
@@ -270,7 +312,15 @@ fn tune_one(
             )
             .map(|(_, ms)| ms)
             .unwrap_or(f64::NAN);
-            row.improvement_pct = (row.fixed_ms / row.best_ms - 1.0) * 100.0;
+            // Guarded: a NaN operand (failed/unvisited fixed column, or
+            // a degenerate zero best) must surface as "unknown", not as
+            // a NaN-propagated percentage the table prints as a number.
+            row.improvement_pct =
+                if row.fixed_ms.is_finite() && row.best_ms.is_finite() && row.best_ms > 0.0 {
+                    (row.fixed_ms / row.best_ms - 1.0) * 100.0
+                } else {
+                    f64::NAN
+                };
             row.surface = r.surface;
             row.validated = true;
         }
@@ -279,11 +329,7 @@ fn tune_one(
     row
 }
 
-/// Tune the corpus: one representative (first) configuration per app,
-/// or every configuration with `all_cfgs`.  Every grid point is
-/// validated bitwise against the bulk lowering.  Returns the rendered
-/// per-app tuning table, the rows (with full surfaces), and the number
-/// of failed rows.
+/// Tune the corpus exhaustively — see [`tune_corpus_with`].
 pub fn tune_corpus(
     ctx: &Context,
     streams: &[usize],
@@ -291,9 +337,30 @@ pub fn tune_corpus(
     all_cfgs: bool,
     runs: usize,
 ) -> Result<(Table, Vec<TuneRow>, usize)> {
+    tune_corpus_with(ctx, streams, grans, all_cfgs, runs, TuneStrategy::Exhaustive)
+}
+
+/// Tune the corpus: one representative (first) configuration per app,
+/// or every configuration with `all_cfgs`.  Every measured point is
+/// validated bitwise against the bulk lowering.  Returns the rendered
+/// per-app tuning table, the rows (with measured surfaces), and the
+/// number of failed rows.
+///
+/// Errored rows render `-` in every result column: their struct
+/// defaults (`best = (1, 1)`, NaN times) are placeholders, and printing
+/// them as numbers made a failed row indistinguishable from a genuine
+/// optimum at one stream × granularity 1 (the JSON path already nulls
+/// non-finite metrics).
+pub fn tune_corpus_with(
+    ctx: &Context,
+    streams: &[usize],
+    grans: &[usize],
+    all_cfgs: bool,
+    runs: usize,
+    strategy: TuneStrategy<'_>,
+) -> Result<(Table, Vec<TuneRow>, usize)> {
     let configs = representative_configs(all_cfgs);
-    let rows: Vec<TuneRow> =
-        configs.iter().map(|c| tune_one(ctx, c, streams, grans, runs)).collect();
+    let rows = tune_configs(ctx, &configs, streams, grans, runs, strategy);
 
     let mut t = Table::new(
         format!(
@@ -302,20 +369,27 @@ pub fn tune_corpus(
         ),
         &[
             "suite", "app", "config", "category", "seed (s,g)", "best (s,g)", "best (ms)",
-            "fixed-g (ms)", "gain", "valid",
+            "fixed-g (ms)", "gain", "measured", "valid",
         ],
     );
+    let num = |v: f64| if v.is_finite() { format!("{v:.2}") } else { "-".into() };
     for r in &rows {
+        let failed = r.error.is_some() || !r.validated;
         t.row(&[
             r.suite.to_string(),
             r.app.to_string(),
             r.config.clone(),
             r.category.to_string(),
-            format!("({}, {})", r.seed.0, r.seed.1),
-            format!("({}, {})", r.best_streams, r.best_gran),
-            format!("{:.2}", r.best_ms),
-            format!("{:.2}", r.fixed_ms),
-            format!("{:+.1}%", r.improvement_pct),
+            format!("({}, {}){}", r.seed.0, r.seed.1, if r.seed_learned { "*" } else { "" }),
+            if failed { "-".into() } else { format!("({}, {})", r.best_streams, r.best_gran) },
+            if failed { "-".into() } else { num(r.best_ms) },
+            if failed { "-".into() } else { num(r.fixed_ms) },
+            if !failed && r.improvement_pct.is_finite() {
+                format!("{:+.1}%", r.improvement_pct)
+            } else {
+                "-".into()
+            },
+            format!("{}/{}", r.surface.len(), r.grid),
             match &r.error {
                 Some(e) => format!("FAIL: {e}"),
                 None => r.validated.to_string(),
@@ -324,6 +398,20 @@ pub fn tune_corpus(
     }
     let failures = rows.iter().filter(|r| r.error.is_some() || !r.validated).count();
     Ok((t, rows, failures))
+}
+
+/// Tune an explicit set of descriptors (the CV harness holds apps out
+/// one at a time and needs per-config control; `tune_corpus_with` is
+/// the whole-population wrapper).
+pub(crate) fn tune_configs(
+    ctx: &Context,
+    configs: &[BenchConfig],
+    streams: &[usize],
+    grans: &[usize],
+    runs: usize,
+    strategy: TuneStrategy<'_>,
+) -> Vec<TuneRow> {
+    configs.iter().map(|c| tune_one(ctx, c, streams, grans, runs, strategy)).collect()
 }
 
 /// JSON rendering of the tuning rows (full surfaces included): the
@@ -339,8 +427,10 @@ pub fn tune_rows_json(rows: &[TuneRow]) -> String {
         }
         s.push_str(&format!(
             "{{\"suite\":\"{}\",\"app\":\"{}\",\"config\":\"{}\",\"category\":\"{}\",\
-             \"seed\":[{},{}],\"best\":{{\"streams\":{},\"gran\":{},\"ms\":{}}},\
+             \"seed\":[{},{}],\"seed_learned\":{},\
+             \"best\":{{\"streams\":{},\"gran\":{},\"ms\":{}}},\
              \"fixed_ms\":{},\"bulk_ms\":{},\"improvement_pct\":{},\
+             \"visited\":{},\"grid\":{},\
              \"validated\":{},\"error\":{},\"surface\":[",
             escape(r.suite),
             escape(r.app),
@@ -348,12 +438,15 @@ pub fn tune_rows_json(rows: &[TuneRow]) -> String {
             escape(r.category),
             r.seed.0,
             r.seed.1,
+            r.seed_learned,
             r.best_streams,
             r.best_gran,
             num(r.best_ms),
             num(r.fixed_ms),
             num(r.bulk_ms),
             num(r.improvement_pct),
+            r.surface.len(),
+            r.grid,
             r.validated,
             match &r.error {
                 Some(e) => format!("\"{}\"", escape(e)),

@@ -162,6 +162,16 @@ impl Context {
         self.clock.now()
     }
 
+    /// Measurement-isolation barrier: align every modeled lane to the
+    /// timeline horizon (virtual mode; no-op under wall clock).  Must
+    /// only be called with the engines drained — after every submitted
+    /// op has retired (e.g. right after the syncs that end a run).
+    /// [`crate::plan::Executor::run`] calls this on entry so each run's
+    /// makespan is independent of what ran before it.
+    pub fn quiesce_timeline(&self) {
+        self.clock.quiesce();
+    }
+
     /// The recorded op trace (submission order).  Empty unless the
     /// context was built with [`ContextBuilder::record_trace`].
     pub fn trace(&self) -> Vec<crate::device::TraceEntry> {

@@ -37,19 +37,28 @@ COMMANDS:
   lavamd      The §5 lavaMD negative case   [--streams N=4] [--scale S=2]
   rgain       R vs gain correlation (ConvSep/Transpose)
   stream NAME Run one streamed benchmark    [--streams N=4] [--scale S=2]
-  autotune NAME  Pick the best stream count for a benchmark (paper §6
-                 future work): analytic prediction + measured ladder
+  autotune NAME  Tune a benchmark (paper §6 future work): measured
+                 stream ladder, and for re-chunkable drivers (nn,
+                 VectorAdd, BlackScholes) the joint (streams x
+                 granularity) grid via GenericWorkload::with_chunks
   survey      Full corpus CSV (analytic R + category + decision)
   sweep       Run the corpus through the StreamPlan executor across a
               stream ladder (virtual clock; exits non-zero on any
               validation failure)
                 --corpus [--ladder 1,2,4,8] [--all-configs] [--csv PATH]
   tune        Joint (streams x granularity) plan autotuner: re-lower
-              every corpus app across the whole grid, validate each
+              every corpus app across the candidate grid, validate each
               point bitwise against the bulk lowering, report the
-              argmin + analytic seed (paper §6 future work)
+              argmin + seed (paper §6 future work)
                 --corpus [--ladder 1,2,4,8] [--grans 1,2,4,8,16]
                 [--all-configs] [--json] [--csv PATH]
+                [--learned [--dataset PATH]]  hill-climb from the k-NN
+                seed (fallback: analytic) instead of the full grid
+  learn       Learned (streams x granularity) tuner over plan features
+              (arXiv:1802.02760-style): build the training set, or
+              leave-one-app-out cross-validate the k-NN seed
+                [--dataset PATH] [--cv] [--subset N] [--k K=5]
+                [--ladder 1,2,4,8] [--grans 1,2,4,8,16] [--out PATH]
   trace NAME  Dump one benchmark's virtual event timeline as JSON
                 [--streams N=4] [--scale S=2] [--out PATH]
   quickstart  Smoke run: vector_add through the full stack
@@ -63,7 +72,8 @@ GLOBAL OPTIONS:
 
 fn profile_from(args: &Args, cfg: &RunConfig) -> Result<DeviceProfile> {
     if let Some(name) = args.get("device") {
-        return DeviceProfile::preset(name).ok_or_else(|| cli_err(format!("unknown device preset `{name}`")));
+        return DeviceProfile::preset(name)
+            .ok_or_else(|| cli_err(format!("unknown device preset `{name}`")));
     }
     cfg.device_profile().map_err(|e| cli_err(e.to_string()))
 }
@@ -144,7 +154,8 @@ fn main() -> Result<()> {
         }
         Some("fig2") => {
             let table = if args.flag("engine") {
-                let ctx = make_ctx_with(&args, profile.clone(), Some(vec!["burner_64".into()]), false)?;
+                let ctx =
+                    make_ctx_with(&args, profile.clone(), Some(vec!["burner_64".into()]), false)?;
                 experiments::fig2(Some(&ctx), &profile, runs)
             } else {
                 experiments::fig2(None, &profile, runs)
@@ -153,7 +164,8 @@ fn main() -> Result<()> {
         }
         Some("fig3") => {
             let table = if args.flag("engine") {
-                let ctx = make_ctx_with(&args, profile.clone(), Some(vec!["burner_64".into()]), false)?;
+                let ctx =
+                    make_ctx_with(&args, profile.clone(), Some(vec!["burner_64".into()]), false)?;
                 experiments::fig3(Some(&ctx), &profile, runs)
             } else {
                 experiments::fig3(None, &profile, runs)
@@ -178,7 +190,8 @@ fn main() -> Result<()> {
             println!("{}", table.markdown());
         }
         Some("rgain") => {
-            let ctx = make_ctx_with(&args, profile, Some(vec!["conv_sep".into(), "transpose".into()]), false)?;
+            let artifacts = Some(vec!["conv_sep".into(), "transpose".into()]);
+            let ctx = make_ctx_with(&args, profile, artifacts, false)?;
             let table = experiments::rgain(&ctx, scale, streams, runs)
                 .map_err(|e| cli_err(e.to_string()))?;
             println!("{}", table.markdown());
@@ -187,7 +200,7 @@ fn main() -> Result<()> {
             let name = args
                 .positional
                 .first()
-                .ok_or_else(|| cli_err(format!("usage: repro stream <NAME> [--streams N]")))?;
+                .ok_or_else(|| cli_err("usage: repro stream <NAME> [--streams N]".into()))?;
             let mut benches = fig9_benchmarks(scale);
             benches.extend(extended_benchmarks(scale));
             let b = benches
@@ -214,7 +227,7 @@ fn main() -> Result<()> {
             let name = args
                 .positional
                 .first()
-                .ok_or_else(|| cli_err(format!("usage: repro autotune <NAME> [--scale S]")))?;
+                .ok_or_else(|| cli_err("usage: repro autotune <NAME> [--scale S]".into()))?;
             let mut benches = fig9_benchmarks(scale);
             benches.extend(extended_benchmarks(scale));
             let b = benches
@@ -227,17 +240,44 @@ fn main() -> Result<()> {
                 Some(b.artifacts().iter().map(|s| s.to_string()).collect()),
                 false,
             )?;
-            let result = hetstream::analysis::autotune_streams(
-                &ctx,
-                b.as_ref(),
-                &[1, 2, 4, 8],
-                runs.min(5),
-            )
-            .map_err(|e| cli_err(e.to_string()))?;
-            for (n, ms) in &result.ladder {
-                println!("  {n:2} streams: {ms:8.2} ms");
+            match b.tunable() {
+                // Re-chunkable driver: tune the joint (streams ×
+                // granularity) grid, every point validated bitwise
+                // against the bulk lowering.
+                Some(wl) => {
+                    let result = hetstream::analysis::autotune_workload(
+                        &ctx,
+                        &wl,
+                        &[1, 2, 4, 8],
+                        runs.min(5),
+                    )
+                    .map_err(|e| cli_err(e.to_string()))?;
+                    for (n, g, ms) in &result.surface {
+                        println!("  {n:2} streams x {g:3} chunks: {ms:8.2} ms");
+                    }
+                    println!(
+                        "best: {} streams x {} chunks ({:.2} ms) | bulk {:.2} ms",
+                        result.best_streams, result.best_gran, result.best_ms, result.bulk_ms
+                    );
+                }
+                // Chunk-semantic kernels tune stream count only.
+                None => {
+                    let result = hetstream::analysis::autotune_streams(
+                        &ctx,
+                        b.as_ref(),
+                        &[1, 2, 4, 8],
+                        runs.min(5),
+                    )
+                    .map_err(|e| cli_err(e.to_string()))?;
+                    for (n, ms) in &result.ladder {
+                        println!("  {n:2} streams: {ms:8.2} ms");
+                    }
+                    println!(
+                        "best: {} streams ({:.2} ms) — granularity knob n/a for this driver",
+                        result.best_streams, result.best_ms
+                    );
+                }
             }
-            println!("best: {} streams ({:.2} ms)", result.best_streams, result.best_ms);
         }
         Some("survey") => {
             let mut t = hetstream::metrics::Table::new(
@@ -307,12 +347,37 @@ fn main() -> Result<()> {
                 hetstream::device::TimeMode::Virtual => 1,
                 hetstream::device::TimeMode::Wallclock => runs,
             };
-            let (table, rows, failures) = hetstream::experiments::tune_corpus(
+            // --learned: hill-climb from the k-NN seed (trained on a
+            // --dataset dump when given) instead of measuring the full
+            // grid; analytic seed where the model has no neighbors.
+            let model = if args.flag("learned") {
+                let ds = match args.get("dataset") {
+                    Some(path) => {
+                        let text = std::fs::read_to_string(path)?;
+                        hetstream::analysis::Dataset::from_tune_json(&text, ctx.profile())
+                            .map_err(|e| cli_err(e.to_string()))?
+                    }
+                    None => hetstream::analysis::Dataset::default(),
+                };
+                eprintln!("learned tuner: {} training row(s)", ds.rows.len());
+                Some(hetstream::analysis::KnnTuner::fit(
+                    ds,
+                    args.get_usize("k", hetstream::analysis::DEFAULT_K),
+                ))
+            } else {
+                None
+            };
+            let strategy = match &model {
+                Some(m) => hetstream::experiments::TuneStrategy::Pruned { model: Some(m) },
+                None => hetstream::experiments::TuneStrategy::Exhaustive,
+            };
+            let (table, rows, failures) = hetstream::experiments::tune_corpus_with(
                 &ctx,
                 &ladder,
                 &grans,
                 args.flag("all-configs"),
                 runs,
+                strategy,
             )
             .map_err(|e| cli_err(e.to_string()))?;
             let json = args.flag("json");
@@ -331,12 +396,17 @@ fn main() -> Result<()> {
                 }
             }
             let beats_fixed = rows.iter().filter(|r| r.validated && r.best_ms < r.fixed_ms).count();
+            let (visited, grid) = rows
+                .iter()
+                .fold((0usize, 0usize), |(v, g), r| (v + r.surface.len(), g + r.grid));
             let summary = format!(
                 "tuned {} corpus rows over streams {:?} x granularity {:?}; \
-                 {beats_fixed} app(s) beat their fixed-granularity streamed makespan",
+                 {beats_fixed} app(s) beat their fixed-granularity streamed makespan; \
+                 measured {visited}/{grid} grid points ({:.0}%)",
                 rows.len(),
                 ladder,
                 grans,
+                100.0 * visited as f64 / grid.max(1) as f64,
             );
             if json {
                 eprintln!("{summary}");
@@ -345,6 +415,77 @@ fn main() -> Result<()> {
             }
             if failures > 0 {
                 return Err(cli_err(format!("{failures} corpus row(s) failed tuning")));
+            }
+        }
+        Some("learn") => {
+            let ladder = usize_list(&args, "ladder", &[1, 2, 4, 8])?;
+            let grans = usize_list(&args, "grans", &[1, 2, 4, 8, 16])?;
+            let subset = args.get_usize("subset", 0);
+            let k = args.get_usize("k", hetstream::analysis::DEFAULT_K);
+            let ctx = make_ctx_with(
+                &args,
+                profile,
+                Some(vec![hetstream::plan::CORPUS_BURNER.into()]),
+                false,
+            )?;
+            let dataset_text = match args.get("dataset") {
+                Some(path) => Some(std::fs::read_to_string(path)?),
+                None => None,
+            };
+            if args.flag("cv") {
+                // Leave-one-app-out CV: external labels when --dataset
+                // was given, in-process exhaustive tuning otherwise.
+                let external = match &dataset_text {
+                    Some(text) => Some(
+                        hetstream::analysis::Dataset::from_tune_json(text, ctx.profile())
+                            .map_err(|e| cli_err(e.to_string()))?,
+                    ),
+                    None => None,
+                };
+                let (table, stats) = hetstream::experiments::learn_cv(
+                    &ctx,
+                    &ladder,
+                    &grans,
+                    subset,
+                    k,
+                    external.as_ref(),
+                )
+                .map_err(|e| cli_err(e.to_string()))?;
+                println!("{}", table.markdown());
+                println!(
+                    "learned seed within 10% of the exhaustive optimum on {}/{} app(s) \
+                     ({:.0}%); {} prediction(s) from k-NN, {} analytic fallback(s)",
+                    stats.within_10pct,
+                    stats.apps,
+                    100.0 * stats.within_fraction(),
+                    stats.learned,
+                    stats.apps - stats.learned,
+                );
+                // CI gate: any app failing to tune — or none tuning at
+                // all — is a non-zero exit, same as the sweep smokes.
+                if stats.failures > 0 {
+                    return Err(cli_err(format!(
+                        "{} corpus app(s) failed to tune during CV",
+                        stats.failures
+                    )));
+                }
+                if stats.apps == 0 {
+                    return Err(cli_err("no corpus app tuned successfully".into()));
+                }
+            } else {
+                let ds = hetstream::experiments::learn_dataset(
+                    &ctx,
+                    &ladder,
+                    &grans,
+                    subset,
+                    dataset_text.as_deref(),
+                )
+                .map_err(|e| cli_err(e.to_string()))?;
+                println!("{}", hetstream::experiments::dataset_table(&ds).markdown());
+                if let Some(path) = args.get("out") {
+                    std::fs::write(path, ds.to_json())?;
+                    println!("wrote {} training row(s) to {path}", ds.rows.len());
+                }
             }
         }
         Some("trace") => {

@@ -57,6 +57,12 @@ impl<'c> Executor<'c> {
         plan.validate()?;
         let n = streams.max(1);
         let ctx = self.ctx;
+        // Measurement isolation: every executor caller syncs its streams
+        // before returning, so the engines are drained here and each
+        // run's timeline starts from aligned lanes.  Without this, grid
+        // points in a tuning search inherit the previous point's
+        // per-lane stagger and measured times depend on visit order.
+        ctx.quiesce_timeline();
 
         // Allocate every plan buffer up front; on a mid-way failure
         // (arena exhaustion) release what was taken — callers like the

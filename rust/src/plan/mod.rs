@@ -270,6 +270,53 @@ impl StreamPlan {
             .count()
     }
 
+    /// Host→device bytes carried by `Broadcast` ops (shared prologue
+    /// payloads every stream waits on — one of the learned-tuner
+    /// features: a high broadcast fraction caps what streaming buys).
+    pub fn broadcast_h2d_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|op| match (&op.kind, op.slot) {
+                (PlanOpKind::H2d { dst, .. }, Slot::Broadcast) => dst.len as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Critical-path length of the kernel DAG in kernels: the longest
+    /// chain of KEX ops linked by explicit `deps` (transfers relay the
+    /// chain).  1 for independent fan-outs, `2g−1` for a `g`×`g`
+    /// wavefront, the task count for a serial chain.
+    pub fn dag_depth(&self) -> usize {
+        let mut depth = vec![0usize; self.ops.len()];
+        let mut max = 0;
+        for (i, op) in self.ops.iter().enumerate() {
+            // Inherit the deepest producer through any op kind, but only
+            // kernels add a level — depth counts *kernels on the chain*.
+            let inherited = op.deps.iter().map(|&d| depth[d]).max().unwrap_or(0);
+            depth[i] = inherited + usize::from(matches!(op.kind, PlanOpKind::Kex { .. }));
+            max = max.max(depth[i]);
+        }
+        max
+    }
+
+    /// Peak parallelism of the kernel DAG: the most kernels sharing one
+    /// depth level (tasks for fan-outs, the longest anti-diagonal for
+    /// wavefronts, 1 for chains).
+    pub fn dag_width(&self) -> usize {
+        let mut depth = vec![0usize; self.ops.len()];
+        let mut counts = std::collections::BTreeMap::new();
+        for (i, op) in self.ops.iter().enumerate() {
+            let inherited = op.deps.iter().map(|&d| depth[d]).max().unwrap_or(0);
+            let is_kex = matches!(op.kind, PlanOpKind::Kex { .. });
+            depth[i] = inherited + usize::from(is_kex);
+            if is_kex {
+                *counts.entry(depth[i]).or_insert(0usize) += 1;
+            }
+        }
+        counts.values().copied().max().unwrap_or(1).max(1)
+    }
+
     /// Unique artifact names the plan launches (context subset loading).
     pub fn artifacts(&self) -> Vec<String> {
         let mut names: Vec<String> = Vec::new();
@@ -288,7 +335,14 @@ impl StreamPlan {
     /// Check the IR invariants the executor relies on: deps point
     /// backwards (topological order), regions sit inside their declared
     /// buffers, H2D lengths match, D2H windows sit inside their
-    /// outputs, and broadcast ops precede all task ops.
+    /// outputs, broadcast ops precede all task ops, and every KEX op's
+    /// input regions satisfy its artifact's manifest signature (exact
+    /// bytes for fixed-shape artifacts, whole elements for
+    /// [`crate::runtime::elastic_artifact`]s).  The signature check
+    /// matters for the tuning paths: a mis-sized kernel call that only
+    /// failed *inside* a worker thread would never complete its event
+    /// and would hang the submitting run — validating up front turns
+    /// that into a clean [`Error::Plan`] before anything is submitted.
     pub fn validate(&self) -> Result<()> {
         let err = |m: String| Err(Error::Plan(format!("{}: {m}", self.name)));
         let region_ok = |r: &PlanRegion| {
@@ -320,10 +374,59 @@ impl StreamPlan {
                         return err(format!("op {i}: h2d region {dst:?} out of buffer"));
                     }
                 }
-                PlanOpKind::Kex { inputs, outputs, .. } => {
+                PlanOpKind::Kex { artifact, inputs, outputs, .. } => {
                     for r in inputs.iter().chain(outputs) {
                         if !region_ok(r) {
                             return err(format!("op {i}: kex region {r:?} out of buffer"));
+                        }
+                    }
+                    if let Some(meta) = manifest_meta(artifact) {
+                        if inputs.len() != meta.inputs.len() {
+                            return err(format!(
+                                "op {i}: kex `{artifact}` takes {} inputs, plan passes {}",
+                                meta.inputs.len(),
+                                inputs.len()
+                            ));
+                        }
+                        if crate::runtime::elastic_artifact(artifact) {
+                            // One shared input rule with `execute_bytes`
+                            // (`runtime::elastic_scale`: whole elements,
+                            // one common ratio ρ across scaling inputs,
+                            // fixed inputs exact), plus ρ-scaled output
+                            // regions — a per-element map produces outputs
+                            // in proportion to its inputs, so anything
+                            // else would panic a kex worker on the output
+                            // write and hang the submitting run.
+                            let lens: Vec<usize> = inputs.iter().map(|r| r.len).collect();
+                            let (a, b) = match crate::runtime::elastic_scale(
+                                artifact, meta, &lens,
+                            ) {
+                                Ok(rho) => rho,
+                                Err(detail) => {
+                                    return err(format!("op {i}: kex `{artifact}` {detail}"));
+                                }
+                            };
+                            for (r, spec) in outputs.iter().zip(&meta.outputs) {
+                                if r.len * b != spec.bytes() * a {
+                                    return err(format!(
+                                        "op {i}: kex `{artifact}` output region of {} bytes \
+                                         is not the manifest size ({}) scaled by {a}/{b}",
+                                        r.len,
+                                        spec.bytes()
+                                    ));
+                                }
+                            }
+                        } else {
+                            for (r, spec) in inputs.iter().zip(&meta.inputs) {
+                                if r.len != spec.bytes() {
+                                    return err(format!(
+                                        "op {i}: kex `{artifact}` input region of {} bytes \
+                                         violates the manifest signature ({} bytes)",
+                                        r.len,
+                                        spec.bytes()
+                                    ));
+                                }
+                            }
                         }
                     }
                 }
@@ -402,24 +505,23 @@ impl StreamPlan {
     }
 }
 
+/// Manifest entry for `artifact` (`None` if unknown).  Loaded once
+/// (builtin manifest when no artifacts dir) and shared by the FLOP
+/// fallback and the signature validation in [`StreamPlan::validate`].
+fn manifest_meta(artifact: &str) -> Option<&'static crate::runtime::ArtifactMeta> {
+    use std::sync::OnceLock;
+    static MANIFEST: OnceLock<Option<crate::runtime::Manifest>> = OnceLock::new();
+    MANIFEST
+        .get_or_init(|| crate::runtime::Manifest::load(&crate::artifacts_dir()).ok())
+        .as_ref()
+        .and_then(|m| m.artifacts.iter().find(|a| a.name == artifact))
+}
+
 /// Manifest per-call FLOP estimate for `artifact` (0 if unknown) — the
 /// same fallback the compute engine applies when a kernel job carries
-/// no override.  Loaded once (builtin manifest when no artifacts dir).
+/// no override.
 fn manifest_flops(artifact: &str) -> u64 {
-    use std::collections::HashMap;
-    use std::sync::OnceLock;
-    static FLOPS: OnceLock<HashMap<String, u64>> = OnceLock::new();
-    FLOPS
-        .get_or_init(|| {
-            crate::runtime::Manifest::load(&crate::artifacts_dir())
-                .map(|m| {
-                    m.artifacts.iter().map(|a| (a.name.clone(), a.flops_per_call)).collect()
-                })
-                .unwrap_or_default()
-        })
-        .get(artifact)
-        .copied()
-        .unwrap_or(0)
+    manifest_meta(artifact).map(|a| a.flops_per_call).unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -478,6 +580,105 @@ mod tests {
         p.h2d(Slot::Task(0), src.clone(), PlanRegion::whole(b, 16), vec![]);
         p.h2d(Slot::Broadcast, src, PlanRegion::whole(b, 16), vec![]);
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn dag_shape_and_broadcast_accessors() {
+        let mut p = StreamPlan::new("shape");
+        let shared = p.buf(32);
+        let src = HostSlice::whole(payload(32));
+        p.h2d(Slot::Broadcast, src, PlanRegion::whole(shared, 32), vec![]);
+        let b = p.buf(64);
+        let k0 = p.kex(
+            Slot::Task(0),
+            "burner_8",
+            vec![PlanRegion::whole(b, 64)],
+            vec![PlanRegion::whole(b, 64)],
+            Some(1),
+            1,
+            vec![],
+        );
+        p.kex(
+            Slot::Task(1),
+            "burner_8",
+            vec![PlanRegion::whole(b, 64)],
+            vec![PlanRegion::whole(b, 64)],
+            Some(1),
+            1,
+            vec![],
+        );
+        // A third kernel chained on the first: depth 2, peak width 2.
+        p.kex(
+            Slot::Task(2),
+            "burner_8",
+            vec![PlanRegion::whole(b, 64)],
+            vec![PlanRegion::whole(b, 64)],
+            Some(1),
+            1,
+            vec![k0],
+        );
+        assert_eq!(p.dag_depth(), 2);
+        assert_eq!(p.dag_width(), 2);
+        assert_eq!(p.broadcast_h2d_bytes(), 32);
+        p.validate().expect("well-formed plan");
+    }
+
+    #[test]
+    fn validate_rejects_mis_signed_kex() {
+        // Elastic artifacts demand whole elements…
+        let mut p = StreamPlan::new("ragged");
+        let b = p.buf(16);
+        p.kex(
+            Slot::Task(0),
+            "burner_8",
+            vec![PlanRegion { buf: b, off: 0, len: 6 }],
+            vec![PlanRegion::whole(b, 16)],
+            Some(1),
+            1,
+            vec![],
+        );
+        assert!(p.validate().is_err(), "6 bytes is not a whole f32 count");
+        // …and fixed-shape artifacts demand the exact manifest bytes —
+        // caught here instead of hanging a worker thread mid-run.
+        let mut p = StreamPlan::new("short");
+        let b = p.buf(16);
+        p.kex(
+            Slot::Task(0),
+            "transpose",
+            vec![PlanRegion::whole(b, 16)],
+            vec![PlanRegion::whole(b, 16)],
+            Some(1),
+            1,
+            vec![],
+        );
+        assert!(p.validate().is_err(), "fixed-shape artifact with wrong byte size");
+        // Elastic inputs must scale by one common ratio, and outputs
+        // must follow it — a per-element kernel fed 8+4 bytes would
+        // produce a 4-byte output and panic the worker's output write.
+        let mut p = StreamPlan::new("skewed");
+        let b = p.buf(16);
+        p.kex(
+            Slot::Task(0),
+            "vector_add",
+            vec![PlanRegion { buf: b, off: 0, len: 8 }, PlanRegion { buf: b, off: 0, len: 4 }],
+            vec![PlanRegion { buf: b, off: 0, len: 8 }],
+            Some(1),
+            1,
+            vec![],
+        );
+        assert!(p.validate().is_err(), "inconsistently scaled elastic inputs");
+        let mut p = StreamPlan::new("bad-out");
+        let b = p.buf(16);
+        p.kex(
+            Slot::Task(0),
+            "vector_add",
+            vec![PlanRegion { buf: b, off: 0, len: 8 }, PlanRegion { buf: b, off: 0, len: 8 }],
+            vec![PlanRegion { buf: b, off: 0, len: 4 }],
+            Some(1),
+            1,
+            vec![],
+        );
+        assert!(p.validate().is_err(), "elastic output not scaled with the inputs");
     }
 
     #[test]

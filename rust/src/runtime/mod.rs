@@ -18,4 +18,5 @@ mod simkern;
 mod store;
 
 pub use manifest::{builtin_manifest_json, ArtifactMeta, DType, IoSpec, Manifest};
-pub use store::{bytes, ArtifactStore};
+pub use store::{bytes, elastic_artifact, ArtifactStore};
+pub(crate) use store::elastic_scale;

@@ -358,7 +358,12 @@ fn lavamd(padded: &[f32], n: usize) -> Vec<f32> {
 }
 
 /// One NW DP tile from its north/west/corner edges (penalty 10).
-fn nw_tile(north: &[i32], west: &[i32], corner: i32, sub: &[i32]) -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+fn nw_tile(
+    north: &[i32],
+    west: &[i32],
+    corner: i32,
+    sub: &[i32],
+) -> (Vec<i32>, Vec<i32>, Vec<i32>) {
     const PENALTY: i64 = 10;
     let t = north.len();
     let w = t + 1;

@@ -12,7 +12,14 @@
 //!
 //! Signature validation (input arity and byte sizes against the
 //! manifest) is backend-independent, so a sim-validated program runs
-//! unchanged on PJRT.
+//! unchanged on PJRT — except for [`elastic_artifact`]s on the sim
+//! backend, whose interpreter is a pure per-element map over its input
+//! length: there the manifest shape is the *default* chunk size, and
+//! any whole number of elements executes.  That relaxation is what
+//! lets `GenericWorkload::with_chunks` re-derive a workload at a
+//! different task count and still run (the granularity knob for the
+//! declaratively-specified fig9 drivers); PJRT executables are
+//! compiled for the manifest shape and stay strict.
 
 use std::path::Path;
 
@@ -20,6 +27,76 @@ use crate::{Error, Result};
 
 use super::manifest::{ArtifactMeta, Manifest};
 use super::simkern;
+
+/// Artifacts whose sim-backend implementation is a pure per-element map
+/// (or length-driven reduction) over the streamed input rather than a
+/// fixed-shape program: the manifest shape records the *default* chunk
+/// size and any whole number of elements executes.  Re-chunking one of
+/// these (`GenericWorkload::with_chunks`) keeps the math per element
+/// identical, so assembled outputs stay bitwise equal across task
+/// counts — the property the joint tuner validates.  Kernels with
+/// per-chunk semantics (histogram bins, per-chunk scans, blockwise
+/// transforms) are deliberately absent: their *meaning* changes with
+/// the chunk size.
+pub fn elastic_artifact(name: &str) -> bool {
+    matches!(name, "vector_add" | "black_scholes" | "nn_dist") || name.starts_with("burner_")
+}
+
+/// Which inputs of an elastic artifact scale with the chunk; the rest
+/// are fixed payloads (broadcast constants like nn's search target)
+/// that must stay exactly manifest-sized.
+fn elastic_input_scales(name: &str, idx: usize) -> bool {
+    match name {
+        "nn_dist" => idx == 0, // records scale; the (2,) target is fixed
+        _ => true,             // vector_add / black_scholes / burner_*: all scale
+    }
+}
+
+/// Validate elastic input lengths for `meta` and return the common
+/// scale ρ as a rational `(scaled_len, manifest_len)` — `(1, 1)` when
+/// everything is manifest-sized.  Scaling inputs must be whole element
+/// counts sharing one ρ (an exact-size scaling input votes ρ = 1 — it
+/// is **not** exempt, or a pairwise kernel fed `[1×, 2×]` would
+/// silently zip to the shorter input); fixed inputs must match the
+/// manifest exactly.  Shared by [`ArtifactStore::execute_bytes`] and
+/// `StreamPlan::validate` so direct kernel calls and plan validation
+/// accept exactly the same calls.
+pub(crate) fn elastic_scale(
+    name: &str,
+    meta: &ArtifactMeta,
+    lens: &[usize],
+) -> std::result::Result<(usize, usize), String> {
+    let mut rho: Option<(usize, usize)> = None;
+    for (idx, (spec, &len)) in meta.inputs.iter().zip(lens).enumerate() {
+        if !elastic_input_scales(name, idx) {
+            if len != spec.bytes() {
+                return Err(format!(
+                    "fixed input {idx}: {len} bytes != manifest {}",
+                    spec.bytes()
+                ));
+            }
+            continue;
+        }
+        if len == 0 || len % spec.dtype.size() != 0 {
+            return Err(format!(
+                "input {idx}: {len} bytes is not a positive multiple of the {}-byte element",
+                spec.dtype.size()
+            ));
+        }
+        match rho {
+            None => rho = Some((len, spec.bytes())),
+            Some((a, b)) => {
+                if len * b != a * spec.bytes() {
+                    return Err(format!(
+                        "inputs scale inconsistently ({len}/{} vs {a}/{b})",
+                        spec.bytes()
+                    ));
+                }
+            }
+        }
+    }
+    Ok(rho.unwrap_or((1, 1)))
+}
 
 /// Owns the kernel backend and the manifest.  With the PJRT backend the
 /// store is `!Send` (PJRT handles wrap raw C pointers) — keep it on the
@@ -111,12 +188,30 @@ impl ArtifactStore {
                 detail: format!("got {} inputs, want {}", inputs.len(), meta.inputs.len()),
             });
         }
-        for (spec, bytes) in meta.inputs.iter().zip(inputs) {
-            if bytes.len() != spec.bytes() {
-                return Err(Error::Signature {
-                    artifact: name.into(),
-                    detail: format!("input bytes {} != expected {}", bytes.len(), spec.bytes()),
-                });
+        // Elastic artifacts accept any whole element count on the sim
+        // backend (see module docs); everything else — and every PJRT
+        // execution — must match the manifest byte-for-byte.
+        let strict = match &self.backend {
+            Backend::Sim => !elastic_artifact(name),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => true,
+        };
+        if strict {
+            for (spec, bytes) in meta.inputs.iter().zip(inputs) {
+                if bytes.len() != spec.bytes() {
+                    return Err(Error::Signature {
+                        artifact: name.into(),
+                        detail: format!("input bytes {} != expected {}", bytes.len(), spec.bytes()),
+                    });
+                }
+            }
+        } else {
+            // One shared rule with `StreamPlan::validate` (see
+            // `elastic_scale`), so direct `kex_with` callers keep the
+            // protection the strict check used to give them.
+            let lens: Vec<usize> = inputs.iter().map(|b| b.len()).collect();
+            if let Err(detail) = elastic_scale(name, meta, &lens) {
+                return Err(Error::Signature { artifact: name.into(), detail });
             }
         }
         let outs = match &self.backend {
@@ -330,10 +425,45 @@ mod tests {
     }
 
     #[test]
+    fn elastic_artifacts_accept_rechunked_windows() {
+        let store = sim_store(&["vector_add"]);
+        // Half the manifest chunk: a with_chunks(16) window of the
+        // plan_integration rechunk workload.  Per-element map — the sim
+        // backend executes it and returns a matching-length output.
+        let half = 65536 / 2 * 4;
+        let a = vec![0u8; half];
+        let b = vec![0u8; half];
+        let outs = store.execute_bytes("vector_add", &[&a, &b]).unwrap();
+        assert_eq!(outs[0].len(), half);
+        // Non-element-multiple payloads still refuse.
+        let ragged = vec![0u8; 6];
+        assert!(store.execute_bytes("vector_add", &[&ragged, &ragged]).is_err());
+        // …and so do inconsistently scaled inputs (a pairwise kernel
+        // would silently zip to the shorter one) — including the case
+        // where one input happens to sit exactly at the manifest size.
+        assert!(store.execute_bytes("vector_add", &[&a, &b[..half / 2]]).is_err());
+        let exact = vec![0u8; 65536 * 4];
+        let double = vec![0u8; 2 * 65536 * 4];
+        assert!(store.execute_bytes("vector_add", &[&exact, &double]).is_err());
+        // nn_dist: records scale, the target must stay exactly (2,).
+        let store = sim_store(&["nn_dist"]);
+        let recs = vec![0u8; 64];
+        let target = vec![0u8; 8];
+        assert!(store.execute_bytes("nn_dist", &[&recs, &target]).is_ok());
+        let wrong_target = vec![0u8; 4];
+        assert!(store.execute_bytes("nn_dist", &[&recs, &wrong_target]).is_err());
+        assert!(elastic_artifact("burner_8") && !elastic_artifact("histogram"));
+    }
+
+    #[test]
     fn signature_still_enforced() {
-        let s = sim_store(&["vector_add"]);
+        // Arity stays strict for everyone — including elastic artifacts.
+        let s = sim_store(&["vector_add", "transpose"]);
         let short = vec![0u8; 16];
-        let err = s.execute_bytes("vector_add", &[&short, &short]).unwrap_err();
+        let err = s.execute_bytes("vector_add", &[&short]).unwrap_err();
+        assert!(err.to_string().contains("signature"), "{err}");
+        // Fixed-shape artifacts keep exact byte-size validation.
+        let err = s.execute_bytes("transpose", &[&short]).unwrap_err();
         assert!(err.to_string().contains("signature"), "{err}");
     }
 }

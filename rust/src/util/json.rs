@@ -58,6 +58,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().map(|f| f as u64)
     }
@@ -236,8 +243,10 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.i += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
-        {
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
             self.i += 1;
         }
         let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
@@ -290,6 +299,8 @@ mod tests {
         assert_eq!(j.get("s").unwrap().as_str(), Some("a\"b\nc"));
         assert_eq!(j.get("n").unwrap().as_f64(), Some(-1500.0));
         assert_eq!(j.get("b").unwrap(), &Json::Bool(true));
+        assert_eq!(j.get("b").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("z").unwrap().as_bool(), None);
         assert_eq!(j.get("z").unwrap(), &Json::Null);
     }
 

@@ -25,21 +25,13 @@ fn uniform(n: usize, lo: f32, hi: f32, seed: u64) -> Vec<f32> {
     gen_f32(n, seed).into_iter().map(|v| lo + (v * 0.5 + 0.5) * (hi - lo)).collect()
 }
 
-impl Benchmark for BlackScholes {
-    fn name(&self) -> &'static str {
-        "BlackScholes"
-    }
-
-    fn artifacts(&self) -> Vec<&'static str> {
-        vec!["black_scholes"]
-    }
-
-    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+impl BlackScholes {
+    /// The declarative workload (shared by `run` and the joint tuner).
+    fn workload(&self) -> (GenericWorkload, Vec<f32>, Vec<f32>, Vec<f32>) {
         let total = self.chunks * CHUNK;
         let s = uniform(total, 5.0, 30.0, 51);
         let k = uniform(total, 1.0, 100.0, 52);
         let t = uniform(total, 0.25, 10.0, 53);
-
         let wl = GenericWorkload {
             name: "BlackScholes",
             artifact: "black_scholes",
@@ -53,6 +45,28 @@ impl Benchmark for BlackScholes {
             // Transcendental-heavy pricing: ~250 device ops per option.
             flops_per_chunk: Some(4_000_000),
         };
+        (wl, s, k, t)
+    }
+}
+
+impl Benchmark for BlackScholes {
+    fn name(&self) -> &'static str {
+        "BlackScholes"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["black_scholes"]
+    }
+
+    fn tunable(&self) -> Option<GenericWorkload> {
+        // Per-option pricing is a pure element map over all three
+        // streamed arrays: any chunking assembles the same bytes.
+        Some(self.workload().0)
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let total = self.chunks * CHUNK;
+        let (wl, s, k, t) = self.workload();
         let (wall, outputs, h2d) = wl.execute(ctx, mode)?;
 
         let call = bytes::to_f32(&outputs[0]);

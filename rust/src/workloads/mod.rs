@@ -107,6 +107,17 @@ pub trait Benchmark: Sync {
     fn artifacts(&self) -> Vec<&'static str>;
     /// Run in the given mode and validate the outputs.
     fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats>;
+    /// The declarative workload behind this driver, when granularity
+    /// re-chunking preserves bitwise outputs — i.e. the kernel is a
+    /// per-element map over its windows
+    /// ([`crate::runtime::elastic_artifact`]).  `repro autotune <NAME>`
+    /// uses this to tune the joint (streams × granularity) grid via
+    /// [`GenericWorkload::with_chunks`]; drivers whose kernels have
+    /// per-chunk semantics (histogram bins, per-chunk scans, fixed-tile
+    /// wavefronts) return `None` and tune stream count only.
+    fn tunable(&self) -> Option<GenericWorkload> {
+        None
+    }
 }
 
 /// Second-tier drivers beyond the paper's 13: extra Table-1 apps with

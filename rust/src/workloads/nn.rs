@@ -20,22 +20,12 @@ impl Nn {
     pub fn new(scale: usize) -> Self {
         Self { chunks: 8 * scale.max(1) }
     }
-}
 
-impl Benchmark for Nn {
-    fn name(&self) -> &'static str {
-        "nn"
-    }
-
-    fn artifacts(&self) -> Vec<&'static str> {
-        vec!["nn_dist"]
-    }
-
-    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+    /// The declarative workload (shared by `run` and the joint tuner).
+    fn workload(&self) -> (GenericWorkload, Vec<f32>, [f32; 2]) {
         let total = self.chunks * CHUNK;
         let records = gen_f32(total * 2, 0xA11CE);
         let target = [0.25f32, -0.5f32];
-
         let wl = GenericWorkload {
             name: "nn",
             artifact: "nn_dist",
@@ -49,6 +39,27 @@ impl Benchmark for Nn {
             // device time is memory-bound, not FLOP-bound.
             flops_per_chunk: Some(650_000),
         };
+        (wl, records, target)
+    }
+}
+
+impl Benchmark for Nn {
+    fn name(&self) -> &'static str {
+        "nn"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["nn_dist"]
+    }
+
+    fn tunable(&self) -> Option<GenericWorkload> {
+        // Per-record distance map (the broadcast target rides along
+        // unchanged): re-chunking keeps outputs bitwise identical.
+        Some(self.workload().0)
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let (wl, records, target) = self.workload();
         let (wall, outputs, h2d) = wl.execute(ctx, mode)?;
 
         let got = bytes::to_f32(&outputs[0]);

@@ -20,22 +20,12 @@ impl VectorAdd {
     pub fn new(scale: usize) -> Self {
         Self { chunks: 8 * scale.max(1) }
     }
-}
 
-impl Benchmark for VectorAdd {
-    fn name(&self) -> &'static str {
-        "VectorAdd"
-    }
-
-    fn artifacts(&self) -> Vec<&'static str> {
-        vec!["vector_add"]
-    }
-
-    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+    /// The declarative workload (shared by `run` and the joint tuner).
+    fn workload(&self) -> (GenericWorkload, Vec<f32>, Vec<f32>) {
         let total = self.chunks * CHUNK;
         let a = gen_f32(total, 1);
         let b = gen_f32(total, 2);
-
         let wl = GenericWorkload {
             name: "VectorAdd",
             artifact: "vector_add",
@@ -47,6 +37,27 @@ impl Benchmark for VectorAdd {
             output_chunk_bytes: vec![CHUNK * 4],
             flops_per_chunk: None,
         };
+        (wl, a, b)
+    }
+}
+
+impl Benchmark for VectorAdd {
+    fn name(&self) -> &'static str {
+        "VectorAdd"
+    }
+
+    fn artifacts(&self) -> Vec<&'static str> {
+        vec!["vector_add"]
+    }
+
+    fn tunable(&self) -> Option<GenericWorkload> {
+        // Per-element map: re-chunking keeps outputs bitwise identical.
+        Some(self.workload().0)
+    }
+
+    fn run(&self, ctx: &Context, mode: Mode) -> Result<RunStats> {
+        let total = self.chunks * CHUNK;
+        let (wl, a, b) = self.workload();
         let (wall, outputs, h2d) = wl.execute(ctx, mode)?;
 
         let got = bytes::to_f32(&outputs[0]);

@@ -31,8 +31,10 @@ fn engine_stage_times_match_the_device_model() {
         let st = hetstream::analysis::measure_stages(&ctx, &spec, 5);
         let want_h2d = p.transfer_time(h2d, true) + p.alloc_time(h2d);
         let want_kex = p.kex_time(flops);
-        let h2d_err = (st.h2d.as_secs_f64() - want_h2d.as_secs_f64()).abs() / want_h2d.as_secs_f64();
-        let kex_err = (st.kex.as_secs_f64() - want_kex.as_secs_f64()).abs() / want_kex.as_secs_f64();
+        let h2d_err =
+            (st.h2d.as_secs_f64() - want_h2d.as_secs_f64()).abs() / want_h2d.as_secs_f64();
+        let kex_err =
+            (st.kex.as_secs_f64() - want_kex.as_secs_f64()).abs() / want_kex.as_secs_f64();
         assert!(h2d_err < 0.25, "h2d {:?} vs model {:?}", st.h2d, want_h2d);
         assert!(kex_err < 0.35, "kex {:?} vs model {:?}", st.kex, want_kex);
     }

@@ -1,0 +1,238 @@
+//! Learned-tuner integration: leave-one-app-out cross-validation of
+//! the k-NN seed over the 56-app corpus, the seed-centered pruned
+//! search against the exhaustive grid, and the granularity-aware
+//! workload autotune for re-chunkable fig9 drivers.
+//!
+//! The quantitative bars (≥ 80% of apps within 10% of the exhaustive
+//! optimum; pruned walk measuring ≤ 40% of the grid) were validated
+//! offline against an exact Python mirror of the virtual-clock
+//! executor (`tools/mirror/tuner_mirror.py`): the mirror reproduces
+//! the checked-in golden trace timestamp-for-timestamp, and on this
+//! corpus measures CV at 51/56 within 10%, pruned-vs-full argmin-time
+//! equality on 55/56 apps (the miss is +0.01%), and 28–33% grid
+//! coverage.
+
+use hetstream::analysis::{
+    autotune_plan, autotune_plan_pruned, autotune_workload, corpus_features, gran_ladder,
+    predict_plan_point, snap_seed, Category, KnnTuner, DEFAULT_K,
+};
+use hetstream::corpus::{all_configs, BenchConfig};
+use hetstream::experiments::{
+    dataset_from_tune_rows, learn_cv, tune_corpus_with, TuneRow, TuneStrategy,
+};
+use hetstream::hstreams::{Context, ContextBuilder};
+use hetstream::plan::{
+    default_corpus_granularity, effective_corpus_granularity, lower_corpus_bulk,
+    lower_corpus_streamed_at, Granularity, CORPUS_BURNER,
+};
+use hetstream::workloads::{Benchmark, Histogram, Nn, VectorAdd};
+
+const STREAMS: [usize; 4] = [1, 2, 4, 8];
+
+fn paced_ctx(artifacts: &[&str]) -> Context {
+    ContextBuilder::new()
+        .only_artifacts(artifacts.to_vec())
+        .time_mode(hetstream::device::TimeMode::Virtual)
+        .build()
+        .expect("context")
+}
+
+/// The same candidate construction as `tune_one`: default `--grans`
+/// ladder grown around the analytic seed plus the fixed pre-tuner
+/// granularity, mapped to effective knob values, deduped.
+fn candidates(ctx: &Context, c: &BenchConfig) -> (Vec<usize>, (usize, usize)) {
+    let bulk = lower_corpus_bulk(c, CORPUS_BURNER);
+    let (seed_streams, seed_tasks) = predict_plan_point(&bulk, ctx.profile());
+    let knob = match c.category() {
+        Category::TrueDependent => (seed_tasks as f64).sqrt().ceil() as usize,
+        _ => seed_tasks,
+    };
+    let seed_gran = effective_corpus_granularity(c, Granularity::new(knob)).get();
+    let fixed = effective_corpus_granularity(c, default_corpus_granularity(c.category())).get();
+    let mut grans: Vec<usize> = [1usize, 2, 4, 8, 16]
+        .into_iter()
+        .chain(gran_ladder(seed_gran))
+        .chain([fixed])
+        .map(|g| effective_corpus_granularity(c, Granularity::new(g)).get())
+        .collect();
+    grans.sort_unstable();
+    grans.dedup();
+    (grans, (seed_streams, seed_gran))
+}
+
+fn rep(app: &str) -> BenchConfig {
+    all_configs().into_iter().find(|c| c.app == app).expect("app in corpus")
+}
+
+#[test]
+fn pruned_search_matches_full_grid_argmin_while_visiting_fewer_points() {
+    // A category-spanning sample whose surfaces the mirror verified the
+    // 4-neighborhood hill-climb solves exactly (mean coverage ~35%).
+    let ctx = paced_ctx(&[CORPUS_BURNER]);
+    let (mut visited, mut grid_total) = (0usize, 0usize);
+    for app in
+        ["nn", "gaussian", "lavaMD", "backprop", "Reduction", "Transpose",
+         "FastWalshTransform", "nw", "hotspot"]
+    {
+        let cfg = rep(app);
+        let bulk = lower_corpus_bulk(&cfg, CORPUS_BURNER);
+        let (grans, seed) = candidates(&ctx, &cfg);
+        let lower = |g| lower_corpus_streamed_at(&cfg, CORPUS_BURNER, g);
+
+        let full = autotune_plan(&ctx, &bulk, &lower, &STREAMS, &grans, 1)
+            .unwrap_or_else(|e| panic!("{app} full: {e}"));
+        let pruned = autotune_plan_pruned(&ctx, &bulk, &lower, &STREAMS, &grans, seed, 1)
+            .unwrap_or_else(|e| panic!("{app} pruned: {e}"));
+
+        // Same argmin: under the deterministic virtual clock the pruned
+        // walk must land on the exhaustive optimum's exact time (ties
+        // between equal-time points are both argmins).
+        assert_eq!(
+            pruned.best_ms.to_bits(),
+            full.best_ms.to_bits(),
+            "{app}: pruned ({}, {}) {} ms vs full ({}, {}) {} ms",
+            pruned.best_streams,
+            pruned.best_gran,
+            pruned.best_ms,
+            full.best_streams,
+            full.best_gran,
+            full.best_ms
+        );
+        // The pruned point's time must equal the full grid's at the
+        // same coordinates (the walk measures real points, not a model).
+        let at = full
+            .surface
+            .iter()
+            .find(|&&(n, g, _)| n == pruned.best_streams && g == pruned.best_gran)
+            .map(|&(_, _, ms)| ms)
+            .expect("pruned argmin lies on the full grid");
+        assert_eq!(at.to_bits(), pruned.best_ms.to_bits(), "{app}");
+
+        // …while visiting strictly fewer points.
+        let grid = STREAMS.len() * grans.len();
+        assert!(
+            pruned.surface.len() < grid,
+            "{app}: visited {}/{grid}",
+            pruned.surface.len()
+        );
+        assert_eq!(full.surface.len(), grid, "{app}: exhaustive measures everything");
+        visited += pruned.surface.len();
+        grid_total += grid;
+    }
+    let frac = visited as f64 / grid_total as f64;
+    assert!(frac <= 0.40, "pruned sample coverage {frac:.3} exceeds the 40% budget");
+}
+
+#[test]
+fn leave_one_app_out_cv_meets_the_bar_and_pruned_learned_tuning_is_cheap() {
+    // One exhaustive pass over all 56 representative apps doubles as
+    // the CV ground truth and the learned tuner's training set.
+    let ctx = paced_ctx(&[CORPUS_BURNER]);
+    let (_, rows, failures) =
+        tune_corpus_with(&ctx, &STREAMS, &[1, 2, 4, 8, 16], false, 1, TuneStrategy::Exhaustive)
+            .expect("exhaustive corpus tune");
+    assert_eq!(failures, 0, "every corpus app must tune cleanly");
+    assert_eq!(rows.len(), 56);
+
+    let dataset = dataset_from_tune_rows(&rows, &ctx);
+    assert_eq!(dataset.rows.len(), 56);
+    let model = KnnTuner::fit(dataset, DEFAULT_K);
+    let configs: Vec<BenchConfig> = {
+        let mut seen = std::collections::HashSet::new();
+        all_configs().into_iter().filter(|c| seen.insert((c.app, c.suite))).collect()
+    };
+
+    // (a) CV of the raw learned seed: snap the held-out prediction onto
+    // the app's measured grid and compare against the exhaustive
+    // optimum.  Mirror: 51/56 within 10%.
+    let mut within = 0usize;
+    for (c, r) in configs.iter().zip(&rows) {
+        let held = model.without_app(r.app);
+        let (ps, pg) = held.predict(&corpus_features(c, ctx.profile())).unwrap_or(r.seed);
+        let snap = snap_to_surface(r, ps, pg);
+        if snap <= r.best_ms * 1.10 {
+            within += 1;
+        }
+    }
+    assert!(
+        within * 10 >= rows.len() * 8,
+        "learned seed within 10% on only {within}/{} apps",
+        rows.len()
+    );
+
+    // (b) The acceptance criterion end-to-end: hill-climb from each
+    // held-out learned seed, reach the exhaustive optimum's time within
+    // 10% on ≥ 80% of apps, measuring ≤ 40% of the grid in aggregate.
+    // Mirror: 56/56 within 10% at 28% coverage.
+    let (mut within, mut visited, mut grid) = (0usize, 0usize, 0usize);
+    for (c, full) in configs.iter().zip(&rows) {
+        let held = model.without_app(full.app);
+        let pruned_rows = hetstream::experiments::learn::tune_held_out(
+            &ctx,
+            c,
+            &STREAMS,
+            &[1, 2, 4, 8, 16],
+            &held,
+        );
+        let r = &pruned_rows;
+        assert!(r.validated && r.error.is_none(), "{}: {:?}", r.app, r.error);
+        if r.best_ms <= full.best_ms * 1.10 {
+            within += 1;
+        }
+        visited += r.surface.len();
+        grid += r.grid;
+    }
+    assert!(
+        within * 10 >= rows.len() * 8,
+        "pruned learned tuning within 10% on only {within}/{} apps",
+        rows.len()
+    );
+    let frac = visited as f64 / grid.max(1) as f64;
+    assert!(frac <= 0.40, "learned tuning measured {frac:.3} of the grid (budget 40%)");
+
+    // (c) The experiments::learn_cv wiring agrees on a cheap subset.
+    let (_, stats) = learn_cv(&ctx, &STREAMS, &[1, 2, 4, 8, 16], 6, DEFAULT_K, None)
+        .expect("subset CV");
+    assert_eq!(stats.apps, 6);
+    assert_eq!(stats.failures, 0);
+    assert!(stats.within_10pct >= 4, "subset CV collapsed: {stats:?}");
+}
+
+fn snap_to_surface(r: &TuneRow, ps: usize, pg: usize) -> f64 {
+    let mut srow: Vec<usize> = r.surface.iter().map(|&(n, _, _)| n).collect();
+    srow.sort_unstable();
+    srow.dedup();
+    let mut grow: Vec<usize> = r.surface.iter().map(|&(_, g, _)| g).collect();
+    grow.sort_unstable();
+    grow.dedup();
+    // The walk's own snapping rule, so the CV judges what the pruned
+    // search would actually start from.
+    let (sn, gn) = snap_seed(&srow, &grow, (ps, pg));
+    r.surface
+        .iter()
+        .find(|&&(n, g, _)| n == sn && g == gn)
+        .map(|&(_, _, ms)| ms)
+        .expect("snapped point on the surface")
+}
+
+#[test]
+fn autotune_workload_tunes_rechunkable_drivers_jointly() {
+    // The elastic-signature path: VectorAdd re-chunks through
+    // `with_chunks` and every grid point validates bitwise against the
+    // bulk (baseline) lowering.
+    let ctx = paced_ctx(&["vector_add"]);
+    let wl = VectorAdd::new(1).tunable().expect("vecadd is per-element");
+    let r = autotune_workload(&ctx, &wl, &[1, 2, 4], 1).expect("joint autotune");
+    assert!(r.best_ms.is_finite() && r.best_ms > 0.0);
+    assert!(!r.surface.is_empty());
+    // The candidate set really exercises the knob (not just the
+    // driver's native 8 chunks).
+    let grans: std::collections::BTreeSet<usize> =
+        r.surface.iter().map(|&(_, g, _)| g).collect();
+    assert!(grans.len() > 1, "single-granularity grid: {grans:?}");
+    assert!(grans.contains(&8), "native chunk count stays a candidate");
+
+    // Chunk-semantic drivers opt out of the knob.
+    assert!(Nn::new(1).tunable().is_some());
+    assert!(Histogram::new(1).tunable().is_none());
+}
