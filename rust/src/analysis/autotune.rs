@@ -42,11 +42,16 @@
 //! ([`predict_plan_point`] pins `c_task <= 0` to the granularity
 //! ceiling instead of dividing by it).
 
+use crate::corpus::BenchConfig;
 use crate::hstreams::Context;
-use crate::plan::{outputs_match, Executor, Granularity, StreamPlan};
+use crate::plan::{
+    effective_corpus_granularity, lower_corpus_bulk, outputs_match, Backend, Granularity,
+    RunConfig, SimBackend, StreamPlan, CORPUS_BURNER,
+};
 use crate::workloads::{Benchmark, GenericWorkload, Mode};
 use crate::{Error, Result};
 
+use super::categorize::Category;
 use super::stages::StageTimes;
 
 /// Analytic stream-count suggestion straight from a lowered plan: the
@@ -106,6 +111,27 @@ pub fn predict_plan_point(
     };
     // At least one task per stream, or the pipeline can't fill.
     (streams, gran.max(streams))
+}
+
+/// The analytic `(streams, granularity)` seed for a corpus descriptor
+/// in the units its lowering actually uses: [`predict_plan_point`]
+/// over the bulk plan, the task count mapped into the category's knob
+/// (a wavefront's knob is the tile-grid side, so `√tasks`), and the
+/// result clamped through [`effective_corpus_granularity`].  One rule
+/// shared by the corpus tuner's seeding and the service layer's
+/// [`crate::service::AnalyticPolicy`], so "what would the analytic
+/// model pick" is answered identically everywhere.
+pub fn analytic_corpus_seed(
+    c: &BenchConfig,
+    profile: &crate::device::DeviceProfile,
+) -> (usize, usize) {
+    let bulk = lower_corpus_bulk(c, CORPUS_BURNER);
+    let (streams, seed_tasks) = predict_plan_point(&bulk, profile);
+    let knob = match c.category() {
+        Category::TrueDependent => (seed_tasks as f64).sqrt().ceil() as usize,
+        _ => seed_tasks,
+    };
+    (streams, effective_corpus_granularity(c, Granularity::new(knob)).get())
 }
 
 /// Result of an empirical stream-count sweep.
@@ -202,14 +228,14 @@ pub fn autotune_plan(
     // and dedupe, so the surface never labels a point with a stream
     // count that doesn't exist (e.g. --ladder 0,1 aliasing 1 twice).
     let streams = normalize_ladder(streams);
-    let exec = Executor::new(ctx);
+    let exec = SimBackend::new(ctx);
     // Bulk reference: same median-of-runs methodology as every grid
     // point (one wallclock outlier must not skew all the comparisons);
     // the first run's outputs serve as the bitwise oracle.
-    let reference = exec.run(bulk, 1)?;
+    let reference = exec.run(bulk, RunConfig::streams(1))?;
     let mut bulk_samples = vec![reference.wall];
     for _ in 1..runs {
-        bulk_samples.push(exec.run(bulk, 1)?.wall);
+        bulk_samples.push(exec.run(bulk, RunConfig::streams(1))?.wall);
     }
     let bulk_ms = crate::metrics::median_duration(&mut bulk_samples).as_secs_f64() * 1e3;
 
@@ -220,7 +246,7 @@ pub fn autotune_plan(
         for &n in &streams {
             let mut samples = Vec::with_capacity(runs);
             for i in 0..runs {
-                let r = exec.run(&plan, n)?;
+                let r = exec.run(&plan, RunConfig::streams(n))?;
                 // Outputs are a pure function of (plan, bytes), not of
                 // the clock: one bitwise check per grid point suffices,
                 // repetitions only re-sample the timing.
@@ -280,11 +306,11 @@ pub fn autotune_plan_pruned(
     // arbitrary value jumps).
     let streams = normalize_ladder(streams);
     let grans = normalize_ladder(grans);
-    let exec = Executor::new(ctx);
-    let reference = exec.run(bulk, 1)?;
+    let exec = SimBackend::new(ctx);
+    let reference = exec.run(bulk, RunConfig::streams(1))?;
     let mut bulk_samples = vec![reference.wall];
     for _ in 1..runs {
-        bulk_samples.push(exec.run(bulk, 1)?.wall);
+        bulk_samples.push(exec.run(bulk, RunConfig::streams(1))?.wall);
     }
     let bulk_ms = crate::metrics::median_duration(&mut bulk_samples).as_secs_f64() * 1e3;
 
@@ -317,7 +343,7 @@ pub fn autotune_plan_pruned(
         let plan = &plans[&g];
         let mut samples = Vec::with_capacity(runs);
         for rep in 0..runs {
-            let r = exec.run(plan, n)?;
+            let r = exec.run(plan, RunConfig::streams(n))?;
             if rep == 0 && !outputs_match(&reference, &r) {
                 return Err(Error::Stream(format!(
                     "{}: outputs diverge from bulk at {n} streams × granularity {g}",

@@ -73,6 +73,24 @@ impl DeviceProfile {
         }
     }
 
+    /// AMD Fiji-class profile (R9 Fury X era, PCIe gen3 x16): link
+    /// rates close to the K80's but a slightly lower effective kernel
+    /// throughput and higher per-transfer setup cost — a third point
+    /// for the Fig. 4-style platform-divergence studies and the
+    /// service/tuner `--profile` runs.
+    pub fn fiji() -> Self {
+        Self {
+            name: "fiji".into(),
+            h2d_gbps: 11.0,
+            d2h_gbps: 11.5,
+            latency_us: 12.0,
+            alloc_us_per_mb: 45.0,
+            gflops: 300.0,
+            launch_us: 6.0,
+            duplex: true,
+        }
+    }
+
     /// No pacing at all — ops take their real CPU time only.  For unit
     /// tests and functional validation.
     pub fn instant() -> Self {
@@ -127,6 +145,7 @@ impl DeviceProfile {
         match name {
             "mic31sp" | "mic" => Some(Self::mic31sp()),
             "k80" | "gpu" => Some(Self::k80()),
+            "fiji" | "amd" => Some(Self::fiji()),
             "instant" => Some(Self::instant()),
             "slow-link" | "slow" => Some(Self::slow_link()),
             _ => None,

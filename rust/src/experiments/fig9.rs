@@ -45,11 +45,10 @@ pub fn measure_one(
     }
     let base = median_duration(&mut base_samples).as_secs_f64() * 1e3;
     let strm = median_duration(&mut strm_samples).as_secs_f64() * 1e3;
-    // Same guard as the corpus tuner: an instant-profile run (strm = 0)
-    // must report "no measurable improvement", not walk inf/NaN into
-    // the table.
-    let improvement_pct =
-        if strm > 0.0 && base.is_finite() { (base / strm - 1.0) * 100.0 } else { f64::NAN };
+    // Shared guard (`util::improvement_pct`, same rule as the corpus
+    // tuner): an instant-profile run (strm = 0) must report "no
+    // measurable improvement", not walk inf/NaN into the table.
+    let improvement_pct = crate::util::improvement_pct(base, strm);
     Ok(Fig9Row {
         name: b.name().into(),
         baseline_ms: base,

@@ -1,0 +1,218 @@
+//! `repro serve --demo N` — the multi-tenant serving demo: N
+//! concurrent mixed-category corpus submissions through
+//! [`crate::service::StreamService`], compared against serial
+//! execution of the same submission set.
+//!
+//! The serial baseline is what every caller did before the service
+//! existed: one engine, one submission at a time, policy + lowering
+//! on the caller's critical path, no plan cache.  The service runs
+//! the identical work — same policy, same descriptors, same virtual
+//! clock physics — across its engine lanes with fair admission and a
+//! shared plan cache, so the comparison isolates exactly what the API
+//! redesign buys: wall-clock throughput (lanes overlap the real CPU
+//! cost of simulating each run) and lowering reuse.  Every service
+//! output is validated bitwise against its serial twin; modeled
+//! makespans must agree too (quiesced lanes make the simulated
+//! physics independent of scheduling).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::corpus::BenchConfig;
+use crate::device::{DeviceProfile, TimeMode};
+use crate::hstreams::ContextBuilder;
+use crate::metrics::{median_duration, Table};
+use crate::plan::{
+    lower_corpus_streamed_at, Backend, Granularity, RunConfig, SimBackend, CORPUS_BURNER,
+};
+use crate::service::{Request, ServiceConfig, StreamService, TunePolicy};
+use crate::{Error, Result};
+
+use super::sweep::representative_configs;
+
+/// How many distinct apps the demo roster cycles over (mixed
+/// categories; submissions beyond this hit the plan cache).
+const ROSTER_APPS: usize = 8;
+
+/// Demo tenants submissions round-robin over.
+const TENANTS: usize = 4;
+
+/// Aggregate outcome of one serving demo.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub submissions: usize,
+    pub lanes: usize,
+    /// Wall-clock time for the service to drain every submission.
+    pub service_wall: Duration,
+    /// Wall-clock time for the serial baseline over the same set.
+    pub serial_wall: Duration,
+    /// Aggregate throughput ratio, serial / service (>1 means the
+    /// service outran serial execution of the same submissions).
+    pub speedup: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Sum of modeled makespans across submissions, ms.
+    pub modeled_total_ms: f64,
+    /// Every service output matched its serial twin bitwise, modeled
+    /// times agreed (virtual mode), and no submission errored.
+    pub validated: bool,
+    pub errors: usize,
+}
+
+/// The demo submission set: the first [`ROSTER_APPS`] apps of a
+/// category-interleaved ordering of the representative corpus — so
+/// even a small demo spans independent / false-dependent / wavefront /
+/// iterative / sync shapes — cycled to `n` submissions.
+pub fn demo_roster(n: usize) -> Vec<BenchConfig> {
+    let mut by_cat: Vec<(&'static str, Vec<BenchConfig>)> = Vec::new();
+    for c in representative_configs(false) {
+        let label = c.category().label();
+        match by_cat.iter_mut().find(|(l, _)| *l == label) {
+            Some((_, v)) => v.push(c),
+            None => by_cat.push((label, vec![c])),
+        }
+    }
+    let mut interleaved = Vec::new();
+    let mut round = 0;
+    while interleaved.len() < ROSTER_APPS {
+        let mut any = false;
+        for (_, v) in &by_cat {
+            if let Some(c) = v.get(round) {
+                interleaved.push(c.clone());
+                any = true;
+            }
+        }
+        if !any {
+            break;
+        }
+        round += 1;
+    }
+    interleaved.truncate(ROSTER_APPS);
+    (0..n).map(|i| interleaved[i % interleaved.len()].clone()).collect()
+}
+
+/// Run the serving demo: `n` submissions from [`TENANTS`] tenants onto
+/// `lanes` engine lanes, vs the serial baseline.  Returns the
+/// per-submission table and the aggregate summary.
+pub fn serve_demo(
+    profile: &DeviceProfile,
+    time_mode: TimeMode,
+    n: usize,
+    lanes: usize,
+    runs: usize,
+    policy: Arc<dyn TunePolicy>,
+) -> Result<(Table, ServeSummary)> {
+    if n == 0 {
+        return Err(Error::Config("serve demo needs --demo N >= 1".into()));
+    }
+    let runs = runs.max(1);
+    let roster = demo_roster(n);
+
+    // --- serial baseline: one engine, submissions one at a time -----
+    let ctx = ContextBuilder::new()
+        .profile(profile.clone())
+        .time_mode(time_mode)
+        .only_artifacts(vec![CORPUS_BURNER])
+        .build()?;
+    let backend = SimBackend::new(&ctx);
+    let serial_t0 = Instant::now();
+    let mut serial: Vec<(f64, Vec<Vec<u8>>)> = Vec::with_capacity(n);
+    for c in &roster {
+        let choice = policy.choose(c, ctx.profile());
+        let plan = lower_corpus_streamed_at(c, CORPUS_BURNER, Granularity::new(choice.gran));
+        let mut samples = Vec::with_capacity(runs);
+        let mut outputs = Vec::new();
+        for rep in 0..runs {
+            let run = backend.run(&plan, RunConfig::streams(choice.streams))?;
+            samples.push(run.wall);
+            if rep == 0 {
+                outputs = run.outputs;
+            }
+        }
+        serial.push((median_duration(&mut samples).as_secs_f64() * 1e3, outputs));
+    }
+    let serial_wall = serial_t0.elapsed();
+
+    // --- the service: same submissions, concurrent ------------------
+    let service = StreamService::start(
+        ServiceConfig {
+            lanes,
+            runs,
+            profile: profile.clone(),
+            time_mode,
+            artifacts: Some(vec![CORPUS_BURNER.into()]),
+        },
+        policy,
+    )?;
+    let service_t0 = Instant::now();
+    let tickets: Vec<_> = roster
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            service.submit(&format!("tenant-{}", i % TENANTS), Request::Corpus(c.clone()))
+        })
+        .collect();
+    let reports: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect::<Result<_>>()?;
+    let service_wall = service_t0.elapsed();
+    let stats = service.shutdown();
+
+    // --- per-submission table + bitwise validation ------------------
+    let mut t = Table::new(
+        format!("Serving demo — {n} submissions, {lanes} lanes, policy-tuned"),
+        &[
+            "#", "tenant", "app", "category", "(s,g)", "policy", "lane", "cache",
+            "modeled (ms)", "valid",
+        ],
+    );
+    let mut validated = true;
+    let mut errors = 0usize;
+    for (i, r) in reports.iter().enumerate() {
+        let (serial_ms, serial_outputs) = &serial[i];
+        // Bitwise: the service must hand back exactly the bytes the
+        // serial twin produced; under the virtual clock the modeled
+        // makespan must agree too (quiesced-lane determinism).
+        let mut ok = r.ok() && r.outputs == *serial_outputs;
+        if time_mode == TimeMode::Virtual {
+            ok &= r.modeled_ms == *serial_ms;
+        }
+        validated &= ok;
+        errors += usize::from(!r.ok());
+        t.row(&[
+            i.to_string(),
+            r.tenant.clone(),
+            r.name.clone(),
+            r.category.unwrap_or("-").to_string(),
+            match r.gran {
+                Some(g) => format!("({}, {g})", r.streams),
+                None => format!("({}, -)", r.streams),
+            },
+            if r.learned { "learned".into() } else { "analytic".to_string() },
+            r.lane.to_string(),
+            if r.cache_hit { "hit".into() } else { "miss".to_string() },
+            if r.modeled_ms.is_finite() { format!("{:.2}", r.modeled_ms) } else { "-".into() },
+            match &r.error {
+                Some(e) => format!("FAIL: {e}"),
+                None => ok.to_string(),
+            },
+        ]);
+    }
+
+    let speedup = if service_wall.as_secs_f64() > 0.0 {
+        serial_wall.as_secs_f64() / service_wall.as_secs_f64()
+    } else {
+        f64::NAN
+    };
+    let summary = ServeSummary {
+        submissions: n,
+        lanes,
+        service_wall,
+        serial_wall,
+        speedup,
+        cache_hits: stats.cache_hits,
+        cache_misses: stats.cache_misses,
+        modeled_total_ms: reports.iter().filter(|r| r.ok()).map(|r| r.modeled_ms).sum(),
+        validated,
+        errors,
+    };
+    Ok((t, summary))
+}

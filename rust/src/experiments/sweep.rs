@@ -8,23 +8,27 @@
 //! Validation is executor-level: the outputs of every sweep ladder
 //! point must equal the 1-stream run bit-for-bit, and every tuning
 //! grid point must equal the *bulk* lowering bit-for-bit (same kernels
-//! over the same bytes, any placement, any granularity).  A structural
+//! over the same bytes, any placement, any granularity).  With
+//! `--native` the sweep also pushes every app's plan through the
+//! [`crate::plan::NativeBackend`] and demands the same bytes — the
+//! per-commit backend-equivalence check.  A structural
 //! `plan.validate()` failure or a mis-validated run marks the row
 //! failed; the CLI exits non-zero if any row fails, which is what the
 //! CI smoke jobs check.
 
 use crate::analysis::{
-    argmin, autotune_plan, autotune_plan_pruned, corpus_features, gran_ladder, normalize_ladder,
-    predict_plan_point, predict_streams_for_plan, Category, KnnTuner, PlanTuneResult,
+    analytic_corpus_seed, argmin, autotune_plan, autotune_plan_pruned, corpus_features,
+    gran_ladder, normalize_ladder, predict_streams_for_plan, KnnTuner, PlanTuneResult,
 };
 use crate::corpus::{all_configs, BenchConfig};
 use crate::hstreams::Context;
 use crate::metrics::Table;
 use crate::plan::{
     default_corpus_granularity, effective_corpus_granularity, lower_corpus_bulk,
-    lower_corpus_streamed, lower_corpus_streamed_at, outputs_match, Executor, Granularity,
-    CORPUS_BURNER,
+    lower_corpus_streamed, lower_corpus_streamed_at, outputs_match, Backend, Granularity,
+    NativeBackend, RunConfig, SimBackend, CORPUS_BURNER,
 };
+use crate::util::improvement_pct;
 use crate::Result;
 
 /// One corpus app's ladder measurement.
@@ -59,7 +63,12 @@ pub(crate) fn representative_configs(all_cfgs: bool) -> Vec<BenchConfig> {
     configs
 }
 
-fn sweep_one(ctx: &Context, c: &BenchConfig, ladder: &[usize]) -> SweepRow {
+fn sweep_one(
+    ctx: &Context,
+    c: &BenchConfig,
+    ladder: &[usize],
+    native: Option<&NativeBackend>,
+) -> SweepRow {
     let mut row = SweepRow {
         suite: c.suite.label(),
         app: c.app,
@@ -80,9 +89,9 @@ fn sweep_one(ctx: &Context, c: &BenchConfig, ladder: &[usize]) -> SweepRow {
     }
     row.tasks = plan.tasks();
     row.predicted_streams = predict_streams_for_plan(&plan, ctx.profile());
-    let exec = Executor::new(ctx);
+    let exec = SimBackend::new(ctx);
 
-    let reference = match exec.run(&plan, 1) {
+    let reference = match exec.run(&plan, RunConfig::streams(1)) {
         Ok(r) => r,
         Err(e) => {
             row.error = Some(e.to_string());
@@ -93,8 +102,25 @@ fn sweep_one(ctx: &Context, c: &BenchConfig, ladder: &[usize]) -> SweepRow {
     row.ladder.push((1, t1));
     row.validated = true;
 
+    // --native: the same plan through the host thread-pool backend
+    // must assemble the sim reference's bytes exactly — the per-commit
+    // form of the backend-equivalence acceptance over all 56 apps.
+    if let Some(native) = native {
+        match native.run(&plan, RunConfig::streams(4)) {
+            Ok(r) if outputs_match(&reference, &r) => {}
+            Ok(_) => {
+                row.validated = false;
+                row.error.get_or_insert_with(|| "native backend outputs diverge".into());
+            }
+            Err(e) => {
+                row.validated = false;
+                row.error.get_or_insert_with(|| format!("native backend: {e}"));
+            }
+        }
+    }
+
     for &n in ladder.iter().filter(|&&n| n > 1) {
-        match exec.run(&plan, n) {
+        match exec.run(&plan, RunConfig::streams(n)) {
             Ok(r) if outputs_match(&reference, &r) => {
                 row.ladder.push((n, r.wall.as_secs_f64() * 1e3));
             }
@@ -117,7 +143,7 @@ fn sweep_one(ctx: &Context, c: &BenchConfig, ladder: &[usize]) -> SweepRow {
     // the tuner).
     let (bn, bt) = argmin(row.ladder.iter().copied()).unwrap_or((1, t1));
     row.best_streams = bn;
-    row.improvement_pct = (t1 / bt - 1.0) * 100.0;
+    row.improvement_pct = improvement_pct(t1, bt);
     row
 }
 
@@ -129,8 +155,24 @@ pub fn sweep_corpus(
     ladder: &[usize],
     all_cfgs: bool,
 ) -> Result<(Table, Vec<SweepRow>, usize)> {
+    sweep_corpus_with(ctx, ladder, all_cfgs, false)
+}
+
+/// [`sweep_corpus`], optionally cross-checking every app through the
+/// [`NativeBackend`] (`repro sweep --corpus --native`): both `Backend`
+/// implementations must assemble bitwise-identical outputs for every
+/// corpus plan, and a divergence fails the row like any
+/// mis-validation.
+pub fn sweep_corpus_with(
+    ctx: &Context,
+    ladder: &[usize],
+    all_cfgs: bool,
+    native: bool,
+) -> Result<(Table, Vec<SweepRow>, usize)> {
     let configs = representative_configs(all_cfgs);
-    let rows: Vec<SweepRow> = configs.iter().map(|c| sweep_one(ctx, c, ladder)).collect();
+    let native = native.then(NativeBackend::new);
+    let rows: Vec<SweepRow> =
+        configs.iter().map(|c| sweep_one(ctx, c, ladder, native.as_ref())).collect();
 
     let ladder_label = ladder.iter().map(|n| n.to_string()).collect::<Vec<_>>().join("/");
     let mut t = Table::new(
@@ -156,7 +198,11 @@ pub fn sweep_corpus(
             r.tasks.to_string(),
             format!("{t1:.2}"),
             best,
-            format!("{:+.1}%", r.improvement_pct),
+            if r.improvement_pct.is_finite() {
+                format!("{:+.1}%", r.improvement_pct)
+            } else {
+                "-".into()
+            },
             r.predicted_streams.to_string(),
             match &r.error {
                 Some(e) => format!("FAIL: {e}"),
@@ -249,15 +295,10 @@ fn tune_one(
     };
     let bulk = lower_corpus_bulk(c, CORPUS_BURNER);
 
-    // Analytic seed, mapped from pipeline tasks into the category's
-    // knob units (a wavefront's knob is the grid side, not the task
-    // count) and clamped to what the lowering will actually use.
-    let (seed_streams, seed_tasks) = predict_plan_point(&bulk, ctx.profile());
-    let seed_knob = match c.category() {
-        Category::TrueDependent => (seed_tasks as f64).sqrt().ceil() as usize,
-        _ => seed_tasks,
-    };
-    let analytic_gran = effective_corpus_granularity(c, Granularity::new(seed_knob)).get();
+    // Analytic seed in the category's knob units, clamped to what the
+    // lowering will actually use — the same rule the service layer's
+    // analytic policy applies (`analysis::analytic_corpus_seed`).
+    let (seed_streams, analytic_gran) = analytic_corpus_seed(c, ctx.profile());
 
     // The learned seed, when a model is given and has same-category
     // training rows (its granularity labels are already effective knob
@@ -312,15 +353,11 @@ fn tune_one(
             )
             .map(|(_, ms)| ms)
             .unwrap_or(f64::NAN);
-            // Guarded: a NaN operand (failed/unvisited fixed column, or
-            // a degenerate zero best) must surface as "unknown", not as
-            // a NaN-propagated percentage the table prints as a number.
-            row.improvement_pct =
-                if row.fixed_ms.is_finite() && row.best_ms.is_finite() && row.best_ms > 0.0 {
-                    (row.fixed_ms / row.best_ms - 1.0) * 100.0
-                } else {
-                    f64::NAN
-                };
+            // Guarded (shared `util::improvement_pct` rule): a NaN
+            // operand — failed/unvisited fixed column, degenerate zero
+            // best — surfaces as "unknown", never as a NaN-propagated
+            // percentage the table prints as a number.
+            row.improvement_pct = improvement_pct(row.fixed_ms, row.best_ms);
             row.surface = r.surface;
             row.validated = true;
         }

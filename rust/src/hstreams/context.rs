@@ -166,8 +166,9 @@ impl Context {
     /// timeline horizon (virtual mode; no-op under wall clock).  Must
     /// only be called with the engines drained — after every submitted
     /// op has retired (e.g. right after the syncs that end a run).
-    /// [`crate::plan::Executor::run`] calls this on entry so each run's
-    /// makespan is independent of what ran before it.
+    /// The plan executor behind [`crate::plan::SimBackend`] calls this
+    /// on entry so each run's makespan is independent of what ran
+    /// before it.
     pub fn quiesce_timeline(&self) {
         self.clock.quiesce();
     }

@@ -27,11 +27,19 @@
 //!   the streaming-necessity decision rule, and the Table-2 categorizer.
 //! - [`plan`] — the unified `StreamPlan` IR: every workload lowers to
 //!   a task DAG of typed H2D/KEX/D2H ops with byte/FLOP annotations,
-//!   executed by one scheduler ([`plan::Executor`]) that maps any plan
-//!   onto `n` streams.  Lowerings take a [`plan::Granularity`] knob and
-//!   re-derive at any task count with bitwise-identical outputs, which
-//!   the joint (streams × granularity) tuner
-//!   ([`analysis::autotune_plan`], `repro tune --corpus`) exploits.
+//!   executed through the backend-agnostic [`plan::Backend`] API — the
+//!   engine-backed [`plan::SimBackend`] maps any plan onto `n` modeled
+//!   streams, the [`plan::NativeBackend`] runs the same DAG on a host
+//!   thread pool, and both assemble bitwise-identical outputs.
+//!   Lowerings take a [`plan::Granularity`] knob and re-derive at any
+//!   task count with bitwise-identical outputs, which the joint
+//!   (streams × granularity) tuner ([`analysis::autotune_plan`],
+//!   `repro tune --corpus`) exploits.
+//! - [`service`] — the async multi-tenant front-end: a
+//!   [`service::StreamService`] accepts concurrent plan submissions,
+//!   multiplexes them onto shared engine lanes with fair per-tenant
+//!   admission, caches lowered plans, and picks (streams, granularity)
+//!   per submission through a pluggable [`service::TunePolicy`].
 //! - [`corpus`] — all 56 benchmarks × 223 input configurations of
 //!   Table 1 as workload descriptors.
 //! - [`workloads`] — the 13 streamed benchmark drivers of Fig. 9 plus
@@ -53,6 +61,7 @@ pub mod metrics;
 pub mod partition;
 pub mod plan;
 pub mod runtime;
+pub mod service;
 pub mod util;
 pub mod workloads;
 

@@ -42,10 +42,13 @@ COMMANDS:
                  VectorAdd, BlackScholes) the joint (streams x
                  granularity) grid via GenericWorkload::with_chunks
   survey      Full corpus CSV (analytic R + category + decision)
-  sweep       Run the corpus through the StreamPlan executor across a
+  sweep       Run the corpus through the plan SimBackend across a
               stream ladder (virtual clock; exits non-zero on any
-              validation failure)
-                --corpus [--ladder 1,2,4,8] [--all-configs] [--csv PATH]
+              validation failure); --native additionally cross-checks
+              every app's outputs bitwise against the NativeBackend
+              (host thread pool)
+                --corpus [--ladder 1,2,4,8] [--all-configs] [--native]
+                [--csv PATH]
   tune        Joint (streams x granularity) plan autotuner: re-lower
               every corpus app across the candidate grid, validate each
               point bitwise against the bulk lowering, report the
@@ -59,19 +62,30 @@ COMMANDS:
               leave-one-app-out cross-validate the k-NN seed
                 [--dataset PATH] [--cv] [--subset N] [--k K=5]
                 [--ladder 1,2,4,8] [--grans 1,2,4,8,16] [--out PATH]
-  trace NAME  Dump one benchmark's virtual event timeline as JSON
-                [--streams N=4] [--scale S=2] [--out PATH]
+  serve       Async multi-tenant StreamService demo: N concurrent
+              mixed-category corpus submissions onto shared engine
+              lanes (fair per-tenant admission, plan cache, policy-
+              picked (streams x granularity)), reported against serial
+              execution of the same submission set
+                --demo N [--lanes L=4] [--runs R=1]
+                [--learned [--dataset PATH] [--k K=5]]
+  trace NAME  Dump one benchmark's virtual event timeline as JSON, or
+              as a per-lane SVG Gantt chart with --svg
+                [--streams N=4] [--scale S=2] [--svg] [--out PATH]
   quickstart  Smoke run: vector_add through the full stack
 
 GLOBAL OPTIONS:
   --config PATH   JSON run config
-  --device NAME   mic31sp | k80 | instant | slow-link
+  --profile NAME  device preset: mic | k80 | fiji | instant | slow-link
+  --device NAME   alias of --profile
   --runs N        measurement repetitions (median; paper uses 11)
   --time MODE     virtual (default: deterministic, no sleeping) | wallclock
 ";
 
 fn profile_from(args: &Args, cfg: &RunConfig) -> Result<DeviceProfile> {
-    if let Some(name) = args.get("device") {
+    // `--profile` and `--device` are aliases; the former reads better
+    // for service/tuner runs targeting a preset platform.
+    if let Some(name) = args.get("profile").or_else(|| args.get("device")) {
         return DeviceProfile::preset(name)
             .ok_or_else(|| cli_err(format!("unknown device preset `{name}`")));
     }
@@ -310,9 +324,13 @@ fn main() -> Result<()> {
                 Some(vec![hetstream::plan::CORPUS_BURNER.into()]),
                 false,
             )?;
-            let (table, rows, failures) =
-                hetstream::experiments::sweep_corpus(&ctx, &ladder, args.flag("all-configs"))
-                    .map_err(|e| cli_err(e.to_string()))?;
+            let (table, rows, failures) = hetstream::experiments::sweep_corpus_with(
+                &ctx,
+                &ladder,
+                args.flag("all-configs"),
+                args.flag("native"),
+            )
+            .map_err(|e| cli_err(e.to_string()))?;
             println!("{}", table.markdown());
             if let Some(path) = args.get("csv") {
                 std::fs::write(path, table.csv())?;
@@ -488,6 +506,66 @@ fn main() -> Result<()> {
                 }
             }
         }
+        Some("serve") => {
+            let n = args.get_usize("demo", 0);
+            if n == 0 {
+                return Err(cli_err(
+                    "usage: repro serve --demo N [--lanes L] [--runs R] \
+                     [--learned [--dataset PATH]]"
+                        .into(),
+                ));
+            }
+            let lanes = args.get_usize("lanes", 4);
+            // Default 1 repetition (exact under the virtual clock), not
+            // the paper's 11 — this is a serving demo, not a benchmark.
+            let runs = args.get_usize("runs", 1);
+            let time_mode = time_mode_from(&args)?;
+            // Policy features/predictions must see the same (dilated)
+            // profile the service lanes model.
+            let sim_profile = profile.simulation();
+            let policy: std::sync::Arc<dyn hetstream::service::TunePolicy> =
+                if args.flag("learned") {
+                    let ds = match args.get("dataset") {
+                        Some(path) => {
+                            let text = std::fs::read_to_string(path)?;
+                            hetstream::analysis::Dataset::from_tune_json(&text, &sim_profile)
+                                .map_err(|e| cli_err(e.to_string()))?
+                        }
+                        None => hetstream::analysis::Dataset::default(),
+                    };
+                    eprintln!("learned policy: {} training row(s)", ds.rows.len());
+                    std::sync::Arc::new(hetstream::service::LearnedPolicy::new(
+                        hetstream::analysis::KnnTuner::fit(
+                            ds,
+                            args.get_usize("k", hetstream::analysis::DEFAULT_K),
+                        ),
+                    ))
+                } else {
+                    std::sync::Arc::new(hetstream::service::AnalyticPolicy)
+                };
+            let (table, s) = experiments::serve_demo(&profile, time_mode, n, lanes, runs, policy)
+                .map_err(|e| cli_err(e.to_string()))?;
+            println!("{}", table.markdown());
+            println!(
+                "service: {} submissions on {} lanes in {:.1} ms wall | serial {:.1} ms | \
+                 {:.2}x aggregate throughput | plan cache {} hit(s) / {} miss(es) | \
+                 modeled total {:.2} ms",
+                s.submissions,
+                s.lanes,
+                s.service_wall.as_secs_f64() * 1e3,
+                s.serial_wall.as_secs_f64() * 1e3,
+                s.speedup,
+                s.cache_hits,
+                s.cache_misses,
+                s.modeled_total_ms,
+            );
+            if s.errors > 0 || !s.validated {
+                return Err(cli_err(format!(
+                    "{} submission error(s); outputs bitwise-identical to serial: {}",
+                    s.errors, s.validated
+                )));
+            }
+        }
         Some("trace") => {
             let name = args
                 .positional
@@ -506,19 +584,26 @@ fn main() -> Result<()> {
                 true,
             )?;
             let r = b.run(&ctx, Mode::Streamed(streams)).map_err(|e| cli_err(e.to_string()))?;
-            let json = ctx.trace_json();
+            // --svg renders the per-lane Gantt chart instead of the
+            // JSON event list (tools/trace_viz.py does the same for a
+            // JSON file after the fact).
+            let payload = if args.flag("svg") {
+                hetstream::metrics::trace_svg(&ctx.trace())
+            } else {
+                ctx.trace_json()
+            };
             match args.get("out") {
                 Some(path) => {
-                    std::fs::write(path, &json)?;
+                    std::fs::write(path, &payload)?;
                     println!(
                         "wrote {} events ({} bytes) to {path} — makespan {:.3} ms, validated {}",
                         ctx.trace().len(),
-                        json.len(),
+                        payload.len(),
                         r.wall.as_secs_f64() * 1e3,
                         r.validated,
                     );
                 }
-                None => print!("{json}"),
+                None => print!("{payload}"),
             }
         }
         Some("quickstart") => {

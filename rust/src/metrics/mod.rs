@@ -1,11 +1,13 @@
-//! Timing, robust statistics (the paper's median-of-11 protocol), and
-//! report emission.
+//! Timing, robust statistics (the paper's median-of-11 protocol),
+//! report emission, and timeline visualization ([`trace_svg`]).
 
 mod report;
 mod stats;
+mod viz;
 
 pub use report::{csv_table, markdown_table, Table};
 pub use stats::{median, median_duration, quantile, Stats};
+pub use viz::trace_svg;
 
 use std::time::{Duration, Instant};
 

@@ -1,0 +1,219 @@
+//! Timeline visualization: render a recorded op trace
+//! ([`crate::device::TraceEntry`]) as a per-lane SVG Gantt chart — the
+//! PR-1 follow-up that turns the golden-trace JSON into something a
+//! human can read.  `repro trace NAME --svg` uses this directly;
+//! `tools/trace_viz.py` renders the same layout from a trace JSON file
+//! offline.
+//!
+//! Layout: one row per modeled resource lane (`h2d`, `kex<N>`…,
+//! `d2h`), time left-to-right with a µs/ms axis, one rectangle per
+//! retired op colored by kind, with a `<title>` tooltip carrying the
+//! op's stream / label / bytes / FLOPs / interval.  The output is a
+//! deterministic standalone SVG string (stable ordering, no
+//! randomness) so it can be golden-tested.
+
+use crate::device::{OpKind, TraceEntry};
+
+/// Chart geometry (pixels).
+const CHART_W: f64 = 1000.0;
+const MARGIN_L: f64 = 90.0;
+const MARGIN_T: f64 = 40.0;
+const ROW_H: f64 = 28.0;
+const BAR_H: f64 = 18.0;
+const AXIS_TICKS: usize = 6;
+
+fn kind_color(kind: OpKind) -> &'static str {
+    match kind {
+        OpKind::H2d => "#4c78a8",
+        OpKind::Kex => "#f58518",
+        OpKind::D2h => "#54a24a",
+    }
+}
+
+/// Minimal XML text escaping for labels and tooltips.
+fn xml_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '&' => out.push_str("&amp;"),
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            '"' => out.push_str("&quot;"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Lane display order: H2D DMA first, then the kernel queues in
+/// numeric order (`kex2` before `kex10` — a lexicographic sort would
+/// misplace queues once a context has ten or more workers), then the
+/// D2H DMA, then anything else.
+fn lane_rank(lane: &str) -> (u8, u64, String) {
+    if lane == "h2d" {
+        return (0, 0, String::new());
+    }
+    if lane == "d2h" {
+        return (2, 0, String::new());
+    }
+    if let Some(n) = lane.strip_prefix("kex").and_then(|s| s.parse::<u64>().ok()) {
+        return (1, n, String::new());
+    }
+    (3, 0, lane.to_string())
+}
+
+/// Render `entries` (any order; sorted internally) as a standalone
+/// per-lane Gantt SVG.  An empty trace renders an explanatory stub
+/// rather than erroring — "no events" is a fine thing to look at.
+pub fn trace_svg(entries: &[TraceEntry]) -> String {
+    let mut lanes: Vec<String> = Vec::new();
+    for e in entries {
+        if !lanes.iter().any(|l| *l == e.lane) {
+            lanes.push(e.lane.clone());
+        }
+    }
+    lanes.sort_by_key(|l| lane_rank(l));
+
+    let t0 = entries.iter().map(|e| e.start.as_nanos()).min().unwrap_or(0);
+    let t1 = entries.iter().map(|e| e.end.as_nanos()).max().unwrap_or(0);
+    let span = (t1 - t0).max(1) as f64;
+    let height = MARGIN_T + ROW_H * lanes.len().max(1) as f64 + 30.0;
+    let width = MARGIN_L + CHART_W + 20.0;
+    let x = |ns: u64| MARGIN_L + (ns - t0) as f64 / span * CHART_W;
+
+    let mut s = String::new();
+    s.push_str(&format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{width:.0}\" height=\"{height:.0}\" \
+         viewBox=\"0 0 {width:.0} {height:.0}\" font-family=\"monospace\" font-size=\"11\">\n"
+    ));
+    s.push_str(&format!(
+        "<text x=\"{MARGIN_L}\" y=\"16\" font-size=\"13\">hetstream timeline — {} events, \
+         {:.3} ms</text>\n",
+        entries.len(),
+        (t1 - t0) as f64 / 1e6
+    ));
+    if entries.is_empty() {
+        s.push_str("<text x=\"90\" y=\"60\">(no events recorded — was tracing enabled?)</text>\n");
+        s.push_str("</svg>\n");
+        return s;
+    }
+
+    // Axis ticks + gridlines (µs below 10 ms spans, ms above).
+    let grid_bottom = MARGIN_T + ROW_H * lanes.len() as f64;
+    for k in 0..=AXIS_TICKS {
+        let ns = t0 + ((t1 - t0) as f64 * k as f64 / AXIS_TICKS as f64) as u64;
+        let gx = x(ns);
+        let label = if (t1 - t0) < 10_000_000 {
+            format!("{:.1}µs", (ns - t0) as f64 / 1e3)
+        } else {
+            format!("{:.2}ms", (ns - t0) as f64 / 1e6)
+        };
+        s.push_str(&format!(
+            "<line x1=\"{gx:.1}\" y1=\"{MARGIN_T}\" x2=\"{gx:.1}\" y2=\"{grid_bottom}\" \
+             stroke=\"#ddd\"/>\n"
+        ));
+        s.push_str(&format!(
+            "<text x=\"{gx:.1}\" y=\"{:.1}\" text-anchor=\"middle\" fill=\"#555\">{label}</text>\n",
+            grid_bottom + 14.0
+        ));
+    }
+
+    // Lane labels + op rectangles.
+    for (row, lane) in lanes.iter().enumerate() {
+        let y = MARGIN_T + ROW_H * row as f64;
+        s.push_str(&format!(
+            "<text x=\"{:.1}\" y=\"{:.1}\" text-anchor=\"end\" fill=\"#333\">{}</text>\n",
+            MARGIN_L - 8.0,
+            y + BAR_H - 4.0,
+            xml_escape(lane)
+        ));
+        for e in entries.iter().filter(|e| e.lane == *lane) {
+            let (x0, x1) = (x(e.start.as_nanos()), x(e.end.as_nanos()));
+            let w = (x1 - x0).max(0.5);
+            let tip = format!(
+                "seq {} {} stream {}{}{}{} [{} .. {}] ns",
+                e.seq,
+                e.kind.label(),
+                e.stream,
+                if e.label.is_empty() { String::new() } else { format!(" {}", e.label) },
+                if e.bytes > 0 { format!(" {} B", e.bytes) } else { String::new() },
+                if e.flops > 0 { format!(" {} flop", e.flops) } else { String::new() },
+                e.start.as_nanos(),
+                e.end.as_nanos(),
+            );
+            s.push_str(&format!(
+                "<rect x=\"{x0:.2}\" y=\"{y:.1}\" width=\"{w:.2}\" height=\"{BAR_H}\" \
+                 fill=\"{}\" stroke=\"#333\" stroke-width=\"0.4\" opacity=\"0.9\">\
+                 <title>{}</title></rect>\n",
+                kind_color(e.kind),
+                xml_escape(&tip)
+            ));
+        }
+    }
+    s.push_str("</svg>\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::SimTime;
+
+    fn entry(seq: u64, kind: OpKind, lane: &str, start: u64, end: u64) -> TraceEntry {
+        TraceEntry {
+            seq,
+            kind,
+            lane: lane.into(),
+            stream: seq % 2,
+            label: if kind == OpKind::Kex { "vector_add".into() } else { String::new() },
+            bytes: if kind == OpKind::Kex { 0 } else { 1024 },
+            flops: if kind == OpKind::Kex { 1000 } else { 0 },
+            start: SimTime::from_nanos(start),
+            end: SimTime::from_nanos(end),
+        }
+    }
+
+    #[test]
+    fn svg_has_one_rect_per_event_and_ordered_lanes() {
+        let entries = vec![
+            entry(0, OpKind::H2d, "h2d", 0, 100),
+            entry(1, OpKind::Kex, "kex0", 100, 300),
+            entry(2, OpKind::D2h, "d2h", 300, 350),
+            entry(3, OpKind::H2d, "h2d", 100, 200),
+            entry(4, OpKind::Kex, "kex10", 100, 150),
+            entry(5, OpKind::Kex, "kex2", 150, 250),
+        ];
+        let svg = trace_svg(&entries);
+        assert!(svg.starts_with("<svg "), "standalone svg root");
+        assert!(svg.trim_end().ends_with("</svg>"));
+        assert_eq!(svg.matches("<rect ").count(), entries.len());
+        // h2d row renders before the kernel queues (numerically
+        // ordered: kex2 before kex10), and d2h last.
+        let (h, k0, k2, k10, d) = (
+            svg.find(">h2d</text>").expect("h2d lane label"),
+            svg.find(">kex0</text>").expect("kex0 lane label"),
+            svg.find(">kex2</text>").expect("kex2 lane label"),
+            svg.find(">kex10</text>").expect("kex10 lane label"),
+            svg.find(">d2h</text>").expect("d2h lane label"),
+        );
+        assert!(h < k0 && k0 < k2 && k2 < k10 && k10 < d, "lane order h2d < kex… < d2h");
+        assert!(svg.contains("vector_add"), "kex tooltip carries the artifact");
+    }
+
+    #[test]
+    fn empty_trace_renders_a_stub() {
+        let svg = trace_svg(&[]);
+        assert!(svg.contains("no events"));
+        assert!(!svg.contains("<rect "));
+    }
+
+    #[test]
+    fn labels_are_xml_escaped() {
+        assert_eq!(xml_escape("a<b>&\"c\""), "a&lt;b&gt;&amp;&quot;c&quot;");
+        let mut e = entry(0, OpKind::Kex, "kex0", 0, 10);
+        e.label = "k<&>".into();
+        let svg = trace_svg(&[e]);
+        assert!(svg.contains("k&lt;&amp;&gt;"));
+        assert!(!svg.contains("k<&>"));
+    }
+}

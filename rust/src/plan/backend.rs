@@ -1,0 +1,548 @@
+//! The backend-agnostic execution API: every way of *running* a
+//! [`StreamPlan`] sits behind one [`Backend`] trait (DESIGN.md
+//! §Backend).
+//!
+//! ```text
+//! Backend::submit(&plan, RunConfig) -> RunHandle -> wait() -> PlanRun
+//! ```
+//!
+//! Two implementations ship in-crate:
+//!
+//! - [`SimBackend`] — the virtual-clock engine path (the refactored
+//!   historical `Executor`): plans map onto the modeled device's
+//!   hstreams, every op's interval comes from the discrete-event
+//!   clock, and engine lanes are quiesced between drained runs so
+//!   makespans are independent of submission order.
+//! - [`NativeBackend`] — the same task DAG executed on a **host
+//!   thread pool** at wall-clock time through the `simkern`
+//!   interpreter: no modeled device, no pacing, just the real
+//!   dependency-driven execution of the plan's ops over host byte
+//!   buffers.  Its `PlanRun::wall` is the host's real elapsed time.
+//!
+//! Both backends assemble **bitwise-identical** host outputs for any
+//! valid plan: outputs are a pure function of (plan, payload bytes),
+//! never of the clock — `tests/service_integration.rs` asserts it over
+//! a category-spanning corpus sample, and the executor-level oracle
+//! [`super::outputs_match`] makes the comparison one call.
+//!
+//! **Dependency contract.**  A plan's implicit ordering guarantees are
+//! exactly what the engine executor provides at unbounded stream
+//! count: ops sharing a `Slot::Task(lane)` value execute in program
+//! order, `Slot::Broadcast` ops execute in program order before every
+//! task lane's first op, and everything else must be ordered by
+//! explicit `deps`.  The native backend materializes precisely that
+//! partial order ([`native_deps`]) and runs any topological order of
+//! it concurrently, which is sound because a plan whose conflicting
+//! accesses are unordered under this contract would already be
+//! nondeterministic on the engine path at some stream count.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::hstreams::Context;
+use crate::{Error, Result};
+
+use super::exec::{Executor, PlanRun};
+use super::{PlanOpKind, PlanRegion, Slot, StreamPlan};
+
+/// Per-submission knobs of one plan execution.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Streams (engine lanes / native pool width) to map the plan onto;
+    /// clamped to ≥ 1 by every backend.
+    pub streams: usize,
+}
+
+impl RunConfig {
+    /// Run on `n` streams.
+    pub fn streams(n: usize) -> Self {
+        Self { streams: n.max(1) }
+    }
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self { streams: 1 }
+    }
+}
+
+/// An accepted submission.  [`RunHandle::wait`] yields the byte-exact
+/// assembled outputs and per-run stats ([`PlanRun`]).  Synchronous
+/// backends resolve the handle at submission; asynchronous ones (the
+/// native pool) resolve it when the DAG drains — kernel-level errors
+/// surface at `wait`, structural (validation) errors at `submit`.
+pub struct RunHandle {
+    backend: &'static str,
+    streams: usize,
+    state: HandleState,
+}
+
+enum HandleState {
+    Ready(Result<PlanRun>),
+    Pending(std::thread::JoinHandle<Result<PlanRun>>),
+}
+
+impl RunHandle {
+    fn ready(backend: &'static str, streams: usize, run: Result<PlanRun>) -> Self {
+        Self { backend, streams, state: HandleState::Ready(run) }
+    }
+
+    /// Which backend accepted the submission.
+    pub fn backend(&self) -> &'static str {
+        self.backend
+    }
+
+    /// The stream count the plan was mapped onto.
+    pub fn streams(&self) -> usize {
+        self.streams
+    }
+
+    /// Whether `wait` would return without blocking.
+    pub fn is_ready(&self) -> bool {
+        match &self.state {
+            HandleState::Ready(_) => true,
+            HandleState::Pending(h) => h.is_finished(),
+        }
+    }
+
+    /// Block until the run completes and return its outcome.
+    pub fn wait(self) -> Result<PlanRun> {
+        match self.state {
+            HandleState::Ready(r) => r,
+            HandleState::Pending(h) => h
+                .join()
+                .unwrap_or_else(|_| Err(Error::Stream("native backend run panicked".into()))),
+        }
+    }
+}
+
+/// A place a [`StreamPlan`] can run.  Implementations own *how* —
+/// which engines, which clock, which physical device — while callers
+/// own only the IR and a [`RunConfig`]; this is the seam every later
+/// backend (real accelerator, PJRT device) plugs into.
+pub trait Backend {
+    /// Short backend identifier (`"sim"`, `"native"`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Validate and submit `plan`; the handle yields outputs + stats.
+    fn submit(&self, plan: &StreamPlan, cfg: RunConfig) -> Result<RunHandle>;
+
+    /// Submit and wait — the common synchronous call shape.
+    fn run(&self, plan: &StreamPlan, cfg: RunConfig) -> Result<PlanRun> {
+        self.submit(plan, cfg)?.wait()
+    }
+}
+
+/// The virtual-clock engine backend: plans execute on a borrowed
+/// [`Context`]'s modeled device (DMA lanes + kernel queues under the
+/// discrete-event clock).  Runs are synchronous — the handle is
+/// resolved at submission — and the context's timeline is quiesced
+/// between drained runs, so each run's makespan is independent of what
+/// ran before it (measurement isolation; DESIGN.md §Time).
+pub struct SimBackend<'c> {
+    ctx: &'c Context,
+}
+
+impl<'c> SimBackend<'c> {
+    pub fn new(ctx: &'c Context) -> Self {
+        Self { ctx }
+    }
+
+    /// The context this backend maps plans onto.
+    pub fn ctx(&self) -> &Context {
+        self.ctx
+    }
+}
+
+impl Backend for SimBackend<'_> {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn submit(&self, plan: &StreamPlan, cfg: RunConfig) -> Result<RunHandle> {
+        let streams = cfg.streams.max(1);
+        Ok(RunHandle::ready("sim", streams, Executor::new(self.ctx).run(plan, streams)))
+    }
+}
+
+/// The host thread-pool backend: the same task DAG, executed over host
+/// byte buffers through the `simkern` interpreter at wall-clock time.
+/// `RunConfig::streams` is the pool width; each worker thread owns its
+/// own `ArtifactStore` (the PJRT feature's handles are `!Send`, same
+/// per-thread idiom as the compute engine).  Device buffers are
+/// zero-initialized host vectors — the same lazy-zero semantics the
+/// simulated arena provides, which corpus plans rely on for their
+/// never-written zero-source buffers.
+pub struct NativeBackend {
+    artifacts_dir: PathBuf,
+}
+
+impl NativeBackend {
+    /// A backend over the default artifacts directory (builtin manifest
+    /// fallback when none is materialized on disk).
+    pub fn new() -> Self {
+        Self { artifacts_dir: crate::artifacts_dir() }
+    }
+
+    /// Override where `manifest.json` / HLO artifacts live.
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn submit(&self, plan: &StreamPlan, cfg: RunConfig) -> Result<RunHandle> {
+        plan.validate()?;
+        let workers = cfg.streams.max(1);
+        let plan = plan.clone();
+        let dir = self.artifacts_dir.clone();
+        let coordinator = std::thread::Builder::new()
+            .name("hetstream-native".into())
+            .spawn(move || run_native(&plan, &dir, workers))
+            .map_err(|e| Error::Stream(format!("spawn native coordinator: {e}")))?;
+        Ok(RunHandle {
+            backend: "native",
+            streams: workers,
+            state: HandleState::Pending(coordinator),
+        })
+    }
+}
+
+/// The full dependency list of every op under the backend contract
+/// (module docs): explicit `deps`, plus program order within each
+/// `Slot::Task(lane)` chain and within the broadcast prologue, plus a
+/// barrier from every broadcast op to each task lane's first op.
+/// Sorted and deduped per op (an explicit dep may coincide with the
+/// implicit chain edge).
+fn native_deps(plan: &StreamPlan) -> Vec<Vec<usize>> {
+    let mut deps: Vec<Vec<usize>> = Vec::with_capacity(plan.ops.len());
+    // Key: None = the broadcast chain, Some(lane) = one task lane.
+    let mut last: HashMap<Option<usize>, usize> = HashMap::new();
+    let mut broadcasts: Vec<usize> = Vec::new();
+    for (i, op) in plan.ops.iter().enumerate() {
+        let key = match op.slot {
+            Slot::Broadcast => None,
+            Slot::Task(lane) => Some(lane),
+        };
+        let mut d = op.deps.clone();
+        match last.get(&key) {
+            Some(&prev) => d.push(prev),
+            None if key.is_some() => d.extend(broadcasts.iter().copied()),
+            None => {}
+        }
+        if key.is_none() {
+            broadcasts.push(i);
+        }
+        last.insert(key, i);
+        d.sort_unstable();
+        d.dedup();
+        deps.push(d);
+    }
+    deps
+}
+
+/// Shared scheduler state of one native run (behind the pool's mutex).
+struct NativeState {
+    indeg: Vec<usize>,
+    ready: Vec<usize>,
+    /// Ops not yet retired; 0 = drained.
+    remaining: usize,
+    error: Option<Error>,
+}
+
+/// Wakes the pool if a worker unwinds mid-op: without this, a panic
+/// inside an op (poisoned buffer mutex, a slice shape `validate`
+/// doesn't cover) would leave `remaining > 0` with no error and no
+/// notification — sibling workers would park on the condvar forever
+/// and `RunHandle::wait` would hang instead of reporting the panic.
+/// The panicking worker's own unwind happens *outside* the state
+/// mutex, so recording the error here cannot deadlock or poison it.
+struct PanicGuard<'a> {
+    state: &'a Mutex<NativeState>,
+    cv: &'a Condvar,
+    armed: bool,
+}
+
+impl Drop for PanicGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            if let Ok(mut s) = self.state.lock() {
+                s.error.get_or_insert(Error::Stream("native backend worker panicked".into()));
+            }
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Execute `plan`'s DAG on `workers` host threads and assemble the
+/// outputs — dependency-driven, order-free: any ready op may run on
+/// any worker, which is sound under the backend dependency contract.
+fn run_native(plan: &StreamPlan, dir: &std::path::Path, workers: usize) -> Result<PlanRun> {
+    let t0 = Instant::now();
+    let deps = native_deps(plan);
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); plan.ops.len()];
+    let mut indeg = vec![0usize; plan.ops.len()];
+    for (i, d) in deps.iter().enumerate() {
+        indeg[i] = d.len();
+        for &p in d {
+            children[p].push(i);
+        }
+    }
+    let ready: Vec<usize> = (0..plan.ops.len()).filter(|&i| indeg[i] == 0).collect();
+    let state = Mutex::new(NativeState { indeg, ready, remaining: plan.ops.len(), error: None });
+    let cv = Condvar::new();
+
+    let bufs: Vec<Mutex<Vec<u8>>> = plan.bufs.iter().map(|&b| Mutex::new(vec![0u8; b])).collect();
+    let outputs: Vec<Mutex<Vec<u8>>> =
+        plan.outputs.iter().map(|&b| Mutex::new(vec![0u8; b])).collect();
+    let h2d_bytes = std::sync::atomic::AtomicU64::new(0);
+    let d2h_bytes = std::sync::atomic::AtomicU64::new(0);
+
+    // Load only what the plan launches (fast startup; unknown names
+    // fail inside execute_bytes with a clean signature error).
+    let artifact_names = plan.artifacts();
+
+    std::thread::scope(|scope| {
+        for w in 0..workers.max(1) {
+            let (state, cv) = (&state, &cv);
+            let (bufs, outputs) = (&bufs, &outputs);
+            let (h2d_bytes, d2h_bytes) = (&h2d_bytes, &d2h_bytes);
+            let (plan, children, names) = (&*plan, &children, &artifact_names);
+            std::thread::Builder::new()
+                .name(format!("hetstream-native-{w}"))
+                .spawn_scoped(scope, move || {
+                    // Per-worker store, like the compute engine's workers.
+                    let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+                    let store = crate::runtime::ArtifactStore::load_subset(dir, &refs);
+                    loop {
+                        let i = {
+                            let mut s = state.lock().unwrap();
+                            loop {
+                                if s.error.is_some() || s.remaining == 0 {
+                                    return;
+                                }
+                                if let Some(i) = s.ready.pop() {
+                                    break i;
+                                }
+                                s = cv.wait(s).unwrap();
+                            }
+                        };
+                        let mut guard = PanicGuard { state, cv, armed: true };
+                        let result = store
+                            .as_ref()
+                            .map_err(|e| Error::Stream(e.to_string()))
+                            .and_then(|store| {
+                                exec_native_op(plan, i, store, bufs, outputs, h2d_bytes, d2h_bytes)
+                            });
+                        guard.armed = false;
+                        drop(guard);
+                        let mut s = state.lock().unwrap();
+                        match result {
+                            Err(e) => {
+                                s.error.get_or_insert(e);
+                                cv.notify_all();
+                                return;
+                            }
+                            Ok(()) => {
+                                s.remaining -= 1;
+                                for &c in &children[i] {
+                                    s.indeg[c] -= 1;
+                                    if s.indeg[c] == 0 {
+                                        s.ready.push(c);
+                                    }
+                                }
+                                cv.notify_all();
+                            }
+                        }
+                    }
+                })
+                .expect("spawn native worker");
+        }
+    });
+
+    let mut s = state.into_inner().unwrap();
+    if let Some(e) = s.error.take() {
+        return Err(e);
+    }
+    Ok(PlanRun {
+        wall: t0.elapsed(),
+        outputs: outputs.into_iter().map(|m| m.into_inner().unwrap()).collect(),
+        h2d_bytes: h2d_bytes.into_inner(),
+        d2h_bytes: d2h_bytes.into_inner(),
+        tasks: plan.tasks(),
+    })
+}
+
+/// Execute one op of a native run.
+fn exec_native_op(
+    plan: &StreamPlan,
+    i: usize,
+    store: &crate::runtime::ArtifactStore,
+    bufs: &[Mutex<Vec<u8>>],
+    outputs: &[Mutex<Vec<u8>>],
+    h2d_bytes: &std::sync::atomic::AtomicU64,
+    d2h_bytes: &std::sync::atomic::AtomicU64,
+) -> Result<()> {
+    use std::sync::atomic::Ordering::Relaxed;
+    let read_region = |r: &PlanRegion| -> Vec<u8> {
+        bufs[r.buf].lock().unwrap()[r.off..r.off + r.len].to_vec()
+    };
+    match &plan.ops[i].kind {
+        PlanOpKind::H2d { src, dst } => {
+            let mut b = bufs[dst.buf].lock().unwrap();
+            b[dst.off..dst.off + dst.len].copy_from_slice(&src.data[src.off..src.off + src.len]);
+            h2d_bytes.fetch_add(dst.len as u64, Relaxed);
+        }
+        PlanOpKind::Kex { artifact, inputs, outputs: kouts, repeats, .. } => {
+            // One buffered copy in, execute, one copy out — the same
+            // host-side shadow of device memory traffic the engine
+            // workers perform.
+            let input_bytes: Vec<Vec<u8>> = inputs.iter().map(read_region).collect();
+            let input_refs: Vec<&[u8]> = input_bytes.iter().map(|b| b.as_slice()).collect();
+            let mut results = Vec::new();
+            for _ in 0..(*repeats).max(1) {
+                results = store.execute_bytes(artifact, &input_refs)?;
+            }
+            for (region, bytes) in kouts.iter().zip(&results) {
+                if bytes.len() != region.len {
+                    return Err(Error::Plan(format!(
+                        "{}: op {i} kex `{artifact}` produced {} bytes for a {}-byte region",
+                        plan.name,
+                        bytes.len(),
+                        region.len
+                    )));
+                }
+                let mut b = bufs[region.buf].lock().unwrap();
+                b[region.off..region.off + region.len].copy_from_slice(bytes);
+            }
+        }
+        PlanOpKind::D2h { src, output, off } => {
+            let bytes = read_region(src);
+            let mut o = outputs[*output].lock().unwrap();
+            o[*off..*off + src.len].copy_from_slice(&bytes);
+            d2h_bytes.fetch_add(src.len as u64, Relaxed);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::HostSlice;
+    use std::sync::Arc;
+
+    fn vecadd_plan(chunks: usize) -> StreamPlan {
+        // `chunks` independent vector_add tasks over a shared payload,
+        // one task lane each — small enough for unit tests, shaped like
+        // the real lowerings (per-lane chains, no explicit H2d→Kex dep).
+        let n = 65536 * 4;
+        let a = Arc::new(vec![0x3Fu8; n * chunks]);
+        let b = Arc::new(vec![0x40u8; n * chunks]);
+        let mut p = StreamPlan::new("vecadd-backend");
+        let out = p.output(n * chunks);
+        for c in 0..chunks {
+            let ab = p.buf(n);
+            let bb = p.buf(n);
+            let ob = p.buf(n);
+            let slot = Slot::Task(c);
+            p.h2d(
+                slot,
+                HostSlice { data: a.clone(), off: c * n, len: n },
+                PlanRegion::whole(ab, n),
+                vec![],
+            );
+            p.h2d(
+                slot,
+                HostSlice { data: b.clone(), off: c * n, len: n },
+                PlanRegion::whole(bb, n),
+                vec![],
+            );
+            let k = p.kex(
+                slot,
+                "vector_add",
+                vec![PlanRegion::whole(ab, n), PlanRegion::whole(bb, n)],
+                vec![PlanRegion::whole(ob, n)],
+                Some(1),
+                1,
+                vec![],
+            );
+            p.d2h(slot, PlanRegion::whole(ob, n), out, c * n, vec![k]);
+        }
+        p
+    }
+
+    #[test]
+    fn native_deps_chain_lanes_and_barrier_broadcasts() {
+        let src = Arc::new(vec![0u8; 16]);
+        let mut p = StreamPlan::new("deps");
+        let b = p.buf(16);
+        let r = PlanRegion::whole(b, 16);
+        let s = HostSlice::whole(src);
+        p.h2d(Slot::Broadcast, s.clone(), r, vec![]); // 0
+        p.h2d(Slot::Broadcast, s.clone(), r, vec![]); // 1: after 0
+        p.h2d(Slot::Task(0), s.clone(), r, vec![]); // 2: after broadcasts
+        p.h2d(Slot::Task(1), s.clone(), r, vec![]); // 3: after broadcasts
+        p.h2d(Slot::Task(0), s.clone(), r, vec![2]); // 4: chain dep dedupes
+        let d = native_deps(&p);
+        assert_eq!(d[0], Vec::<usize>::new());
+        assert_eq!(d[1], vec![0], "broadcast prologue is a chain");
+        assert_eq!(d[2], vec![0, 1], "first op of a task lane waits on all broadcasts");
+        assert_eq!(d[3], vec![0, 1]);
+        assert_eq!(d[4], vec![2], "explicit dep coinciding with the chain edge dedupes");
+    }
+
+    #[test]
+    fn native_backend_matches_sim_backend_bitwise() {
+        let plan = vecadd_plan(3);
+        let ctx = crate::hstreams::ContextBuilder::new()
+            .profile(crate::device::DeviceProfile::instant())
+            .only_artifacts(vec!["vector_add"])
+            .build()
+            .expect("context");
+        let sim = SimBackend::new(&ctx).run(&plan, RunConfig::streams(2)).expect("sim run");
+        let native = NativeBackend::new();
+        for streams in [1usize, 4] {
+            let handle = native.submit(&plan, RunConfig::streams(streams)).expect("submit");
+            assert_eq!(handle.backend(), "native");
+            let run = handle.wait().expect("native run");
+            assert_eq!(sim.outputs, run.outputs, "outputs diverge at pool width {streams}");
+            assert_eq!(sim.h2d_bytes, run.h2d_bytes);
+            assert_eq!(sim.d2h_bytes, run.d2h_bytes);
+            assert_eq!(sim.tasks, run.tasks);
+        }
+    }
+
+    #[test]
+    fn native_backend_rejects_invalid_plans_at_submit() {
+        let mut p = StreamPlan::new("bad");
+        let b = p.buf(16);
+        p.h2d(
+            Slot::Task(0),
+            HostSlice::whole(Arc::new(vec![0u8; 32])),
+            PlanRegion::whole(b, 32),
+            vec![],
+        );
+        assert!(NativeBackend::new().submit(&p, RunConfig::default()).is_err());
+    }
+
+    #[test]
+    fn run_config_clamps_streams() {
+        assert_eq!(RunConfig::streams(0).streams, 1);
+        assert_eq!(RunConfig::default().streams, 1);
+        assert_eq!(RunConfig::streams(6).streams, 6);
+    }
+}

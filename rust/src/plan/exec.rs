@@ -1,4 +1,8 @@
-//! The one scheduler: map any [`StreamPlan`] onto `n` hstreams.
+//! The engine-mapping scheduler: map any [`StreamPlan`] onto `n`
+//! hstreams.  Since the backend-agnostic API landed this is the
+//! *internals* of [`super::SimBackend`] — external callers submit
+//! through the [`super::Backend`] trait; in-crate tuning loops may
+//! still drive the executor directly.
 //!
 //! Placement policy (DESIGN.md §Plan):
 //!

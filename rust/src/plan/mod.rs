@@ -15,15 +15,19 @@
 //! dep  := op index           -- explicit cross-task RAW edge
 //! ```
 //!
-//! with byte/FLOP annotations on every op.  A single [`Executor`] maps
-//! any plan onto `n` hstreams: `Task(lane)` ops run on stream
-//! `lane % n` (round-robin for independent/halo lowerings, diagonal
-//! slot for wavefronts), `Broadcast` ops ride stream 0 with every other
-//! stream's first op waiting on them, and explicit `deps` become
-//! cross-stream events.  The executor owns device-buffer lifetimes,
-//! host-output assembly, and byte accounting; ops are submitted in plan
-//! order, so a plan must list its ops in a topological order of the
-//! DAG (all lowerings here do — the FIFO engine queues require it).
+//! with byte/FLOP annotations on every op.  Plans execute through the
+//! backend-agnostic API ([`Backend`], DESIGN.md §Backend): the
+//! [`SimBackend`] maps any plan onto `n` modeled hstreams —
+//! `Task(lane)` ops run on stream `lane % n` (round-robin for
+//! independent/halo lowerings, diagonal slot for wavefronts),
+//! `Broadcast` ops ride stream 0 with every other stream's first op
+//! waiting on them, and explicit `deps` become cross-stream events —
+//! while the [`NativeBackend`] runs the same DAG on a host thread pool
+//! at wall-clock time.  A backend owns buffer lifetimes, host-output
+//! assembly, and byte accounting; ops are submitted in plan order, so
+//! a plan must list its ops in a topological order of the DAG (all
+//! lowerings here do — the FIFO engine queues require it).  Both
+//! backends assemble bitwise-identical outputs for any valid plan.
 //!
 //! Because the IR carries the task-DAG shape and per-stage byte/FLOP
 //! totals, everything downstream reasons about workloads uniformly:
@@ -33,10 +37,15 @@
 //! replays the whole Table-1 corpus through the one executor under the
 //! virtual clock.
 
+mod backend;
 mod exec;
 mod lower;
 
-pub use exec::{outputs_match, Executor, PlanRun};
+// The engine-mapping scheduler (`exec::Executor`) is an implementation
+// detail of `SimBackend` now: every caller — in-crate drivers, tuners,
+// experiments, external tests — goes through the `Backend` trait.
+pub use backend::{Backend, NativeBackend, RunConfig, RunHandle, SimBackend};
+pub use exec::{outputs_match, PlanRun};
 pub use lower::{
     default_corpus_granularity, effective_corpus_granularity, lower_corpus_bulk,
     lower_corpus_streamed, lower_corpus_streamed_at, wire_wavefront, CORPUS_BURNER, CORPUS_TASKS,

@@ -1,0 +1,557 @@
+//! `StreamService` — the async multi-tenant front-end over the
+//! [`crate::plan`] execution API (DESIGN.md §Service).
+//!
+//! The paper's generic flow ends at "run the streamed workload"; a
+//! serving system starts there: many callers, each with a workload,
+//! none of them holding an engine.  The service owns a small fleet of
+//! **engine lanes** — each lane a [`Context`] (its own modeled device
+//! under its own virtual clock) driven by a worker thread through the
+//! [`SimBackend`] — and multiplexes submissions onto them:
+//!
+//! - **Fair admission** ([`Admission`]): one FIFO queue per tenant,
+//!   served round-robin, so a tenant that floods the service cannot
+//!   starve the others — each admission turn takes at most one job
+//!   from each tenant in arrival order of the tenants.
+//! - **Plan cache**: corpus submissions lower once per
+//!   `(suite, app, config, granularity)` and every lane shares the
+//!   `Arc`'d plan — lowering synthesizes multi-MiB payloads, so repeat
+//!   submissions skip real work.  Keys use the *effective* granularity
+//!   (the category-clamped value the lowering actually uses), so
+//!   aliased knob values share one entry.
+//! - **Pluggable tuning** ([`TunePolicy`]): the service, not the
+//!   caller, picks `(streams, granularity)` per submission — analytic
+//!   seed by default, the learned k-NN behind `--learned`.
+//!
+//! Submissions are asynchronous: [`StreamService::submit`] returns a
+//! [`Ticket`] immediately; [`Ticket::wait`] yields the
+//! [`SubmissionReport`] with byte-exact outputs and per-run stats.
+//! Because every lane quiesces its timeline between runs, a
+//! submission's *modeled* makespan is identical whether it ran alone,
+//! serially, or interleaved with other tenants — the concurrency
+//! changes wall-clock throughput, never the simulated physics
+//! (`tests/service_integration.rs` asserts both properties).
+
+mod policy;
+
+pub use policy::{AnalyticPolicy, LearnedPolicy, PolicyChoice, TunePolicy};
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::corpus::BenchConfig;
+use crate::device::{DeviceProfile, TimeMode};
+use crate::hstreams::{Context, ContextBuilder};
+use crate::metrics::median_duration;
+use crate::plan::{
+    lower_corpus_streamed_at, Backend, Granularity, RunConfig, SimBackend, StreamPlan,
+    CORPUS_BURNER,
+};
+use crate::{Error, Result};
+
+/// Service-wide configuration.
+#[derive(Clone)]
+pub struct ServiceConfig {
+    /// Engine lanes (one modeled device + worker thread each).
+    pub lanes: usize,
+    /// Measurement repetitions per submission (median modeled time;
+    /// 1 is exact under the virtual clock).
+    pub runs: usize,
+    /// Device profile every lane models (dilated automatically, same
+    /// rule as [`ContextBuilder::profile`]).
+    pub profile: DeviceProfile,
+    /// How lane engines account time (virtual by default).
+    pub time_mode: TimeMode,
+    /// Artifact subset each lane compiles (`None` = full manifest).
+    pub artifacts: Option<Vec<String>>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            lanes: 4,
+            runs: 1,
+            profile: DeviceProfile::mic31sp(),
+            time_mode: TimeMode::from_env_default(),
+            artifacts: Some(vec![CORPUS_BURNER.into()]),
+        }
+    }
+}
+
+/// One unit of work a tenant submits.
+pub enum Request {
+    /// A Table-1 descriptor: the service consults its [`TunePolicy`]
+    /// for `(streams, granularity)` and caches the lowered plan.
+    Corpus(BenchConfig),
+    /// A pre-lowered plan at an explicit stream count (no policy, no
+    /// cache) — the escape hatch for non-corpus workloads.
+    Plan { plan: Arc<StreamPlan>, streams: usize },
+}
+
+/// What a submission resolved to.
+#[derive(Debug, Clone)]
+pub struct SubmissionReport {
+    pub tenant: String,
+    /// Plan name (`app/config` for corpus submissions).
+    pub name: String,
+    /// Table-2 category label (corpus submissions only).
+    pub category: Option<&'static str>,
+    /// Streams the plan was mapped onto.
+    pub streams: usize,
+    /// Effective granularity (corpus submissions only).
+    pub gran: Option<usize>,
+    /// Whether the (streams, gran) choice came from a learned model.
+    pub learned: bool,
+    /// Which engine lane ran it.
+    pub lane: usize,
+    /// Whether the lowered plan came from the service's plan cache.
+    pub cache_hit: bool,
+    /// Median modeled makespan, ms.
+    pub modeled_ms: f64,
+    /// Byte-exact assembled host outputs.
+    pub outputs: Vec<Vec<u8>>,
+    pub error: Option<String>,
+}
+
+impl SubmissionReport {
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// Handle to one in-flight submission.
+pub struct Ticket {
+    rx: Receiver<SubmissionReport>,
+}
+
+impl Ticket {
+    /// Block until the submission resolves.
+    pub fn wait(self) -> Result<SubmissionReport> {
+        match self.rx.recv() {
+            Ok(report) => Ok(report),
+            Err(_) => Err(Error::Stream("service dropped the submission".into())),
+        }
+    }
+}
+
+/// Fair round-robin admission: one FIFO per tenant, tenants served in
+/// first-appearance order, the cursor advancing one tenant per pop —
+/// a flooding tenant contributes at most one job per admission turn.
+pub(crate) struct Admission<T> {
+    queues: Vec<(String, VecDeque<T>)>,
+    cursor: usize,
+    len: usize,
+}
+
+impl<T> Admission<T> {
+    pub(crate) fn new() -> Self {
+        Self { queues: Vec::new(), cursor: 0, len: 0 }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    pub(crate) fn push(&mut self, tenant: &str, item: T) {
+        self.len += 1;
+        match self.queues.iter_mut().find(|(t, _)| t == tenant) {
+            Some((_, q)) => q.push_back(item),
+            None => self.queues.push((tenant.to_string(), VecDeque::from([item]))),
+        }
+    }
+
+    pub(crate) fn pop(&mut self) -> Option<T> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.queues.len();
+        for k in 0..n {
+            let idx = (self.cursor + k) % n;
+            if let Some(item) = self.queues[idx].1.pop_front() {
+                self.cursor = (idx + 1) % n;
+                self.len -= 1;
+                return Some(item);
+            }
+        }
+        None
+    }
+}
+
+struct Job {
+    tenant: String,
+    req: Request,
+    tx: Sender<SubmissionReport>,
+}
+
+struct QueueState {
+    admission: Admission<Job>,
+    closed: bool,
+}
+
+type CacheKey = (&'static str, &'static str, String, usize);
+
+/// Single-flight cache slot: slot creation is atomic under the cache
+/// lock and the plan is lowered through `OnceLock::get_or_init`
+/// (outside that lock) — racing submissions for the same key block
+/// until it lands, so one key is lowered exactly once however many
+/// lanes race on it, and hit/miss counts are deterministic (the slot
+/// creator is the one miss).
+type CacheSlot = Arc<std::sync::OnceLock<Arc<StreamPlan>>>;
+
+/// Key of the memoized policy decision: one per descriptor (the
+/// granularity is the *output* of the decision, so it is absent here).
+type ChoiceKey = (&'static str, &'static str, String);
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    cv: Condvar,
+    cache: Mutex<HashMap<CacheKey, CacheSlot>>,
+    /// `TunePolicy::choose` memoized per descriptor: both shipped
+    /// policies lower the descriptor to extract features/seeds, which
+    /// synthesizes the full multi-MiB payload — without this, every
+    /// plan-cache *hit* would still pay a full lowering on the policy
+    /// path.  Sound because a policy decision is a pure function of
+    /// (descriptor, lane profile) and all lanes share one profile.
+    choices: Mutex<HashMap<ChoiceKey, PolicyChoice>>,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    policy: Arc<dyn TunePolicy>,
+    runs: usize,
+}
+
+/// Per-lane lifetime totals.
+#[derive(Debug, Clone, Default)]
+pub struct LaneStats {
+    pub jobs: usize,
+    pub errors: usize,
+    /// Sum of modeled makespans this lane executed, ms.
+    pub modeled_ms: f64,
+}
+
+/// Lifetime totals of a drained service.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    pub lanes: Vec<LaneStats>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl ServiceStats {
+    pub fn jobs(&self) -> usize {
+        self.lanes.iter().map(|l| l.jobs).sum()
+    }
+
+    pub fn errors(&self) -> usize {
+        self.lanes.iter().map(|l| l.errors).sum()
+    }
+
+    pub fn modeled_ms(&self) -> f64 {
+        self.lanes.iter().map(|l| l.modeled_ms).sum()
+    }
+}
+
+/// The multi-tenant execution front-end (module docs).
+pub struct StreamService {
+    shared: Arc<Shared>,
+    lanes: Vec<JoinHandle<LaneStats>>,
+}
+
+impl StreamService {
+    /// Spawn the lane workers and start accepting submissions.
+    pub fn start(cfg: ServiceConfig, policy: Arc<dyn TunePolicy>) -> Result<Self> {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { admission: Admission::new(), closed: false }),
+            cv: Condvar::new(),
+            cache: Mutex::new(HashMap::new()),
+            choices: Mutex::new(HashMap::new()),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            policy,
+            runs: cfg.runs.max(1),
+        });
+        let mut lanes = Vec::with_capacity(cfg.lanes.max(1));
+        for lane in 0..cfg.lanes.max(1) {
+            let shared = shared.clone();
+            let cfg = cfg.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("hetstream-lane-{lane}"))
+                .spawn(move || lane_loop(lane, &shared, &cfg))
+                .map_err(|e| Error::Stream(format!("spawn service lane {lane}: {e}")))?;
+            lanes.push(handle);
+        }
+        Ok(Self { shared, lanes })
+    }
+
+    /// Enqueue a submission for `tenant`; returns immediately.
+    pub fn submit(&self, tenant: &str, req: Request) -> Ticket {
+        let (tx, rx) = channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.admission.push(tenant, Job { tenant: tenant.to_string(), req, tx });
+        }
+        self.shared.cv.notify_all();
+        Ticket { rx }
+    }
+
+    /// Jobs admitted but not yet claimed by a lane.
+    pub fn pending(&self) -> usize {
+        self.shared.queue.lock().unwrap().admission.len()
+    }
+
+    /// Drain the queue, stop the lanes, and return lifetime stats.
+    pub fn shutdown(mut self) -> ServiceStats {
+        self.close();
+        let handles = std::mem::take(&mut self.lanes);
+        let lanes: Vec<LaneStats> =
+            handles.into_iter().map(|h| h.join().unwrap_or_default()).collect();
+        ServiceStats {
+            lanes,
+            cache_hits: self.shared.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.shared.cache_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    fn close(&self) {
+        if let Ok(mut q) = self.shared.queue.lock() {
+            q.closed = true;
+        }
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Drop for StreamService {
+    /// A dropped (not shut down) service must still release its lane
+    /// threads: mark the queue closed and wake everyone, *without*
+    /// joining — the lanes finish their current job, drain what's
+    /// queued, and exit on their own.  Without this, an early-return
+    /// path in a caller would park every lane on the condvar forever.
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+fn lane_loop(lane: usize, shared: &Shared, cfg: &ServiceConfig) -> LaneStats {
+    let mut stats = LaneStats::default();
+    // The lane's modeled device.  If it cannot be built, the lane
+    // still drains jobs — with error reports — so no ticket ever
+    // hangs on a dead lane.
+    let mut b = ContextBuilder::new().profile(cfg.profile.clone()).time_mode(cfg.time_mode);
+    if let Some(names) = &cfg.artifacts {
+        b = b.only_artifacts(names.clone());
+    }
+    let ctx = b.build();
+    // Artifacts this lane compiled.  A plan launching anything else
+    // must be refused up front: the engine's kex worker panics on an
+    // uncompiled artifact and its event never completes, which would
+    // hang the lane (and the ticket, and shutdown) forever.
+    let allowed: Option<std::collections::HashSet<&str>> =
+        cfg.artifacts.as_ref().map(|v| v.iter().map(|s| s.as_str()).collect());
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.admission.pop() {
+                    break job;
+                }
+                if q.closed {
+                    return stats;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        let report = match &ctx {
+            Ok(ctx) => run_job(lane, shared, ctx, &job, allowed.as_ref()),
+            Err(e) => error_report(lane, &job, format!("lane context failed to build: {e}")),
+        };
+        stats.jobs += 1;
+        if report.error.is_some() {
+            stats.errors += 1;
+        } else {
+            stats.modeled_ms += report.modeled_ms;
+        }
+        // A dropped ticket is fine — the work still counts.
+        let _ = job.tx.send(report);
+    }
+}
+
+fn error_report(lane: usize, job: &Job, error: String) -> SubmissionReport {
+    let name = match &job.req {
+        Request::Corpus(c) => format!("{}/{}", c.app, c.config),
+        Request::Plan { plan, .. } => plan.name.clone(),
+    };
+    SubmissionReport {
+        tenant: job.tenant.clone(),
+        name,
+        category: None,
+        streams: 0,
+        gran: None,
+        learned: false,
+        lane,
+        cache_hit: false,
+        modeled_ms: f64::NAN,
+        outputs: Vec::new(),
+        error: Some(error),
+    }
+}
+
+fn run_job(
+    lane: usize,
+    shared: &Shared,
+    ctx: &Context,
+    job: &Job,
+    allowed: Option<&std::collections::HashSet<&str>>,
+) -> SubmissionReport {
+    // Resolve the submission to (plan, streams) — policy + cache for
+    // descriptors, pass-through for pre-lowered plans.
+    let (plan, streams, mut report) = match &job.req {
+        Request::Corpus(c) => {
+            // Memoized policy decision (see `Shared::choices`): a
+            // benign race may compute it twice, but the decision is
+            // deterministic so both writers insert the same value.
+            let ckey: ChoiceKey = (c.suite.label(), c.app, c.config.clone());
+            let cached_choice = shared.choices.lock().unwrap().get(&ckey).copied();
+            let choice = match cached_choice {
+                Some(choice) => choice,
+                None => {
+                    let choice = shared.policy.choose(c, ctx.profile());
+                    shared.choices.lock().unwrap().insert(ckey, choice);
+                    choice
+                }
+            };
+            let key: CacheKey = (c.suite.label(), c.app, c.config.clone(), choice.gran);
+            // Slot creation is atomic under the cache lock, so exactly
+            // one submission per key is the creator (= the cache miss);
+            // everyone else is a hit, even if they arrive while the
+            // creator is still lowering — they block in `get_or_init`
+            // below rather than duplicating the multi-MiB lowering.
+            let (slot, cache_hit) = {
+                let mut cache = shared.cache.lock().unwrap();
+                match cache.get(&key) {
+                    Some(slot) => (slot.clone(), true),
+                    None => {
+                        let slot: CacheSlot = Arc::new(std::sync::OnceLock::new());
+                        cache.insert(key, slot.clone());
+                        (slot, false)
+                    }
+                }
+            };
+            if cache_hit {
+                shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                shared.cache_misses.fetch_add(1, Ordering::Relaxed);
+            }
+            let plan = slot
+                .get_or_init(|| {
+                    Arc::new(lower_corpus_streamed_at(
+                        c,
+                        CORPUS_BURNER,
+                        Granularity::new(choice.gran),
+                    ))
+                })
+                .clone();
+            let report = SubmissionReport {
+                tenant: job.tenant.clone(),
+                name: plan.name.clone(),
+                category: Some(c.category().label()),
+                streams: choice.streams,
+                gran: Some(choice.gran),
+                learned: choice.learned,
+                lane,
+                cache_hit,
+                modeled_ms: f64::NAN,
+                outputs: Vec::new(),
+                error: None,
+            };
+            (plan, choice.streams, report)
+        }
+        Request::Plan { plan, streams } => {
+            let report = SubmissionReport {
+                tenant: job.tenant.clone(),
+                name: plan.name.clone(),
+                category: None,
+                streams: (*streams).max(1),
+                gran: None,
+                learned: false,
+                lane,
+                cache_hit: false,
+                modeled_ms: f64::NAN,
+                outputs: Vec::new(),
+                error: None,
+            };
+            (plan.clone(), (*streams).max(1), report)
+        }
+    };
+
+    // Refuse plans that launch artifacts this lane never compiled —
+    // see `lane_loop`: running one would hang the lane, not error.
+    if let Some(allowed) = allowed {
+        if let Some(missing) =
+            plan.artifacts().into_iter().find(|a| !allowed.contains(a.as_str()))
+        {
+            report.error = Some(format!(
+                "plan launches artifact `{missing}` but the service lanes only compiled {:?}",
+                allowed
+            ));
+            return report;
+        }
+    }
+
+    let backend = SimBackend::new(ctx);
+    let mut samples = Vec::with_capacity(shared.runs);
+    for rep in 0..shared.runs {
+        match backend.run(&plan, RunConfig::streams(streams)) {
+            Ok(run) => {
+                samples.push(run.wall);
+                if rep == 0 {
+                    report.outputs = run.outputs;
+                }
+            }
+            Err(e) => {
+                report.error = Some(e.to_string());
+                return report;
+            }
+        }
+    }
+    report.modeled_ms = median_duration(&mut samples).as_secs_f64() * 1e3;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_serves_tenants_round_robin() {
+        let mut a: Admission<u32> = Admission::new();
+        // Tenant A floods; B and C trickle.
+        for i in 0..4 {
+            a.push("a", i);
+        }
+        a.push("b", 10);
+        a.push("c", 20);
+        a.push("c", 21);
+        assert_eq!(a.len(), 7);
+        let order: Vec<u32> = std::iter::from_fn(|| a.pop()).collect();
+        // One job per tenant per turn, tenants in first-appearance
+        // order; A's backlog drains only once the others are empty.
+        assert_eq!(order, vec![0, 10, 20, 1, 21, 2, 3]);
+        assert_eq!(a.len(), 0);
+        assert!(a.pop().is_none());
+    }
+
+    #[test]
+    fn admission_cursor_survives_empty_tenants() {
+        let mut a: Admission<u32> = Admission::new();
+        a.push("a", 0);
+        a.push("b", 1);
+        assert_eq!(a.pop(), Some(0));
+        // "a" is now empty but still registered; the cursor must skip
+        // it without losing "b".
+        a.push("a", 2);
+        assert_eq!(a.pop(), Some(1));
+        assert_eq!(a.pop(), Some(2));
+        assert_eq!(a.pop(), None);
+    }
+}

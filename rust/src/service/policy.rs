@@ -1,0 +1,121 @@
+//! Tuning policies: how the service picks `(streams, granularity)`
+//! for a submission (DESIGN.md §Service).
+//!
+//! The paper's §6 vision — and arXiv:2003.04294's argument for keeping
+//! tuning *behind* the programming surface — is that callers submit
+//! workloads, not knob values.  A [`TunePolicy`] is that seam: the
+//! analytic closed-form seed ([`AnalyticPolicy`]) and the k-NN learned
+//! tuner from the `repro learn` stack ([`LearnedPolicy`]) both plug in
+//! behind the same one-call interface, and the service consults
+//! whichever it was started with once per descriptor submission.
+
+use crate::analysis::{analytic_corpus_seed, corpus_features, KnnTuner};
+use crate::corpus::BenchConfig;
+use crate::device::DeviceProfile;
+use crate::plan::{effective_corpus_granularity, Granularity};
+
+/// One policy decision for a descriptor submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PolicyChoice {
+    pub streams: usize,
+    /// Effective granularity in the descriptor's knob units (already
+    /// clamped through [`effective_corpus_granularity`]).
+    pub gran: usize,
+    /// Whether the choice came from a learned model (vs analytic).
+    pub learned: bool,
+}
+
+/// Picks `(streams, granularity)` for a corpus descriptor on a given
+/// device profile.  Implementations must be cheap relative to a run —
+/// the service calls this on the submission path, once per descriptor
+/// (the plan cache then memoizes the lowering itself).
+pub trait TunePolicy: Send + Sync {
+    /// Short policy identifier (`"analytic"`, `"learned"`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Choose the execution point for `c` on `profile`.
+    fn choose(&self, c: &BenchConfig, profile: &DeviceProfile) -> PolicyChoice;
+}
+
+/// The closed-form §6 seed: stream count from the stage balance,
+/// granularity from `m* = √(overlappable / c_task)`, mapped into the
+/// category's knob units ([`analytic_corpus_seed`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AnalyticPolicy;
+
+impl TunePolicy for AnalyticPolicy {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn choose(&self, c: &BenchConfig, profile: &DeviceProfile) -> PolicyChoice {
+        let (streams, gran) = analytic_corpus_seed(c, profile);
+        PolicyChoice { streams, gran, learned: false }
+    }
+}
+
+/// The learned tuner as a policy: same-category distance-weighted k-NN
+/// over [`crate::analysis::PlanFeatures`] (the `repro learn` model),
+/// falling back to the analytic seed when the model has no
+/// same-category training rows.  Predicted granularities are clamped
+/// through [`effective_corpus_granularity`] so the choice is always a
+/// knob value the lowering will actually use.
+pub struct LearnedPolicy {
+    knn: KnnTuner,
+}
+
+impl LearnedPolicy {
+    pub fn new(knn: KnnTuner) -> Self {
+        Self { knn }
+    }
+}
+
+impl TunePolicy for LearnedPolicy {
+    fn name(&self) -> &'static str {
+        "learned"
+    }
+
+    fn choose(&self, c: &BenchConfig, profile: &DeviceProfile) -> PolicyChoice {
+        match self.knn.predict(&corpus_features(c, profile)) {
+            Some((streams, gran)) => PolicyChoice {
+                streams,
+                gran: effective_corpus_granularity(c, Granularity::new(gran)).get(),
+                learned: true,
+            },
+            None => AnalyticPolicy.choose(c, profile),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::Dataset;
+
+    fn sim_profile() -> DeviceProfile {
+        DeviceProfile::mic31sp().simulation()
+    }
+
+    #[test]
+    fn analytic_policy_matches_the_shared_seed() {
+        let profile = sim_profile();
+        for c in crate::corpus::all_configs().into_iter().step_by(37) {
+            let choice = AnalyticPolicy.choose(&c, &profile);
+            assert_eq!((choice.streams, choice.gran), analytic_corpus_seed(&c, &profile));
+            assert!(!choice.learned);
+            assert!(choice.streams >= 1 && choice.gran >= 1);
+        }
+    }
+
+    #[test]
+    fn learned_policy_falls_back_without_neighbors() {
+        // An empty dataset has no same-category rows for anything: the
+        // learned policy must hand every choice to the analytic seed.
+        let profile = sim_profile();
+        let policy = LearnedPolicy::new(KnnTuner::fit(Dataset::default(), 5));
+        let c = &crate::corpus::all_configs()[0];
+        let choice = policy.choose(c, &profile);
+        assert!(!choice.learned, "empty model must report the analytic fallback");
+        assert_eq!((choice.streams, choice.gran), analytic_corpus_seed(c, &profile));
+    }
+}

@@ -1,7 +1,45 @@
 //! In-crate utilities replacing external dependencies (offline build):
 //! a minimal JSON parser ([`json`]), a tiny CLI argument helper
-//! ([`cli`]), and a seeded property-testing loop ([`prop`]).
+//! ([`cli`]), a seeded property-testing loop ([`prop`]), and shared
+//! result arithmetic ([`improvement_pct`]).
 
 pub mod cli;
 pub mod json;
 pub mod prop;
+
+/// The paper's improvement metric, `(reference / candidate − 1) · 100`,
+/// NaN-guarded: a non-finite operand or a zero/negative candidate time
+/// (instant profiles, failed rows) yields `NaN` — "unknown", for the
+/// caller to render as `-` — never an `inf`/`NaN` walked into a table
+/// as if it were a number.  One rule shared by the fig9 driver, the
+/// corpus sweep/tuner, and the service demo, so every improvement
+/// column in the repo agrees on its edge cases.
+pub fn improvement_pct(reference_ms: f64, candidate_ms: f64) -> f64 {
+    if reference_ms.is_finite() && candidate_ms.is_finite() && candidate_ms > 0.0 {
+        (reference_ms / candidate_ms - 1.0) * 100.0
+    } else {
+        f64::NAN
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::improvement_pct;
+
+    #[test]
+    fn improvement_pct_is_the_paper_metric() {
+        assert_eq!(improvement_pct(200.0, 100.0), 100.0);
+        assert_eq!(improvement_pct(100.0, 200.0), -50.0);
+        assert_eq!(improvement_pct(150.0, 150.0), 0.0);
+    }
+
+    #[test]
+    fn improvement_pct_guards_every_degenerate_operand() {
+        assert!(improvement_pct(f64::NAN, 100.0).is_nan());
+        assert!(improvement_pct(100.0, f64::NAN).is_nan());
+        assert!(improvement_pct(f64::INFINITY, 100.0).is_nan());
+        assert!(improvement_pct(100.0, 0.0).is_nan(), "instant-profile candidate");
+        assert!(improvement_pct(0.0, 0.0).is_nan());
+        assert!(improvement_pct(100.0, -1.0).is_nan());
+    }
+}

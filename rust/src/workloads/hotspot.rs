@@ -15,7 +15,9 @@
 use std::sync::Arc;
 
 use crate::hstreams::Context;
-use crate::plan::{Executor, Granularity, HostSlice, PlanRegion, Slot, StreamPlan};
+use crate::plan::{
+    Backend, Granularity, HostSlice, PlanRegion, RunConfig, SimBackend, Slot, StreamPlan,
+};
 use crate::runtime::bytes;
 use crate::Result;
 
@@ -120,7 +122,7 @@ impl Benchmark for Hotspot {
         };
 
         let plan = self.lower(&temp0, &power);
-        let run = Executor::new(ctx).run(&plan, n_streams)?;
+        let run = SimBackend::new(ctx).run(&plan, RunConfig::streams(n_streams))?;
 
         // Validate against the host oracle iterated the same number of
         // steps (f32 kernel vs f64 oracle: tolerance grows mildly).

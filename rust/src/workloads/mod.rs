@@ -1,7 +1,9 @@
 //! The streamed benchmark drivers (paper §5 / Fig. 9).
 //!
 //! Every driver *lowers* to a [`crate::plan::StreamPlan`] — the unified
-//! task-DAG IR — and executes through the one [`crate::plan::Executor`]:
+//! task-DAG IR — and executes through the backend-agnostic plan API
+//! ([`crate::plan::Backend`]; the drivers run on the engine-backed
+//! [`crate::plan::SimBackend`]):
 //!
 //! - [`Mode::Baseline`] lowers to the classic non-streamed port: one
 //!   bulk H2D of each input, the kernel grid over device windows, one
@@ -74,7 +76,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::hstreams::Context;
-use crate::plan::{Executor, HostSlice, PlanRegion, Slot, StreamPlan};
+use crate::plan::{Backend, HostSlice, PlanRegion, RunConfig, SimBackend, Slot, StreamPlan};
 use crate::Result;
 
 /// Execution mode of a driver.
@@ -293,7 +295,7 @@ impl GenericWorkload {
             Mode::Baseline => 1,
             Mode::Streamed(n) => n.max(1),
         };
-        let run = Executor::new(ctx).run(&self.lower(mode), n)?;
+        let run = SimBackend::new(ctx).run(&self.lower(mode), RunConfig::streams(n))?;
         Ok((run.wall, run.outputs, run.h2d_bytes))
     }
 

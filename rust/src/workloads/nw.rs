@@ -12,7 +12,9 @@
 use std::sync::Arc;
 
 use crate::hstreams::Context;
-use crate::plan::{wire_wavefront, Executor, HostSlice, PlanRegion, Slot, StreamPlan};
+use crate::plan::{
+    wire_wavefront, Backend, HostSlice, PlanRegion, RunConfig, SimBackend, Slot, StreamPlan,
+};
 use crate::runtime::bytes;
 use crate::Result;
 
@@ -205,7 +207,7 @@ impl Benchmark for NeedlemanWunsch {
 
         let sub_i32 = self.sub_scores();
         let plan = self.lower_with(&sub_i32);
-        let run = Executor::new(ctx).run(&plan, n_streams)?;
+        let run = SimBackend::new(ctx).run(&plan, RunConfig::streams(n_streams))?;
 
         // Reassemble and validate against the full-matrix DP oracle.
         let flat = bytes::to_i32(&run.outputs[0]);

@@ -1,6 +1,6 @@
-//! Plan-lowering integration: the single `plan::Executor` must
-//! reproduce the bulk-lowered outputs **bit-for-bit** at every stream
-//! count, for all three partition shapes (independent, halo,
+//! Plan-lowering integration: the engine-backed `plan::SimBackend`
+//! must reproduce the bulk-lowered outputs **bit-for-bit** at every
+//! stream count, for all three partition shapes (independent, halo,
 //! wavefront) — every task runs the same kernels over the same bytes,
 //! so even float kernels admit exact equality.  Also: the descriptor
 //! corpus executes through plans with streamed-vs-1-stream validation.
@@ -10,8 +10,8 @@ use std::sync::Arc;
 use hetstream::device::DeviceProfile;
 use hetstream::hstreams::{Context, ContextBuilder};
 use hetstream::plan::{
-    lower_corpus_bulk, lower_corpus_streamed, lower_corpus_streamed_at, outputs_match, Executor,
-    Granularity, HostSlice, PlanRegion, Slot, StreamPlan, CORPUS_BURNER,
+    lower_corpus_bulk, lower_corpus_streamed, lower_corpus_streamed_at, outputs_match, Backend,
+    Granularity, HostSlice, PlanRegion, RunConfig, SimBackend, Slot, StreamPlan, CORPUS_BURNER,
 };
 use hetstream::runtime::bytes;
 use hetstream::util::prop::{check, Rng};
@@ -89,10 +89,10 @@ fn prop_wavefront_streamed_equals_single_stream_bitwise() {
         let nw = NeedlemanWunsch::with_grid(rng.range(2, 4));
         let plan = nw.lower();
         plan.validate().expect("well-formed wavefront plan");
-        let exec = Executor::new(&ctx);
-        let reference = exec.run(&plan, 1).expect("1-stream run");
+        let exec = SimBackend::new(&ctx);
+        let reference = exec.run(&plan, RunConfig::streams(1)).expect("1-stream run");
         let n = rng.range(2, 6);
-        let multi = exec.run(&plan, n).expect("n-stream run");
+        let multi = exec.run(&plan, RunConfig::streams(n)).expect("n-stream run");
         assert!(
             outputs_match(&reference, &multi),
             "wavefront outputs diverged at {n} streams"
@@ -130,15 +130,15 @@ fn corpus_descriptors_execute_through_plans_with_validation() {
     // runs in CI via `repro sweep --corpus`): lower, execute the ladder,
     // and demand bit-identical outputs vs the 1-stream reference.
     let ctx = instant_ctx(&[CORPUS_BURNER]);
-    let exec = Executor::new(&ctx);
+    let exec = SimBackend::new(&ctx);
     let sample: Vec<_> = hetstream::corpus::all_configs().into_iter().step_by(31).collect();
     assert!(sample.len() >= 7);
     for cfg in sample {
         let plan = lower_corpus_streamed(&cfg, CORPUS_BURNER);
         plan.validate().unwrap_or_else(|e| panic!("{}/{}: {e}", cfg.app, cfg.config));
-        let reference = exec.run(&plan, 1).expect("1-stream run");
+        let reference = exec.run(&plan, RunConfig::streams(1)).expect("1-stream run");
         for n in [2, 4] {
-            let r = exec.run(&plan, n).expect("n-stream run");
+            let r = exec.run(&plan, RunConfig::streams(n)).expect("n-stream run");
             assert!(
                 outputs_match(&reference, &r),
                 "{}/{} diverged at {n} streams",
@@ -156,19 +156,19 @@ fn prop_corpus_relowering_is_granularity_invariant() {
     // equal to the *bulk* lowering — the knob moves when bytes travel,
     // never what the result holds.
     let ctx = instant_ctx(&[CORPUS_BURNER]);
-    let exec = Executor::new(&ctx);
+    let exec = SimBackend::new(&ctx);
     let cfgs = hetstream::corpus::all_configs();
     check(10, |rng: &mut Rng| {
         let cfg = &cfgs[rng.below(cfgs.len() as u64) as usize];
         let bulk = lower_corpus_bulk(cfg, CORPUS_BURNER);
-        let reference = exec.run(&bulk, 1).expect("bulk run");
+        let reference = exec.run(&bulk, RunConfig::streams(1)).expect("bulk run");
         let n = rng.range(1, 8);
         for _ in 0..2 {
             let g = rng.range(1, 16);
             let plan = lower_corpus_streamed_at(cfg, CORPUS_BURNER, Granularity::new(g));
             plan.validate()
                 .unwrap_or_else(|e| panic!("{}/{} gran {g}: {e}", cfg.app, cfg.config));
-            let r = exec.run(&plan, n).expect("streamed run");
+            let r = exec.run(&plan, RunConfig::streams(n)).expect("streamed run");
             assert!(
                 outputs_match(&reference, &r),
                 "{}/{} diverged from bulk at granularity {g} x {n} streams",
@@ -218,13 +218,13 @@ fn hotspot_upload_granularity_is_bitwise_stable() {
     let hs = Hotspot::new(1);
     let temp0 = gen_f32(hetstream::workloads::hotspot::N * hetstream::workloads::hotspot::N, 3);
     let power = gen_f32(hetstream::workloads::hotspot::N * hetstream::workloads::hotspot::N, 4);
-    let exec = Executor::new(&ctx);
-    let reference = exec.run(&hs.lower(&temp0, &power), 1).expect("reference");
+    let exec = SimBackend::new(&ctx);
+    let reference = exec.run(&hs.lower(&temp0, &power), RunConfig::streams(1)).expect("reference");
     for g in [2usize, 5, 16] {
         let plan = hs.lower_at(&temp0, &power, Granularity::new(g));
         plan.validate().expect("chunked-upload plan");
         for n in [1usize, 2] {
-            let r = exec.run(&plan, n).expect("run");
+            let r = exec.run(&plan, RunConfig::streams(n)).expect("run");
             assert!(outputs_match(&reference, &r), "hotspot diverged at gran {g} x {n} streams");
         }
     }
@@ -242,7 +242,9 @@ fn executor_rejects_late_broadcast() {
     let src = Arc::new(vec![7u8; 16]);
     p.h2d(Slot::Task(0), HostSlice::whole(src.clone()), PlanRegion::whole(b, 16), vec![]);
     p.h2d(Slot::Broadcast, HostSlice::whole(src), PlanRegion::whole(b, 16), vec![]);
-    let err = Executor::new(&ctx).run(&p, 4).expect_err("late broadcast must be rejected");
+    let err = SimBackend::new(&ctx)
+        .run(&p, RunConfig::streams(4))
+        .expect_err("late broadcast must be rejected");
     assert!(err.to_string().contains("broadcast"), "unexpected error: {err}");
 }
 

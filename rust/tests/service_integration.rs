@@ -1,0 +1,271 @@
+//! Service-layer and backend-equivalence integration tests.
+//!
+//! The two acceptance properties of the backend-agnostic execution
+//! API:
+//!
+//! 1. **Concurrency changes nothing observable** — N submissions
+//!    racing through the multi-tenant `StreamService` produce, per
+//!    submission, bitwise-identical outputs *and* identical modeled
+//!    makespans to the same plans run serially on a private engine
+//!    (quiesced lanes make the simulated physics order-independent).
+//! 2. **Backends agree bitwise** — the engine-backed `SimBackend` and
+//!    the host thread-pool `NativeBackend` assemble byte-identical
+//!    outputs for every corpus plan shape (independent fan-out, halo,
+//!    wavefront, iterative chain, sync), at any pool width.
+
+use std::sync::Arc;
+
+use hetstream::corpus::{all_configs, BenchConfig};
+use hetstream::device::DeviceProfile;
+use hetstream::hstreams::{Context, ContextBuilder};
+use hetstream::plan::{
+    lower_corpus_bulk, lower_corpus_streamed, lower_corpus_streamed_at, outputs_match, Backend,
+    Granularity, NativeBackend, RunConfig, SimBackend, CORPUS_BURNER,
+};
+use hetstream::service::{AnalyticPolicy, Request, ServiceConfig, StreamService, TunePolicy};
+
+fn instant_ctx() -> Context {
+    ContextBuilder::new()
+        .profile(DeviceProfile::instant())
+        .only_artifacts(vec![CORPUS_BURNER])
+        .build()
+        .expect("context")
+}
+
+/// Service over the paper's MIC profile: the virtual clock never
+/// sleeps, so a real profile costs nothing and makes the modeled-time
+/// equality assertions non-trivial (instant would compare zeros).
+fn service_config(lanes: usize) -> ServiceConfig {
+    ServiceConfig {
+        lanes,
+        runs: 1,
+        profile: DeviceProfile::mic31sp(),
+        time_mode: hetstream::device::TimeMode::Virtual,
+        artifacts: Some(vec![CORPUS_BURNER.into()]),
+    }
+}
+
+/// The serial twin of [`service_config`]'s lanes: same profile
+/// (builder-dilated the same way), same artifact subset.
+fn mic_ctx() -> Context {
+    ContextBuilder::new().only_artifacts(vec![CORPUS_BURNER]).build().expect("context")
+}
+
+/// A corpus sample guaranteed to span every Table-2 category, plus a
+/// stratified slice for breadth.
+fn category_spanning_sample() -> Vec<BenchConfig> {
+    use hetstream::analysis::Category;
+    let configs = all_configs();
+    let mut sample: Vec<BenchConfig> = Vec::new();
+    for cat in [
+        Category::Sync,
+        Category::Iterative,
+        Category::Independent,
+        Category::FalseDependent,
+        Category::TrueDependent,
+    ] {
+        let c = configs.iter().find(|c| c.category() == cat).expect("category in corpus");
+        sample.push(c.clone());
+    }
+    sample.extend(configs.iter().step_by(41).cloned());
+    sample
+}
+
+#[test]
+fn concurrent_service_submissions_match_serial_bitwise() {
+    let sample: Vec<BenchConfig> = all_configs().into_iter().step_by(29).collect();
+    assert!(sample.len() >= 6);
+
+    // Serial twin: a private engine, one submission at a time, the
+    // same analytic policy the service will consult.
+    let ctx = mic_ctx();
+    let backend = SimBackend::new(&ctx);
+    let serial: Vec<(f64, Vec<Vec<u8>>)> = sample
+        .iter()
+        .map(|c| {
+            let choice = AnalyticPolicy.choose(c, ctx.profile());
+            let plan = lower_corpus_streamed_at(c, CORPUS_BURNER, Granularity::new(choice.gran));
+            let run = backend.run(&plan, RunConfig::streams(choice.streams)).expect("serial run");
+            (run.wall.as_secs_f64() * 1e3, run.outputs)
+        })
+        .collect();
+
+    // Concurrent: three client threads race their slices into a
+    // 3-lane service.
+    let service = StreamService::start(service_config(3), Arc::new(AnalyticPolicy))
+        .expect("service starts");
+    let reports: Vec<(usize, hetstream::service::SubmissionReport)> = std::thread::scope(|s| {
+        let service = &service;
+        let sample = &sample;
+        let handles: Vec<_> = (0..3)
+            .map(|client| {
+                s.spawn(move || {
+                    let mut got = Vec::new();
+                    for (i, c) in sample.iter().enumerate().skip(client).step_by(3) {
+                        let ticket = service
+                            .submit(&format!("client-{client}"), Request::Corpus(c.clone()));
+                        got.push((i, ticket.wait().expect("report")));
+                    }
+                    got
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+    });
+    let stats = service.shutdown();
+
+    assert_eq!(reports.len(), sample.len());
+    assert_eq!(stats.jobs(), sample.len());
+    assert_eq!(stats.errors(), 0);
+    for (i, r) in &reports {
+        assert!(r.ok(), "{}: {:?}", r.name, r.error);
+        let (serial_ms, serial_outputs) = &serial[*i];
+        assert_eq!(
+            &r.outputs, serial_outputs,
+            "{}: concurrent outputs must equal the serial twin bitwise",
+            r.name
+        );
+        assert_eq!(
+            r.modeled_ms, *serial_ms,
+            "{}: quiesced lanes must reproduce the serial modeled makespan",
+            r.name
+        );
+    }
+}
+
+#[test]
+fn service_plan_cache_hits_on_repeat_submissions() {
+    let c = all_configs().into_iter().next().expect("corpus");
+    let service =
+        StreamService::start(service_config(2), Arc::new(AnalyticPolicy)).expect("service");
+    let tickets: Vec<_> =
+        (0..3).map(|_| service.submit("tenant", Request::Corpus(c.clone()))).collect();
+    let reports: Vec<_> = tickets.into_iter().map(|t| t.wait().expect("report")).collect();
+    let stats = service.shutdown();
+
+    assert_eq!(stats.cache_misses, 1, "one lowering for three identical submissions");
+    assert_eq!(stats.cache_hits, 2);
+    assert_eq!(reports.iter().filter(|r| r.cache_hit).count(), 2);
+    for r in &reports[1..] {
+        assert_eq!(r.outputs, reports[0].outputs, "cached plan reproduces the same bytes");
+        assert_eq!(r.modeled_ms, reports[0].modeled_ms);
+    }
+}
+
+#[test]
+fn pre_lowered_plan_submissions_bypass_policy_and_cache() {
+    let c = all_configs().into_iter().next().expect("corpus");
+    let plan = Arc::new(lower_corpus_streamed(&c, CORPUS_BURNER));
+    let ctx = instant_ctx();
+    let want = SimBackend::new(&ctx).run(&plan, RunConfig::streams(2)).expect("reference");
+
+    let service =
+        StreamService::start(service_config(1), Arc::new(AnalyticPolicy)).expect("service");
+    let report = service
+        .submit("tenant", Request::Plan { plan: plan.clone(), streams: 2 })
+        .wait()
+        .expect("report");
+    let stats = service.shutdown();
+    assert!(report.ok());
+    assert!(!report.cache_hit && report.gran.is_none());
+    assert_eq!(report.outputs, want.outputs);
+    assert_eq!(stats.cache_hits + stats.cache_misses, 0, "plan submissions skip the cache");
+}
+
+#[test]
+fn service_refuses_plans_outside_its_artifact_subset() {
+    // A plan launching an artifact the lanes never compiled must come
+    // back as a clean error report: the engine's kex worker would
+    // panic on it and never complete its event, hanging the lane, the
+    // ticket, and shutdown.
+    let mut p = hetstream::plan::StreamPlan::new("foreign-artifact");
+    let n = 65536 * 4;
+    let b = p.buf(n);
+    let r = hetstream::plan::PlanRegion::whole(b, n);
+    p.kex(hetstream::plan::Slot::Task(0), "vector_add", vec![r, r], vec![r], Some(1), 1, vec![]);
+
+    let service =
+        StreamService::start(service_config(1), Arc::new(AnalyticPolicy)).expect("service");
+    let report = service
+        .submit("tenant", Request::Plan { plan: Arc::new(p), streams: 2 })
+        .wait()
+        .expect("report, not a hang");
+    let stats = service.shutdown();
+    let err = report.error.expect("foreign artifact must be refused");
+    assert!(err.contains("vector_add"), "{err}");
+    assert_eq!(stats.errors(), 1);
+}
+
+#[test]
+fn dropped_service_releases_its_lanes() {
+    // Dropping without shutdown() must still stop the lane threads —
+    // the Drop impl closes the queue and wakes them.  If it didn't,
+    // this test would leak parked threads (and under a test harness
+    // that joins on exit, hang).
+    let service =
+        StreamService::start(service_config(2), Arc::new(AnalyticPolicy)).expect("service");
+    let c = all_configs().into_iter().next().expect("corpus");
+    let ticket = service.submit("tenant", Request::Corpus(c));
+    drop(service);
+    // The in-flight job still completes (lanes drain the queue before
+    // exiting), so the ticket resolves rather than erroring.
+    let report = ticket.wait().expect("queued job drains on drop");
+    assert!(report.ok(), "{:?}", report.error);
+}
+
+#[test]
+fn sim_and_native_backends_assemble_identical_bytes() {
+    // The tentpole oracle over a category-spanning corpus sample: both
+    // Backend implementations must produce bitwise-identical outputs
+    // (and agree with the bulk reference) for every plan shape.
+    let ctx = instant_ctx();
+    let sim = SimBackend::new(&ctx);
+    let native = NativeBackend::new();
+    for c in category_spanning_sample() {
+        let bulk = lower_corpus_bulk(&c, CORPUS_BURNER);
+        let reference = sim.run(&bulk, RunConfig::streams(1)).expect("bulk reference");
+        let plan = lower_corpus_streamed(&c, CORPUS_BURNER);
+        let sim_run = sim.run(&plan, RunConfig::streams(4)).expect("sim run");
+        assert!(
+            outputs_match(&reference, &sim_run),
+            "{}/{}: sim diverges from bulk",
+            c.app,
+            c.config
+        );
+        for pool in [1usize, 4] {
+            let native_run = native.run(&plan, RunConfig::streams(pool)).expect("native run");
+            assert!(
+                outputs_match(&sim_run, &native_run),
+                "{}/{}: native diverges from sim at pool width {pool}",
+                c.app,
+                c.config
+            );
+            assert_eq!(native_run.h2d_bytes, sim_run.h2d_bytes, "{}", c.app);
+            assert_eq!(native_run.d2h_bytes, sim_run.d2h_bytes, "{}", c.app);
+            assert_eq!(native_run.tasks, sim_run.tasks, "{}", c.app);
+        }
+    }
+}
+
+#[test]
+fn native_backend_surfaces_kernel_errors_cleanly() {
+    // An artifact the manifest does not know passes structural
+    // validation (no signature to check against) but must fail the run
+    // with a clean error — not hang the pool.
+    let mut p = hetstream::plan::StreamPlan::new("unknown-artifact");
+    let b = p.buf(64);
+    p.kex(
+        hetstream::plan::Slot::Task(0),
+        "no_such_kernel",
+        vec![hetstream::plan::PlanRegion::whole(b, 64)],
+        vec![hetstream::plan::PlanRegion::whole(b, 64)],
+        Some(1),
+        1,
+        vec![],
+    );
+    let handle = NativeBackend::new()
+        .submit(&p, RunConfig::streams(2))
+        .expect("structurally valid plan submits");
+    let err = handle.wait().expect_err("unknown kernel must fail the run");
+    assert!(err.to_string().contains("no_such_kernel"), "{err}");
+}

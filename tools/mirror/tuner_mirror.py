@@ -172,15 +172,21 @@ def effective_gran(c, g):
 
 
 class Op:
-    __slots__ = ("kind", "lane", "deps", "dur_bytes", "flops", "buf")
+    __slots__ = ("kind", "lane", "deps", "dur_bytes", "flops", "buf",
+                 "reads", "writes")
 
-    def __init__(self, kind, lane, deps, dur_bytes=0, flops=0, buf=-1):
+    def __init__(self, kind, lane, deps, dur_bytes=0, flops=0, buf=-1,
+                 reads=None, writes=None):
         self.kind = kind      # 'h2d' | 'kex' | 'd2h'
         self.lane = lane      # Slot lane (task index / diagonal slot)
         self.deps = deps      # indices of earlier ops
         self.dur_bytes = dur_bytes
         self.flops = flops    # already includes repeats
         self.buf = buf        # destination buffer for h2d (alloc tracking)
+        # Byte-interval access records for the NativeBackend output-path
+        # check: lists of (space, id, lo, hi) with space 'dev' | 'out'.
+        self.reads = reads or []
+        self.writes = writes or []
 
 
 def lane_up(n):
@@ -189,9 +195,14 @@ def lane_up(n):
 
 def lower_bulk(c):
     s = Scaled(c)
-    ops = [Op("h2d", 0, [], dur_bytes=s.h2d, buf=0)]
-    ops.append(Op("kex", 0, [], flops=s.flops_per_iter * max(s.repeats, 1)))
-    ops.append(Op("d2h", 0, [1], dur_bytes=s.d2h))
+    ops = [Op("h2d", 0, [], dur_bytes=s.h2d, buf=0,
+              writes=[("dev", 0, 0, s.h2d)])]
+    ops.append(Op("kex", 0, [], flops=s.flops_per_iter * max(s.repeats, 1),
+                  reads=[("dev", 0, 0, KEX_BYTES)],
+                  writes=[("dev", 1, 0, KEX_BYTES)]))
+    ops.append(Op("d2h", 0, [1], dur_bytes=s.d2h,
+                  reads=[("dev", 1, 0, s.d2h)],
+                  writes=[("out", 0, 0, s.d2h)]))
     return ops
 
 
@@ -230,8 +241,7 @@ def lower_tasks(c, s, m, inflate, wavefront):
     ob = [min(ix[t], d) for t in range(m)] + [d]
     zmax = max((ob[t + 1] - max(ob[t], KEX_BYTES) for t in range(m)
                 if ob[t + 1] > max(ob[t], KEX_BYTES)), default=0)
-    if zmax > 0:
-        new_buf()  # zeros buffer (never written; no timing effect)
+    zeros = new_buf() if zmax > 0 else -1  # never-written zero source
     flops = s.flops_per_iter // m
 
     def emit(t, slot, deps):
@@ -244,17 +254,25 @@ def lower_tasks(c, s, m, inflate, wavefront):
         xhi = min(ihi + halo, h)
         xfer = xhi - xlo
         in_buf = new_buf()
-        new_buf()  # out_buf (kex-written; no alloc charge)
+        out_buf = new_buf()  # kex-written; no alloc charge
         if xfer > 0:
-            ops.append(Op("h2d", slot, [], dur_bytes=xfer, buf=in_buf))
+            ops.append(Op("h2d", slot, [], dur_bytes=xfer, buf=in_buf,
+                          writes=[("dev", in_buf, 0, xfer)]))
         kex = len(ops)
-        ops.append(Op("kex", slot, deps, flops=flops * max(s.repeats, 1)))
+        ops.append(Op("kex", slot, deps, flops=flops * max(s.repeats, 1),
+                      reads=[("dev", in_buf, 0, KEX_BYTES)],
+                      writes=[("dev", out_buf, 0, KEX_BYTES)]))
         chi = min(ohi, KEX_BYTES)
         if chi > olo:
-            ops.append(Op("d2h", slot, [kex], dur_bytes=chi - olo))
+            delta = olo - xlo
+            ops.append(Op("d2h", slot, [kex], dur_bytes=chi - olo,
+                          reads=[("dev", out_buf, delta, delta + chi - olo)],
+                          writes=[("out", 0, olo, chi)]))
         zlo = max(olo, KEX_BYTES)
         if ohi > zlo:
-            ops.append(Op("d2h", slot, [], dur_bytes=ohi - zlo))
+            ops.append(Op("d2h", slot, [], dur_bytes=ohi - zlo,
+                          reads=[("dev", zeros, 0, ohi - zlo)],
+                          writes=[("out", 0, zlo, ohi)]))
         return kex
 
     if wavefront is not None:
@@ -323,6 +341,94 @@ def stage_times_ns(ops, profile):
         else:
             d2h += profile.transfer_ns(op.dur_bytes, False)
     return h2d, kex, d2h
+
+
+# --- NativeBackend output-path check ------------------------------------
+#
+# The Rust `plan::NativeBackend` runs the task DAG on a host thread
+# pool in ANY topological order of the backend dependency contract
+# (explicit deps + per-lane program order; broadcast ops don't occur in
+# corpus lowerings).  Its outputs are bitwise-identical to the engine
+# path iff, under that partial order:
+#
+#   1. every pair of ops touching overlapping byte intervals, at least
+#      one writing, is ordered (no data race any schedule could expose);
+#   2. the D2H writes tile each host output exactly once (so assembly
+#      is schedule-independent), with the same total extent as bulk.
+#
+# This mirrors those two properties over every corpus lowering at
+# several granularities — the offline twin of the Rust-side
+# `sim_and_native_backends_assemble_identical_bytes` bitwise test.
+
+
+def native_deps(ops):
+    """Full dep lists under the backend contract: explicit deps plus
+    program order within each Slot lane (mirrors plan/backend.rs)."""
+    deps = []
+    last = {}
+    for i, op in enumerate(ops):
+        d = set(op.deps)
+        if op.lane in last:
+            d.add(last[op.lane])
+        last[op.lane] = i
+        deps.append(sorted(d))
+    return deps
+
+
+def native_output_path_check(c, gran):
+    ops = lower_streamed_at(c, gran)
+    deps = native_deps(ops)
+    # Ancestor bitsets over the dependency closure (ops are in
+    # topological order by construction).
+    anc = []
+    for i, d in enumerate(deps):
+        a = 0
+        for p in d:
+            a |= anc[p] | (1 << p)
+        anc.append(a)
+
+    def ordered(i, j):
+        return bool(anc[j] >> i & 1) or bool(anc[i] >> j & 1)
+
+    # 1. Conflict-freedom per buffer/output.
+    accesses = {}
+    for i, op in enumerate(ops):
+        for space, bid, lo, hi in op.reads:
+            accesses.setdefault((space, bid), []).append((i, lo, hi, False))
+        for space, bid, lo, hi in op.writes:
+            accesses.setdefault((space, bid), []).append((i, lo, hi, True))
+    for (space, bid), accs in accesses.items():
+        for k in range(len(accs)):
+            i, lo_i, hi_i, w_i = accs[k]
+            for j, lo_j, hi_j, w_j in accs[k + 1:]:
+                if i == j or (not w_i and not w_j):
+                    continue
+                if lo_i < hi_j and lo_j < hi_i and not ordered(i, j):
+                    raise AssertionError(
+                        f"{c.app}/{c.config} gran {gran}: unordered conflict "
+                        f"on {space}{bid} between op {i} and op {j}")
+
+    # 2. Output writes tile [0, d2h) exactly once, matching bulk.
+    wins = sorted((lo, hi) for op in ops for space, _, lo, hi in op.writes
+                  if space == "out")
+    d = Scaled(c).d2h
+    pos = 0
+    for lo, hi in wins:
+        assert lo == pos and hi > lo, (
+            f"{c.app}/{c.config} gran {gran}: output gap/overlap at {lo} "
+            f"(expected {pos})")
+        pos = hi
+    assert pos == d, f"{c.app}/{c.config} gran {gran}: covered {pos} of {d}"
+
+
+def native_check(apps):
+    checked = 0
+    for c in apps:
+        for g in (1, default_gran(c.category()), 7, 16):
+            native_output_path_check(c, g)
+            checked += 1
+    print(f"native output-path check: OK ({checked} (app, granularity) "
+          f"plans: conflicts ordered, outputs tiled exactly once)")
 
 
 # --- analytic seed (with the degenerate-profile fix) -------------------
@@ -524,6 +630,9 @@ def golden_trace_check():
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--apps", type=int, default=0, help="limit app count")
+    ap.add_argument("--native-check", action="store_true",
+                    help="run only the golden-trace and NativeBackend "
+                         "output-path checks (fast; used by CI)")
     args = ap.parse_args()
 
     golden_trace_check()
@@ -535,6 +644,10 @@ def main():
     assert len(cfgs) == 223, f"parsed {len(cfgs)} configs, want 223"
     if args.apps:
         apps = apps[:args.apps]
+
+    native_check(apps)
+    if args.native_check:
+        return
 
     streams = [1, 2, 4, 8]
 

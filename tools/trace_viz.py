@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""Render a hetstream trace JSON as a per-lane SVG/HTML Gantt chart.
+
+The input is the canonical trace format `repro trace NAME --out t.json`
+emits (and the golden trace under rust/tests/golden/): a `version: 1`
+object whose `events` carry per-op `lane`, `stream`, `kind`, byte/FLOP
+metadata and `start_ns`/`end_ns` intervals from the virtual clock.
+The layout mirrors `rust/src/metrics/viz.rs` (`repro trace --svg`
+renders the same chart without leaving Rust); this script exists for
+post-hoc visualization of checked-in or archived traces.
+
+Usage:
+    python3 tools/trace_viz.py TRACE.json [-o OUT.svg] [--html]
+
+With no -o the SVG (or HTML) goes to stdout.  Exit is non-zero on a
+malformed trace, so CI can use an invocation as a format check.
+"""
+
+import argparse
+import html
+import json
+import sys
+
+CHART_W = 1000.0
+MARGIN_L = 90.0
+MARGIN_T = 40.0
+ROW_H = 28.0
+BAR_H = 18.0
+AXIS_TICKS = 6
+
+KIND_COLOR = {"h2d": "#4c78a8", "kex": "#f58518", "d2h": "#54a24a"}
+
+
+def lane_rank(lane):
+    """h2d first, then the kernel queues in numeric order (kex2 before
+    kex10), then d2h, then anything else."""
+    if lane == "h2d":
+        return (0, 0, "")
+    if lane == "d2h":
+        return (2, 0, "")
+    if lane.startswith("kex") and lane[3:].isdigit():
+        return (1, int(lane[3:]), "")
+    return (3, 0, lane)
+
+
+def trace_svg(events):
+    lanes = []
+    for e in events:
+        if e["lane"] not in lanes:
+            lanes.append(e["lane"])
+    lanes.sort(key=lane_rank)
+
+    t0 = min((e["start_ns"] for e in events), default=0)
+    t1 = max((e["end_ns"] for e in events), default=0)
+    span = max(t1 - t0, 1)
+    height = MARGIN_T + ROW_H * max(len(lanes), 1) + 30.0
+    width = MARGIN_L + CHART_W + 20.0
+
+    def x(ns):
+        return MARGIN_L + (ns - t0) / span * CHART_W
+
+    out = []
+    out.append(
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{width:.0f}" '
+        f'height="{height:.0f}" viewBox="0 0 {width:.0f} {height:.0f}" '
+        f'font-family="monospace" font-size="11">'
+    )
+    out.append(
+        f'<text x="{MARGIN_L:g}" y="16" font-size="13">hetstream timeline '
+        f"— {len(events)} events, {(t1 - t0) / 1e6:.3f} ms</text>"
+    )
+    if not events:
+        out.append('<text x="90" y="60">(no events in trace)</text>')
+        out.append("</svg>")
+        return "\n".join(out) + "\n"
+
+    grid_bottom = MARGIN_T + ROW_H * len(lanes)
+    for k in range(AXIS_TICKS + 1):
+        ns = t0 + (t1 - t0) * k // AXIS_TICKS
+        gx = x(ns)
+        if t1 - t0 < 10_000_000:
+            label = f"{(ns - t0) / 1e3:.1f}µs"
+        else:
+            label = f"{(ns - t0) / 1e6:.2f}ms"
+        out.append(
+            f'<line x1="{gx:.1f}" y1="{MARGIN_T:g}" x2="{gx:.1f}" '
+            f'y2="{grid_bottom:g}" stroke="#ddd"/>'
+        )
+        out.append(
+            f'<text x="{gx:.1f}" y="{grid_bottom + 14.0:.1f}" '
+            f'text-anchor="middle" fill="#555">{label}</text>'
+        )
+
+    for row, lane in enumerate(lanes):
+        y = MARGIN_T + ROW_H * row
+        out.append(
+            f'<text x="{MARGIN_L - 8.0:.1f}" y="{y + BAR_H - 4.0:.1f}" '
+            f'text-anchor="end" fill="#333">{html.escape(lane)}</text>'
+        )
+        for e in events:
+            if e["lane"] != lane:
+                continue
+            x0, x1 = x(e["start_ns"]), x(e["end_ns"])
+            w = max(x1 - x0, 0.5)
+            bits = [f"seq {e['seq']} {e['kind']} stream {e['stream']}"]
+            if e.get("label"):
+                bits.append(e["label"])
+            if e.get("bytes"):
+                bits.append(f"{e['bytes']} B")
+            if e.get("flops"):
+                bits.append(f"{e['flops']} flop")
+            bits.append(f"[{e['start_ns']} .. {e['end_ns']}] ns")
+            tip = html.escape(" ".join(bits))
+            color = KIND_COLOR.get(e["kind"], "#888")
+            out.append(
+                f'<rect x="{x0:.2f}" y="{y:.1f}" width="{w:.2f}" '
+                f'height="{BAR_H:g}" fill="{color}" stroke="#333" '
+                f'stroke-width="0.4" opacity="0.9"><title>{tip}</title></rect>'
+            )
+    out.append("</svg>")
+    return "\n".join(out) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="trace JSON from `repro trace --out`")
+    ap.add_argument("-o", "--out", help="output path (default: stdout)")
+    ap.add_argument(
+        "--html", action="store_true", help="wrap the SVG in a standalone HTML page"
+    )
+    args = ap.parse_args()
+
+    with open(args.trace) as f:
+        doc = json.load(f)
+    if doc.get("version") != 1 or "events" not in doc:
+        sys.exit(f"{args.trace}: not a hetstream trace (want version 1 + events)")
+    events = doc["events"]
+    for i, e in enumerate(events):
+        for key in ("seq", "kind", "lane", "stream", "start_ns", "end_ns"):
+            if key not in e:
+                sys.exit(f"{args.trace}: event {i} missing `{key}`")
+        if e["end_ns"] < e["start_ns"]:
+            sys.exit(f"{args.trace}: event {i} ends before it starts")
+
+    body = trace_svg(events)
+    if args.html:
+        body = (
+            "<!doctype html><html><head><meta charset='utf-8'>"
+            "<title>hetstream timeline</title></head><body>\n"
+            + body
+            + "</body></html>\n"
+        )
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(body)
+        print(f"wrote {len(events)} events to {args.out}", file=sys.stderr)
+    else:
+        sys.stdout.write(body)
+
+
+if __name__ == "__main__":
+    main()
