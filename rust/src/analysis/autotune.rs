@@ -113,6 +113,47 @@ pub fn predict_plan_point(
     (streams, gran.max(streams))
 }
 
+/// Modeled pipelined-makespan estimate of a plan at `streams`, ms:
+/// the bottleneck stage runs end to end, the other stages hide behind
+/// it except for one un-overlapped pipeline fill/drain share —
+/// `bottleneck + (total − bottleneck) / streams`, the same stage-time
+/// model [`predict_plan_point`] seeds from.  This is the *admission
+/// currency* of the service layer (modeled-ms charged against
+/// per-tenant token buckets): a planning-time estimate, deliberately
+/// on the conservative side of the measured makespan, never a
+/// measurement.
+pub fn predict_plan_cost_ms(
+    plan: &StreamPlan,
+    profile: &crate::device::DeviceProfile,
+    streams: usize,
+) -> f64 {
+    let st = plan.stage_times(profile);
+    let (h2d, kex, d2h) = (st.h2d.as_secs_f64(), st.kex.as_secs_f64(), st.d2h.as_secs_f64());
+    let total = h2d + kex + d2h;
+    let bottleneck = h2d.max(kex).max(d2h);
+    (bottleneck + (total - bottleneck) / streams.max(1) as f64) * 1e3
+}
+
+/// The analytic `(streams, granularity, modeled cost)` decision for a
+/// corpus descriptor: one bulk lowering feeds both the seed
+/// ([`predict_plan_point`], knob-mapped) and the cost estimate
+/// ([`predict_plan_cost_ms`] at the chosen stream count) — callers
+/// that need both (the service's admission path) pay the multi-MiB
+/// payload synthesis once.
+pub fn analytic_corpus_choice(
+    c: &BenchConfig,
+    profile: &crate::device::DeviceProfile,
+) -> (usize, usize, f64) {
+    let bulk = lower_corpus_bulk(c, CORPUS_BURNER);
+    let (streams, seed_tasks) = predict_plan_point(&bulk, profile);
+    let knob = match c.category() {
+        Category::TrueDependent => (seed_tasks as f64).sqrt().ceil() as usize,
+        _ => seed_tasks,
+    };
+    let gran = effective_corpus_granularity(c, Granularity::new(knob)).get();
+    (streams, gran, predict_plan_cost_ms(&bulk, profile, streams))
+}
+
 /// The analytic `(streams, granularity)` seed for a corpus descriptor
 /// in the units its lowering actually uses: [`predict_plan_point`]
 /// over the bulk plan, the task count mapped into the category's knob
@@ -125,13 +166,8 @@ pub fn analytic_corpus_seed(
     c: &BenchConfig,
     profile: &crate::device::DeviceProfile,
 ) -> (usize, usize) {
-    let bulk = lower_corpus_bulk(c, CORPUS_BURNER);
-    let (streams, seed_tasks) = predict_plan_point(&bulk, profile);
-    let knob = match c.category() {
-        Category::TrueDependent => (seed_tasks as f64).sqrt().ceil() as usize,
-        _ => seed_tasks,
-    };
-    (streams, effective_corpus_granularity(c, Granularity::new(knob)).get())
+    let (streams, gran, _) = analytic_corpus_choice(c, profile);
+    (streams, gran)
 }
 
 /// Result of an empirical stream-count sweep.

@@ -10,9 +10,10 @@ mod learned;
 mod stages;
 
 pub use autotune::{
-    analytic_corpus_seed, autotune_plan, autotune_plan_pruned, autotune_streams,
-    autotune_workload, gran_ladder, normalize_ladder, predict_plan_point, predict_streams,
-    predict_streams_for_plan, snap_seed, AutotuneResult, PlanTuneResult, GRAN_CEILING,
+    analytic_corpus_choice, analytic_corpus_seed, autotune_plan, autotune_plan_pruned,
+    autotune_streams, autotune_workload, gran_ladder, normalize_ladder, predict_plan_cost_ms,
+    predict_plan_point, predict_streams, predict_streams_for_plan, snap_seed, AutotuneResult,
+    PlanTuneResult, GRAN_CEILING,
 };
 pub(crate) use autotune::argmin;
 pub use learned::{

@@ -17,6 +17,13 @@ pub enum Error {
     Stream(String),
     /// A malformed `StreamPlan` (forward dep, out-of-buffer region, ...).
     Plan(String),
+    /// A submission the service refused at admission time (over-budget
+    /// tenant, deadline-infeasible request) — load shedding, not a
+    /// failure of the service itself.
+    Admission { tenant: String, reason: String },
+    /// Service-layer machinery failure (lane spawn, dropped ticket) —
+    /// distinct from [`Error::Stream`], which is engine machinery.
+    Service(String),
     /// Configuration / CLI errors.
     Config(String),
     /// I/O (manifest and artifact loading).
@@ -36,6 +43,10 @@ impl fmt::Display for Error {
             Error::Arena(m) => write!(f, "device arena error: {m}"),
             Error::Stream(m) => write!(f, "stream error: {m}"),
             Error::Plan(m) => write!(f, "plan error: {m}"),
+            Error::Admission { tenant, reason } => {
+                write!(f, "admission rejected for tenant `{tenant}`: {reason}")
+            }
+            Error::Service(m) => write!(f, "service error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }

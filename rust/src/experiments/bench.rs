@@ -1,0 +1,397 @@
+//! `repro bench` — the multi-tenant load harness over
+//! [`crate::service::StreamService`] (DESIGN.md §Bench).
+//!
+//! The serving demo (`repro serve --demo N`) is closed-loop over a
+//! fixed roster; a serving system is judged under *load*: sustained
+//! arrival rates, tenants that misbehave, latency tails.  This module
+//! is the BenchRunner-style generator that produces those numbers —
+//! one worker thread per tenant paces mixed-category corpus
+//! submissions at a target rate (closed-loop: wait for each result
+//! before pacing the next; `--open-loop`: submit on schedule no matter
+//! what's in flight), every outcome becomes a timestamped event, and
+//! the reporter merges the per-worker event streams into a per-second
+//! time series (throughput + avg/p50/p99 end-to-end latency + queue
+//! wait) emitted as the `BENCH_<timestamp>.json` artifact
+//! ([`crate::metrics::bench_json`]) so service performance is
+//! comparable across PRs.
+//!
+//! Combined with cost-based admission
+//! ([`crate::service::AdmissionConfig`]), this is where load shedding
+//! becomes observable: an open-loop flooding tenant overruns its
+//! modeled-ms budget and is shed at submit, while a well-behaved
+//! tenant's latency tail stays bounded
+//! (`tests/bench_integration.rs` asserts exactly that).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::device::{DeviceProfile, TimeMode};
+use crate::metrics::{latency_stats, BenchReport, BenchTick, Table, TenantTotals};
+use crate::service::{AdmissionConfig, Request, ServiceConfig, StreamService, Ticket, TunePolicy};
+use crate::util::percentile;
+use crate::{Error, Result};
+
+use super::serve::demo_roster;
+
+/// Apps in the bench submission mix (the category-interleaved serve
+/// roster — every Table-2 shape appears in the load).
+const BENCH_ROSTER_APPS: usize = 8;
+
+/// Load-harness configuration (`repro bench` flags).
+#[derive(Clone)]
+pub struct BenchOpts {
+    /// Worker threads, one per tenant.
+    pub tenants: usize,
+    /// Target submission rate per tenant, req/s.
+    pub rate: f64,
+    /// Submission-window length, s (completions drain past it).
+    pub secs: f64,
+    /// Submit on schedule without waiting for completions.
+    pub open_loop: bool,
+    /// Service engine lanes.
+    pub lanes: usize,
+    /// Optional misbehaving tenant: `(index, rate multiplier)` —
+    /// tenant `index` submits at `rate × multiplier`.
+    pub flood: Option<(usize, f64)>,
+    /// Cost-based admission (None = admit everything).
+    pub admission: Option<AdmissionConfig>,
+    pub profile: DeviceProfile,
+    pub time_mode: TimeMode,
+}
+
+/// One submission outcome, stamped with its completion (or shed) time
+/// relative to the bench epoch.
+struct Event {
+    tenant: usize,
+    /// Seconds since the bench epoch at completion/shed.
+    t_s: f64,
+    kind: EventKind,
+}
+
+enum EventKind {
+    Done { e2e_ms: f64, queue_ms: f64 },
+    Shed,
+    Error,
+}
+
+/// Drive the load: spawn one worker per tenant, pace submissions,
+/// merge the per-worker event streams into the per-second series.
+pub fn run_bench(opts: &BenchOpts, policy: Arc<dyn TunePolicy>) -> Result<BenchReport> {
+    if opts.tenants == 0 || opts.rate <= 0.0 || opts.secs <= 0.0 {
+        return Err(Error::Config(
+            "bench needs --tenants >= 1, --rate > 0 and --secs > 0".into(),
+        ));
+    }
+    let roster = demo_roster(BENCH_ROSTER_APPS);
+    let service = StreamService::start(
+        ServiceConfig {
+            lanes: opts.lanes.max(1),
+            runs: 1,
+            profile: opts.profile.clone(),
+            time_mode: opts.time_mode,
+            artifacts: Some(vec![crate::plan::CORPUS_BURNER.into()]),
+            admission: opts.admission,
+        },
+        policy,
+    )?;
+
+    let epoch = Instant::now();
+    // Live counters for the progress reporter (the exact series is
+    // rebuilt from the timestamped events afterwards).
+    let live_done = AtomicU64::new(0);
+    let live_shed = AtomicU64::new(0);
+    let stop_reporter = AtomicU64::new(0);
+
+    let events: Vec<Event> = std::thread::scope(|s| {
+        let service = &service;
+        let roster = &roster;
+        let (live_done, live_shed, stop) = (&live_done, &live_shed, &stop_reporter);
+        // Progress ticker: one stderr line per second while the load
+        // runs — observability, not measurement.
+        s.spawn(move || {
+            let mut tick = 0u64;
+            while stop.load(Ordering::Relaxed) == 0 {
+                std::thread::sleep(Duration::from_millis(1000));
+                tick += 1;
+                eprintln!(
+                    "bench t={tick}s: {} completed, {} shed, {} pending",
+                    live_done.load(Ordering::Relaxed),
+                    live_shed.load(Ordering::Relaxed),
+                    service.pending(),
+                );
+            }
+        });
+        let workers: Vec<_> = (0..opts.tenants)
+            .map(|tenant| {
+                s.spawn(move || {
+                    worker_loop(tenant, opts, service, roster, epoch, live_done, live_shed)
+                })
+            })
+            .collect();
+        let merged: Vec<Event> =
+            workers.into_iter().flat_map(|w| w.join().expect("bench worker")).collect();
+        stop.store(1, Ordering::Relaxed);
+        merged
+    });
+    let stats = service.shutdown();
+
+    // --- the reporter merge: events → per-second series + totals ----
+    let mut ticks = ticks_from_events(&events);
+    // Ticks are one second wide, so per-tick throughput = completions.
+    for t in &mut ticks {
+        t.throughput_rps = t.completed as f64;
+    }
+
+    let done: Vec<&Event> =
+        events.iter().filter(|e| matches!(e.kind, EventKind::Done { .. })).collect();
+    let e2e: Vec<f64> = done
+        .iter()
+        .map(|e| match e.kind {
+            EventKind::Done { e2e_ms, .. } => e2e_ms,
+            _ => unreachable!(),
+        })
+        .collect();
+    let queue: Vec<f64> = done
+        .iter()
+        .map(|e| match e.kind {
+            EventKind::Done { queue_ms, .. } => queue_ms,
+            _ => unreachable!(),
+        })
+        .collect();
+    let (lat_avg_ms, lat_p50_ms, lat_p99_ms) = latency_stats(&e2e);
+    let (queue_avg_ms, _, _) = latency_stats(&queue);
+    let duration_s = events.iter().map(|e| e.t_s).fold(opts.secs, f64::max);
+
+    let mut per_tenant = Vec::with_capacity(opts.tenants);
+    for tenant in 0..opts.tenants {
+        let name = tenant_name(tenant);
+        let mine: Vec<&Event> = events.iter().filter(|e| e.tenant == tenant).collect();
+        let lat: Vec<f64> = mine
+            .iter()
+            .filter_map(|e| match e.kind {
+                EventKind::Done { e2e_ms, .. } => Some(e2e_ms),
+                _ => None,
+            })
+            .collect();
+        // Worker-observed sheds must agree with the service's own
+        // accounting; trust the events (they're per-tenant exact) and
+        // cross-check in tests.
+        per_tenant.push(TenantTotals {
+            tenant: name,
+            completed: lat.len() as u64,
+            shed: mine.iter().filter(|e| matches!(e.kind, EventKind::Shed)).count() as u64,
+            errors: mine.iter().filter(|e| matches!(e.kind, EventKind::Error)).count() as u64,
+            p99_ms: percentile(&lat, 99.0),
+        });
+    }
+
+    let completed = done.len() as u64;
+    let rejected = events.iter().filter(|e| matches!(e.kind, EventKind::Shed)).count() as u64;
+    let errors = events.iter().filter(|e| matches!(e.kind, EventKind::Error)).count() as u64;
+    Ok(BenchReport {
+        tenants: opts.tenants,
+        rate: opts.rate,
+        secs: opts.secs,
+        open_loop: opts.open_loop,
+        lanes: opts.lanes.max(1),
+        profile: opts.profile.name.clone(),
+        time_mode: format!("{:?}", opts.time_mode).to_lowercase(),
+        ticks,
+        per_tenant,
+        completed,
+        rejected,
+        errors,
+        duration_s,
+        throughput_rps: if duration_s > 0.0 { completed as f64 / duration_s } else { f64::NAN },
+        lat_avg_ms,
+        lat_p50_ms,
+        lat_p99_ms,
+        queue_avg_ms,
+        modeled_total_ms: stats.modeled_ms(),
+        cache_hits: stats.cache_hits,
+        cache_misses: stats.cache_misses,
+    })
+}
+
+fn tenant_name(tenant: usize) -> String {
+    format!("tenant-{tenant}")
+}
+
+/// One tenant's load loop.  Closed-loop waits each ticket inline;
+/// open-loop keeps submitting on schedule and drains the outstanding
+/// tickets after the window.  Latency and completion timestamps come
+/// from the service's own stamps (`queue_wait_ms`/`e2e_ms`), so both
+/// modes measure the same thing.
+fn worker_loop(
+    tenant: usize,
+    opts: &BenchOpts,
+    service: &StreamService,
+    roster: &[crate::corpus::BenchConfig],
+    epoch: Instant,
+    live_done: &AtomicU64,
+    live_shed: &AtomicU64,
+) -> Vec<Event> {
+    let rate = match opts.flood {
+        Some((idx, factor)) if idx == tenant => opts.rate * factor.max(0.0),
+        _ => opts.rate,
+    };
+    let name = tenant_name(tenant);
+    let total = (rate * opts.secs).ceil() as usize;
+    let interarrival = Duration::from_secs_f64(1.0 / rate.max(f64::MIN_POSITIVE));
+    let mut events = Vec::with_capacity(total);
+    let mut outstanding: Vec<(Ticket, f64)> = Vec::new();
+    for k in 0..total {
+        // Pace to the schedule; a slow previous wait means we're late
+        // and submit immediately (no sleep), never early.
+        let slot = epoch + interarrival.mul_f64(k as f64);
+        let now = Instant::now();
+        if slot > now {
+            std::thread::sleep(slot - now);
+        }
+        let submitted_s = epoch.elapsed().as_secs_f64();
+        let c = &roster[(tenant + k) % roster.len()];
+        match service.submit(&name, Request::Corpus(c.clone())) {
+            Err(Error::Admission { .. }) => {
+                live_shed.fetch_add(1, Ordering::Relaxed);
+                events.push(Event { tenant, t_s: submitted_s, kind: EventKind::Shed });
+            }
+            Err(_) => events.push(Event { tenant, t_s: submitted_s, kind: EventKind::Error }),
+            Ok(ticket) if opts.open_loop => outstanding.push((ticket, submitted_s)),
+            Ok(ticket) => {
+                events.push(resolve(tenant, ticket, submitted_s, live_done));
+            }
+        }
+    }
+    for (ticket, submitted_s) in outstanding {
+        events.push(resolve(tenant, ticket, submitted_s, live_done));
+    }
+    events
+}
+
+/// Wait one ticket and convert it to an event, timestamped at its
+/// service-side completion (submit time + service e2e), which is exact
+/// even when the open-loop drain waits tickets long after they landed.
+fn resolve(tenant: usize, ticket: Ticket, submitted_s: f64, live_done: &AtomicU64) -> Event {
+    match ticket.wait() {
+        Ok(r) if r.ok() => {
+            live_done.fetch_add(1, Ordering::Relaxed);
+            let e2e_ms = r.e2e_ms;
+            Event {
+                tenant,
+                t_s: submitted_s + e2e_ms.max(0.0) / 1e3,
+                kind: EventKind::Done { e2e_ms, queue_ms: r.queue_wait_ms },
+            }
+        }
+        Ok(_) | Err(_) => Event { tenant, t_s: submitted_s, kind: EventKind::Error },
+    }
+}
+
+/// Bucket events into one-second ticks by completion time and compute
+/// each tick's latency statistics — the reporter's merge step, pure so
+/// the series is reproducible from any event log.
+fn ticks_from_events(events: &[Event]) -> Vec<BenchTick> {
+    let horizon = events.iter().map(|e| e.t_s).fold(0.0f64, f64::max);
+    let n = (horizon.floor() as usize) + 1;
+    let mut ticks: Vec<BenchTick> = (0..n as u64)
+        .map(|t_s| BenchTick {
+            t_s,
+            lat_avg_ms: f64::NAN,
+            lat_p50_ms: f64::NAN,
+            lat_p99_ms: f64::NAN,
+            queue_avg_ms: f64::NAN,
+            ..Default::default()
+        })
+        .collect();
+    let mut lat_by_tick: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut queue_by_tick: Vec<Vec<f64>> = vec![Vec::new(); n];
+    for e in events {
+        let idx = (e.t_s.max(0.0).floor() as usize).min(n - 1);
+        match e.kind {
+            EventKind::Done { e2e_ms, queue_ms } => {
+                ticks[idx].completed += 1;
+                lat_by_tick[idx].push(e2e_ms);
+                queue_by_tick[idx].push(queue_ms);
+            }
+            EventKind::Shed => ticks[idx].rejected += 1,
+            EventKind::Error => ticks[idx].errors += 1,
+        }
+    }
+    for (i, t) in ticks.iter_mut().enumerate() {
+        let (avg, p50, p99) = latency_stats(&lat_by_tick[i]);
+        t.lat_avg_ms = avg;
+        t.lat_p50_ms = p50;
+        t.lat_p99_ms = p99;
+        let (qavg, _, _) = latency_stats(&queue_by_tick[i]);
+        t.queue_avg_ms = qavg;
+    }
+    ticks
+}
+
+/// Render the per-second series + totals as the CLI table.
+pub fn bench_table(r: &BenchReport) -> Table {
+    let num = |v: f64| if v.is_finite() { format!("{v:.2}") } else { "-".into() };
+    let mut t = Table::new(
+        format!(
+            "Load bench — {} tenant(s) x {:.0} req/s for {:.0} s ({}), {} lanes",
+            r.tenants,
+            r.rate,
+            r.secs,
+            if r.open_loop { "open-loop" } else { "closed-loop" },
+            r.lanes,
+        ),
+        &[
+            "t (s)", "done", "shed", "err", "thr (req/s)", "avg (ms)", "p50 (ms)", "p99 (ms)",
+            "queue (ms)",
+        ],
+    );
+    for tick in &r.ticks {
+        t.row(&[
+            tick.t_s.to_string(),
+            tick.completed.to_string(),
+            tick.rejected.to_string(),
+            tick.errors.to_string(),
+            num(tick.throughput_rps),
+            num(tick.lat_avg_ms),
+            num(tick.lat_p50_ms),
+            num(tick.lat_p99_ms),
+            num(tick.queue_avg_ms),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn done(tenant: usize, t_s: f64, e2e_ms: f64) -> Event {
+        Event { tenant, t_s, kind: EventKind::Done { e2e_ms, queue_ms: 1.0 } }
+    }
+
+    #[test]
+    fn reporter_buckets_events_by_completion_second() {
+        let events = vec![
+            done(0, 0.2, 10.0),
+            done(0, 0.9, 30.0),
+            done(1, 1.5, 20.0),
+            Event { tenant: 1, t_s: 0.5, kind: EventKind::Shed },
+            Event { tenant: 0, t_s: 2.1, kind: EventKind::Error },
+        ];
+        let ticks = ticks_from_events(&events);
+        assert_eq!(ticks.len(), 3);
+        assert_eq!((ticks[0].completed, ticks[0].rejected, ticks[0].errors), (2, 1, 0));
+        assert_eq!(ticks[0].lat_avg_ms, 20.0);
+        assert_eq!(ticks[0].lat_p99_ms, 30.0, "nearest-rank p99 of two samples is the max");
+        assert_eq!(ticks[1].completed, 1);
+        assert!(ticks[2].lat_avg_ms.is_nan(), "a tick with no completions has unknown latency");
+        assert_eq!(ticks[2].errors, 1);
+    }
+
+    #[test]
+    fn reporter_handles_no_events() {
+        let ticks = ticks_from_events(&[]);
+        assert_eq!(ticks.len(), 1);
+        assert_eq!(ticks[0].completed, 0);
+    }
+}

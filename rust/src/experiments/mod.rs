@@ -2,6 +2,7 @@
 //! the `repro` CLI and the criterion benches so every number in
 //! EXPERIMENTS.md is regenerable from two entry points.
 
+pub mod bench;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
@@ -13,6 +14,7 @@ pub mod serve;
 pub mod sweep;
 pub mod table2;
 
+pub use bench::{bench_table, run_bench, BenchOpts};
 pub use fig1::{fig1_analytic, fig1_engine, offload_spec, Fig1Row};
 pub use fig2::fig2;
 pub use fig3::fig3;

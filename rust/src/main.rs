@@ -69,6 +69,20 @@ COMMANDS:
               execution of the same submission set
                 --demo N [--lanes L=4] [--runs R=1]
                 [--learned [--dataset PATH] [--k K=5]]
+  bench       Multi-tenant load harness over the StreamService: one
+              worker per tenant paces mixed-category corpus submissions
+              at --rate req/s for --secs s (closed-loop by default;
+              --open-loop submits on schedule regardless of
+              completions), with cost-based admission charging each
+              request's modeled cost to a per-tenant token bucket;
+              reports a per-second throughput + avg/p50/p99 latency
+              series, per-tenant sheds, and the BENCH_*.json artifact
+                [--tenants T=4] [--rate R=50] [--secs S=2] [--lanes L=4]
+                [--open-loop] [--flood F  tenant 0 at F x rate]
+                [--admit MS=1000  bucket refill in modeled-ms per wall
+                 second (burst 2x); 0 = admit everything]
+                [--json [PATH]  write the time series as JSON]
+                [--learned [--dataset PATH] [--k K=5]]
   trace NAME  Dump one benchmark's virtual event timeline as JSON, or
               as a per-lane SVG Gantt chart with --svg
                 [--streams N=4] [--scale S=2] [--svg] [--out PATH]
@@ -110,6 +124,35 @@ fn usize_list(args: &Args, flag: &str, default: &[usize]) -> Result<Vec<usize>> 
             .collect::<std::result::Result<_, _>>()
             .map_err(|_| cli_err(format!("bad --{flag} `{spec}`"))),
         None => Ok(default.to_vec()),
+    }
+}
+
+/// The service tuning policy behind `serve`/`bench`: analytic by
+/// default, the k-NN model with `--learned` (trained on a `--dataset`
+/// dump when given).  `sim_profile` must be the dilated profile the
+/// service lanes model, so features/predictions match lane physics.
+fn policy_from(
+    args: &Args,
+    sim_profile: &DeviceProfile,
+) -> Result<std::sync::Arc<dyn hetstream::service::TunePolicy>> {
+    if args.flag("learned") {
+        let ds = match args.get("dataset") {
+            Some(path) => {
+                let text = std::fs::read_to_string(path)?;
+                hetstream::analysis::Dataset::from_tune_json(&text, sim_profile)
+                    .map_err(|e| cli_err(e.to_string()))?
+            }
+            None => hetstream::analysis::Dataset::default(),
+        };
+        eprintln!("learned policy: {} training row(s)", ds.rows.len());
+        Ok(std::sync::Arc::new(hetstream::service::LearnedPolicy::new(
+            hetstream::analysis::KnnTuner::fit(
+                ds,
+                args.get_usize("k", hetstream::analysis::DEFAULT_K),
+            ),
+        )))
+    } else {
+        Ok(std::sync::Arc::new(hetstream::service::AnalyticPolicy))
     }
 }
 
@@ -522,48 +565,115 @@ fn main() -> Result<()> {
             let time_mode = time_mode_from(&args)?;
             // Policy features/predictions must see the same (dilated)
             // profile the service lanes model.
-            let sim_profile = profile.simulation();
-            let policy: std::sync::Arc<dyn hetstream::service::TunePolicy> =
-                if args.flag("learned") {
-                    let ds = match args.get("dataset") {
-                        Some(path) => {
-                            let text = std::fs::read_to_string(path)?;
-                            hetstream::analysis::Dataset::from_tune_json(&text, &sim_profile)
-                                .map_err(|e| cli_err(e.to_string()))?
-                        }
-                        None => hetstream::analysis::Dataset::default(),
-                    };
-                    eprintln!("learned policy: {} training row(s)", ds.rows.len());
-                    std::sync::Arc::new(hetstream::service::LearnedPolicy::new(
-                        hetstream::analysis::KnnTuner::fit(
-                            ds,
-                            args.get_usize("k", hetstream::analysis::DEFAULT_K),
-                        ),
-                    ))
-                } else {
-                    std::sync::Arc::new(hetstream::service::AnalyticPolicy)
-                };
+            let policy = policy_from(&args, &profile.simulation())?;
             let (table, s) = experiments::serve_demo(&profile, time_mode, n, lanes, runs, policy)
                 .map_err(|e| cli_err(e.to_string()))?;
             println!("{}", table.markdown());
+            // Under the virtual clock the headline is the *modeled*
+            // speedup (simulated physics); wall time there measures the
+            // host CPU cost of simulating — scheduling noise, reported
+            // but labeled as such.
+            let (headline_label, wall_note) = match s.time_mode {
+                hetstream::device::TimeMode::Virtual => {
+                    ("modeled", " (host simulation cost under the virtual clock)")
+                }
+                hetstream::device::TimeMode::Wallclock => ("wall", ""),
+            };
             println!(
-                "service: {} submissions on {} lanes in {:.1} ms wall | serial {:.1} ms | \
-                 {:.2}x aggregate throughput | plan cache {} hit(s) / {} miss(es) | \
-                 modeled total {:.2} ms",
+                "service: {} submissions on {} lanes | {:.2}x {headline_label} speedup | \
+                 modeled total {:.2} ms, fleet drain {:.2} ms | \
+                 plan cache {} hit(s) / {} miss(es)",
                 s.submissions,
                 s.lanes,
-                s.service_wall.as_secs_f64() * 1e3,
-                s.serial_wall.as_secs_f64() * 1e3,
-                s.speedup,
+                s.headline_speedup(),
+                s.modeled_total_ms,
+                s.modeled_drain_ms,
                 s.cache_hits,
                 s.cache_misses,
-                s.modeled_total_ms,
+            );
+            println!(
+                "wall{wall_note}: service {:.1} ms vs serial {:.1} ms = {:.2}x",
+                s.service_wall.as_secs_f64() * 1e3,
+                s.serial_wall.as_secs_f64() * 1e3,
+                s.wall_speedup,
             );
             if s.errors > 0 || !s.validated {
                 return Err(cli_err(format!(
                     "{} submission error(s); outputs bitwise-identical to serial: {}",
                     s.errors, s.validated
                 )));
+            }
+        }
+        Some("bench") => {
+            let rate = args.get_f64("rate", 50.0);
+            let secs = args.get_f64("secs", 2.0);
+            // --admit MS: token-bucket refill in modeled-ms per wall
+            // second (burst = 2x refill); 0 disables admission control.
+            let refill = args.get_f64("admit", 1_000.0);
+            let admission = (refill > 0.0).then(|| hetstream::service::AdmissionConfig {
+                refill_ms_per_sec: refill,
+                burst_ms: refill * 2.0,
+            });
+            // --flood F: tenant 0 misbehaves at F x the base rate.
+            let flood = match args.get("flood") {
+                Some(v) => {
+                    let f: f64 =
+                        v.parse().map_err(|_| cli_err(format!("bad --flood `{v}`")))?;
+                    Some((0usize, f))
+                }
+                None => None,
+            };
+            let policy = policy_from(&args, &profile.simulation())?;
+            let opts = experiments::BenchOpts {
+                tenants: args.get_usize("tenants", 4),
+                rate,
+                secs,
+                open_loop: args.flag("open-loop"),
+                lanes: args.get_usize("lanes", 4),
+                flood,
+                admission,
+                profile: profile.clone(),
+                time_mode: time_mode_from(&args)?,
+            };
+            let report =
+                experiments::run_bench(&opts, policy).map_err(|e| cli_err(e.to_string()))?;
+            println!("{}", experiments::bench_table(&report).markdown());
+            println!(
+                "bench: {} completed, {} shed, {} error(s) in {:.2} s | {:.1} req/s | \
+                 latency avg {:.2} / p50 {:.2} / p99 {:.2} ms | queue avg {:.2} ms | \
+                 modeled total {:.2} ms | plan cache {} hit(s) / {} miss(es)",
+                report.completed,
+                report.rejected,
+                report.errors,
+                report.duration_s,
+                report.throughput_rps,
+                report.lat_avg_ms,
+                report.lat_p50_ms,
+                report.lat_p99_ms,
+                report.queue_avg_ms,
+                report.modeled_total_ms,
+                report.cache_hits,
+                report.cache_misses,
+            );
+            for t in &report.per_tenant {
+                println!(
+                    "  {}: {} completed, {} shed, {} error(s), p99 {:.2} ms",
+                    t.tenant, t.completed, t.shed, t.errors, t.p99_ms
+                );
+            }
+            // --json [PATH]: the versioned BENCH_*.json artifact
+            // (bare --json picks the timestamped default name).
+            if let Some(v) = args.get("json") {
+                let path = if v == "true" {
+                    hetstream::metrics::default_bench_path()
+                } else {
+                    v.to_string()
+                };
+                std::fs::write(&path, hetstream::metrics::bench_json(&report))?;
+                println!("wrote {path}");
+            }
+            if report.completed == 0 {
+                return Err(cli_err("bench completed zero submissions".into()));
             }
         }
         Some("trace") => {

@@ -1,0 +1,274 @@
+//! The load-harness report: per-second time series + totals, emitted
+//! as the `BENCH_<timestamp>.json` artifact (DESIGN.md §Bench).
+//!
+//! Every PR's service numbers land in one of these files, so the
+//! schema is versioned ([`BENCH_SCHEMA`]) and validated both here (the
+//! round-trip unit test below) and offline by
+//! `tools/bench_schema.py` — a bench emitted by any commit must stay
+//! comparable with every other commit's.
+
+use crate::util::json::escape;
+use crate::util::percentile;
+
+/// Schema tag stamped into every bench JSON (bump on shape changes;
+/// `tools/bench_schema.py` validates against it).
+pub const BENCH_SCHEMA: &str = "hetstream-bench-v1";
+
+/// One reporter tick: everything that *completed or was shed* during
+/// second `t_s` of the run, with latency statistics over the tick's
+/// completions.
+#[derive(Debug, Clone, Default)]
+pub struct BenchTick {
+    /// Tick index: events with completion time in `[t_s, t_s + 1)` s.
+    pub t_s: u64,
+    pub completed: u64,
+    /// Admission sheds (over-budget / deadline-infeasible).
+    pub rejected: u64,
+    /// Submissions that resolved with an error report.
+    pub errors: u64,
+    /// Completions per second over this tick (= `completed`, ticks are
+    /// one second wide).
+    pub throughput_rps: f64,
+    /// End-to-end latency stats over the tick's completions, ms
+    /// (NaN when the tick completed nothing).
+    pub lat_avg_ms: f64,
+    pub lat_p50_ms: f64,
+    pub lat_p99_ms: f64,
+    /// Mean admission-queue wait over the tick's completions, ms.
+    pub queue_avg_ms: f64,
+}
+
+/// Per-tenant lifetime totals.
+#[derive(Debug, Clone)]
+pub struct TenantTotals {
+    pub tenant: String,
+    pub completed: u64,
+    /// Admission sheds charged to this tenant.
+    pub shed: u64,
+    pub errors: u64,
+    /// p99 end-to-end latency over the tenant's completions, ms.
+    pub p99_ms: f64,
+}
+
+/// The whole bench outcome: configuration echo, per-tick series, and
+/// aggregate totals.  [`bench_json`] is the canonical serialization.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub tenants: usize,
+    /// Target per-tenant submission rate, req/s.
+    pub rate: f64,
+    /// Submission-window length, s.
+    pub secs: f64,
+    pub open_loop: bool,
+    pub lanes: usize,
+    pub profile: String,
+    pub time_mode: String,
+    pub ticks: Vec<BenchTick>,
+    pub per_tenant: Vec<TenantTotals>,
+    pub completed: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    /// Wall duration from first submission to last completion, s.
+    pub duration_s: f64,
+    pub throughput_rps: f64,
+    pub lat_avg_ms: f64,
+    pub lat_p50_ms: f64,
+    pub lat_p99_ms: f64,
+    pub queue_avg_ms: f64,
+    /// Sum of modeled makespans across completions, ms — the modeled
+    /// work the service actually executed.
+    pub modeled_total_ms: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Latency aggregates of a completion sample (avg + nearest-rank
+/// p50/p99 via [`percentile`]); all-NaN on an empty sample.
+pub(crate) fn latency_stats(lat_ms: &[f64]) -> (f64, f64, f64) {
+    let finite: Vec<f64> = lat_ms.iter().copied().filter(|v| v.is_finite()).collect();
+    if finite.is_empty() {
+        return (f64::NAN, f64::NAN, f64::NAN);
+    }
+    let avg = finite.iter().sum::<f64>() / finite.len() as f64;
+    (avg, percentile(&finite, 50.0), percentile(&finite, 99.0))
+}
+
+/// Serialize a report as the versioned `BENCH_*.json` document.  JSON
+/// has no NaN: unknown metrics (e.g. p99 of a tick that completed
+/// nothing) serialize as `null`.
+pub fn bench_json(r: &BenchReport) -> String {
+    let num = |v: f64| if v.is_finite() { format!("{v:.6}") } else { "null".into() };
+    let mut s = format!(
+        "{{\"schema\":\"{}\",\"config\":{{\"tenants\":{},\"rate\":{},\"secs\":{},\
+         \"open_loop\":{},\"lanes\":{},\"profile\":\"{}\",\"time_mode\":\"{}\"}},\
+         \"totals\":{{\"completed\":{},\"rejected\":{},\"errors\":{},\"duration_s\":{},\
+         \"throughput_rps\":{},\"latency_ms\":{{\"avg\":{},\"p50\":{},\"p99\":{}}},\
+         \"queue_wait_avg_ms\":{},\"modeled_total_ms\":{},\
+         \"cache\":{{\"hits\":{},\"misses\":{}}}}},\"per_tenant\":[",
+        BENCH_SCHEMA,
+        r.tenants,
+        num(r.rate),
+        num(r.secs),
+        r.open_loop,
+        r.lanes,
+        escape(&r.profile),
+        escape(&r.time_mode),
+        r.completed,
+        r.rejected,
+        r.errors,
+        num(r.duration_s),
+        num(r.throughput_rps),
+        num(r.lat_avg_ms),
+        num(r.lat_p50_ms),
+        num(r.lat_p99_ms),
+        num(r.queue_avg_ms),
+        num(r.modeled_total_ms),
+        r.cache_hits,
+        r.cache_misses,
+    );
+    for (i, t) in r.per_tenant.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"tenant\":\"{}\",\"completed\":{},\"shed\":{},\"errors\":{},\"p99_ms\":{}}}",
+            escape(&t.tenant),
+            t.completed,
+            t.shed,
+            t.errors,
+            num(t.p99_ms),
+        ));
+    }
+    s.push_str("],\"ticks\":[");
+    for (i, t) in r.ticks.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"t_s\":{},\"completed\":{},\"rejected\":{},\"errors\":{},\
+             \"throughput_rps\":{},\"lat_avg_ms\":{},\"lat_p50_ms\":{},\"lat_p99_ms\":{},\
+             \"queue_avg_ms\":{}}}",
+            t.t_s,
+            t.completed,
+            t.rejected,
+            t.errors,
+            num(t.throughput_rps),
+            num(t.lat_avg_ms),
+            num(t.lat_p50_ms),
+            num(t.lat_p99_ms),
+            num(t.queue_avg_ms),
+        ));
+    }
+    s.push_str("]}");
+    s
+}
+
+/// The default artifact path: `BENCH_<unix-seconds>.json` in the
+/// working directory — a fresh, sortable file per run so the perf
+/// trajectory accumulates instead of overwriting itself.
+pub fn default_bench_path() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    format!("BENCH_{secs}.json")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn sample_report() -> BenchReport {
+        BenchReport {
+            tenants: 2,
+            rate: 10.0,
+            secs: 2.0,
+            open_loop: true,
+            lanes: 4,
+            profile: "mic31sp-sim".into(),
+            time_mode: "virtual".into(),
+            ticks: vec![
+                BenchTick {
+                    t_s: 0,
+                    completed: 3,
+                    rejected: 1,
+                    errors: 0,
+                    throughput_rps: 3.0,
+                    lat_avg_ms: 4.5,
+                    lat_p50_ms: 4.0,
+                    lat_p99_ms: 7.0,
+                    queue_avg_ms: 0.5,
+                },
+                // A tick that completed nothing: NaN stats → null.
+                BenchTick { t_s: 1, lat_avg_ms: f64::NAN, ..Default::default() },
+            ],
+            per_tenant: vec![
+                TenantTotals {
+                    tenant: "t-0".into(),
+                    completed: 3,
+                    shed: 1,
+                    errors: 0,
+                    p99_ms: 7.0,
+                },
+                TenantTotals {
+                    tenant: "t-1".into(),
+                    completed: 0,
+                    shed: 0,
+                    errors: 0,
+                    p99_ms: f64::NAN,
+                },
+            ],
+            completed: 3,
+            rejected: 1,
+            errors: 0,
+            duration_s: 2.0,
+            throughput_rps: 1.5,
+            lat_avg_ms: 4.5,
+            lat_p50_ms: 4.0,
+            lat_p99_ms: 7.0,
+            queue_avg_ms: 0.5,
+            modeled_total_ms: 42.0,
+            cache_hits: 2,
+            cache_misses: 1,
+        }
+    }
+
+    #[test]
+    fn bench_json_round_trips_through_the_crate_parser() {
+        let doc = Json::parse(&bench_json(&sample_report())).expect("valid JSON");
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(BENCH_SCHEMA));
+        let cfg = doc.get("config").expect("config");
+        assert_eq!(cfg.get("tenants").and_then(Json::as_usize), Some(2));
+        assert_eq!(cfg.get("open_loop").and_then(Json::as_bool), Some(true));
+        let totals = doc.get("totals").expect("totals");
+        assert_eq!(totals.get("completed").and_then(Json::as_u64), Some(3));
+        let lat = totals.get("latency_ms").expect("latency");
+        assert_eq!(lat.get("p99").and_then(Json::as_f64), Some(7.0));
+        let ticks = doc.get("ticks").and_then(Json::as_arr).expect("ticks");
+        assert_eq!(ticks.len(), 2);
+        assert_eq!(ticks[0].get("t_s").and_then(Json::as_u64), Some(0));
+        // The empty tick's NaN stats must be null, not a bare NaN token
+        // (which would fail any standards JSON parser).
+        assert!(matches!(ticks[1].get("lat_avg_ms"), Some(Json::Null)));
+        let tenants = doc.get("per_tenant").and_then(Json::as_arr).expect("per_tenant");
+        assert_eq!(tenants[0].get("shed").and_then(Json::as_u64), Some(1));
+        assert!(matches!(tenants[1].get("p99_ms"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn latency_stats_guard_empty_samples() {
+        let (avg, p50, p99) = latency_stats(&[]);
+        assert!(avg.is_nan() && p50.is_nan() && p99.is_nan());
+        let (avg, p50, p99) = latency_stats(&[2.0, 4.0, f64::NAN]);
+        assert_eq!(avg, 3.0);
+        assert_eq!(p50, 2.0);
+        assert_eq!(p99, 4.0);
+    }
+
+    #[test]
+    fn default_bench_path_is_timestamped_json() {
+        let p = default_bench_path();
+        assert!(p.starts_with("BENCH_") && p.ends_with(".json"), "{p}");
+    }
+}

@@ -1,10 +1,16 @@
 //! Timing, robust statistics (the paper's median-of-11 protocol),
-//! report emission, and timeline visualization ([`trace_svg`]).
+//! report emission, timeline visualization ([`trace_svg`]), and the
+//! load-harness report schema ([`bench`]).
 
+mod bench;
 mod report;
 mod stats;
 mod viz;
 
+pub use bench::{
+    bench_json, default_bench_path, BenchReport, BenchTick, TenantTotals, BENCH_SCHEMA,
+};
+pub(crate) use bench::latency_stats;
 pub use report::{csv_table, markdown_table, Table};
 pub use stats::{median, median_duration, quantile, Stats};
 pub use viz::trace_svg;

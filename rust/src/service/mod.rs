@@ -12,6 +12,19 @@
 //!   served round-robin, so a tenant that floods the service cannot
 //!   starve the others — each admission turn takes at most one job
 //!   from each tenant in arrival order of the tenants.
+//! - **Cost-based admission control** ([`AdmissionConfig`]): when
+//!   enabled, every submission is charged its *modeled* cost
+//!   ([`PolicyChoice::est_ms`], the planner's pipelined-makespan
+//!   estimate) against a per-tenant token bucket denominated in
+//!   modeled-ms.  An over-budget tenant's submission — or one whose
+//!   estimate already exceeds its deadline — is rejected at submit
+//!   with a clean [`Error::Admission`], never queued, never hung;
+//!   sheds are counted per tenant in [`ServiceStats`].
+//! - **Poison tolerance**: every internal lock recovers from a
+//!   poisoned state ([`relock`]) — the guarded structures (queues,
+//!   caches, buckets) keep their invariants across an unwinding
+//!   holder, so one panicking client or lane thread cannot wedge
+//!   every other tenant behind a `PoisonError`.
 //! - **Plan cache**: corpus submissions lower once per
 //!   `(suite, app, config, granularity)` and every lane shares the
 //!   `Arc`'d plan — lowering synthesizes multi-MiB payloads, so repeat
@@ -38,8 +51,9 @@ pub use policy::{AnalyticPolicy, LearnedPolicy, PolicyChoice, TunePolicy};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::corpus::BenchConfig;
 use crate::device::{DeviceProfile, TimeMode};
@@ -50,6 +64,86 @@ use crate::plan::{
     CORPUS_BURNER,
 };
 use crate::{Error, Result};
+
+/// Lock a mutex, recovering from poison instead of propagating it.
+///
+/// Every structure the service guards — the admission queues, the plan
+/// cache, the policy memo, the token buckets — keeps its invariants
+/// across an unwinding holder: `HashMap`/`VecDeque` mutations are
+/// panic-safe at the container level, and the values are plain data
+/// (no half-initialized states to observe).  Poison here only records
+/// *that* some thread panicked while holding the lock; honoring it
+/// would convert one crashed client into a `PoisonError` panic in
+/// every other tenant's `submit`/`pending` and a permanently parked
+/// lane fleet (`close()` silently failing meant `shutdown()` joined
+/// forever).  Recovering the guard is therefore the correct handling
+/// everywhere in this module — no state here warrants the
+/// alternative, an `Error::Service` refusal.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Cost-based admission control: a per-tenant token bucket denominated
+/// in **modeled milliseconds** (the planner's [`PolicyChoice::est_ms`]
+/// estimate), refilled in wall time.  A tenant may hold at most
+/// `burst_ms` of budget and earns `refill_ms_per_sec` of modeled work
+/// per wall-clock second; a submission whose estimate exceeds the
+/// tenant's current balance is shed with [`Error::Admission`].
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Modeled-ms of budget a tenant earns per wall-clock second.
+    pub refill_ms_per_sec: f64,
+    /// Bucket capacity: the largest modeled-ms burst a tenant can
+    /// spend at once.  A request estimated above this is *never*
+    /// admissible and is rejected as over-budget outright.
+    pub burst_ms: f64,
+}
+
+impl Default for AdmissionConfig {
+    /// One modeled device-second of work per wall second per tenant,
+    /// with a two-second burst — "a tenant may keep one device busy".
+    fn default() -> Self {
+        Self { refill_ms_per_sec: 1_000.0, burst_ms: 2_000.0 }
+    }
+}
+
+/// The token bucket behind [`AdmissionConfig`].  Time is passed in by
+/// the caller (`now`) so refill behavior is unit-testable without
+/// sleeping.
+#[derive(Debug, Clone, Copy)]
+struct TokenBucket {
+    tokens_ms: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn new(cfg: &AdmissionConfig, now: Instant) -> Self {
+        // Born full: a fresh tenant can spend its burst immediately.
+        Self { tokens_ms: cfg.burst_ms, last: now }
+    }
+
+    /// Refill for the wall time since the last touch, then charge
+    /// `cost_ms` if the balance covers it.  Returns whether the charge
+    /// was taken.
+    fn try_charge(&mut self, cfg: &AdmissionConfig, now: Instant, cost_ms: f64) -> bool {
+        let elapsed = now.saturating_duration_since(self.last).as_secs_f64();
+        self.tokens_ms = (self.tokens_ms + elapsed * cfg.refill_ms_per_sec).min(cfg.burst_ms);
+        self.last = now;
+        if self.tokens_ms >= cost_ms {
+            self.tokens_ms -= cost_ms;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Per-tenant admission state: the bucket plus lifetime shed count.
+#[derive(Debug, Clone, Copy)]
+struct TenantGate {
+    bucket: TokenBucket,
+    shed: u64,
+}
 
 /// Service-wide configuration.
 #[derive(Clone)]
@@ -66,6 +160,9 @@ pub struct ServiceConfig {
     pub time_mode: TimeMode,
     /// Artifact subset each lane compiles (`None` = full manifest).
     pub artifacts: Option<Vec<String>>,
+    /// Cost-based admission control (`None` = admit everything, the
+    /// pre-load-harness behavior).
+    pub admission: Option<AdmissionConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -76,6 +173,7 @@ impl Default for ServiceConfig {
             profile: DeviceProfile::mic31sp(),
             time_mode: TimeMode::from_env_default(),
             artifacts: Some(vec![CORPUS_BURNER.into()]),
+            admission: None,
         }
     }
 }
@@ -110,6 +208,12 @@ pub struct SubmissionReport {
     pub cache_hit: bool,
     /// Median modeled makespan, ms.
     pub modeled_ms: f64,
+    /// Wall time the job waited in the admission queue before a lane
+    /// claimed it, ms.
+    pub queue_wait_ms: f64,
+    /// Wall time from `submit` to completion (queue wait + execution),
+    /// ms — the load harness's end-to-end latency.
+    pub e2e_ms: f64,
     /// Byte-exact assembled host outputs.
     pub outputs: Vec<Vec<u8>>,
     pub error: Option<String>,
@@ -131,7 +235,7 @@ impl Ticket {
     pub fn wait(self) -> Result<SubmissionReport> {
         match self.rx.recv() {
             Ok(report) => Ok(report),
-            Err(_) => Err(Error::Stream("service dropped the submission".into())),
+            Err(_) => Err(Error::Service("service dropped the submission".into())),
         }
     }
 }
@@ -183,6 +287,8 @@ struct Job {
     tenant: String,
     req: Request,
     tx: Sender<SubmissionReport>,
+    /// When `submit` enqueued this job (queue-wait accounting).
+    enqueued: Instant,
 }
 
 struct QueueState {
@@ -219,6 +325,32 @@ struct Shared {
     cache_misses: AtomicU64,
     policy: Arc<dyn TunePolicy>,
     runs: usize,
+    /// The (builder-dilated) profile every lane models — policy and
+    /// cost decisions on the *submit* path must see exactly what the
+    /// lanes' contexts see, or the memoized choices would diverge.
+    profile: DeviceProfile,
+    /// Cost-based admission (`None` = admit everything).
+    admission: Option<AdmissionConfig>,
+    /// Per-tenant token buckets + shed counts (admission control).
+    gates: Mutex<HashMap<String, TenantGate>>,
+}
+
+impl Shared {
+    /// The memoized policy decision for a descriptor (see `choices`):
+    /// consulted by both the submit path (admission cost) and the lane
+    /// path (streams/granularity), so the multi-MiB lowering behind a
+    /// decision is paid once per descriptor, not once per use site.  A
+    /// benign race may compute it twice; the decision is deterministic
+    /// so both writers insert the same value.
+    fn choice_for(&self, c: &BenchConfig) -> PolicyChoice {
+        let ckey: ChoiceKey = (c.suite.label(), c.app, c.config.clone());
+        if let Some(choice) = relock(&self.choices).get(&ckey).copied() {
+            return choice;
+        }
+        let choice = self.policy.choose(c, &self.profile);
+        relock(&self.choices).insert(ckey, choice);
+        choice
+    }
 }
 
 /// Per-lane lifetime totals.
@@ -236,6 +368,9 @@ pub struct ServiceStats {
     pub lanes: Vec<LaneStats>,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Admission sheds per tenant (over-budget + deadline-infeasible),
+    /// sorted by tenant name; empty when admission control is off.
+    pub shed: Vec<(String, u64)>,
 }
 
 impl ServiceStats {
@@ -249,6 +384,18 @@ impl ServiceStats {
 
     pub fn modeled_ms(&self) -> f64 {
         self.lanes.iter().map(|l| l.modeled_ms).sum()
+    }
+
+    /// Modeled time to drain the whole set: the busiest lane's total.
+    /// Under the virtual clock this — not wall time — is the physics
+    /// headline: `modeled_ms() / modeled_drain_ms()` is the modeled
+    /// speedup of L lanes over one device running the set serially.
+    pub fn modeled_drain_ms(&self) -> f64 {
+        self.lanes.iter().map(|l| l.modeled_ms).fold(0.0, f64::max)
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().map(|(_, n)| n).sum()
     }
 }
 
@@ -270,6 +417,11 @@ impl StreamService {
             cache_misses: AtomicU64::new(0),
             policy,
             runs: cfg.runs.max(1),
+            // Same dilation rule as ContextBuilder::profile, so submit-
+            // path decisions equal what lanes would have computed.
+            profile: cfg.profile.simulation(),
+            admission: cfg.admission,
+            gates: Mutex::new(HashMap::new()),
         });
         let mut lanes = Vec::with_capacity(cfg.lanes.max(1));
         for lane in 0..cfg.lanes.max(1) {
@@ -278,26 +430,114 @@ impl StreamService {
             let handle = std::thread::Builder::new()
                 .name(format!("hetstream-lane-{lane}"))
                 .spawn(move || lane_loop(lane, &shared, &cfg))
-                .map_err(|e| Error::Stream(format!("spawn service lane {lane}: {e}")))?;
+                .map_err(|e| Error::Service(format!("spawn service lane {lane}: {e}")))?;
             lanes.push(handle);
         }
         Ok(Self { shared, lanes })
     }
 
     /// Enqueue a submission for `tenant`; returns immediately.
-    pub fn submit(&self, tenant: &str, req: Request) -> Ticket {
+    ///
+    /// With admission control enabled ([`ServiceConfig::admission`])
+    /// the submission is first charged its modeled cost against the
+    /// tenant's token bucket; an over-budget submission is rejected
+    /// here with [`Error::Admission`] — it never enters the queue, so
+    /// shedding is O(1) however deep the backlog.  Without admission
+    /// control this never fails.
+    pub fn submit(&self, tenant: &str, req: Request) -> Result<Ticket> {
+        self.submit_with_deadline(tenant, req, None)
+    }
+
+    /// [`Self::submit`] with a modeled-ms deadline: a request whose
+    /// *estimated* cost already exceeds `deadline_ms` is rejected at
+    /// submit as deadline-infeasible (running it could only miss), on
+    /// top of the token-bucket budget check.
+    pub fn submit_with_deadline(
+        &self,
+        tenant: &str,
+        req: Request,
+        deadline_ms: Option<f64>,
+    ) -> Result<Ticket> {
+        if self.shared.admission.is_some() || deadline_ms.is_some() {
+            let est_ms = self.estimate_cost_ms(&req);
+            if let Some(deadline) = deadline_ms {
+                if !est_ms.is_finite() || est_ms > deadline {
+                    self.record_shed(tenant);
+                    return Err(Error::Admission {
+                        tenant: tenant.to_string(),
+                        reason: format!(
+                            "deadline-infeasible: modeled cost {est_ms:.2} ms exceeds the \
+                             {deadline:.2} ms deadline"
+                        ),
+                    });
+                }
+            }
+            if let Some(cfg) = &self.shared.admission {
+                let now = Instant::now();
+                let mut gates = relock(&self.shared.gates);
+                let gate = gates
+                    .entry(tenant.to_string())
+                    .or_insert_with(|| TenantGate { bucket: TokenBucket::new(cfg, now), shed: 0 });
+                if !gate.bucket.try_charge(cfg, now, est_ms) {
+                    gate.shed += 1;
+                    let balance = gate.bucket.tokens_ms;
+                    return Err(Error::Admission {
+                        tenant: tenant.to_string(),
+                        reason: format!(
+                            "over budget: modeled cost {est_ms:.2} ms exceeds the tenant's \
+                             {balance:.2} ms balance (refill {:.0} ms/s, burst {:.0} ms)",
+                            cfg.refill_ms_per_sec, cfg.burst_ms
+                        ),
+                    });
+                }
+            }
+        }
         let (tx, rx) = channel();
         {
-            let mut q = self.shared.queue.lock().unwrap();
-            q.admission.push(tenant, Job { tenant: tenant.to_string(), req, tx });
+            let mut q = relock(&self.shared.queue);
+            let job =
+                Job { tenant: tenant.to_string(), req, tx, enqueued: Instant::now() };
+            q.admission.push(tenant, job);
         }
         self.shared.cv.notify_all();
-        Ticket { rx }
+        Ok(Ticket { rx })
+    }
+
+    /// The modeled-ms admission charge for a request: the memoized
+    /// policy decision's estimate for descriptors (the same decision
+    /// the lane will reuse), [`predict_plan_cost_ms`] at the requested
+    /// stream count for pre-lowered plans (already lowered, so the
+    /// stage-time walk is cheap).
+    fn estimate_cost_ms(&self, req: &Request) -> f64 {
+        match req {
+            Request::Corpus(c) => self.shared.choice_for(c).est_ms,
+            Request::Plan { plan, streams } => {
+                crate::analysis::predict_plan_cost_ms(plan, &self.shared.profile, *streams)
+            }
+        }
+    }
+
+    /// Count a shed for `tenant` (deadline rejections shed even when
+    /// token-bucket admission is off, so the bucket config falls back
+    /// to the default — the bucket itself is only consulted when
+    /// [`ServiceConfig::admission`] is set).
+    fn record_shed(&self, tenant: &str) {
+        let cfg = self.shared.admission.unwrap_or_default();
+        let now = Instant::now();
+        relock(&self.shared.gates)
+            .entry(tenant.to_string())
+            .or_insert_with(|| TenantGate { bucket: TokenBucket::new(&cfg, now), shed: 0 })
+            .shed += 1;
+    }
+
+    /// Lifetime admission sheds for one tenant (0 if never seen).
+    pub fn shed_count(&self, tenant: &str) -> u64 {
+        relock(&self.shared.gates).get(tenant).map(|g| g.shed).unwrap_or(0)
     }
 
     /// Jobs admitted but not yet claimed by a lane.
     pub fn pending(&self) -> usize {
-        self.shared.queue.lock().unwrap().admission.len()
+        relock(&self.shared.queue).admission.len()
     }
 
     /// Drain the queue, stop the lanes, and return lifetime stats.
@@ -306,17 +546,25 @@ impl StreamService {
         let handles = std::mem::take(&mut self.lanes);
         let lanes: Vec<LaneStats> =
             handles.into_iter().map(|h| h.join().unwrap_or_default()).collect();
+        let mut shed: Vec<(String, u64)> = relock(&self.shared.gates)
+            .iter()
+            .map(|(t, g)| (t.clone(), g.shed))
+            .collect();
+        shed.sort();
         ServiceStats {
             lanes,
             cache_hits: self.shared.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.shared.cache_misses.load(Ordering::Relaxed),
+            shed,
         }
     }
 
+    /// Close the queue and wake every lane.  Recovers a poisoned queue
+    /// lock: skipping the close there (the old `if let Ok` behavior)
+    /// meant one panicked holder made every lane park forever and
+    /// `shutdown()` join forever.
     fn close(&self) {
-        if let Ok(mut q) = self.shared.queue.lock() {
-            q.closed = true;
-        }
+        relock(&self.shared.queue).closed = true;
         self.shared.cv.notify_all();
     }
 }
@@ -350,7 +598,7 @@ fn lane_loop(lane: usize, shared: &Shared, cfg: &ServiceConfig) -> LaneStats {
         cfg.artifacts.as_ref().map(|v| v.iter().map(|s| s.as_str()).collect());
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = relock(&shared.queue);
             loop {
                 if let Some(job) = q.admission.pop() {
                     break job;
@@ -358,13 +606,18 @@ fn lane_loop(lane: usize, shared: &Shared, cfg: &ServiceConfig) -> LaneStats {
                 if q.closed {
                     return stats;
                 }
-                q = shared.cv.wait(q).unwrap();
+                // A poisoned wait still hands back the guard — recover
+                // it like every other lock here.
+                q = shared.cv.wait(q).unwrap_or_else(|e| e.into_inner());
             }
         };
-        let report = match &ctx {
+        let queue_wait_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
+        let mut report = match &ctx {
             Ok(ctx) => run_job(lane, shared, ctx, &job, allowed.as_ref()),
             Err(e) => error_report(lane, &job, format!("lane context failed to build: {e}")),
         };
+        report.queue_wait_ms = queue_wait_ms;
+        report.e2e_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
         stats.jobs += 1;
         if report.error.is_some() {
             stats.errors += 1;
@@ -391,6 +644,8 @@ fn error_report(lane: usize, job: &Job, error: String) -> SubmissionReport {
         lane,
         cache_hit: false,
         modeled_ms: f64::NAN,
+        queue_wait_ms: f64::NAN,
+        e2e_ms: f64::NAN,
         outputs: Vec::new(),
         error: Some(error),
     }
@@ -407,19 +662,9 @@ fn run_job(
     // descriptors, pass-through for pre-lowered plans.
     let (plan, streams, mut report) = match &job.req {
         Request::Corpus(c) => {
-            // Memoized policy decision (see `Shared::choices`): a
-            // benign race may compute it twice, but the decision is
-            // deterministic so both writers insert the same value.
-            let ckey: ChoiceKey = (c.suite.label(), c.app, c.config.clone());
-            let cached_choice = shared.choices.lock().unwrap().get(&ckey).copied();
-            let choice = match cached_choice {
-                Some(choice) => choice,
-                None => {
-                    let choice = shared.policy.choose(c, ctx.profile());
-                    shared.choices.lock().unwrap().insert(ckey, choice);
-                    choice
-                }
-            };
+            // Memoized policy decision — the same entry the submit
+            // path's admission charge consulted (`Shared::choice_for`).
+            let choice = shared.choice_for(c);
             let key: CacheKey = (c.suite.label(), c.app, c.config.clone(), choice.gran);
             // Slot creation is atomic under the cache lock, so exactly
             // one submission per key is the creator (= the cache miss);
@@ -427,7 +672,7 @@ fn run_job(
             // creator is still lowering — they block in `get_or_init`
             // below rather than duplicating the multi-MiB lowering.
             let (slot, cache_hit) = {
-                let mut cache = shared.cache.lock().unwrap();
+                let mut cache = relock(&shared.cache);
                 match cache.get(&key) {
                     Some(slot) => (slot.clone(), true),
                     None => {
@@ -461,6 +706,8 @@ fn run_job(
                 lane,
                 cache_hit,
                 modeled_ms: f64::NAN,
+                queue_wait_ms: f64::NAN,
+                e2e_ms: f64::NAN,
                 outputs: Vec::new(),
                 error: None,
             };
@@ -477,6 +724,8 @@ fn run_job(
                 lane,
                 cache_hit: false,
                 modeled_ms: f64::NAN,
+                queue_wait_ms: f64::NAN,
+                e2e_ms: f64::NAN,
                 outputs: Vec::new(),
                 error: None,
             };
@@ -553,5 +802,139 @@ mod tests {
         assert_eq!(a.pop(), Some(1));
         assert_eq!(a.pop(), Some(2));
         assert_eq!(a.pop(), None);
+    }
+
+    #[test]
+    fn token_bucket_sheds_floods_and_refills_idle_tenants() {
+        let cfg = AdmissionConfig { refill_ms_per_sec: 100.0, burst_ms: 200.0 };
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(&cfg, t0);
+        // A flooding tenant drains its burst, then is shed: 200 ms of
+        // budget covers exactly four 50 ms requests at the same instant.
+        for i in 0..4 {
+            assert!(b.try_charge(&cfg, t0, 50.0), "charge {i} fits the burst");
+        }
+        assert!(!b.try_charge(&cfg, t0, 50.0), "the fifth charge must be shed");
+        // An idle second refills 100 ms — two more requests, not three.
+        let t1 = t0 + std::time::Duration::from_secs(1);
+        assert!(b.try_charge(&cfg, t1, 50.0));
+        assert!(b.try_charge(&cfg, t1, 50.0));
+        assert!(!b.try_charge(&cfg, t1, 50.0));
+        // Refill caps at the burst: ten idle seconds don't bank 1000 ms.
+        let t2 = t1 + std::time::Duration::from_secs(10);
+        assert!(b.try_charge(&cfg, t2, 200.0), "balance is capped at burst_ms");
+        assert!(!b.try_charge(&cfg, t2, 1.0));
+        // A request larger than the burst is never admissible.
+        let mut fresh = TokenBucket::new(&cfg, t2);
+        assert!(!fresh.try_charge(&cfg, t2, 201.0), "over-burst request is over-budget forever");
+    }
+
+    fn corpus_config() -> BenchConfig {
+        crate::corpus::all_configs().into_iter().next().expect("corpus")
+    }
+
+    fn admission_service(admission: Option<AdmissionConfig>) -> StreamService {
+        StreamService::start(
+            ServiceConfig { lanes: 1, admission, ..ServiceConfig::default() },
+            Arc::new(AnalyticPolicy),
+        )
+        .expect("service starts")
+    }
+
+    #[test]
+    fn flooding_tenant_is_shed_while_idle_tenant_is_admitted() {
+        // Size the burst in units of the descriptor's own modeled cost
+        // so the test is profile-independent: ~3 requests fit, then
+        // the flooder is shed with Error::Admission while a tenant
+        // that has not spent its budget is still admitted.
+        let c = corpus_config();
+        let est = AnalyticPolicy.choose(&c, &DeviceProfile::mic31sp().simulation()).est_ms;
+        assert!(est.is_finite() && est > 0.0);
+        let service = admission_service(Some(AdmissionConfig {
+            refill_ms_per_sec: est * 1e-3, // effectively no refill within the test
+            burst_ms: est * 3.5,
+        }));
+        let mut admitted = Vec::new();
+        let mut shed = 0u64;
+        for _ in 0..20 {
+            match service.submit("flood", Request::Corpus(c.clone())) {
+                Ok(t) => admitted.push(t),
+                Err(Error::Admission { tenant, .. }) => {
+                    assert_eq!(tenant, "flood");
+                    shed += 1;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert!(!admitted.is_empty(), "the burst must admit something");
+        assert!(shed > 0, "a 20-deep flood must overrun a ~3-request burst");
+        assert_eq!(service.shed_count("flood"), shed);
+        // The well-behaved tenant's own bucket is untouched.
+        let ticket =
+            service.submit("idle", Request::Corpus(c)).expect("idle tenant admitted");
+        assert!(ticket.wait().expect("report").ok());
+        assert_eq!(service.shed_count("idle"), 0);
+        for t in admitted {
+            assert!(t.wait().expect("report").ok());
+        }
+        let stats = service.shutdown();
+        assert_eq!(stats.shed, vec![("flood".to_string(), shed)]);
+        assert_eq!(stats.shed_total(), shed);
+    }
+
+    #[test]
+    fn deadline_infeasible_request_is_rejected_at_submit() {
+        // Deadline checks apply even without token-bucket admission.
+        let service = admission_service(None);
+        let c = corpus_config();
+        let est = AnalyticPolicy.choose(&c, &service.shared.profile).est_ms;
+        assert!(est.is_finite() && est > 0.0);
+        let err = service
+            .submit_with_deadline("t", Request::Corpus(c.clone()), Some(est / 2.0))
+            .expect_err("a deadline below the modeled cost is infeasible");
+        assert!(
+            matches!(&err, Error::Admission { tenant, reason }
+                if tenant == "t" && reason.contains("deadline-infeasible")),
+            "{err}"
+        );
+        assert_eq!(service.shed_count("t"), 1);
+        // A feasible deadline admits normally.
+        let report = service
+            .submit_with_deadline("t", Request::Corpus(c), Some(est * 2.0))
+            .expect("feasible deadline admits")
+            .wait()
+            .expect("report");
+        assert!(report.ok());
+        service.shutdown();
+    }
+
+    #[test]
+    fn service_survives_poisoned_locks() {
+        // Poison every recoverable lock by panicking while holding it,
+        // then prove the service still admits, serves, and shuts down —
+        // the regression for the seven lock().unwrap() sites that used
+        // to cascade one panicked thread into a wedged service.
+        let service = admission_service(Some(AdmissionConfig::default()));
+        let shared = service.shared.clone();
+        std::thread::spawn(move || {
+            let _q = shared.queue.lock().unwrap();
+            let _c = shared.cache.lock().unwrap();
+            let _ch = shared.choices.lock().unwrap();
+            let _g = shared.gates.lock().unwrap();
+            panic!("poison all service locks");
+        })
+        .join()
+        .expect_err("the poisoning thread must panic");
+        assert!(service.shared.queue.is_poisoned(), "queue lock must actually be poisoned");
+        let report = service
+            .submit("tenant", Request::Corpus(corpus_config()))
+            .expect("poisoned service still admits")
+            .wait()
+            .expect("poisoned service still serves");
+        assert!(report.ok(), "{:?}", report.error);
+        assert_eq!(service.pending(), 0);
+        let stats = service.shutdown();
+        assert_eq!(stats.jobs(), 1);
+        assert_eq!(stats.errors(), 0);
     }
 }

@@ -9,13 +9,13 @@
 //! behind the same one-call interface, and the service consults
 //! whichever it was started with once per descriptor submission.
 
-use crate::analysis::{analytic_corpus_seed, corpus_features, KnnTuner};
+use crate::analysis::{analytic_corpus_choice, corpus_features, predict_plan_cost_ms, KnnTuner};
 use crate::corpus::BenchConfig;
 use crate::device::DeviceProfile;
-use crate::plan::{effective_corpus_granularity, Granularity};
+use crate::plan::{effective_corpus_granularity, lower_corpus_bulk, Granularity, CORPUS_BURNER};
 
 /// One policy decision for a descriptor submission.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PolicyChoice {
     pub streams: usize,
     /// Effective granularity in the descriptor's knob units (already
@@ -23,6 +23,11 @@ pub struct PolicyChoice {
     pub gran: usize,
     /// Whether the choice came from a learned model (vs analytic).
     pub learned: bool,
+    /// Modeled cost of one run at this choice, ms
+    /// ([`predict_plan_cost_ms`] over the bulk plan) — the admission
+    /// layer's token-bucket charge.  An estimate the planner computes
+    /// before any execution, never a measurement.
+    pub est_ms: f64,
 }
 
 /// Picks `(streams, granularity)` for a corpus descriptor on a given
@@ -39,7 +44,7 @@ pub trait TunePolicy: Send + Sync {
 
 /// The closed-form §6 seed: stream count from the stage balance,
 /// granularity from `m* = √(overlappable / c_task)`, mapped into the
-/// category's knob units ([`analytic_corpus_seed`]).
+/// category's knob units ([`analytic_corpus_choice`]).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct AnalyticPolicy;
 
@@ -49,8 +54,8 @@ impl TunePolicy for AnalyticPolicy {
     }
 
     fn choose(&self, c: &BenchConfig, profile: &DeviceProfile) -> PolicyChoice {
-        let (streams, gran) = analytic_corpus_seed(c, profile);
-        PolicyChoice { streams, gran, learned: false }
+        let (streams, gran, est_ms) = analytic_corpus_choice(c, profile);
+        PolicyChoice { streams, gran, learned: false, est_ms }
     }
 }
 
@@ -81,6 +86,15 @@ impl TunePolicy for LearnedPolicy {
                 streams,
                 gran: effective_corpus_granularity(c, Granularity::new(gran)).get(),
                 learned: true,
+                // The cost model stays analytic either way — the k-NN
+                // predicts knobs, not makespans — evaluated at the
+                // *learned* stream count so admission charges what
+                // this choice will actually pipeline to.
+                est_ms: predict_plan_cost_ms(
+                    &lower_corpus_bulk(c, CORPUS_BURNER),
+                    profile,
+                    streams,
+                ),
             },
             None => AnalyticPolicy.choose(c, profile),
         }
@@ -90,7 +104,7 @@ impl TunePolicy for LearnedPolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::analysis::Dataset;
+    use crate::analysis::{analytic_corpus_seed, Dataset};
 
     fn sim_profile() -> DeviceProfile {
         DeviceProfile::mic31sp().simulation()
@@ -104,6 +118,13 @@ mod tests {
             assert_eq!((choice.streams, choice.gran), analytic_corpus_seed(&c, &profile));
             assert!(!choice.learned);
             assert!(choice.streams >= 1 && choice.gran >= 1);
+            assert!(
+                choice.est_ms.is_finite() && choice.est_ms > 0.0,
+                "{}/{}: admission cost must be a positive modeled-ms estimate, got {}",
+                c.app,
+                c.config,
+                choice.est_ms
+            );
         }
     }
 

@@ -1,11 +1,31 @@
 //! In-crate utilities replacing external dependencies (offline build):
 //! a minimal JSON parser ([`json`]), a tiny CLI argument helper
 //! ([`cli`]), a seeded property-testing loop ([`prop`]), and shared
-//! result arithmetic ([`improvement_pct`]).
+//! result arithmetic ([`improvement_pct`], [`percentile`]).
 
 pub mod cli;
 pub mod json;
 pub mod prop;
+
+/// Nearest-rank percentile of a sample: the smallest value such that
+/// at least `p`% of the (finite) sample is ≤ it — the load-harness
+/// latency statistic (p50/p99), chosen over interpolation because a
+/// reported p99 should be a latency that actually occurred.
+///
+/// Guards, not panics: non-finite entries are ignored, and an empty or
+/// all-NaN sample yields `NaN` ("unknown", rendered as `-`), matching
+/// the [`improvement_pct`] convention.  `p` is clamped to `[0, 100]`.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut finite: Vec<f64> = xs.iter().copied().filter(|v| v.is_finite()).collect();
+    if finite.is_empty() {
+        return f64::NAN;
+    }
+    finite.sort_by(f64::total_cmp);
+    let p = p.clamp(0.0, 100.0);
+    // Nearest rank: ⌈p/100 · n⌉, 1-based; p = 0 maps to the minimum.
+    let rank = ((p / 100.0) * finite.len() as f64).ceil() as usize;
+    finite[rank.max(1) - 1]
+}
 
 /// The paper's improvement metric, `(reference / candidate − 1) · 100`,
 /// NaN-guarded: a non-finite operand or a zero/negative candidate time
@@ -24,7 +44,33 @@ pub fn improvement_pct(reference_ms: f64, candidate_ms: f64) -> f64 {
 
 #[cfg(test)]
 mod tests {
-    use super::improvement_pct;
+    use super::{improvement_pct, percentile};
+
+    #[test]
+    fn percentile_nearest_rank_on_known_vectors() {
+        let xs = [15.0, 20.0, 35.0, 40.0, 50.0];
+        // Classic nearest-rank worked example: p30 of this vector is 20.
+        assert_eq!(percentile(&xs, 30.0), 20.0);
+        assert_eq!(percentile(&xs, 0.0), 15.0);
+        assert_eq!(percentile(&xs, 100.0), 50.0);
+        // p50 of 1..=100 is 50; p99 is 99 (a value that occurred, not
+        // an interpolation).
+        let v: Vec<f64> = (1..=100).map(f64::from).collect();
+        assert_eq!(percentile(&v, 50.0), 50.0);
+        assert_eq!(percentile(&v, 99.0), 99.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_guards_empty_and_nan() {
+        assert!(percentile(&[], 50.0).is_nan());
+        assert!(percentile(&[f64::NAN, f64::INFINITY], 50.0).is_nan());
+        // Non-finite entries are ignored, not sorted into the ranks.
+        assert_eq!(percentile(&[f64::NAN, 3.0, 1.0, 2.0], 50.0), 2.0);
+        // Out-of-range p clamps instead of indexing out of bounds.
+        assert_eq!(percentile(&[1.0, 2.0], -5.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 250.0), 2.0);
+    }
 
     #[test]
     fn improvement_pct_is_the_paper_metric() {

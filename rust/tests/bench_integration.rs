@@ -1,0 +1,152 @@
+//! Load-harness integration tests (ISSUE acceptance): under an
+//! open-loop flood with cost-based admission on, the flooding tenant
+//! is shed (nonzero shed count) while a well-behaved tenant keeps
+//! completing with a bounded latency tail; the emitted bench JSON
+//! parses and carries the versioned schema; and a client that panics
+//! after submitting cannot take the service down for anyone else.
+
+use std::sync::Arc;
+
+use hetstream::device::{DeviceProfile, TimeMode};
+use hetstream::experiments::{demo_roster, run_bench, BenchOpts};
+use hetstream::metrics::{bench_json, BENCH_SCHEMA};
+use hetstream::service::{
+    AdmissionConfig, AnalyticPolicy, Request, ServiceConfig, StreamService, TunePolicy,
+};
+use hetstream::util::json::Json;
+
+fn base_opts() -> BenchOpts {
+    BenchOpts {
+        tenants: 2,
+        rate: 5.0,
+        secs: 2.0,
+        open_loop: false,
+        lanes: 4,
+        flood: None,
+        admission: None,
+        profile: DeviceProfile::mic31sp(),
+        time_mode: TimeMode::Virtual,
+    }
+}
+
+/// The summed modeled cost of one full roster cycle, under the same
+/// dilated profile the service lanes model — the unit the admission
+/// bucket is sized in, so the tests hold for any profile or per-app
+/// cost spread (workers cycle the roster, so k requests cost at most
+/// ceil(k / 8) cycles).
+fn roster_cycle_est_ms() -> f64 {
+    let profile = DeviceProfile::mic31sp().simulation();
+    let est: f64 =
+        demo_roster(8).iter().map(|c| AnalyticPolicy.choose(c, &profile).est_ms).sum();
+    assert!(est.is_finite() && est > 0.0, "roster costs must be modeled: {est}");
+    est
+}
+
+#[test]
+fn open_loop_flood_is_shed_while_well_behaved_tenant_stays_bounded() {
+    // Budget in units of the roster's own modeled cost: the
+    // well-behaved tenant's ~10 requests span at most two roster
+    // cycles, so a 2.5-cycle burst admits all of them; the flooder's
+    // ~200 requests (20x rate) demand ~25 cycles and must overrun.
+    // Refill is negligible so the bound is the burst, deterministically.
+    let cycle = roster_cycle_est_ms();
+    let opts = BenchOpts {
+        open_loop: true,
+        flood: Some((0, 20.0)),
+        admission: Some(AdmissionConfig {
+            refill_ms_per_sec: cycle * 1e-3,
+            burst_ms: cycle * 2.5,
+        }),
+        ..base_opts()
+    };
+    let report = run_bench(&opts, Arc::new(AnalyticPolicy)).expect("bench runs");
+
+    assert!(report.completed > 0, "the bench must complete work");
+    let flooder = &report.per_tenant[0];
+    let good = &report.per_tenant[1];
+    assert_eq!(flooder.tenant, "tenant-0");
+    assert!(
+        flooder.shed > 0,
+        "a 20x open-loop flood must overrun its token bucket (shed = {})",
+        flooder.shed
+    );
+    assert_eq!(good.shed, 0, "the well-behaved tenant fits its budget");
+    assert!(good.completed > 0, "the well-behaved tenant keeps completing under the flood");
+    assert_eq!(good.errors, 0);
+    // Bounded tail: sheds happen at submit (never queued), so the
+    // admitted work drains across 4 lanes well inside this generous
+    // wall-clock bound.
+    assert!(
+        good.p99_ms.is_finite() && good.p99_ms < 2_000.0,
+        "well-behaved p99 must stay bounded under the flood, got {} ms",
+        good.p99_ms
+    );
+
+    // The emitted artifact parses with the crate's own JSON parser and
+    // carries the versioned schema + the full series.
+    let doc = Json::parse(&bench_json(&report)).expect("bench JSON parses");
+    assert_eq!(doc.get("schema").and_then(Json::as_str), Some(BENCH_SCHEMA));
+    let ticks = doc.get("ticks").and_then(Json::as_arr).expect("ticks array");
+    assert_eq!(ticks.len(), report.ticks.len());
+    let tenants = doc.get("per_tenant").and_then(Json::as_arr).expect("per_tenant array");
+    assert_eq!(tenants.len(), 2);
+    assert_eq!(tenants[0].get("shed").and_then(Json::as_u64), Some(flooder.shed));
+    let totals = doc.get("totals").expect("totals");
+    assert_eq!(totals.get("completed").and_then(Json::as_u64), Some(report.completed));
+    assert_eq!(totals.get("rejected").and_then(Json::as_u64), Some(report.rejected));
+}
+
+#[test]
+fn closed_loop_bench_without_admission_completes_everything() {
+    let opts = BenchOpts { rate: 3.0, secs: 1.0, ..base_opts() };
+    let report = run_bench(&opts, Arc::new(AnalyticPolicy)).expect("bench runs");
+    // ceil(rate * secs) submissions per tenant, nothing shed.
+    let expected = (opts.rate * opts.secs).ceil() as u64 * opts.tenants as u64;
+    assert_eq!(report.completed, expected, "admission off must complete every submission");
+    assert_eq!(report.rejected, 0);
+    assert_eq!(report.errors, 0);
+    // The tick series partitions the totals.
+    let tick_sum: u64 = report.ticks.iter().map(|t| t.completed).sum();
+    assert_eq!(tick_sum, report.completed);
+    assert!(report.lat_p99_ms.is_finite() && report.lat_p99_ms >= report.lat_p50_ms);
+    assert!(report.modeled_total_ms > 0.0);
+}
+
+#[test]
+fn panicking_client_does_not_wedge_the_service_for_others() {
+    // A client thread that submits and then panics (dropping its
+    // ticket mid-flight) must not poison anything another tenant can
+    // observe: submissions after the crash still serve, and shutdown
+    // still drains — the integration twin of the service's internal
+    // poisoned-lock unit test.
+    let c = demo_roster(1).into_iter().next().expect("roster");
+    let service = StreamService::start(
+        ServiceConfig {
+            lanes: 2,
+            runs: 1,
+            profile: DeviceProfile::mic31sp(),
+            time_mode: TimeMode::Virtual,
+            artifacts: Some(vec![hetstream::plan::CORPUS_BURNER.into()]),
+            admission: Some(AdmissionConfig::default()),
+        },
+        Arc::new(AnalyticPolicy),
+    )
+    .expect("service starts");
+    std::thread::scope(|s| {
+        let handle = s.spawn(|| {
+            let _ticket =
+                service.submit("crasher", Request::Corpus(c.clone())).expect("admitted");
+            panic!("client crashes with a ticket in flight");
+        });
+        assert!(handle.join().is_err(), "the client must have panicked");
+    });
+    let report = service
+        .submit("survivor", Request::Corpus(c))
+        .expect("service still admits after a client crash")
+        .wait()
+        .expect("service still serves");
+    assert!(report.ok(), "{:?}", report.error);
+    let stats = service.shutdown();
+    assert_eq!(stats.errors(), 0);
+    assert!(stats.jobs() >= 1, "the survivor's job must have run");
+}

@@ -42,6 +42,9 @@ fn service_config(lanes: usize) -> ServiceConfig {
         profile: DeviceProfile::mic31sp(),
         time_mode: hetstream::device::TimeMode::Virtual,
         artifacts: Some(vec![CORPUS_BURNER.into()]),
+        // These tests exercise execution equivalence, not load
+        // shedding — admit everything.
+        admission: None,
     }
 }
 
@@ -103,7 +106,8 @@ fn concurrent_service_submissions_match_serial_bitwise() {
                     let mut got = Vec::new();
                     for (i, c) in sample.iter().enumerate().skip(client).step_by(3) {
                         let ticket = service
-                            .submit(&format!("client-{client}"), Request::Corpus(c.clone()));
+                            .submit(&format!("client-{client}"), Request::Corpus(c.clone()))
+                            .expect("admitted");
                         got.push((i, ticket.wait().expect("report")));
                     }
                     got
@@ -138,8 +142,9 @@ fn service_plan_cache_hits_on_repeat_submissions() {
     let c = all_configs().into_iter().next().expect("corpus");
     let service =
         StreamService::start(service_config(2), Arc::new(AnalyticPolicy)).expect("service");
-    let tickets: Vec<_> =
-        (0..3).map(|_| service.submit("tenant", Request::Corpus(c.clone()))).collect();
+    let tickets: Vec<_> = (0..3)
+        .map(|_| service.submit("tenant", Request::Corpus(c.clone())).expect("admitted"))
+        .collect();
     let reports: Vec<_> = tickets.into_iter().map(|t| t.wait().expect("report")).collect();
     let stats = service.shutdown();
 
@@ -163,6 +168,7 @@ fn pre_lowered_plan_submissions_bypass_policy_and_cache() {
         StreamService::start(service_config(1), Arc::new(AnalyticPolicy)).expect("service");
     let report = service
         .submit("tenant", Request::Plan { plan: plan.clone(), streams: 2 })
+        .expect("admitted")
         .wait()
         .expect("report");
     let stats = service.shutdown();
@@ -188,6 +194,7 @@ fn service_refuses_plans_outside_its_artifact_subset() {
         StreamService::start(service_config(1), Arc::new(AnalyticPolicy)).expect("service");
     let report = service
         .submit("tenant", Request::Plan { plan: Arc::new(p), streams: 2 })
+        .expect("admitted")
         .wait()
         .expect("report, not a hang");
     let stats = service.shutdown();
@@ -205,7 +212,7 @@ fn dropped_service_releases_its_lanes() {
     let service =
         StreamService::start(service_config(2), Arc::new(AnalyticPolicy)).expect("service");
     let c = all_configs().into_iter().next().expect("corpus");
-    let ticket = service.submit("tenant", Request::Corpus(c));
+    let ticket = service.submit("tenant", Request::Corpus(c)).expect("admitted");
     drop(service);
     // The in-flight job still completes (lanes drain the queue before
     // exiting), so the ticket resolves rather than erroring.

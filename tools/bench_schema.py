@@ -1,0 +1,248 @@
+#!/usr/bin/env python3
+"""Validate BENCH_*.json load-harness artifacts (DESIGN.md §Bench).
+
+``repro bench --json PATH`` emits a versioned per-second time series
+(schema tag ``hetstream-bench-v1``); this checker is the offline half
+of the contract: any bench artifact, from any commit, must carry the
+expected shape so runs stay comparable across PRs.
+
+Usage:
+    python3 tools/bench_schema.py BENCH_*.json   # validate artifacts
+    python3 tools/bench_schema.py --selftest     # validator self-check
+
+Exits non-zero on the first malformed file (or a broken validator).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+SCHEMA = "hetstream-bench-v1"
+
+# (key, type) for each required section.  ``float`` accepts ints and
+# None — the emitter writes ``null`` for NaN statistics (e.g. the p99
+# of a tick that completed nothing).
+CONFIG_KEYS = [
+    ("tenants", int),
+    ("rate", float),
+    ("secs", float),
+    ("open_loop", bool),
+    ("lanes", int),
+    ("profile", str),
+    ("time_mode", str),
+]
+TOTALS_KEYS = [
+    ("completed", int),
+    ("rejected", int),
+    ("errors", int),
+    ("duration_s", float),
+    ("throughput_rps", float),
+    ("queue_wait_avg_ms", float),
+    ("modeled_total_ms", float),
+]
+LATENCY_KEYS = [("avg", float), ("p50", float), ("p99", float)]
+CACHE_KEYS = [("hits", int), ("misses", int)]
+TENANT_KEYS = [
+    ("tenant", str),
+    ("completed", int),
+    ("shed", int),
+    ("errors", int),
+    ("p99_ms", float),
+]
+TICK_KEYS = [
+    ("t_s", int),
+    ("completed", int),
+    ("rejected", int),
+    ("errors", int),
+    ("throughput_rps", float),
+    ("lat_avg_ms", float),
+    ("lat_p50_ms", float),
+    ("lat_p99_ms", float),
+    ("queue_avg_ms", float),
+]
+
+
+def _check_fields(obj, keys, where):
+    errors = []
+    if not isinstance(obj, dict):
+        return [f"{where}: expected an object, got {type(obj).__name__}"]
+    for key, ty in keys:
+        if key not in obj:
+            errors.append(f"{where}: missing key `{key}`")
+            continue
+        v = obj[key]
+        if ty is float:
+            # Numeric statistic: ints, floats, or null (NaN placeholder).
+            if v is not None and not isinstance(v, (int, float)):
+                errors.append(f"{where}.{key}: expected number or null, got {v!r}")
+        elif ty is int:
+            # bool is an int subclass in Python; counts must be true ints.
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                errors.append(f"{where}.{key}: expected non-negative integer, got {v!r}")
+        elif not isinstance(v, ty):
+            errors.append(f"{where}.{key}: expected {ty.__name__}, got {v!r}")
+    return errors
+
+
+def validate(doc) -> list[str]:
+    """All schema violations in a parsed bench document (empty = valid)."""
+    if not isinstance(doc, dict):
+        return [f"top level: expected an object, got {type(doc).__name__}"]
+    errors = []
+    if doc.get("schema") != SCHEMA:
+        errors.append(f"schema: expected `{SCHEMA}`, got {doc.get('schema')!r}")
+    errors += _check_fields(doc.get("config"), CONFIG_KEYS, "config")
+    totals = doc.get("totals")
+    errors += _check_fields(totals, TOTALS_KEYS, "totals")
+    if isinstance(totals, dict):
+        errors += _check_fields(totals.get("latency_ms"), LATENCY_KEYS, "totals.latency_ms")
+        errors += _check_fields(totals.get("cache"), CACHE_KEYS, "totals.cache")
+
+    tenants = doc.get("per_tenant")
+    if not isinstance(tenants, list):
+        errors.append("per_tenant: expected an array")
+        tenants = []
+    for i, t in enumerate(tenants):
+        errors += _check_fields(t, TENANT_KEYS, f"per_tenant[{i}]")
+
+    ticks = doc.get("ticks")
+    if not isinstance(ticks, list) or not ticks:
+        errors.append("ticks: expected a non-empty array (the per-second series)")
+        ticks = []
+    for i, t in enumerate(ticks):
+        errors += _check_fields(t, TICK_KEYS, f"ticks[{i}]")
+        if isinstance(t, dict) and t.get("t_s") != i:
+            errors.append(f"ticks[{i}].t_s: series must be contiguous from 0, got {t.get('t_s')!r}")
+
+    # Cross-section consistency: the series and the per-tenant rows
+    # must partition the totals.
+    if not errors:
+        for key in ("completed", "rejected", "errors"):
+            tick_sum = sum(t[key] for t in ticks)
+            if tick_sum != totals[key]:
+                errors.append(f"ticks.{key} sums to {tick_sum}, totals say {totals[key]}")
+        tenant_done = sum(t["completed"] for t in tenants)
+        if tenants and tenant_done != totals["completed"]:
+            errors.append(
+                f"per_tenant.completed sums to {tenant_done}, totals say {totals['completed']}"
+            )
+    return errors
+
+
+def _sample_doc():
+    return {
+        "schema": SCHEMA,
+        "config": {
+            "tenants": 1,
+            "rate": 5.0,
+            "secs": 1.0,
+            "open_loop": False,
+            "lanes": 2,
+            "profile": "mic31sp-sim",
+            "time_mode": "virtual",
+        },
+        "totals": {
+            "completed": 5,
+            "rejected": 1,
+            "errors": 0,
+            "duration_s": 1.2,
+            "throughput_rps": 4.17,
+            "latency_ms": {"avg": 3.0, "p50": 2.5, "p99": 6.0},
+            "queue_wait_avg_ms": 0.4,
+            "modeled_total_ms": 120.0,
+            "cache": {"hits": 4, "misses": 1},
+        },
+        "per_tenant": [
+            {"tenant": "tenant-0", "completed": 5, "shed": 1, "errors": 0, "p99_ms": 6.0},
+        ],
+        "ticks": [
+            {
+                "t_s": 0,
+                "completed": 4,
+                "rejected": 1,
+                "errors": 0,
+                "throughput_rps": 4.0,
+                "lat_avg_ms": 3.0,
+                "lat_p50_ms": 2.5,
+                "lat_p99_ms": 6.0,
+                "queue_avg_ms": 0.4,
+            },
+            {
+                "t_s": 1,
+                "completed": 1,
+                "rejected": 0,
+                "errors": 0,
+                "throughput_rps": 1.0,
+                "lat_avg_ms": None,
+                "lat_p50_ms": None,
+                "lat_p99_ms": None,
+                "queue_avg_ms": None,
+            },
+        ],
+    }
+
+
+def selftest() -> int:
+    """The validator must accept a known-good doc and reject mutations."""
+    good = _sample_doc()
+    errs = validate(good)
+    assert not errs, f"sample document must validate: {errs}"
+
+    def mutated(**changes):
+        doc = json.loads(json.dumps(good))
+        for path, value in changes.items():
+            cursor = doc
+            *parents, leaf = path.split(".")
+            for p in parents:
+                cursor = cursor[int(p)] if p.isdigit() else cursor[p]
+            if value is ...:
+                del cursor[leaf]
+            else:
+                cursor[leaf] = value
+        return doc
+
+    bad = [
+        ("wrong schema tag", mutated(schema="hetstream-bench-v0")),
+        ("missing totals key", mutated(**{"totals.completed": ...})),
+        ("negative count", mutated(**{"totals.rejected": -1})),
+        ("string where number", mutated(**{"totals.latency_ms.p99": "fast"})),
+        ("non-contiguous ticks", mutated(**{"ticks.1.t_s": 7})),
+        ("tick sum mismatch", mutated(**{"ticks.0.completed": 17})),
+        ("empty series", mutated(ticks=[])),
+        ("tenant sum mismatch", mutated(**{"per_tenant.0.completed": 2})),
+    ]
+    for label, doc in bad:
+        assert validate(doc), f"validator must reject: {label}"
+    print(f"bench_schema selftest OK ({len(bad)} rejections)")
+    return 0
+
+
+def main(argv) -> int:
+    if not argv or argv == ["--selftest"]:
+        if argv:
+            return selftest()
+        print(__doc__)
+        return 2
+    status = 0
+    for path in argv:
+        try:
+            with open(path, encoding="utf-8") as fh:
+                doc = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: unreadable bench JSON: {e}", file=sys.stderr)
+            return 1
+        errs = validate(doc)
+        if errs:
+            for e in errs:
+                print(f"{path}: {e}", file=sys.stderr)
+            status = 1
+        else:
+            ticks = len(doc["ticks"])
+            done = doc["totals"]["completed"]
+            print(f"{path}: OK ({ticks} tick(s), {done} completed)")
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
