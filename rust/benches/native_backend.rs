@@ -1,0 +1,85 @@
+//! Native-backend throughput bench (DESIGN.md §Native performance):
+//! real host execution of the mixed-category serve roster through one
+//! `NativeBackend` per pool width, so the arena pool, the atomic
+//! ready-queue scheduler, and the vectorized simkern kernels are all
+//! on the measured path.  Reports plans/s per width and the scaling
+//! ratio against width 1.
+//!
+//! `cargo bench --bench native_backend`            full width sweep
+//! `cargo bench --bench native_backend -- --smoke` CI: one pass, no
+//!                                                 timing gate
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use hetstream::device::DeviceProfile;
+use hetstream::experiments::demo_roster;
+use hetstream::plan::{
+    lower_corpus_streamed_at, Backend, Granularity, NativeBackend, RunConfig, CORPUS_BURNER,
+};
+use hetstream::service::{AnalyticPolicy, TunePolicy};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let ncores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    // The serve/bench roster, tuned by the same analytic policy the
+    // service consults — every Table-2 plan shape is in the mix.
+    let profile = DeviceProfile::mic31sp().simulation();
+    let plans: Vec<_> = demo_roster(8)
+        .iter()
+        .map(|c| {
+            let choice = AnalyticPolicy.choose(c, &profile);
+            lower_corpus_streamed_at(c, CORPUS_BURNER, Granularity::new(choice.gran))
+        })
+        .collect();
+
+    // Pool widths 1, 2, 4, ... up to every host core (smoke: just the
+    // two endpoints — CI proves the harness runs, not the numbers).
+    let mut widths = vec![1usize];
+    let mut w = 2;
+    while w < ncores {
+        widths.push(w);
+        w *= 2;
+    }
+    if ncores > 1 {
+        widths.push(ncores);
+    }
+    if smoke {
+        widths = vec![1, ncores];
+    }
+    widths.dedup();
+
+    let passes = if smoke { 1 } else { 5 };
+    println!(
+        "native backend: {} roster plans x {passes} pass(es), {ncores} host core(s)",
+        plans.len()
+    );
+    let mut base = f64::NAN;
+    for &width in &widths {
+        // One backend per width: the first (warmup) pass populates the
+        // arena pool; every measured run reuses its storage.
+        let backend = NativeBackend::new();
+        for p in &plans {
+            black_box(&backend.run(p, RunConfig::streams(width)).expect("warmup run").outputs);
+        }
+        let t0 = Instant::now();
+        for _ in 0..passes {
+            for p in &plans {
+                let run = backend.run(p, RunConfig::streams(width)).expect("native run");
+                black_box(&run.outputs);
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let total = (passes * plans.len()) as f64;
+        let rate = total / secs;
+        if width == 1 {
+            base = rate;
+        }
+        println!(
+            "pool width {width:3}: {rate:8.1} plans/s ({:6.2} ms/plan, {:.2}x vs width 1)",
+            1e3 * secs / total,
+            rate / base,
+        );
+    }
+}

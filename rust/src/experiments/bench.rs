@@ -28,7 +28,9 @@ use std::time::{Duration, Instant};
 
 use crate::device::{DeviceProfile, TimeMode};
 use crate::metrics::{latency_stats, BenchReport, BenchTick, Table, TenantTotals};
-use crate::service::{AdmissionConfig, Request, ServiceConfig, StreamService, Ticket, TunePolicy};
+use crate::service::{
+    AdmissionConfig, ExecBackend, Request, ServiceConfig, StreamService, Ticket, TunePolicy,
+};
 use crate::util::percentile;
 use crate::{Error, Result};
 
@@ -58,6 +60,9 @@ pub struct BenchOpts {
     pub admission: Option<AdmissionConfig>,
     pub profile: DeviceProfile,
     pub time_mode: TimeMode,
+    /// Lane execution backend; on [`ExecBackend::Native`] the latency
+    /// numbers are real host execution, not simulation cost.
+    pub backend: ExecBackend,
 }
 
 /// One submission outcome, stamped with its completion (or shed) time
@@ -90,6 +95,7 @@ pub fn run_bench(opts: &BenchOpts, policy: Arc<dyn TunePolicy>) -> Result<BenchR
             runs: 1,
             profile: opts.profile.clone(),
             time_mode: opts.time_mode,
+            backend: opts.backend,
             artifacts: Some(vec![crate::plan::CORPUS_BURNER.into()]),
             admission: opts.admission,
         },
@@ -197,6 +203,7 @@ pub fn run_bench(opts: &BenchOpts, policy: Arc<dyn TunePolicy>) -> Result<BenchR
         lanes: opts.lanes.max(1),
         profile: opts.profile.name.clone(),
         time_mode: format!("{:?}", opts.time_mode).to_lowercase(),
+        backend: opts.backend.label().into(),
         ticks,
         per_tenant,
         completed,
@@ -333,12 +340,13 @@ pub fn bench_table(r: &BenchReport) -> Table {
     let num = |v: f64| if v.is_finite() { format!("{v:.2}") } else { "-".into() };
     let mut t = Table::new(
         format!(
-            "Load bench — {} tenant(s) x {:.0} req/s for {:.0} s ({}), {} lanes",
+            "Load bench — {} tenant(s) x {:.0} req/s for {:.0} s ({}), {} lanes, {} backend",
             r.tenants,
             r.rate,
             r.secs,
             if r.open_loop { "open-loop" } else { "closed-loop" },
             r.lanes,
+            r.backend,
         ),
         &[
             "t (s)", "done", "shed", "err", "thr (req/s)", "avg (ms)", "p50 (ms)", "p99 (ms)",

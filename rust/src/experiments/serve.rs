@@ -23,9 +23,10 @@ use crate::device::{DeviceProfile, TimeMode};
 use crate::hstreams::ContextBuilder;
 use crate::metrics::{median_duration, Table};
 use crate::plan::{
-    lower_corpus_streamed_at, Backend, Granularity, RunConfig, SimBackend, CORPUS_BURNER,
+    lower_corpus_streamed_at, Backend, Granularity, NativeBackend, RunConfig, SimBackend,
+    CORPUS_BURNER,
 };
-use crate::service::{Request, ServiceConfig, StreamService, TunePolicy};
+use crate::service::{ExecBackend, Request, ServiceConfig, StreamService, TunePolicy};
 use crate::{Error, Result};
 
 use super::sweep::representative_configs;
@@ -45,6 +46,11 @@ pub struct ServeSummary {
     /// The clock the demo ran under — decides which speedup below is
     /// the headline.
     pub time_mode: TimeMode,
+    /// The execution backend the lanes (and the serial baseline) ran
+    /// on.  On [`ExecBackend::Native`] every per-submission time is
+    /// **real wall-clock execution** — there is no modeled physics —
+    /// so the wall speedup is the headline regardless of `time_mode`.
+    pub backend: ExecBackend,
     /// Wall-clock time for the service to drain every submission.
     /// Under [`TimeMode::Virtual`] this is **host simulation cost**
     /// (CPU scheduling noise), not modeled physics — report it as
@@ -79,8 +85,12 @@ impl ServeSummary {
     /// The speedup to headline for this run's clock: modeled under
     /// [`TimeMode::Virtual`] (wall time there measures host scheduling
     /// noise, not the modeled system), wall under
-    /// [`TimeMode::Wallclock`].
+    /// [`TimeMode::Wallclock`] — and always wall on the native
+    /// backend, where every time is real execution.
     pub fn headline_speedup(&self) -> f64 {
+        if self.backend == ExecBackend::Native {
+            return self.wall_speedup;
+        }
         match self.time_mode {
             TimeMode::Virtual => self.modeled_speedup,
             TimeMode::Wallclock => self.wall_speedup,
@@ -121,11 +131,12 @@ pub fn demo_roster(n: usize) -> Vec<BenchConfig> {
 }
 
 /// Run the serving demo: `n` submissions from [`TENANTS`] tenants onto
-/// `lanes` engine lanes, vs the serial baseline.  Returns the
-/// per-submission table and the aggregate summary.
+/// `lanes` engine lanes, vs a serial baseline on the same `backend`.
+/// Returns the per-submission table and the aggregate summary.
 pub fn serve_demo(
     profile: &DeviceProfile,
     time_mode: TimeMode,
+    backend: ExecBackend,
     n: usize,
     lanes: usize,
     runs: usize,
@@ -137,22 +148,31 @@ pub fn serve_demo(
     let runs = runs.max(1);
     let roster = demo_roster(n);
 
-    // --- serial baseline: one engine, submissions one at a time -----
-    let ctx = ContextBuilder::new()
-        .profile(profile.clone())
-        .time_mode(time_mode)
-        .only_artifacts(vec![CORPUS_BURNER])
-        .build()?;
-    let backend = SimBackend::new(&ctx);
+    // --- serial baseline: one executor, submissions one at a time ---
+    // Matched to the service's backend so the wall comparison is
+    // apples-to-apples (sim vs sim, or real execution vs real
+    // execution).
+    let ctx;
+    let serial_exec: Box<dyn Backend + '_> = match backend {
+        ExecBackend::Sim => {
+            ctx = ContextBuilder::new()
+                .profile(profile.clone())
+                .time_mode(time_mode)
+                .only_artifacts(vec![CORPUS_BURNER])
+                .build()?;
+            Box::new(SimBackend::new(&ctx))
+        }
+        ExecBackend::Native => Box::new(NativeBackend::new()),
+    };
     let serial_t0 = Instant::now();
     let mut serial: Vec<(f64, Vec<Vec<u8>>)> = Vec::with_capacity(n);
     for c in &roster {
-        let choice = policy.choose(c, ctx.profile());
+        let choice = policy.choose(c, profile);
         let plan = lower_corpus_streamed_at(c, CORPUS_BURNER, Granularity::new(choice.gran));
         let mut samples = Vec::with_capacity(runs);
         let mut outputs = Vec::new();
         for rep in 0..runs {
-            let run = backend.run(&plan, RunConfig::streams(choice.streams))?;
+            let run = serial_exec.run(&plan, RunConfig::streams(choice.streams))?;
             samples.push(run.wall);
             if rep == 0 {
                 outputs = run.outputs;
@@ -169,6 +189,7 @@ pub fn serve_demo(
             runs,
             profile: profile.clone(),
             time_mode,
+            backend,
             artifacts: Some(vec![CORPUS_BURNER.into()]),
             // The demo is closed-loop over a fixed roster — admission
             // control is the load harness's concern (`repro bench`).
@@ -190,10 +211,22 @@ pub fn serve_demo(
 
     // --- per-submission table + bitwise validation ------------------
     let mut t = Table::new(
-        format!("Serving demo — {n} submissions, {lanes} lanes, policy-tuned"),
+        format!(
+            "Serving demo — {n} submissions, {lanes} lanes, {} backend, policy-tuned",
+            backend.label()
+        ),
         &[
-            "#", "tenant", "app", "category", "(s,g)", "policy", "lane", "cache",
-            "modeled (ms)", "valid",
+            "#",
+            "tenant",
+            "app",
+            "category",
+            "(s,g)",
+            "policy",
+            "lane",
+            "cache",
+            // On native lanes the per-job time is real execution.
+            if backend == ExecBackend::Native { "wall (ms)" } else { "modeled (ms)" },
+            "valid",
         ],
     );
     let mut validated = true;
@@ -202,9 +235,10 @@ pub fn serve_demo(
         let (serial_ms, serial_outputs) = &serial[i];
         // Bitwise: the service must hand back exactly the bytes the
         // serial twin produced; under the virtual clock the modeled
-        // makespan must agree too (quiesced-lane determinism).
+        // makespan must agree too (quiesced-lane determinism — sim
+        // only; native times are real wall clock and vary run to run).
         let mut ok = r.ok() && r.outputs == *serial_outputs;
-        if time_mode == TimeMode::Virtual {
+        if backend == ExecBackend::Sim && time_mode == TimeMode::Virtual {
             ok &= r.modeled_ms == *serial_ms;
         }
         validated &= ok;
@@ -247,6 +281,7 @@ pub fn serve_demo(
         submissions: n,
         lanes,
         time_mode,
+        backend,
         service_wall,
         serial_wall,
         wall_speedup,

@@ -68,6 +68,7 @@ COMMANDS:
               picked (streams x granularity)), reported against serial
               execution of the same submission set
                 --demo N [--lanes L=4] [--runs R=1]
+                [--backend sim|native  native = real host execution]
                 [--learned [--dataset PATH] [--k K=5]]
   bench       Multi-tenant load harness over the StreamService: one
               worker per tenant paces mixed-category corpus submissions
@@ -78,6 +79,7 @@ COMMANDS:
               reports a per-second throughput + avg/p50/p99 latency
               series, per-tenant sheds, and the BENCH_*.json artifact
                 [--tenants T=4] [--rate R=50] [--secs S=2] [--lanes L=4]
+                [--backend sim|native  native = real host execution]
                 [--open-loop] [--flood F  tenant 0 at F x rate]
                 [--admit MS=1000  bucket refill in modeled-ms per wall
                  second (burst 2x); 0 = admit everything]
@@ -112,6 +114,16 @@ fn time_mode_from(args: &Args) -> Result<hetstream::device::TimeMode> {
         Some("virtual") => Ok(hetstream::device::TimeMode::Virtual),
         Some("wallclock") | Some("wall") => Ok(hetstream::device::TimeMode::Wallclock),
         Some(other) => Err(cli_err(format!("unknown time mode `{other}`"))),
+    }
+}
+
+/// Parse `--backend sim|native` (default sim) for service commands.
+fn backend_from(args: &Args) -> Result<hetstream::service::ExecBackend> {
+    match args.get("backend") {
+        None => Ok(hetstream::service::ExecBackend::Sim),
+        Some(s) => {
+            hetstream::service::ExecBackend::parse(s).map_err(|e| cli_err(e.to_string()))
+        }
     }
 }
 
@@ -554,7 +566,7 @@ fn main() -> Result<()> {
             if n == 0 {
                 return Err(cli_err(
                     "usage: repro serve --demo N [--lanes L] [--runs R] \
-                     [--learned [--dataset PATH]]"
+                     [--backend sim|native] [--learned [--dataset PATH]]"
                         .into(),
                 ));
             }
@@ -563,29 +575,40 @@ fn main() -> Result<()> {
             // the paper's 11 — this is a serving demo, not a benchmark.
             let runs = args.get_usize("runs", 1);
             let time_mode = time_mode_from(&args)?;
+            let backend = backend_from(&args)?;
             // Policy features/predictions must see the same (dilated)
             // profile the service lanes model.
             let policy = policy_from(&args, &profile.simulation())?;
-            let (table, s) = experiments::serve_demo(&profile, time_mode, n, lanes, runs, policy)
-                .map_err(|e| cli_err(e.to_string()))?;
+            let (table, s) =
+                experiments::serve_demo(&profile, time_mode, backend, n, lanes, runs, policy)
+                    .map_err(|e| cli_err(e.to_string()))?;
             println!("{}", table.markdown());
             // Under the virtual clock the headline is the *modeled*
             // speedup (simulated physics); wall time there measures the
             // host CPU cost of simulating — scheduling noise, reported
-            // but labeled as such.
-            let (headline_label, wall_note) = match s.time_mode {
-                hetstream::device::TimeMode::Virtual => {
-                    ("modeled", " (host simulation cost under the virtual clock)")
+            // but labeled as such.  On the native backend every number
+            // is real host execution, so wall is the headline.
+            let native = s.backend == hetstream::service::ExecBackend::Native;
+            let (headline_label, wall_note) = if native {
+                ("wall", " (real native execution)")
+            } else {
+                match s.time_mode {
+                    hetstream::device::TimeMode::Virtual => {
+                        ("modeled", " (host simulation cost under the virtual clock)")
+                    }
+                    hetstream::device::TimeMode::Wallclock => ("wall", ""),
                 }
-                hetstream::device::TimeMode::Wallclock => ("wall", ""),
             };
             println!(
-                "service: {} submissions on {} lanes | {:.2}x {headline_label} speedup | \
-                 modeled total {:.2} ms, fleet drain {:.2} ms | \
+                "service: {} submissions on {} lanes ({} backend) | \
+                 {:.2}x {headline_label} speedup | \
+                 {} total {:.2} ms, fleet drain {:.2} ms | \
                  plan cache {} hit(s) / {} miss(es)",
                 s.submissions,
                 s.lanes,
+                s.backend.label(),
                 s.headline_speedup(),
+                if native { "exec" } else { "modeled" },
                 s.modeled_total_ms,
                 s.modeled_drain_ms,
                 s.cache_hits,
@@ -634,6 +657,7 @@ fn main() -> Result<()> {
                 admission,
                 profile: profile.clone(),
                 time_mode: time_mode_from(&args)?,
+                backend: backend_from(&args)?,
             };
             let report =
                 experiments::run_bench(&opts, policy).map_err(|e| cli_err(e.to_string()))?;

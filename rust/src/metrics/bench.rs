@@ -11,8 +11,11 @@ use crate::util::json::escape;
 use crate::util::percentile;
 
 /// Schema tag stamped into every bench JSON (bump on shape changes;
-/// `tools/bench_schema.py` validates against it).
-pub const BENCH_SCHEMA: &str = "hetstream-bench-v1";
+/// `tools/bench_schema.py` validates against it).  v2 added
+/// `config.backend` (`"sim"` / `"native"`) — on native the latency
+/// numbers are real host execution, so cross-commit comparisons must
+/// never mix backends.
+pub const BENCH_SCHEMA: &str = "hetstream-bench-v2";
 
 /// One reporter tick: everything that *completed or was shed* during
 /// second `t_s` of the run, with latency statistics over the tick's
@@ -63,6 +66,8 @@ pub struct BenchReport {
     pub lanes: usize,
     pub profile: String,
     pub time_mode: String,
+    /// Lane execution backend label (`"sim"` / `"native"`).
+    pub backend: String,
     pub ticks: Vec<BenchTick>,
     pub per_tenant: Vec<TenantTotals>,
     pub completed: u64,
@@ -100,7 +105,8 @@ pub fn bench_json(r: &BenchReport) -> String {
     let num = |v: f64| if v.is_finite() { format!("{v:.6}") } else { "null".into() };
     let mut s = format!(
         "{{\"schema\":\"{}\",\"config\":{{\"tenants\":{},\"rate\":{},\"secs\":{},\
-         \"open_loop\":{},\"lanes\":{},\"profile\":\"{}\",\"time_mode\":\"{}\"}},\
+         \"open_loop\":{},\"lanes\":{},\"profile\":\"{}\",\"time_mode\":\"{}\",\
+         \"backend\":\"{}\"}},\
          \"totals\":{{\"completed\":{},\"rejected\":{},\"errors\":{},\"duration_s\":{},\
          \"throughput_rps\":{},\"latency_ms\":{{\"avg\":{},\"p50\":{},\"p99\":{}}},\
          \"queue_wait_avg_ms\":{},\"modeled_total_ms\":{},\
@@ -113,6 +119,7 @@ pub fn bench_json(r: &BenchReport) -> String {
         r.lanes,
         escape(&r.profile),
         escape(&r.time_mode),
+        escape(&r.backend),
         r.completed,
         r.rejected,
         r.errors,
@@ -188,6 +195,7 @@ mod tests {
             lanes: 4,
             profile: "mic31sp-sim".into(),
             time_mode: "virtual".into(),
+            backend: "sim".into(),
             ticks: vec![
                 BenchTick {
                     t_s: 0,
@@ -241,6 +249,7 @@ mod tests {
         let cfg = doc.get("config").expect("config");
         assert_eq!(cfg.get("tenants").and_then(Json::as_usize), Some(2));
         assert_eq!(cfg.get("open_loop").and_then(Json::as_bool), Some(true));
+        assert_eq!(cfg.get("backend").and_then(Json::as_str), Some("sim"));
         let totals = doc.get("totals").expect("totals");
         assert_eq!(totals.get("completed").and_then(Json::as_u64), Some(3));
         let lat = totals.get("latency_ms").expect("latency");

@@ -35,17 +35,39 @@
 //! it concurrently, which is sound because a plan whose conflicting
 //! accesses are unordered under this contract would already be
 //! nondeterministic on the engine path at some stream count.
+//!
+//! **Native throughput** (DESIGN.md §Native performance).  The native
+//! pool is built for wall-clock speed, not just correctness:
+//!
+//! - *Arena reuse* — device buffers live in one pooled
+//!   [`ArenaPool`] storage per run instead of per-plan zeroed
+//!   vectors; checkout clears only the plan's must-zero spans
+//!   ([`ArenaLayout`]).
+//! - *Lock-light readiness* — op completion decrements successor
+//!   indegrees with atomics (`AcqRel`, the release-sequence idiom);
+//!   the only lock is a short one around the ready queue, and buffer
+//!   regions are accessed without any per-buffer lock because the
+//!   dependency contract orders every conflicting access pair and the
+//!   scheduler's atomics carry the happens-before edges.
+//! - *Locality-aware ordering* — the ready queue is a min-heap on
+//!   `(lane, program index)` and a worker that makes its own lane's
+//!   next op ready runs it immediately (chain-following), so one
+//!   worker drains a task's H2D→KEX→D2H back-to-back while the heap
+//!   keeps wavefront diagonal slots adjacent.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 use std::path::PathBuf;
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
 use crate::hstreams::Context;
+use crate::runtime::{ArenaLayout, ArenaPool};
 use crate::{Error, Result};
 
 use super::exec::{Executor, PlanRun};
-use super::{PlanOpKind, PlanRegion, Slot, StreamPlan};
+use super::{PlanOpKind, Slot, StreamPlan};
 
 /// Per-submission knobs of one plan execution.
 #[derive(Debug, Clone)]
@@ -171,19 +193,21 @@ impl Backend for SimBackend<'_> {
 /// byte buffers through the `simkern` interpreter at wall-clock time.
 /// `RunConfig::streams` is the pool width; each worker thread owns its
 /// own `ArtifactStore` (the PJRT feature's handles are `!Send`, same
-/// per-thread idiom as the compute engine).  Device buffers are
-/// zero-initialized host vectors — the same lazy-zero semantics the
-/// simulated arena provides, which corpus plans rely on for their
-/// never-written zero-source buffers.
+/// per-thread idiom as the compute engine).  Device buffers live in a
+/// pooled arena reused across runs ([`ArenaPool`]); the lazy-zero
+/// semantics corpus plans rely on for never-written zero-source
+/// buffers are preserved by clearing exactly the plan's must-zero
+/// spans at checkout ([`ArenaLayout`]).
 pub struct NativeBackend {
     artifacts_dir: PathBuf,
+    arenas: Arc<ArenaPool>,
 }
 
 impl NativeBackend {
     /// A backend over the default artifacts directory (builtin manifest
     /// fallback when none is materialized on disk).
     pub fn new() -> Self {
-        Self { artifacts_dir: crate::artifacts_dir() }
+        Self { artifacts_dir: crate::artifacts_dir(), arenas: Arc::new(ArenaPool::new()) }
     }
 
     /// Override where `manifest.json` / HLO artifacts live.
@@ -209,9 +233,10 @@ impl Backend for NativeBackend {
         let workers = cfg.streams.max(1);
         let plan = plan.clone();
         let dir = self.artifacts_dir.clone();
+        let arenas = Arc::clone(&self.arenas);
         let coordinator = std::thread::Builder::new()
             .name("hetstream-native".into())
-            .spawn(move || run_native(&plan, &dir, workers))
+            .spawn(move || run_native(&plan, &dir, workers, &arenas))
             .map_err(|e| Error::Stream(format!("spawn native coordinator: {e}")))?;
         Ok(RunHandle {
             backend: "native",
@@ -254,118 +279,261 @@ fn native_deps(plan: &StreamPlan) -> Vec<Vec<usize>> {
     deps
 }
 
-/// Shared scheduler state of one native run (behind the pool's mutex).
-struct NativeState {
-    indeg: Vec<usize>,
-    ready: Vec<usize>,
-    /// Ops not yet retired; 0 = drained.
-    remaining: usize,
-    error: Option<Error>,
+/// Ready-queue priority of op `i`: broadcasts first, then task lanes
+/// in ascending order, program order within a lane.  Popping the
+/// minimum makes a worker drain the lowest runnable chain front-to-
+/// back (H2D→KEX→D2H cache-warm) and keeps the slots of a wavefront
+/// diagonal — consecutive lanes at consecutive indices — adjacent.
+fn order_key(slot: Slot, i: usize) -> u64 {
+    let lane = match slot {
+        Slot::Broadcast => 0u64,
+        Slot::Task(l) => l as u64 + 1,
+    };
+    (lane << 32) | i as u64
 }
 
-/// Wakes the pool if a worker unwinds mid-op: without this, a panic
-/// inside an op (poisoned buffer mutex, a slice shape `validate`
-/// doesn't cover) would leave `remaining > 0` with no error and no
-/// notification — sibling workers would park on the condvar forever
-/// and `RunHandle::wait` would hang instead of reporting the panic.
-/// The panicking worker's own unwind happens *outside* the state
-/// mutex, so recording the error here cannot deadlock or poison it.
+/// Lock a mutex, tolerating poison: scheduler state stays usable even
+/// if some thread panicked while holding it.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Shared scheduler of one native run.  Readiness is tracked with
+/// atomics — completing an op takes **no lock** unless it makes
+/// off-lane successors ready (then one short push under the queue
+/// mutex).  `done` flips under the queue mutex before the condvar
+/// broadcast, so parked workers cannot miss the wakeup.
+struct Scheduler {
+    indeg: Vec<AtomicUsize>,
+    /// Ops not yet retired; 0 = drained.
+    remaining: AtomicUsize,
+    /// Min-heap of [`order_key`]s of ready ops.
+    queue: Mutex<BinaryHeap<Reverse<u64>>>,
+    cv: Condvar,
+    /// Drained or failed — workers exit when set.
+    done: AtomicBool,
+    error: Mutex<Option<Error>>,
+}
+
+impl Scheduler {
+    fn new(deps: &[Vec<usize>], plan: &StreamPlan) -> Self {
+        let indeg: Vec<AtomicUsize> = deps.iter().map(|d| AtomicUsize::new(d.len())).collect();
+        let mut queue = BinaryHeap::new();
+        for (i, d) in deps.iter().enumerate() {
+            if d.is_empty() {
+                queue.push(Reverse(order_key(plan.ops[i].slot, i)));
+            }
+        }
+        Self {
+            indeg,
+            remaining: AtomicUsize::new(plan.ops.len()),
+            queue: Mutex::new(queue),
+            cv: Condvar::new(),
+            // An empty plan is born drained.
+            done: AtomicBool::new(plan.ops.is_empty()),
+            error: Mutex::new(None),
+        }
+    }
+
+    /// Next ready op in (lane, program order), or `None` when the run
+    /// is drained or failed.  Parks on the condvar while empty.
+    fn next(&self) -> Option<usize> {
+        let mut q = relock(&self.queue);
+        loop {
+            if self.done.load(Ordering::Acquire) {
+                return None;
+            }
+            if let Some(Reverse(key)) = q.pop() {
+                return Some((key & 0xFFFF_FFFF) as usize);
+            }
+            q = self.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Publish newly-ready ops to the shared queue.
+    fn push(&self, keys: &[u64]) {
+        if keys.is_empty() {
+            return;
+        }
+        let mut q = relock(&self.queue);
+        for &k in keys {
+            q.push(Reverse(k));
+        }
+        drop(q);
+        if keys.len() == 1 {
+            self.cv.notify_one();
+        } else {
+            self.cv.notify_all();
+        }
+    }
+
+    /// End the run (drained or failed) and wake every parked worker.
+    /// Holding the queue mutex across the flag flip closes the
+    /// check-then-park race in [`Scheduler::next`].
+    fn finish(&self) {
+        let _q = relock(&self.queue);
+        self.done.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+
+    /// Record the first error and end the run.
+    fn fail(&self, e: Error) {
+        relock(&self.error).get_or_insert(e);
+        self.finish();
+    }
+}
+
+/// Ends the run if a worker unwinds mid-op: without this, a panic
+/// inside an op (a slice shape `validate` doesn't cover) would leave
+/// `remaining > 0` with no error and no notification — sibling workers
+/// would park on the condvar forever and `RunHandle::wait` would hang
+/// instead of reporting the panic.  The panicking worker's own unwind
+/// happens *outside* the scheduler locks, so recording the error here
+/// cannot deadlock.
 struct PanicGuard<'a> {
-    state: &'a Mutex<NativeState>,
-    cv: &'a Condvar,
+    sched: &'a Scheduler,
     armed: bool,
 }
 
 impl Drop for PanicGuard<'_> {
     fn drop(&mut self) {
         if self.armed {
-            if let Ok(mut s) = self.state.lock() {
-                s.error.get_or_insert(Error::Stream("native backend worker panicked".into()));
-            }
-            self.cv.notify_all();
+            self.sched.fail(Error::Stream("native backend worker panicked".into()));
         }
     }
 }
 
-/// Execute `plan`'s DAG on `workers` host threads and assemble the
-/// outputs — dependency-driven, order-free: any ready op may run on
-/// any worker, which is sound under the backend dependency contract.
-fn run_native(plan: &StreamPlan, dir: &std::path::Path, workers: usize) -> Result<PlanRun> {
+/// A raw shared view of one byte allocation (the run's arena or one
+/// host output), accessed concurrently by the pool **without locks**.
+///
+/// Safety argument: the dependency contract orders every pair of ops
+/// whose regions conflict (PR-5's offline mirror proves it over every
+/// corpus lowering), and the scheduler's `AcqRel` indegree decrements
+/// plus the queue mutex carry happens-before along every dependency
+/// edge — so no two ops ever touch overlapping bytes concurrently,
+/// and every read observes all writes ordered before it.  Each access
+/// is bounds-asserted against the allocation.
+struct SharedBytes {
+    ptr: *mut u8,
+    len: usize,
+}
+
+unsafe impl Send for SharedBytes {}
+unsafe impl Sync for SharedBytes {}
+
+impl SharedBytes {
+    /// View over `v`'s heap allocation (stable while `v` is neither
+    /// resized nor dropped — the run holds it for its whole scope).
+    fn of(v: &mut [u8]) -> Self {
+        Self { ptr: v.as_mut_ptr(), len: v.len() }
+    }
+
+    /// Borrow `len` bytes at `off` (see type-level safety argument).
+    fn slice(&self, off: usize, len: usize) -> &[u8] {
+        assert!(off + len <= self.len, "native read out of bounds");
+        unsafe { std::slice::from_raw_parts(self.ptr.add(off), len) }
+    }
+
+    /// Copy `src` into the view at `off`.
+    fn write(&self, off: usize, src: &[u8]) {
+        assert!(off + src.len() <= self.len, "native write out of bounds");
+        unsafe { std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.add(off), src.len()) }
+    }
+}
+
+/// Execute `plan`'s DAG on `workers` host threads over a pooled arena
+/// and assemble the outputs — dependency-driven, locality-ordered (see
+/// module docs for the scheduling and memory policy).
+fn run_native(
+    plan: &StreamPlan,
+    dir: &std::path::Path,
+    workers: usize,
+    arenas: &ArenaPool,
+) -> Result<PlanRun> {
     let t0 = Instant::now();
     let deps = native_deps(plan);
     let mut children: Vec<Vec<usize>> = vec![Vec::new(); plan.ops.len()];
-    let mut indeg = vec![0usize; plan.ops.len()];
     for (i, d) in deps.iter().enumerate() {
-        indeg[i] = d.len();
         for &p in d {
             children[p].push(i);
         }
     }
-    let ready: Vec<usize> = (0..plan.ops.len()).filter(|&i| indeg[i] == 0).collect();
-    let state = Mutex::new(NativeState { indeg, ready, remaining: plan.ops.len(), error: None });
-    let cv = Condvar::new();
+    let sched = Scheduler::new(&deps, plan);
 
-    let bufs: Vec<Mutex<Vec<u8>>> = plan.bufs.iter().map(|&b| Mutex::new(vec![0u8; b])).collect();
-    let outputs: Vec<Mutex<Vec<u8>>> =
-        plan.outputs.iter().map(|&b| Mutex::new(vec![0u8; b])).collect();
-    let h2d_bytes = std::sync::atomic::AtomicU64::new(0);
-    let d2h_bytes = std::sync::atomic::AtomicU64::new(0);
+    let layout = ArenaLayout::of(plan);
+    let mut storage = arenas.checkout(&layout);
+    let arena = SharedBytes::of(&mut storage[..layout.total()]);
+    let mut out_storage: Vec<Vec<u8>> = plan.outputs.iter().map(|&b| vec![0u8; b]).collect();
+    let outputs: Vec<SharedBytes> = out_storage.iter_mut().map(|v| SharedBytes::of(v)).collect();
+    let h2d_bytes = AtomicU64::new(0);
+    let d2h_bytes = AtomicU64::new(0);
 
     // Load only what the plan launches (fast startup; unknown names
     // fail inside execute_bytes with a clean signature error).
     let artifact_names = plan.artifacts();
+    // Never park more workers than the plan has ops.
+    let workers = workers.max(1).min(plan.ops.len().max(1));
 
     std::thread::scope(|scope| {
-        for w in 0..workers.max(1) {
-            let (state, cv) = (&state, &cv);
-            let (bufs, outputs) = (&bufs, &outputs);
+        for w in 0..workers {
+            let (sched, layout, arena) = (&sched, &layout, &arena);
+            let (outputs, children) = (&outputs, &children);
             let (h2d_bytes, d2h_bytes) = (&h2d_bytes, &d2h_bytes);
-            let (plan, children, names) = (&*plan, &children, &artifact_names);
+            let (plan, names) = (&*plan, &artifact_names);
             std::thread::Builder::new()
                 .name(format!("hetstream-native-{w}"))
                 .spawn_scoped(scope, move || {
                     // Per-worker store, like the compute engine's workers.
                     let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
                     let store = crate::runtime::ArtifactStore::load_subset(dir, &refs);
+                    // Chain-following: the same-lane successor this
+                    // worker made ready, run next without re-queueing.
+                    let mut next: Option<usize> = None;
                     loop {
-                        let i = {
-                            let mut s = state.lock().unwrap();
-                            loop {
-                                if s.error.is_some() || s.remaining == 0 {
-                                    return;
-                                }
-                                if let Some(i) = s.ready.pop() {
-                                    break i;
-                                }
-                                s = cv.wait(s).unwrap();
-                            }
+                        let i = match next.take() {
+                            Some(i) => i,
+                            None => match sched.next() {
+                                Some(i) => i,
+                                None => return,
+                            },
                         };
-                        let mut guard = PanicGuard { state, cv, armed: true };
+                        if sched.done.load(Ordering::Acquire) {
+                            return; // another worker failed mid-chain
+                        }
+                        let mut guard = PanicGuard { sched, armed: true };
                         let result = store
                             .as_ref()
                             .map_err(|e| Error::Stream(e.to_string()))
                             .and_then(|store| {
-                                exec_native_op(plan, i, store, bufs, outputs, h2d_bytes, d2h_bytes)
+                                exec_native_op(
+                                    plan, i, store, layout, arena, outputs, h2d_bytes, d2h_bytes,
+                                )
                             });
                         guard.armed = false;
                         drop(guard);
-                        let mut s = state.lock().unwrap();
-                        match result {
-                            Err(e) => {
-                                s.error.get_or_insert(e);
-                                cv.notify_all();
-                                return;
-                            }
-                            Ok(()) => {
-                                s.remaining -= 1;
-                                for &c in &children[i] {
-                                    s.indeg[c] -= 1;
-                                    if s.indeg[c] == 0 {
-                                        s.ready.push(c);
-                                    }
+                        if let Err(e) = result {
+                            sched.fail(e);
+                            return;
+                        }
+                        // Retire: release successors with atomics; the
+                        // last decrement of each indegree sees every
+                        // predecessor's writes (release sequence).
+                        let lane = plan.ops[i].slot;
+                        let mut spill: Vec<u64> = Vec::new();
+                        for &c in children[i].iter() {
+                            if sched.indeg[c].fetch_sub(1, Ordering::AcqRel) == 1 {
+                                let same_lane = plan.ops[c].slot == lane;
+                                if next.is_none() && same_lane {
+                                    next = Some(c);
+                                } else {
+                                    spill.push(order_key(plan.ops[c].slot, c));
                                 }
-                                cv.notify_all();
                             }
+                        }
+                        sched.push(&spill);
+                        if sched.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                            sched.finish();
+                            return;
                         }
                     }
                 })
@@ -373,49 +541,51 @@ fn run_native(plan: &StreamPlan, dir: &std::path::Path, workers: usize) -> Resul
         }
     });
 
-    let mut s = state.into_inner().unwrap();
-    if let Some(e) = s.error.take() {
+    arenas.checkin(storage);
+    if let Some(e) = relock(&sched.error).take() {
         return Err(e);
     }
     Ok(PlanRun {
         wall: t0.elapsed(),
-        outputs: outputs.into_iter().map(|m| m.into_inner().unwrap()).collect(),
+        outputs: out_storage,
         h2d_bytes: h2d_bytes.into_inner(),
         d2h_bytes: d2h_bytes.into_inner(),
         tasks: plan.tasks(),
     })
 }
 
-/// Execute one op of a native run.
+/// Execute one op of a native run directly over the shared arena —
+/// kernel inputs are borrowed from the arena (no staging copy), and
+/// every write lands in place.
+#[allow(clippy::too_many_arguments)]
 fn exec_native_op(
     plan: &StreamPlan,
     i: usize,
     store: &crate::runtime::ArtifactStore,
-    bufs: &[Mutex<Vec<u8>>],
-    outputs: &[Mutex<Vec<u8>>],
-    h2d_bytes: &std::sync::atomic::AtomicU64,
-    d2h_bytes: &std::sync::atomic::AtomicU64,
+    layout: &ArenaLayout,
+    arena: &SharedBytes,
+    outputs: &[SharedBytes],
+    h2d_bytes: &AtomicU64,
+    d2h_bytes: &AtomicU64,
 ) -> Result<()> {
-    use std::sync::atomic::Ordering::Relaxed;
-    let read_region = |r: &PlanRegion| -> Vec<u8> {
-        bufs[r.buf].lock().unwrap()[r.off..r.off + r.len].to_vec()
-    };
     match &plan.ops[i].kind {
         PlanOpKind::H2d { src, dst } => {
-            let mut b = bufs[dst.buf].lock().unwrap();
-            b[dst.off..dst.off + dst.len].copy_from_slice(&src.data[src.off..src.off + src.len]);
-            h2d_bytes.fetch_add(dst.len as u64, Relaxed);
+            let at = layout.offset(dst.buf) + dst.off;
+            arena.write(at, &src.data[src.off..src.off + src.len]);
+            h2d_bytes.fetch_add(dst.len as u64, Ordering::Relaxed);
         }
         PlanOpKind::Kex { artifact, inputs, outputs: kouts, repeats, .. } => {
-            // One buffered copy in, execute, one copy out — the same
-            // host-side shadow of device memory traffic the engine
-            // workers perform.
-            let input_bytes: Vec<Vec<u8>> = inputs.iter().map(read_region).collect();
-            let input_refs: Vec<&[u8]> = input_bytes.iter().map(|b| b.as_slice()).collect();
-            let mut results = Vec::new();
-            for _ in 0..(*repeats).max(1) {
-                results = store.execute_bytes(artifact, &input_refs)?;
-            }
+            let results = {
+                let input_refs: Vec<&[u8]> = inputs
+                    .iter()
+                    .map(|r| arena.slice(layout.offset(r.buf) + r.off, r.len))
+                    .collect();
+                let mut results = Vec::new();
+                for _ in 0..(*repeats).max(1) {
+                    results = store.execute_bytes(artifact, &input_refs)?;
+                }
+                results
+            };
             for (region, bytes) in kouts.iter().zip(&results) {
                 if bytes.len() != region.len {
                     return Err(Error::Plan(format!(
@@ -425,15 +595,13 @@ fn exec_native_op(
                         region.len
                     )));
                 }
-                let mut b = bufs[region.buf].lock().unwrap();
-                b[region.off..region.off + region.len].copy_from_slice(bytes);
+                arena.write(layout.offset(region.buf) + region.off, bytes);
             }
         }
         PlanOpKind::D2h { src, output, off } => {
-            let bytes = read_region(src);
-            let mut o = outputs[*output].lock().unwrap();
-            o[*off..*off + src.len].copy_from_slice(&bytes);
-            d2h_bytes.fetch_add(src.len as u64, Relaxed);
+            let bytes = arena.slice(layout.offset(src.buf) + src.off, src.len);
+            outputs[*output].write(*off, bytes);
+            d2h_bytes.fetch_add(src.len as u64, Ordering::Relaxed);
         }
     }
     Ok(())
@@ -442,7 +610,7 @@ fn exec_native_op(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::plan::HostSlice;
+    use crate::plan::{HostSlice, PlanRegion};
     use std::sync::Arc;
 
     fn vecadd_plan(chunks: usize) -> StreamPlan {
@@ -485,6 +653,21 @@ mod tests {
         p
     }
 
+    /// A plan whose second output half streams from a never-written
+    /// zero-source buffer — the corpus shape arena reuse must not
+    /// corrupt with a prior run's bytes.
+    fn zero_tail_plan(n: usize) -> StreamPlan {
+        let payload = Arc::new(vec![0x5Au8; n]);
+        let mut p = StreamPlan::new("zero-tail");
+        let out = p.output(2 * n);
+        let data = p.buf(n);
+        let zsrc = p.buf(n); // never written
+        p.h2d(Slot::Task(0), HostSlice::whole(payload), PlanRegion::whole(data, n), vec![]);
+        p.d2h(Slot::Task(0), PlanRegion::whole(data, n), out, 0, vec![]);
+        p.d2h(Slot::Task(1), PlanRegion::whole(zsrc, n), out, n, vec![]);
+        p
+    }
+
     #[test]
     fn native_deps_chain_lanes_and_barrier_broadcasts() {
         let src = Arc::new(vec![0u8; 16]);
@@ -506,6 +689,26 @@ mod tests {
     }
 
     #[test]
+    fn order_key_groups_lanes_after_broadcasts() {
+        let mut keys = vec![
+            order_key(Slot::Task(1), 5),
+            order_key(Slot::Broadcast, 2),
+            order_key(Slot::Task(0), 7),
+            order_key(Slot::Task(0), 3),
+            order_key(Slot::Broadcast, 0),
+        ];
+        keys.sort_unstable();
+        let want = vec![
+            order_key(Slot::Broadcast, 0),
+            order_key(Slot::Broadcast, 2),
+            order_key(Slot::Task(0), 3),
+            order_key(Slot::Task(0), 7),
+            order_key(Slot::Task(1), 5),
+        ];
+        assert_eq!(keys, want, "broadcasts first, then lanes in program order");
+    }
+
+    #[test]
     fn native_backend_matches_sim_backend_bitwise() {
         let plan = vecadd_plan(3);
         let ctx = crate::hstreams::ContextBuilder::new()
@@ -523,6 +726,26 @@ mod tests {
             assert_eq!(sim.h2d_bytes, run.h2d_bytes);
             assert_eq!(sim.d2h_bytes, run.d2h_bytes);
             assert_eq!(sim.tasks, run.tasks);
+        }
+    }
+
+    #[test]
+    fn reused_arena_never_leaks_into_zero_source_buffers() {
+        // Regression for arena pooling: a plan that fills buffers with
+        // nonzero bytes, then (on the same backend, hence the same
+        // pooled storage) a plan with a never-written zero-source
+        // buffer; the second run must match a fresh backend bitwise.
+        let dirty = vecadd_plan(2);
+        let zplan = zero_tail_plan(4096);
+        let fresh = NativeBackend::new().run(&zplan, RunConfig::streams(2)).expect("fresh");
+        assert!(fresh.outputs[0][4096..].iter().all(|&b| b == 0), "tail streams from zeros");
+
+        let reused = NativeBackend::new();
+        for width in [1usize, 2] {
+            reused.run(&dirty, RunConfig::streams(width)).expect("dirty run");
+            assert!(reused.arenas.pooled() > 0, "arena returned to the pool");
+            let again = reused.run(&zplan, RunConfig::streams(width)).expect("reused run");
+            assert_eq!(fresh.outputs, again.outputs, "stale bytes leaked at width {width}");
         }
     }
 

@@ -1,0 +1,310 @@
+//! Pooled host arenas for the native backend (DESIGN.md §Native
+//! performance).
+//!
+//! The naive native path allocated and zeroed one `Vec<u8>` per plan
+//! buffer per run; at service rates that is megabytes of `memset` per
+//! submission before the first op executes.  This module replaces it
+//! with a **reused arena**: one contiguous allocation per
+//! [`ArenaPool`] slot, checked out at submit and returned at drain,
+//! holding every logical buffer of the plan at a 64-byte-aligned
+//! offset ([`ArenaLayout`]).
+//!
+//! Reuse breaks the simulated device's lazy-zero semantics — corpus
+//! plans contain *zero-source* buffers that are read without ever
+//! being written and rely on fresh storage reading back as zeros.  So
+//! the layout carries the plan's **must-zero spans**: the exact byte
+//! ranges some op reads that no earlier op wrote.  Checkout clears
+//! only those spans; every other byte is overwritten before it is
+//! read, so stale contents are unobservable.
+//!
+//! The span analysis scans ops in plan (topological-submission) order,
+//! which is sound because the backend dependency contract orders every
+//! conflicting access pair and `deps` point strictly backwards: if a
+//! read and a write of the same bytes are both present, their partial
+//! order matches their index order.  A read at index `i` therefore
+//! observes exactly the writes at indices `< i` — anything else is
+//! initial (zero) storage.  The Python mirror re-derives this analysis
+//! and replays every corpus lowering over a deliberately dirty arena
+//! (`tools/mirror/tuner_mirror.py --arena-check`).
+
+use std::sync::Mutex;
+
+use crate::plan::{PlanOpKind, PlanRegion, StreamPlan};
+
+/// Buffer alignment inside the arena: one cache line, so adjacent
+/// buffers never false-share and vector loads start aligned.
+pub const ARENA_ALIGN: usize = 64;
+
+/// Arenas kept per pool; runs beyond this allocate fresh and drop at
+/// drain (a backend normally runs one plan at a time per lane, so the
+/// pool stays at 1-2 slots).
+const MAX_POOLED: usize = 4;
+
+/// Where each logical buffer of one plan lives inside an arena, plus
+/// the byte spans that must be zeroed before the run (see module docs).
+#[derive(Debug, Clone)]
+pub struct ArenaLayout {
+    /// Arena byte offset of each `StreamPlan::bufs` entry.
+    offsets: Vec<usize>,
+    /// Total arena bytes (last offset + aligned size).
+    total: usize,
+    /// Absolute half-open `(start, end)` arena spans read by some op
+    /// without a preceding write — cleared at checkout.
+    zero_spans: Vec<(usize, usize)>,
+}
+
+impl ArenaLayout {
+    /// Lay out `plan`'s buffers and compute its must-zero spans.
+    pub fn of(plan: &StreamPlan) -> Self {
+        let mut offsets = Vec::with_capacity(plan.bufs.len());
+        let mut total = 0usize;
+        for &b in &plan.bufs {
+            offsets.push(total);
+            total += b.div_ceil(ARENA_ALIGN) * ARENA_ALIGN;
+        }
+
+        // Per-buffer interval bookkeeping in op order: a read byte not
+        // covered by an earlier write must come up zero.
+        let mut written = vec![IntervalSet::default(); plan.bufs.len()];
+        let mut zero = vec![IntervalSet::default(); plan.bufs.len()];
+        let mut record_read = |written: &[IntervalSet], zero: &mut [IntervalSet], r: &PlanRegion| {
+            for (s, e) in written[r.buf].uncovered(r.off, r.off + r.len) {
+                zero[r.buf].insert(s, e);
+            }
+        };
+        for op in &plan.ops {
+            match &op.kind {
+                PlanOpKind::H2d { dst, .. } => written[dst.buf].insert(dst.off, dst.off + dst.len),
+                PlanOpKind::Kex { inputs, outputs, .. } => {
+                    for r in inputs {
+                        record_read(&written, &mut zero, r);
+                    }
+                    for r in outputs {
+                        written[r.buf].insert(r.off, r.off + r.len);
+                    }
+                }
+                PlanOpKind::D2h { src, .. } => record_read(&written, &mut zero, src),
+            }
+        }
+        let mut zero_spans = Vec::new();
+        for (b, set) in zero.iter().enumerate() {
+            for &(s, e) in set.spans() {
+                zero_spans.push((offsets[b] + s, offsets[b] + e));
+            }
+        }
+        Self { offsets, total, zero_spans }
+    }
+
+    /// Arena byte offset of logical buffer `buf`.
+    pub fn offset(&self, buf: usize) -> usize {
+        self.offsets[buf]
+    }
+
+    /// Total arena bytes the layout needs.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// The must-zero spans (absolute arena coordinates), for tests.
+    pub fn zero_spans(&self) -> &[(usize, usize)] {
+        &self.zero_spans
+    }
+}
+
+/// A pool of reusable arena storages.  `checkout` hands back a vector
+/// of at least `layout.total()` bytes with the layout's must-zero
+/// spans cleared and **everything else stale** (bytes from whatever
+/// plan ran in the slot before); `checkin` returns it for the next
+/// run.  Both ends are a short lock around a `Vec` push/pop — the pool
+/// is never held across a run.
+#[derive(Debug, Default)]
+pub struct ArenaPool {
+    slots: Mutex<Vec<Vec<u8>>>,
+}
+
+impl ArenaPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Storage ready for one run under `layout` (see type docs).
+    pub fn checkout(&self, layout: &ArenaLayout) -> Vec<u8> {
+        let mut storage = match self.slots.lock() {
+            Ok(mut s) => s.pop().unwrap_or_default(),
+            Err(e) => e.into_inner().pop().unwrap_or_default(),
+        };
+        if storage.len() < layout.total {
+            // Growth zero-fills the new tail; reused bytes stay stale.
+            storage.resize(layout.total, 0);
+        }
+        for &(s, e) in &layout.zero_spans {
+            storage[s..e].fill(0);
+        }
+        storage
+    }
+
+    /// Return a storage for reuse (dropped if the pool is full).
+    pub fn checkin(&self, storage: Vec<u8>) {
+        let mut slots = match self.slots.lock() {
+            Ok(s) => s,
+            Err(e) => e.into_inner(),
+        };
+        if slots.len() < MAX_POOLED {
+            slots.push(storage);
+        }
+    }
+
+    /// Pooled storages (for tests).
+    pub fn pooled(&self) -> usize {
+        match self.slots.lock() {
+            Ok(s) => s.len(),
+            Err(e) => e.into_inner().len(),
+        }
+    }
+}
+
+/// Sorted, disjoint, half-open byte intervals.
+#[derive(Debug, Clone, Default)]
+struct IntervalSet(Vec<(usize, usize)>);
+
+impl IntervalSet {
+    /// Insert `[s, e)`, merging overlapping and touching intervals.
+    fn insert(&mut self, s: usize, e: usize) {
+        if s >= e {
+            return;
+        }
+        let mut i = 0;
+        while i < self.0.len() && self.0[i].1 < s {
+            i += 1;
+        }
+        let mut j = i;
+        let (mut ns, mut ne) = (s, e);
+        while j < self.0.len() && self.0[j].0 <= e {
+            ns = ns.min(self.0[j].0);
+            ne = ne.max(self.0[j].1);
+            j += 1;
+        }
+        self.0.splice(i..j, [(ns, ne)]);
+    }
+
+    /// The parts of `[s, e)` not covered by any interval.
+    fn uncovered(&self, s: usize, e: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut cur = s;
+        for &(a, b) in &self.0 {
+            if b <= cur {
+                continue;
+            }
+            if a >= e {
+                break;
+            }
+            if a > cur {
+                out.push((cur, a.min(e)));
+            }
+            cur = cur.max(b);
+            if cur >= e {
+                break;
+            }
+        }
+        if cur < e {
+            out.push((cur, e));
+        }
+        out
+    }
+
+    fn spans(&self) -> &[(usize, usize)] {
+        &self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{HostSlice, Slot};
+    use std::sync::Arc;
+
+    #[test]
+    fn interval_set_merges_and_complements() {
+        let mut s = IntervalSet::default();
+        s.insert(10, 20);
+        s.insert(30, 40);
+        assert_eq!(s.spans(), &[(10, 20), (30, 40)]);
+        s.insert(20, 30); // touching intervals merge
+        assert_eq!(s.spans(), &[(10, 40)]);
+        s.insert(5, 12);
+        assert_eq!(s.spans(), &[(5, 40)]);
+        assert_eq!(s.uncovered(0, 50), vec![(0, 5), (40, 50)]);
+        assert_eq!(s.uncovered(10, 30), Vec::<(usize, usize)>::new());
+        let empty = IntervalSet::default();
+        assert_eq!(empty.uncovered(3, 7), vec![(3, 7)]);
+    }
+
+    #[test]
+    fn layout_aligns_buffers_and_finds_zero_sources() {
+        let mut p = StreamPlan::new("zero-src");
+        let written = p.buf(100); // fully written before read
+        let zsrc = p.buf(32); // never written: the corpus zero-source shape
+        let out = p.output(132);
+        let payload = Arc::new(vec![0xAAu8; 100]);
+        p.h2d(Slot::Task(0), HostSlice::whole(payload), PlanRegion::whole(written, 100), vec![]);
+        p.d2h(Slot::Task(0), PlanRegion::whole(written, 100), out, 0, vec![]);
+        p.d2h(Slot::Task(0), PlanRegion::whole(zsrc, 32), out, 100, vec![]);
+        let l = ArenaLayout::of(&p);
+        assert_eq!(l.offset(0), 0);
+        assert_eq!(l.offset(1) % ARENA_ALIGN, 0);
+        assert_eq!(l.total() % ARENA_ALIGN, 0);
+        // Only the never-written buffer needs zeroing, at its offset.
+        assert_eq!(l.zero_spans(), &[(l.offset(1), l.offset(1) + 32)]);
+    }
+
+    #[test]
+    fn read_before_write_counts_as_zero_source() {
+        // A valid plan may read bytes and only write them later (the
+        // read legitimately observes initial zeros); those bytes must
+        // be in the must-zero set even though a write exists.
+        let mut p = StreamPlan::new("rbw");
+        let b = p.buf(64);
+        let out = p.output(64);
+        p.d2h(Slot::Task(0), PlanRegion::whole(b, 64), out, 0, vec![]);
+        let payload = Arc::new(vec![1u8; 64]);
+        p.h2d(Slot::Task(0), HostSlice::whole(payload), PlanRegion::whole(b, 64), vec![0]);
+        let l = ArenaLayout::of(&p);
+        assert_eq!(l.zero_spans(), &[(0, 64)]);
+    }
+
+    #[test]
+    fn partial_writes_leave_only_the_gap_to_zero() {
+        let mut p = StreamPlan::new("gap");
+        let b = p.buf(96);
+        let out = p.output(96);
+        let payload = Arc::new(vec![7u8; 32]);
+        p.h2d(
+            Slot::Task(0),
+            HostSlice::whole(payload),
+            PlanRegion { buf: b, off: 0, len: 32 },
+            vec![],
+        );
+        p.d2h(Slot::Task(0), PlanRegion::whole(b, 96), out, 0, vec![]);
+        let l = ArenaLayout::of(&p);
+        assert_eq!(l.zero_spans(), &[(32, 96)]);
+    }
+
+    #[test]
+    fn pool_reuses_storage_and_clears_spans() {
+        let mut p = StreamPlan::new("pool");
+        let b = p.buf(64);
+        let out = p.output(64);
+        p.d2h(Slot::Task(0), PlanRegion::whole(b, 64), out, 0, vec![]);
+        let layout = ArenaLayout::of(&p);
+
+        let pool = ArenaPool::new();
+        let mut storage = pool.checkout(&layout);
+        storage.fill(0xAB); // simulate a prior plan's leftovers
+        pool.checkin(storage);
+        assert_eq!(pool.pooled(), 1);
+        let storage = pool.checkout(&layout);
+        assert_eq!(pool.pooled(), 0, "checkout drains the slot");
+        // The never-written read span came back zeroed despite reuse.
+        assert!(storage[..64].iter().all(|&x| x == 0));
+    }
+}

@@ -13,10 +13,12 @@
 //! [`ArtifactStore`] therefore lives on the thread that created it (the
 //! [`crate::device::ComputeEngine`] worker owns one).
 
+mod arena;
 mod manifest;
 mod simkern;
 mod store;
 
+pub use arena::{ArenaLayout, ArenaPool, ARENA_ALIGN};
 pub use manifest::{builtin_manifest_json, ArtifactMeta, DType, IoSpec, Manifest};
 pub use store::{bytes, elastic_artifact, ArtifactStore};
 pub(crate) use store::elastic_scale;

@@ -30,8 +30,7 @@ pub fn execute(meta: &ArtifactMeta, inputs: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
     match name {
         "vector_add" => {
             let (a, b) = (bytes::to_f32(inputs[0]), bytes::to_f32(inputs[1]));
-            let c: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
-            Ok(vec![bytes::from_f32(&c)])
+            Ok(vec![bytes::from_f32(&vector_add(&a, &b))])
         }
         "nn_dist" => {
             let recs = bytes::to_f32(inputs[0]);
@@ -108,8 +107,7 @@ pub fn execute(meta: &ArtifactMeta, inputs: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
         }
         "dot_product" => {
             let (a, b) = (bytes::to_f32(inputs[0]), bytes::to_f32(inputs[1]));
-            let acc: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
-            Ok(vec![bytes::from_f32(&[acc as f32])])
+            Ok(vec![bytes::from_f32(&[dot_product(&a, &b)])])
         }
         "hotspot_step" => {
             let temp = bytes::to_f32(inputs[0]);
@@ -181,12 +179,80 @@ fn dims2_of(spec: &super::manifest::IoSpec) -> Result<(usize, usize)> {
     Ok((spec.shape[0], spec.shape[1]))
 }
 
-/// `iters` FMA sweeps over the block (the calibrated synthetic kernel).
+/// Lane width of the chunked hot-kernel loops: 8 f32 = one AVX2
+/// register, two SSE registers — fixed-size chunks let LLVM drop the
+/// bounds checks and emit straight vector code.
+const LANES: usize = 8;
+
+/// Elementwise `a + b` over `min(len)` elements, chunked for
+/// autovectorization.  Bitwise-identical to the scalar
+/// `zip(...).map(|(x, y)| x + y)` form: f32 addition is per-element,
+/// so chunking changes no operation or order (see tests).
+fn vector_add(a: &[f32], b: &[f32]) -> Vec<f32> {
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut c = vec![0.0f32; n];
+    let mut it = c.chunks_exact_mut(LANES).zip(a.chunks_exact(LANES).zip(b.chunks_exact(LANES)));
+    for (cc, (ca, cb)) in &mut it {
+        for i in 0..LANES {
+            cc[i] = ca[i] + cb[i];
+        }
+    }
+    let tail = n - n % LANES;
+    for i in tail..n {
+        c[i] = a[i] + b[i];
+    }
+    c
+}
+
+/// Dot product with sequential f64 accumulation.  The widening
+/// multiplies vectorize per chunk; the adds into `acc` stay strictly
+/// left-to-right, so the f64 sum — and the rounded f32 result — are
+/// bitwise-identical to the scalar fold (f64 addition is not
+/// associative; reordering would change bits).
+fn dot_product(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut acc = 0.0f64;
+    let mut prod = [0.0f64; LANES];
+    for (ca, cb) in a.chunks_exact(LANES).zip(b.chunks_exact(LANES)) {
+        for i in 0..LANES {
+            prod[i] = ca[i] as f64 * cb[i] as f64;
+        }
+        for &p in &prod {
+            acc += p;
+        }
+    }
+    let tail = n - n % LANES;
+    for i in tail..n {
+        acc += a[i] as f64 * b[i] as f64;
+    }
+    acc as f32
+}
+
+/// `iters` FMA sweeps over the block (the calibrated synthetic
+/// kernel).  Loop-interchanged: each chunk of 8 elements runs all
+/// `iters` steps while resident in registers (one memory pass instead
+/// of `iters`), which is exact because every element's update sequence
+/// is independent of the others — same ops per element, same order.
 fn burner(x: &[f32], iters: u32) -> Vec<f32> {
+    const C: f32 = 1.000001f32;
+    const D: f32 = 1e-7f32;
     let mut v = x.to_vec();
-    for _ in 0..iters {
-        for e in &mut v {
-            *e = *e * 1.000001f32 + 1e-7f32;
+    let mut it = v.chunks_exact_mut(LANES);
+    for chunk in &mut it {
+        let mut lane = [0.0f32; LANES];
+        lane.copy_from_slice(chunk);
+        for _ in 0..iters {
+            for e in &mut lane {
+                *e = *e * C + D;
+            }
+        }
+        chunk.copy_from_slice(&lane);
+    }
+    for e in it.into_remainder() {
+        for _ in 0..iters {
+            *e = *e * C + D;
         }
     }
     v
@@ -263,16 +329,23 @@ fn black_scholes(s: &[f32], k: &[f32], t: &[f32]) -> (Vec<f32>, Vec<f32>) {
             1.0 - upper
         }
     }
-    let mut call = Vec::with_capacity(s.len());
-    let mut put = Vec::with_capacity(s.len());
-    for i in 0..s.len() {
+    // Equal-length slices + pre-sized outputs: the element loop body
+    // carries no bounds checks or capacity growth (the transcendental
+    // calls don't vectorize, but everything around them streams).
+    // Per-element math is unchanged from the scalar form — identical
+    // operations in identical order, so results are bitwise-equal.
+    let n = s.len();
+    let (k, t) = (&k[..n], &t[..n]);
+    let mut call = vec![0.0f32; n];
+    let mut put = vec![0.0f32; n];
+    for i in 0..n {
         let (s, k, t) = (s[i] as f64, k[i] as f64, t[i] as f64);
         let sqrt_t = t.sqrt();
         let d1 = ((s / k).ln() + (R + 0.5 * V * V) * t) / (V * sqrt_t);
         let d2 = d1 - V * sqrt_t;
         let e = (-R * t).exp();
-        call.push((s * cnd(d1) - k * e * cnd(d2)) as f32);
-        put.push((k * e * cnd(-d2) - s * cnd(-d1)) as f32);
+        call[i] = (s * cnd(d1) - k * e * cnd(d2)) as f32;
+        put[i] = (k * e * cnd(-d2) - s * cnd(-d1)) as f32;
     }
     (call, put)
 }
@@ -567,5 +640,105 @@ mod tests {
         let out = burner(&[1.0, -0.5], 2);
         let step = |v: f32| v * 1.000001 + 1e-7;
         assert_eq!(out, vec![step(step(1.0)), step(step(-0.5))]);
+    }
+
+    // --- exactness of the chunked hot kernels ------------------------
+    //
+    // The vectorized forms must be *bitwise* equal to the scalar
+    // references (the sim-vs-native oracle and the golden traces both
+    // depend on exact bytes), so every comparison below is on f32 bit
+    // patterns, over lengths that exercise full chunks and tails.
+
+    /// Deterministic pseudo-random f32s (LCG), mixed signs/magnitudes.
+    fn lcg_f32(n: usize, mut seed: u64) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((seed >> 33) as i32 % 2001 - 1000) as f32 * 0.037 + 0.5
+            })
+            .collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn vector_add_is_bitwise_equal_to_the_scalar_form() {
+        for n in [0usize, 1, 7, 8, 9, 64, 1003] {
+            let a = lcg_f32(n, 1);
+            let b = lcg_f32(n, 2);
+            let scalar: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+            assert_eq!(bits(&vector_add(&a, &b)), bits(&scalar), "n = {n}");
+        }
+    }
+
+    #[test]
+    fn dot_product_preserves_the_exact_accumulation_order() {
+        // Long arrays with mixed magnitudes: any reassociation of the
+        // f64 sum would flip low bits of the rounded f32.
+        for n in [0usize, 5, 8, 17, 4096, 4099] {
+            let a = lcg_f32(n, 3);
+            let b = lcg_f32(n, 4);
+            let scalar: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+            assert_eq!(
+                dot_product(&a, &b).to_bits(),
+                (scalar as f32).to_bits(),
+                "n = {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn burner_loop_interchange_is_bitwise_exact() {
+        for (n, iters) in [(1usize, 3u32), (8, 10), (23, 7), (256, 1), (130, 0)] {
+            let x = lcg_f32(n, 5);
+            let mut scalar = x.clone();
+            for _ in 0..iters {
+                for e in &mut scalar {
+                    *e = *e * 1.000001f32 + 1e-7f32;
+                }
+            }
+            assert_eq!(bits(&burner(&x, iters)), bits(&scalar), "n = {n}, iters = {iters}");
+        }
+    }
+
+    #[test]
+    fn black_scholes_restructured_loop_is_bitwise_exact() {
+        let n = 257;
+        let s: Vec<f32> = (0..n).map(|i| 1.0 + (i as f32) * 0.37).collect();
+        let k: Vec<f32> = (0..n).map(|i| 5.0 + (i % 90) as f32).collect();
+        let t: Vec<f32> = (0..n).map(|i| 0.05 + (i as f32) * 0.01).collect();
+        // Scalar reference: the pre-rewrite push-based loop.
+        let (mut call, mut put) = (Vec::new(), Vec::new());
+        const R: f64 = 0.02;
+        const V: f64 = 0.30;
+        fn cnd(x: f64) -> f64 {
+            let ax = x.abs();
+            let t = 1.0 / (1.0 + 0.2316419 * ax);
+            let phi = (-0.5 * ax * ax).exp() / (2.0 * std::f64::consts::PI).sqrt();
+            let poly = t
+                * (0.319381530
+                    + t * (-0.356563782
+                        + t * (1.781477937 + t * (-1.821255978 + t * 1.330274429))));
+            let upper = 1.0 - phi * poly;
+            if x >= 0.0 {
+                upper
+            } else {
+                1.0 - upper
+            }
+        }
+        for i in 0..n {
+            let (s, k, t) = (s[i] as f64, k[i] as f64, t[i] as f64);
+            let sqrt_t = t.sqrt();
+            let d1 = ((s / k).ln() + (R + 0.5 * V * V) * t) / (V * sqrt_t);
+            let d2 = d1 - V * sqrt_t;
+            let e = (-R * t).exp();
+            call.push((s * cnd(d1) - k * e * cnd(d2)) as f32);
+            put.push((k * e * cnd(-d2) - s * cnd(-d1)) as f32);
+        }
+        let (vcall, vput) = black_scholes(&s, &k, &t);
+        assert_eq!(bits(&vcall), bits(&call));
+        assert_eq!(bits(&vput), bits(&put));
     }
 }

@@ -60,10 +60,47 @@ use crate::device::{DeviceProfile, TimeMode};
 use crate::hstreams::{Context, ContextBuilder};
 use crate::metrics::median_duration;
 use crate::plan::{
-    lower_corpus_streamed_at, Backend, Granularity, RunConfig, SimBackend, StreamPlan,
-    CORPUS_BURNER,
+    lower_corpus_streamed_at, Backend, Granularity, NativeBackend, RunConfig, SimBackend,
+    StreamPlan, CORPUS_BURNER,
 };
 use crate::{Error, Result};
+
+/// Which execution backend the service's lanes run jobs on.
+///
+/// `Sim` lanes report **modeled** makespans (simulated physics under
+/// the virtual clock, deterministic); `Native` lanes run the same
+/// plans on host thread pools, so their per-job times are **real
+/// wall-clock execution** — machine-dependent, and multiplied by the
+/// native path's arena reuse + locality scheduling (DESIGN.md §Native
+/// performance).  Outputs are bitwise-identical either way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecBackend {
+    /// Modeled device per lane under the discrete-event clock (default).
+    #[default]
+    Sim,
+    /// Host thread-pool execution ([`NativeBackend`], one arena pool
+    /// per lane, reused across that lane's jobs).
+    Native,
+}
+
+impl ExecBackend {
+    /// CLI label (`"sim"` / `"native"`).
+    pub fn label(self) -> &'static str {
+        match self {
+            ExecBackend::Sim => "sim",
+            ExecBackend::Native => "native",
+        }
+    }
+
+    /// Parse a `--backend` argument.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sim" => Ok(ExecBackend::Sim),
+            "native" => Ok(ExecBackend::Native),
+            other => Err(Error::Config(format!("unknown backend `{other}` (sim|native)"))),
+        }
+    }
+}
 
 /// Lock a mutex, recovering from poison instead of propagating it.
 ///
@@ -163,6 +200,9 @@ pub struct ServiceConfig {
     /// Cost-based admission control (`None` = admit everything, the
     /// pre-load-harness behavior).
     pub admission: Option<AdmissionConfig>,
+    /// What lanes execute jobs on: the modeled device (default) or
+    /// the native host thread pool (real wall-clock execution).
+    pub backend: ExecBackend,
 }
 
 impl Default for ServiceConfig {
@@ -174,6 +214,7 @@ impl Default for ServiceConfig {
             time_mode: TimeMode::from_env_default(),
             artifacts: Some(vec![CORPUS_BURNER.into()]),
             admission: None,
+            backend: ExecBackend::default(),
         }
     }
 }
@@ -204,9 +245,12 @@ pub struct SubmissionReport {
     pub learned: bool,
     /// Which engine lane ran it.
     pub lane: usize,
+    /// Which backend executed it (`"sim"` / `"native"`).
+    pub backend: &'static str,
     /// Whether the lowered plan came from the service's plan cache.
     pub cache_hit: bool,
-    /// Median modeled makespan, ms.
+    /// Median per-run makespan, ms: the **modeled** makespan on sim
+    /// lanes, the **real wall-clock** execution time on native lanes.
     pub modeled_ms: f64,
     /// Wall time the job waited in the admission queue before a lane
     /// claimed it, ms.
@@ -580,22 +624,41 @@ impl Drop for StreamService {
     }
 }
 
+/// What one lane executes jobs on: a modeled device, or a native host
+/// pool whose arena is reused across every job the lane runs.
+enum LaneExec {
+    Sim(Context),
+    Native(NativeBackend),
+}
+
 fn lane_loop(lane: usize, shared: &Shared, cfg: &ServiceConfig) -> LaneStats {
     let mut stats = LaneStats::default();
-    // The lane's modeled device.  If it cannot be built, the lane
-    // still drains jobs — with error reports — so no ticket ever
-    // hangs on a dead lane.
-    let mut b = ContextBuilder::new().profile(cfg.profile.clone()).time_mode(cfg.time_mode);
-    if let Some(names) = &cfg.artifacts {
-        b = b.only_artifacts(names.clone());
-    }
-    let ctx = b.build();
+    // The lane's executor.  If it cannot be built, the lane still
+    // drains jobs — with error reports — so no ticket ever hangs on a
+    // dead lane.  Native lanes skip the modeled device entirely (no
+    // engine threads, no artifact compile) and keep one arena-pooled
+    // NativeBackend for their lifetime.
+    let exec: Result<LaneExec> = match cfg.backend {
+        ExecBackend::Native => Ok(LaneExec::Native(NativeBackend::new())),
+        ExecBackend::Sim => {
+            let mut b =
+                ContextBuilder::new().profile(cfg.profile.clone()).time_mode(cfg.time_mode);
+            if let Some(names) = &cfg.artifacts {
+                b = b.only_artifacts(names.clone());
+            }
+            b.build().map(LaneExec::Sim)
+        }
+    };
     // Artifacts this lane compiled.  A plan launching anything else
-    // must be refused up front: the engine's kex worker panics on an
-    // uncompiled artifact and its event never completes, which would
-    // hang the lane (and the ticket, and shutdown) forever.
-    let allowed: Option<std::collections::HashSet<&str>> =
-        cfg.artifacts.as_ref().map(|v| v.iter().map(|s| s.as_str()).collect());
+    // must be refused up front on *sim* lanes: the engine's kex worker
+    // panics on an uncompiled artifact and its event never completes,
+    // which would hang the lane (and the ticket, and shutdown)
+    // forever.  Native lanes load artifacts per plan and fail with a
+    // clean signature error instead, so they need no gate.
+    let allowed: Option<std::collections::HashSet<&str>> = match cfg.backend {
+        ExecBackend::Sim => cfg.artifacts.as_ref().map(|v| v.iter().map(|s| s.as_str()).collect()),
+        ExecBackend::Native => None,
+    };
     loop {
         let job = {
             let mut q = relock(&shared.queue);
@@ -612,9 +675,14 @@ fn lane_loop(lane: usize, shared: &Shared, cfg: &ServiceConfig) -> LaneStats {
             }
         };
         let queue_wait_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
-        let mut report = match &ctx {
-            Ok(ctx) => run_job(lane, shared, ctx, &job, allowed.as_ref()),
-            Err(e) => error_report(lane, &job, format!("lane context failed to build: {e}")),
+        let mut report = match &exec {
+            Ok(exec) => run_job(lane, shared, exec, &job, allowed.as_ref()),
+            Err(e) => error_report(
+                lane,
+                cfg.backend.label(),
+                &job,
+                format!("lane executor failed to build: {e}"),
+            ),
         };
         report.queue_wait_ms = queue_wait_ms;
         report.e2e_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
@@ -629,7 +697,7 @@ fn lane_loop(lane: usize, shared: &Shared, cfg: &ServiceConfig) -> LaneStats {
     }
 }
 
-fn error_report(lane: usize, job: &Job, error: String) -> SubmissionReport {
+fn error_report(lane: usize, backend: &'static str, job: &Job, error: String) -> SubmissionReport {
     let name = match &job.req {
         Request::Corpus(c) => format!("{}/{}", c.app, c.config),
         Request::Plan { plan, .. } => plan.name.clone(),
@@ -642,6 +710,7 @@ fn error_report(lane: usize, job: &Job, error: String) -> SubmissionReport {
         gran: None,
         learned: false,
         lane,
+        backend,
         cache_hit: false,
         modeled_ms: f64::NAN,
         queue_wait_ms: f64::NAN,
@@ -654,10 +723,14 @@ fn error_report(lane: usize, job: &Job, error: String) -> SubmissionReport {
 fn run_job(
     lane: usize,
     shared: &Shared,
-    ctx: &Context,
+    exec: &LaneExec,
     job: &Job,
     allowed: Option<&std::collections::HashSet<&str>>,
 ) -> SubmissionReport {
+    let backend_label = match exec {
+        LaneExec::Sim(_) => "sim",
+        LaneExec::Native(_) => "native",
+    };
     // Resolve the submission to (plan, streams) — policy + cache for
     // descriptors, pass-through for pre-lowered plans.
     let (plan, streams, mut report) = match &job.req {
@@ -704,6 +777,7 @@ fn run_job(
                 gran: Some(choice.gran),
                 learned: choice.learned,
                 lane,
+                backend: backend_label,
                 cache_hit,
                 modeled_ms: f64::NAN,
                 queue_wait_ms: f64::NAN,
@@ -722,6 +796,7 @@ fn run_job(
                 gran: None,
                 learned: false,
                 lane,
+                backend: backend_label,
                 cache_hit: false,
                 modeled_ms: f64::NAN,
                 queue_wait_ms: f64::NAN,
@@ -747,10 +822,15 @@ fn run_job(
         }
     }
 
-    let backend = SimBackend::new(ctx);
     let mut samples = Vec::with_capacity(shared.runs);
     for rep in 0..shared.runs {
-        match backend.run(&plan, RunConfig::streams(streams)) {
+        // On sim lanes `run.wall` is the modeled makespan (virtual
+        // clock); on native lanes it is real host execution time.
+        let result = match exec {
+            LaneExec::Sim(ctx) => SimBackend::new(ctx).run(&plan, RunConfig::streams(streams)),
+            LaneExec::Native(nb) => nb.run(&plan, RunConfig::streams(streams)),
+        };
+        match result {
             Ok(run) => {
                 samples.push(run.wall);
                 if rep == 0 {
@@ -906,6 +986,43 @@ mod tests {
             .expect("report");
         assert!(report.ok());
         service.shutdown();
+    }
+
+    #[test]
+    fn native_lanes_serve_with_bitwise_sim_parity() {
+        // The same corpus submission through a sim-lane service and a
+        // native-lane service must assemble identical bytes; only the
+        // meaning of the reported time changes (modeled vs real wall).
+        let c = corpus_config();
+        let sim = admission_service(None);
+        let sref =
+            sim.submit("t", Request::Corpus(c.clone())).expect("sim admit").wait().expect("sim");
+        sim.shutdown();
+        assert_eq!(sref.backend, "sim");
+
+        let native = StreamService::start(
+            ServiceConfig { lanes: 1, backend: ExecBackend::Native, ..ServiceConfig::default() },
+            Arc::new(AnalyticPolicy),
+        )
+        .expect("native service starts");
+        let nref = native
+            .submit("t", Request::Corpus(c))
+            .expect("native admit")
+            .wait()
+            .expect("native");
+        let stats = native.shutdown();
+        assert!(nref.ok(), "{:?}", nref.error);
+        assert_eq!(nref.backend, "native");
+        assert_eq!(sref.outputs, nref.outputs, "sim and native lanes diverge");
+        assert_eq!(stats.jobs(), 1);
+    }
+
+    #[test]
+    fn exec_backend_parses_cli_labels() {
+        assert_eq!(ExecBackend::parse("sim").unwrap(), ExecBackend::Sim);
+        assert_eq!(ExecBackend::parse("native").unwrap(), ExecBackend::Native);
+        assert!(ExecBackend::parse("cuda").is_err());
+        assert_eq!(ExecBackend::default().label(), "sim");
     }
 
     #[test]

@@ -11,7 +11,8 @@ use hetstream::device::{DeviceProfile, TimeMode};
 use hetstream::experiments::{demo_roster, run_bench, BenchOpts};
 use hetstream::metrics::{bench_json, BENCH_SCHEMA};
 use hetstream::service::{
-    AdmissionConfig, AnalyticPolicy, Request, ServiceConfig, StreamService, TunePolicy,
+    AdmissionConfig, AnalyticPolicy, ExecBackend, Request, ServiceConfig, StreamService,
+    TunePolicy,
 };
 use hetstream::util::json::Json;
 
@@ -26,6 +27,7 @@ fn base_opts() -> BenchOpts {
         admission: None,
         profile: DeviceProfile::mic31sp(),
         time_mode: TimeMode::Virtual,
+        backend: ExecBackend::Sim,
     }
 }
 
@@ -126,6 +128,7 @@ fn panicking_client_does_not_wedge_the_service_for_others() {
             runs: 1,
             profile: DeviceProfile::mic31sp(),
             time_mode: TimeMode::Virtual,
+            backend: ExecBackend::Sim,
             artifacts: Some(vec![hetstream::plan::CORPUS_BURNER.into()]),
             admission: Some(AdmissionConfig::default()),
         },

@@ -22,7 +22,9 @@ use hetstream::plan::{
     lower_corpus_bulk, lower_corpus_streamed, lower_corpus_streamed_at, outputs_match, Backend,
     Granularity, NativeBackend, RunConfig, SimBackend, CORPUS_BURNER,
 };
-use hetstream::service::{AnalyticPolicy, Request, ServiceConfig, StreamService, TunePolicy};
+use hetstream::service::{
+    AnalyticPolicy, ExecBackend, Request, ServiceConfig, StreamService, TunePolicy,
+};
 
 fn instant_ctx() -> Context {
     ContextBuilder::new()
@@ -41,11 +43,17 @@ fn service_config(lanes: usize) -> ServiceConfig {
         runs: 1,
         profile: DeviceProfile::mic31sp(),
         time_mode: hetstream::device::TimeMode::Virtual,
+        backend: ExecBackend::Sim,
         artifacts: Some(vec![CORPUS_BURNER.into()]),
         // These tests exercise execution equivalence, not load
         // shedding — admit everything.
         admission: None,
     }
+}
+
+/// Host cores, the widest pool the equivalence sweeps exercise.
+fn ncores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
 /// The serial twin of [`service_config`]'s lanes: same profile
@@ -239,7 +247,9 @@ fn sim_and_native_backends_assemble_identical_bytes() {
             c.app,
             c.config
         );
-        for pool in [1usize, 4] {
+        // Widths 1 (serial), 4 (the demo default), and every host
+        // core (the widest the ready-queue scheduler will see).
+        for pool in [1usize, 4, ncores()] {
             let native_run = native.run(&plan, RunConfig::streams(pool)).expect("native run");
             assert!(
                 outputs_match(&sim_run, &native_run),
@@ -250,6 +260,41 @@ fn sim_and_native_backends_assemble_identical_bytes() {
             assert_eq!(native_run.h2d_bytes, sim_run.h2d_bytes, "{}", c.app);
             assert_eq!(native_run.d2h_bytes, sim_run.d2h_bytes, "{}", c.app);
             assert_eq!(native_run.tasks, sim_run.tasks, "{}", c.app);
+        }
+    }
+}
+
+#[test]
+fn arena_reuse_across_corpus_apps_matches_fresh_backends_bitwise() {
+    // The arena-reuse regression oracle: run two different corpus apps
+    // back-to-back (then the first again) on ONE NativeBackend — the
+    // later runs check out the earlier runs' pooled, dirty storage —
+    // and demand bitwise equality with fresh-backend runs of the same
+    // plans.  A must-zero span the layout analysis missed would
+    // surface here as stale bytes in a zero-source buffer.
+    let sample = category_spanning_sample();
+    let (a, b) = (&sample[0], &sample[2]);
+    let plan_a = lower_corpus_streamed(a, CORPUS_BURNER);
+    let plan_b = lower_corpus_streamed(b, CORPUS_BURNER);
+    for pool in [1usize, 4, ncores()] {
+        let fresh_a =
+            NativeBackend::new().run(&plan_a, RunConfig::streams(pool)).expect("fresh a");
+        let fresh_b =
+            NativeBackend::new().run(&plan_b, RunConfig::streams(pool)).expect("fresh b");
+        let shared = NativeBackend::new();
+        let runs = [
+            ("first", &plan_a, &fresh_a),
+            ("reused across apps", &plan_b, &fresh_b),
+            ("reused again", &plan_a, &fresh_a),
+        ];
+        for (label, plan, want) in runs {
+            let got = shared.run(plan, RunConfig::streams(pool)).expect(label);
+            assert!(
+                outputs_match(want, &got),
+                "{} vs {}: {label} run diverges from a fresh backend at pool width {pool}",
+                a.app,
+                b.app
+            );
         }
     }
 }

@@ -2,9 +2,11 @@
 """Validate BENCH_*.json load-harness artifacts (DESIGN.md §Bench).
 
 ``repro bench --json PATH`` emits a versioned per-second time series
-(schema tag ``hetstream-bench-v1``); this checker is the offline half
+(schema tag ``hetstream-bench-v2``); this checker is the offline half
 of the contract: any bench artifact, from any commit, must carry the
-expected shape so runs stay comparable across PRs.
+expected shape so runs stay comparable across PRs.  v2 added
+``config.backend`` (``sim`` | ``native``) — native latencies are real
+host execution, so comparisons must never mix backends.
 
 Usage:
     python3 tools/bench_schema.py BENCH_*.json   # validate artifacts
@@ -18,7 +20,7 @@ from __future__ import annotations
 import json
 import sys
 
-SCHEMA = "hetstream-bench-v1"
+SCHEMA = "hetstream-bench-v2"
 
 # (key, type) for each required section.  ``float`` accepts ints and
 # None — the emitter writes ``null`` for NaN statistics (e.g. the p99
@@ -31,6 +33,7 @@ CONFIG_KEYS = [
     ("lanes", int),
     ("profile", str),
     ("time_mode", str),
+    ("backend", str),
 ]
 TOTALS_KEYS = [
     ("completed", int),
@@ -141,6 +144,7 @@ def _sample_doc():
             "lanes": 2,
             "profile": "mic31sp-sim",
             "time_mode": "virtual",
+            "backend": "sim",
         },
         "totals": {
             "completed": 5,
@@ -204,6 +208,8 @@ def selftest() -> int:
 
     bad = [
         ("wrong schema tag", mutated(schema="hetstream-bench-v0")),
+        ("stale v1 schema tag", mutated(schema="hetstream-bench-v1")),
+        ("missing backend", mutated(**{"config.backend": ...})),
         ("missing totals key", mutated(**{"totals.completed": ...})),
         ("negative count", mutated(**{"totals.rejected": -1})),
         ("string where number", mutated(**{"totals.latency_ms.p99": "fast"})),

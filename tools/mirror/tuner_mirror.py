@@ -431,6 +431,129 @@ def native_check(apps):
           f"plans: conflicts ordered, outputs tiled exactly once)")
 
 
+# --- arena must-zero mirror (rust/src/runtime/arena.rs twin) -----------
+#
+# The NativeBackend reuses pooled arenas across runs, clearing only the
+# plan's *must-zero* spans (bytes some op reads that no earlier op
+# wrote) at checkout; every other byte is stale leftovers from the
+# previous plan.  This mirror re-derives the span analysis from the
+# lowering's byte-interval access records and replays every plan over a
+# deliberately dirty (0xAB) arena: any read that could observe a stale
+# byte is a hole in the analysis.  Index-order replay is exact because
+# the conflict check above proves every overlapping read/write pair is
+# ordered, and deps point strictly backwards — so the writes a read can
+# observe are exactly the writes at smaller indices.
+
+def _ivl_insert(ivls, lo, hi):
+    """Insert [lo, hi) into a sorted disjoint list, merging touching."""
+    if lo >= hi:
+        return
+    keep = []
+    for a, b in ivls:
+        if b < lo or a > hi:
+            keep.append((a, b))
+        else:
+            lo, hi = min(lo, a), max(hi, b)
+    keep.append((lo, hi))
+    keep.sort()
+    ivls[:] = keep
+
+
+def _ivl_uncovered(ivls, lo, hi):
+    """The parts of [lo, hi) not covered by any interval."""
+    out = []
+    cur = lo
+    for a, b in sorted(ivls):
+        if b <= cur:
+            continue
+        if a >= hi:
+            break
+        if a > cur:
+            out.append((cur, min(a, hi)))
+        cur = max(cur, b)
+        if cur >= hi:
+            break
+    if cur < hi:
+        out.append((cur, hi))
+    return out
+
+
+def arena_zero_spans(ops):
+    """Must-zero spans per dev buffer, scanning in op (index) order —
+    the twin of ArenaLayout::of."""
+    written = {}
+    zero = {}
+    for op in ops:
+        for space, bid, lo, hi in op.reads:
+            if space != "dev":
+                continue
+            for s, e in _ivl_uncovered(written.get(bid, []), lo, hi):
+                _ivl_insert(zero.setdefault(bid, []), s, e)
+        for space, bid, lo, hi in op.writes:
+            if space != "dev":
+                continue
+            _ivl_insert(written.setdefault(bid, []), lo, hi)
+    return zero
+
+
+def arena_replay_check(c, gran, clear=True):
+    """Replay one lowering over a dirty 0xAB arena with only the
+    must-zero spans cleared; returns the number of cleared spans.
+    Raises if any op reads a byte that is still stale."""
+    STALE, DEFINED = 0xAB, 0x01
+    ops = lower_streamed_at(c, gran)
+    extent = {}
+    for op in ops:
+        for space, bid, lo, hi in op.reads + op.writes:
+            if space == "dev":
+                extent[bid] = max(extent.get(bid, 0), hi)
+    arena = {bid: bytearray([STALE] * n) for bid, n in extent.items()}
+    zero = arena_zero_spans(ops)
+    spans = 0
+    if clear:
+        for bid, ivls in zero.items():
+            for lo, hi in ivls:
+                arena[bid][lo:hi] = bytes(hi - lo)
+                spans += 1
+    for i, op in enumerate(ops):
+        for space, bid, lo, hi in op.reads:
+            if space == "dev" and STALE in arena[bid][lo:hi]:
+                raise AssertionError(
+                    f"{c.app}/{c.config} gran {gran}: op {i} reads stale "
+                    f"arena bytes in dev{bid}[{lo}:{hi})")
+        for space, bid, lo, hi in op.writes:
+            if space == "dev":
+                arena[bid][lo:hi] = bytes([DEFINED] * (hi - lo))
+    return spans
+
+
+def arena_check(apps):
+    checked = spans = 0
+    dirty_witness = None
+    for c in apps:
+        for g in (1, default_gran(c.category()), 7, 16):
+            n = arena_replay_check(c, g)
+            if n > 0 and dirty_witness is None:
+                dirty_witness = (c, g)
+            checked += 1
+            spans += n
+    # The check must have teeth: a zero-source plan replayed WITHOUT
+    # clearing its must-zero spans has to trip the stale-read assert.
+    assert dirty_witness is not None, \
+        "no corpus plan exercises a must-zero span — the replay is vacuous"
+    c, g = dirty_witness
+    try:
+        arena_replay_check(c, g, clear=False)
+    except AssertionError:
+        pass
+    else:
+        raise AssertionError(
+            f"{c.app} gran {g}: uncleared dirty arena must fail the replay")
+    print(f"arena must-zero replay: OK ({checked} (app, granularity) plans "
+          f"over dirty 0xAB arenas, {spans} span(s) cleared, "
+          f"negative control trips)")
+
+
 # --- analytic seed (with the degenerate-profile fix) -------------------
 
 GRAN_CEILING = 64
@@ -633,6 +756,9 @@ def main():
     ap.add_argument("--native-check", action="store_true",
                     help="run only the golden-trace and NativeBackend "
                          "output-path checks (fast; used by CI)")
+    ap.add_argument("--arena-check", action="store_true",
+                    help="run only the fast checks incl. the arena "
+                         "must-zero replay (fast; used by CI)")
     args = ap.parse_args()
 
     golden_trace_check()
@@ -646,7 +772,8 @@ def main():
         apps = apps[:args.apps]
 
     native_check(apps)
-    if args.native_check:
+    arena_check(apps)
+    if args.native_check or args.arena_check:
         return
 
     streams = [1, 2, 4, 8]
