@@ -13,6 +13,7 @@ pub mod learn;
 pub mod serve;
 pub mod sweep;
 pub mod table2;
+pub mod verify;
 
 pub use bench::{bench_table, run_bench, BenchOpts};
 pub use fig1::{fig1_analytic, fig1_engine, offload_spec, Fig1Row};
@@ -28,6 +29,7 @@ pub use sweep::{
     TuneRow, TuneStrategy,
 };
 pub use table2::table2;
+pub use verify::{verify_corpus, verify_rows_json, VerifyRow};
 
 use crate::corpus::BenchConfig;
 use crate::device::DeviceProfile;

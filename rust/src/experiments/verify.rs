@@ -1,0 +1,181 @@
+//! `repro verify [--corpus]` — the offline hazard proof over the
+//! corpus lowerings (DESIGN.md §Verification).
+//!
+//! Every representative Table-1 app lowers at a granularity ladder and
+//! runs through [`crate::plan::verify`]: structural sanity, byte-
+//! interval race freedom under the backend dependency contract, exact
+//! output tiling, and arena must-zero coverage — statically, nothing
+//! executes.  `--corpus` sweeps [`mirror_check_granularities`] (56 apps
+//! × 4 granularities = 224 plans, the same population the Python
+//! mirror's `native_output_path_check` proves, duplicates kept so the
+//! two sides count identically); without it, only each app's default
+//! granularity (56 plans, the per-commit smoke).  `--json` emits the
+//! structured verdicts the CI cross-check diffs against
+//! `tuner_mirror.py --native-check --json`.
+//!
+//! `StreamPlan::validate` runs alongside the verifier on every row:
+//! signature conformance + hazard freedom compose into the full static
+//! proof (the verifier trusts Kex regions as declared).  A row fails on
+//! either, and the CLI exits non-zero if any row fails.
+
+use crate::corpus::BenchConfig;
+use crate::metrics::Table;
+use crate::plan::{
+    default_corpus_granularity, lower_corpus_streamed_at, mirror_check_granularities, verify_plan,
+    Granularity, VerifyReport, CORPUS_BURNER,
+};
+use crate::util::json::escape;
+
+use super::sweep::representative_configs;
+
+/// One (app, granularity) verification verdict.
+#[derive(Debug, Clone)]
+pub struct VerifyRow {
+    pub suite: &'static str,
+    pub app: &'static str,
+    pub config: String,
+    pub category: &'static str,
+    /// Requested granularity (pre-clamp — the mirror keys on it too).
+    pub gran: usize,
+    /// `StreamPlan::validate` verdict (signature conformance).
+    pub valid: bool,
+    /// Validation error text, if any.
+    pub valid_error: Option<String>,
+    /// The hazard verifier's structured report.
+    pub report: VerifyReport,
+    /// The row's verdict: validated and hazard-free (tiling included).
+    pub ok: bool,
+}
+
+fn verify_one(c: &BenchConfig, gran: Granularity) -> VerifyRow {
+    let plan = lower_corpus_streamed_at(c, CORPUS_BURNER, gran);
+    let valid_error = plan.validate().err().map(|e| e.to_string());
+    let report = verify_plan(&plan);
+    let ok = valid_error.is_none() && report.is_clean();
+    VerifyRow {
+        suite: c.suite.label(),
+        app: c.app,
+        config: c.config.clone(),
+        category: c.category().label(),
+        gran: gran.get(),
+        valid: valid_error.is_none(),
+        valid_error,
+        report,
+        ok,
+    }
+}
+
+/// Verify the corpus: all 224 (app × granularity) lowerings with
+/// `corpus`, each app's default granularity otherwise.  Returns the
+/// rendered table, the rows, and the failed-row count (the CLI's exit
+/// status).
+pub fn verify_corpus(corpus: bool) -> (Table, Vec<VerifyRow>, usize) {
+    let configs = representative_configs(false);
+    let mut rows = Vec::new();
+    for c in &configs {
+        let grans: Vec<Granularity> = if corpus {
+            mirror_check_granularities(c.category()).to_vec()
+        } else {
+            vec![default_corpus_granularity(c.category())]
+        };
+        for g in grans {
+            rows.push(verify_one(c, g));
+        }
+    }
+    let failed = rows.iter().filter(|r| !r.ok).count();
+
+    let mut t = Table::new(
+        format!(
+            "Static hazard verification — {} (app, granularity) lowerings, {} failed",
+            rows.len(),
+            failed
+        ),
+        &["suite", "app", "config", "category", "gran", "ops", "accesses", "conflicts", "verdict"],
+    );
+    for r in &rows {
+        let verdict = if r.ok {
+            "clean".to_string()
+        } else if !r.valid {
+            "INVALID".to_string()
+        } else {
+            format!("{} HAZARD(S)", r.report.hazards.len())
+        };
+        t.row(&[
+            r.suite.to_string(),
+            r.app.to_string(),
+            r.config.clone(),
+            r.category.to_string(),
+            r.gran.to_string(),
+            r.report.ops.to_string(),
+            r.report.accesses.to_string(),
+            r.report.conflicts.to_string(),
+            verdict,
+        ]);
+    }
+    (t, rows, failed)
+}
+
+/// The rows as one JSON document (`repro verify --json`) — the Rust
+/// half of the CI cross-check (`tools/verify_crosscheck.py` diffs the
+/// (app, config, gran, ok) verdicts against the Python mirror's).
+pub fn verify_rows_json(rows: &[VerifyRow]) -> String {
+    let failed = rows.iter().filter(|r| !r.ok).count();
+    let mut s = String::from("{\"schema\":\"hetstream-verify-v1\",\"rows\":[");
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"suite\":\"{}\",\"app\":\"{}\",\"config\":\"{}\",\"category\":\"{}\",\
+             \"gran\":{},\"ok\":{},\"valid\":{},\"valid_error\":{},\"report\":{}}}",
+            escape(r.suite),
+            escape(r.app),
+            escape(&r.config),
+            escape(r.category),
+            r.gran,
+            r.ok,
+            r.valid,
+            r.valid_error
+                .as_ref()
+                .map_or("null".to_string(), |e| format!("\"{}\"", escape(e))),
+            r.report.to_json()
+        ));
+    }
+    s.push_str(&format!("],\"total\":{},\"failed\":{failed}}}", rows.len()));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_granularity_corpus_verifies_clean() {
+        // The quick (non --corpus) population: every representative app
+        // at its default granularity must be valid and hazard-free.
+        let (_, rows, failed) = verify_corpus(false);
+        assert_eq!(rows.len(), 56);
+        assert_eq!(
+            failed,
+            0,
+            "hazardous default lowerings: {:?}",
+            rows.iter().filter(|r| !r.ok).map(|r| (r.app, r.gran)).collect::<Vec<_>>()
+        );
+        assert!(
+            rows.iter().all(|r| r.report.conflicts > 0 || r.report.ops <= 1),
+            "a corpus verification that discharges no conflict pairs is vacuous"
+        );
+    }
+
+    #[test]
+    fn verify_rows_json_parses_and_counts() {
+        let (_, rows, _) = verify_corpus(false);
+        let v = crate::util::json::Json::parse(&verify_rows_json(&rows)).expect("valid JSON");
+        assert_eq!(v.get("total").and_then(|n| n.as_usize()), Some(rows.len()));
+        assert_eq!(v.get("failed").and_then(|n| n.as_usize()), Some(0));
+        let arr = v.get("rows").and_then(|r| r.as_arr()).expect("rows array");
+        assert_eq!(arr.len(), rows.len());
+        assert_eq!(arr[0].get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert!(arr[0].get("report").and_then(|r| r.get("clean")).is_some());
+    }
+}

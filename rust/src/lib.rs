@@ -50,6 +50,12 @@
 //! produced `artifacts/*.hlo.txt` are loaded and executed from Rust — no
 //! Python on the measurement path.
 
+// Unsafe hygiene (DESIGN.md §Verification): every unsafe operation
+// must sit in its own explicit `unsafe` block with a `// SAFETY:`
+// comment discharging its proof obligation.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
+
 pub mod analysis;
 pub mod config;
 pub mod corpus;

@@ -57,6 +57,15 @@ COMMANDS:
                 [--all-configs] [--json] [--csv PATH]
                 [--learned [--dataset PATH]]  hill-climb from the k-NN
                 seed (fallback: analytic) instead of the full grid
+  verify      Static hazard verifier over the corpus lowerings: prove
+              byte-interval race freedom under the backend dependency
+              contract, exact D2h output tiling, arena must-zero
+              coverage, and graph/lifetime sanity — without executing
+              anything; exits non-zero on any hazard
+                [--corpus  all 224 (app x granularity) lowerings;
+                 default: each app's default granularity (56)]
+                [--json  structured verdicts for the CI cross-check
+                 against tools/mirror/tuner_mirror.py --native-check]
   learn       Learned (streams x granularity) tuner over plan features
               (arXiv:1802.02760-style): build the training set, or
               leave-one-app-out cross-validate the k-NN seed
@@ -488,6 +497,30 @@ fn main() -> Result<()> {
             }
             if failures > 0 {
                 return Err(cli_err(format!("{failures} corpus row(s) failed tuning")));
+            }
+        }
+        Some("verify") => {
+            // Pure static analysis: no Context, no artifacts, nothing
+            // executes — lower every corpus plan and prove it hazard-
+            // free (DESIGN.md §Verification).
+            let (table, rows, failed) = experiments::verify_corpus(args.flag("corpus"));
+            if args.flag("json") {
+                println!("{}", experiments::verify_rows_json(&rows));
+                eprintln!("verified {} lowering(s), {failed} failed", rows.len());
+            } else {
+                println!("{}", table.markdown());
+                println!("verified {} lowering(s), {failed} failed", rows.len());
+                for r in rows.iter().filter(|r| !r.ok) {
+                    if let Some(e) = &r.valid_error {
+                        println!("  {}/{} gran {}: validate: {e}", r.app, r.config, r.gran);
+                    }
+                    for h in &r.report.hazards {
+                        println!("  {}/{} gran {}: {h}", r.app, r.config, r.gran);
+                    }
+                }
+            }
+            if failed > 0 {
+                return Err(cli_err(format!("{failed} corpus lowering(s) have hazards")));
             }
         }
         Some("learn") => {

@@ -184,6 +184,15 @@ impl Backend for SimBackend<'_> {
     }
 
     fn submit(&self, plan: &StreamPlan, cfg: RunConfig) -> Result<RunHandle> {
+        // Debug builds statically verify every submission (validate
+        // first, so malformed plans keep their validation error; the
+        // verifier then proves hazard freedom under the dependency
+        // contract).  Pure analysis — the virtual clock never sees it,
+        // so modeled makespans are unchanged.
+        if cfg!(debug_assertions) {
+            plan.validate()?;
+            super::verify::ensure_sound(plan)?;
+        }
         let streams = cfg.streams.max(1);
         Ok(RunHandle::ready("sim", streams, Executor::new(self.ctx).run(plan, streams)))
     }
@@ -230,6 +239,11 @@ impl Backend for NativeBackend {
 
     fn submit(&self, plan: &StreamPlan, cfg: RunConfig) -> Result<RunHandle> {
         plan.validate()?;
+        // Debug builds additionally discharge the static soundness
+        // proof the lock-free pool relies on (see `SharedBytes`).
+        if cfg!(debug_assertions) {
+            super::verify::ensure_sound(plan)?;
+        }
         let workers = cfg.streams.max(1);
         let plan = plan.clone();
         let dir = self.artifacts_dir.clone();
@@ -252,7 +266,12 @@ impl Backend for NativeBackend {
 /// barrier from every broadcast op to each task lane's first op.
 /// Sorted and deduped per op (an explicit dep may coincide with the
 /// implicit chain edge).
-fn native_deps(plan: &StreamPlan) -> Vec<Vec<usize>> {
+///
+/// Public (re-exported as `plan::native_deps`) because this list *is*
+/// the partial order the static verifier ([`super::verify`]) proves
+/// hazard freedom against — the contract definition and its proof
+/// obligation must be the same function.
+pub fn native_deps(plan: &StreamPlan) -> Vec<Vec<usize>> {
     let mut deps: Vec<Vec<usize>> = Vec::with_capacity(plan.ops.len());
     // Key: None = the broadcast chain, Some(lane) = one task lane.
     let mut last: HashMap<Option<usize>, usize> = HashMap::new();
@@ -418,7 +437,16 @@ struct SharedBytes {
     len: usize,
 }
 
+// SAFETY: `ptr` points into an allocation owned by the coordinating
+// `run_native` frame, which outlives every worker thread of the run
+// (workers are joined before the allocation drops), so sending the
+// view across threads cannot dangle.
 unsafe impl Send for SharedBytes {}
+// SAFETY: concurrent `&self` access is race-free by the type-level
+// argument above — the statically verified dependency contract keeps
+// conflicting byte ranges on ordered ops, and the scheduler's
+// `AcqRel` indegree decrements + queue mutex carry happens-before
+// along every dependency edge.
 unsafe impl Sync for SharedBytes {}
 
 impl SharedBytes {
@@ -431,12 +459,20 @@ impl SharedBytes {
     /// Borrow `len` bytes at `off` (see type-level safety argument).
     fn slice(&self, off: usize, len: usize) -> &[u8] {
         assert!(off + len <= self.len, "native read out of bounds");
+        // SAFETY: the assert keeps `[off, off+len)` inside the live
+        // allocation, and the dependency contract (statically checked
+        // by `plan::verify` in debug builds) guarantees no op writes
+        // these bytes concurrently with this borrow.
         unsafe { std::slice::from_raw_parts(self.ptr.add(off), len) }
     }
 
     /// Copy `src` into the view at `off`.
     fn write(&self, off: usize, src: &[u8]) {
         assert!(off + src.len() <= self.len, "native write out of bounds");
+        // SAFETY: the assert keeps the destination inside the live
+        // allocation; `src` is a fresh worker-local buffer (or host
+        // payload), so the ranges cannot overlap, and the dependency
+        // contract orders every conflicting access to these bytes.
         unsafe { std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.add(off), src.len()) }
     }
 }
@@ -706,6 +742,40 @@ mod tests {
             order_key(Slot::Task(1), 5),
         ];
         assert_eq!(keys, want, "broadcasts first, then lanes in program order");
+    }
+
+    #[test]
+    fn miri_sized_native_roundtrip() {
+        // Small enough for `cargo miri test` (CI's unsafe-hygiene job):
+        // exercises SharedBytes raw-pointer access, the atomic
+        // readiness protocol, arena checkout and output assembly on a
+        // 2-lane plan of 16-float buffers.
+        let n = 64;
+        let a = Arc::new(crate::runtime::bytes::from_f32(&[1.5f32; 16]));
+        let b = Arc::new(crate::runtime::bytes::from_f32(&[2.25f32; 16]));
+        let mut p = StreamPlan::new("miri-roundtrip");
+        let out = p.output(2 * n);
+        for lane in 0..2 {
+            let ab = p.buf(n);
+            let bb = p.buf(n);
+            let ob = p.buf(n);
+            let slot = Slot::Task(lane);
+            p.h2d(slot, HostSlice::whole(a.clone()), PlanRegion::whole(ab, n), vec![]);
+            p.h2d(slot, HostSlice::whole(b.clone()), PlanRegion::whole(bb, n), vec![]);
+            p.kex(
+                slot,
+                "vector_add",
+                vec![PlanRegion::whole(ab, n), PlanRegion::whole(bb, n)],
+                vec![PlanRegion::whole(ob, n)],
+                Some(1),
+                1,
+                vec![],
+            );
+            p.d2h(slot, PlanRegion::whole(ob, n), out, lane * n, vec![]);
+        }
+        let run = NativeBackend::new().run(&p, RunConfig::streams(2)).expect("native run");
+        let got = crate::runtime::bytes::to_f32(&run.outputs[0]);
+        assert_eq!(got, vec![3.75f32; 32]);
     }
 
     #[test]

@@ -104,6 +104,21 @@ pub fn default_corpus_granularity(cat: Category) -> Granularity {
     }
 }
 
+/// The granularity ladder the hazard verifier (and the Python mirror's
+/// `native_check`) sweeps per app: a serial lowering, the category
+/// default, an odd off-default value, and an oversized one.  56
+/// representative apps × these 4 = the 224-plan verification corpus;
+/// duplicates after [`effective_corpus_granularity`] clamping are kept
+/// so the two sides count identically.
+pub fn mirror_check_granularities(cat: Category) -> [Granularity; 4] {
+    [
+        Granularity::new(1),
+        default_corpus_granularity(cat),
+        Granularity::new(7),
+        Granularity::new(16),
+    ]
+}
+
 /// The knob value [`lower_corpus_streamed_at`] will actually lower
 /// `c` at: requested granularity clamped per category (at least one
 /// output lane per task for the partitioned shapes, tile-grid side in

@@ -40,17 +40,19 @@
 mod backend;
 mod exec;
 mod lower;
+pub mod verify;
 
 // The engine-mapping scheduler (`exec::Executor`) is an implementation
 // detail of `SimBackend` now: every caller — in-crate drivers, tuners,
 // experiments, external tests — goes through the `Backend` trait.
-pub use backend::{Backend, NativeBackend, RunConfig, RunHandle, SimBackend};
+pub use backend::{native_deps, Backend, NativeBackend, RunConfig, RunHandle, SimBackend};
 pub use exec::{outputs_match, PlanRun};
 pub use lower::{
     default_corpus_granularity, effective_corpus_granularity, lower_corpus_bulk,
-    lower_corpus_streamed, lower_corpus_streamed_at, wire_wavefront, CORPUS_BURNER, CORPUS_TASKS,
-    WAVEFRONT_GRID,
+    lower_corpus_streamed, lower_corpus_streamed_at, mirror_check_granularities, wire_wavefront,
+    CORPUS_BURNER, CORPUS_TASKS, WAVEFRONT_GRID,
 };
+pub use verify::{ensure_sound, verify_plan, Hazard, HazardKind, VerifyReport};
 
 use std::sync::Arc;
 

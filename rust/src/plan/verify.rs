@@ -1,0 +1,770 @@
+//! `plan::verify` — static hazard analysis over a [`StreamPlan`]
+//! (DESIGN.md §Verification).
+//!
+//! The paper's premise is that overlapping transfers and compute across
+//! streams must never change results.  The executors enforce that
+//! *dynamically* (the bitwise streamed-vs-reference oracle); this
+//! module proves it *statically*, per plan, without executing anything:
+//!
+//! 1. **Race freedom.**  Every op's byte-interval accesses are derived
+//!    from its declared regions (H2d writes its destination, Kex reads
+//!    its inputs and writes its outputs, D2h reads its source and
+//!    writes its host-output window).  Any two accesses that overlap,
+//!    touch the same buffer or output, and include a write must be
+//!    ordered by the backend dependency contract ([`native_deps`]:
+//!    explicit deps + per-lane program order + the broadcast barrier) —
+//!    RAW/WAW/WAR hazard freedom over the partial order, so *any* pool
+//!    schedule or stream mapping assembles the same bytes.
+//! 2. **Output tiling.**  D2h windows tile each host output exactly
+//!    once — no gap, no double-write.  (Ordered gaps/double-writes are
+//!    still deterministic — outputs are zero-initialized and the
+//!    partial order fixes the winner — so these are strictness
+//!    hazards, reported but not fatal at submit; every in-repo
+//!    lowering is tiled exactly and `repro verify` enforces it.)
+//! 3. **Graph sanity.**  Dep edges in range and strictly backwards
+//!    (acyclicity by topological construction), broadcast prologue
+//!    closed before the first `Task` op.
+//! 4. **Arena soundness.**  [`ArenaLayout`] must-zero spans cover every
+//!    byte an op reads that no *ancestor* (under the partial order)
+//!    wrote — the condition under which pooled-arena reuse
+//!    (`runtime::arena`) cannot leak a previous plan's bytes into this
+//!    plan's reads.
+//! 5. **Lifetimes.**  Every access lands inside its declared buffer or
+//!    output (backends allocate per plan and free at drain, so
+//!    in-bounds ⇒ no use-after-release), and broadcast ops precede all
+//!    consumers (with the contract's barrier, every task op is then
+//!    ordered after the whole prologue).
+//!
+//! The verifier reports a structured [`Hazard`] list — op pair, space,
+//! byte interval, missing edge — never a bare boolean.  It runs three
+//! ways: `repro verify [--corpus]` over the corpus lowerings (the
+//! offline proof, cross-checked against the Python mirror's
+//! `native_output_path_check` in CI), as a `debug_assertions` gate
+//! inside both [`super::Backend`] `submit` paths, and on the service
+//! path for every admitted lowering.  Kex regions are taken as
+//! declared; `StreamPlan::validate` separately proves they conform to
+//! the manifest signature (arity + elastic scaling), which is why the
+//! submit gates run `validate` first.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use super::{PlanOp, PlanOpKind, Slot, StreamPlan};
+use crate::runtime::ArenaLayout;
+use crate::{Error, Result};
+
+/// Address space of one byte-interval access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Space {
+    /// A logical device buffer (index into `StreamPlan::bufs`).
+    Dev(usize),
+    /// A host output (index into `StreamPlan::outputs`).
+    Out(usize),
+}
+
+impl fmt::Display for Space {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Space::Dev(b) => write!(f, "dev buf {b}"),
+            Space::Out(o) => write!(f, "host output {o}"),
+        }
+    }
+}
+
+/// One byte-interval access record: op `op` touches `space` bytes
+/// `[lo, hi)`, reading or writing.
+#[derive(Debug, Clone, Copy)]
+pub struct Access {
+    pub op: usize,
+    pub space: Space,
+    pub lo: usize,
+    pub hi: usize,
+    pub write: bool,
+}
+
+/// What kind of proof obligation a [`Hazard`] violates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HazardKind {
+    /// A dep edge pointing at itself or forward — the topological
+    /// contract is broken and the dependency closure is undefined.
+    InvalidDep,
+    /// A `Slot::Broadcast` op after the first `Task` op: the barrier
+    /// no longer covers its consumers.
+    LateBroadcast,
+    /// An access outside its declared buffer or output.
+    OutOfRange,
+    /// Two overlapping accesses, at least one a write, with no
+    /// dependency path between their ops — the schedule decides the
+    /// bytes.
+    UnorderedRace,
+    /// An op reads bytes that no ancestor wrote and that the arena
+    /// layout does not guarantee zero — pooled-arena reuse could leak
+    /// a previous plan's bytes into them.
+    UncoveredRead,
+    /// D2h windows leave part of a host output unwritten.
+    OutputGap,
+    /// Two D2h windows write the same host-output byte.
+    OutputOverlap,
+}
+
+impl HazardKind {
+    /// Stable lowercase label (JSON / mirror cross-check vocabulary).
+    pub fn label(self) -> &'static str {
+        match self {
+            HazardKind::InvalidDep => "invalid-dep",
+            HazardKind::LateBroadcast => "late-broadcast",
+            HazardKind::OutOfRange => "out-of-range",
+            HazardKind::UnorderedRace => "unordered-race",
+            HazardKind::UncoveredRead => "uncovered-read",
+            HazardKind::OutputGap => "output-gap",
+            HazardKind::OutputOverlap => "output-overlap",
+        }
+    }
+
+    /// Fatal hazards make the assembled bytes schedule- or
+    /// reuse-dependent; the submit gate refuses them.  Tiling hazards
+    /// (`OutputGap` / ordered `OutputOverlap`) are deterministic but
+    /// non-canonical — reported, enforced by `repro verify`, admitted
+    /// at submit (an *unordered* double-write is an `UnorderedRace`).
+    pub fn fatal(self) -> bool {
+        !matches!(self, HazardKind::OutputGap | HazardKind::OutputOverlap)
+    }
+}
+
+impl fmt::Display for HazardKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One verifier finding: the violated obligation, the op pair
+/// involved, the byte interval in `space`, and — for races — the edge
+/// whose absence makes the pair unordered.
+#[derive(Debug, Clone)]
+pub struct Hazard {
+    pub kind: HazardKind,
+    /// The ops involved (`None` where no op anchors the finding, e.g.
+    /// a gap at the end of an output no window reaches).
+    pub ops: (Option<usize>, Option<usize>),
+    pub space: Option<Space>,
+    /// Conflicting half-open byte interval within `space`.
+    pub lo: usize,
+    pub hi: usize,
+    /// For [`HazardKind::UnorderedRace`]: the `(from, to)` dep edge
+    /// (consistent with submission order) that would order the pair.
+    pub missing_edge: Option<(usize, usize)>,
+    pub detail: String,
+}
+
+impl fmt::Display for Hazard {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.kind, self.detail)?;
+        if let Some(space) = self.space {
+            write!(f, " [{} bytes {}..{})", space, self.lo, self.hi)?;
+        }
+        if let Some((a, b)) = self.missing_edge {
+            write!(f, " (missing edge {a} -> {b})")?;
+        }
+        Ok(())
+    }
+}
+
+/// The verifier's structured result for one plan.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    /// `StreamPlan::name` of the analyzed plan.
+    pub plan: String,
+    /// Ops analyzed.
+    pub ops: usize,
+    /// Byte-interval access records derived.
+    pub accesses: usize,
+    /// Overlapping access pairs with a write that had to be proven
+    /// ordered (the size of the discharged obligation, hazardous or
+    /// not).
+    pub conflicts: usize,
+    /// Everything found, in discovery order (structure, races, tiling,
+    /// coverage).
+    pub hazards: Vec<Hazard>,
+}
+
+impl VerifyReport {
+    /// No fatal hazard: any pool schedule and any pooled-arena reuse
+    /// assembles the same bytes.  This is what the submit gate checks.
+    pub fn is_sound(&self) -> bool {
+        self.hazards.iter().all(|h| !h.kind.fatal())
+    }
+
+    /// No hazard at all, tiling included — what `repro verify`
+    /// demands of every in-repo lowering.
+    pub fn is_clean(&self) -> bool {
+        self.hazards.is_empty()
+    }
+
+    /// Human-readable multi-line report.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "plan `{}`: {} ops, {} accesses, {} conflicting pairs proven ordered",
+            self.plan,
+            self.ops,
+            self.accesses,
+            self.conflicts
+        );
+        if self.hazards.is_empty() {
+            s.push_str(" — hazard-free");
+        } else {
+            s.push_str(&format!(" — {} hazard(s):", self.hazards.len()));
+            for h in &self.hazards {
+                s.push_str(&format!("\n  {h}"));
+            }
+        }
+        s
+    }
+
+    /// One JSON object (util::json-parsable; the CI cross-check diffs
+    /// these against the Python mirror's verdicts).
+    pub fn to_json(&self) -> String {
+        let hazards: Vec<String> = self
+            .hazards
+            .iter()
+            .map(|h| {
+                let op_json = |o: Option<usize>| {
+                    o.map_or("null".to_string(), |i| i.to_string())
+                };
+                format!(
+                    "{{\"kind\":\"{}\",\"ops\":[{},{}],\"space\":\"{}\",\"interval\":[{},{}],\"missing_edge\":{},\"detail\":\"{}\"}}",
+                    h.kind.label(),
+                    op_json(h.ops.0),
+                    op_json(h.ops.1),
+                    h.space.map_or_else(|| "-".to_string(), |s| s.to_string()),
+                    h.lo,
+                    h.hi,
+                    h.missing_edge
+                        .map_or("null".to_string(), |(a, b)| format!("[{a},{b}]")),
+                    esc(&h.detail)
+                )
+            })
+            .collect();
+        format!(
+            "{{\"plan\":\"{}\",\"ops\":{},\"accesses\":{},\"conflicts\":{},\"sound\":{},\"clean\":{},\"hazards\":[{}]}}",
+            esc(&self.plan),
+            self.ops,
+            self.accesses,
+            self.conflicts,
+            self.is_sound(),
+            self.is_clean(),
+            hazards.join(",")
+        )
+    }
+}
+
+use crate::util::json::escape as esc;
+
+/// The byte-interval access records of one op, from its declared
+/// regions.  Kex regions are trusted as declared — `validate()`
+/// separately proves they match the manifest signature (arity +
+/// elastic scaling), so signature conformance and hazard freedom
+/// compose into the full proof.
+pub fn op_accesses(op: &PlanOp, i: usize) -> Vec<Access> {
+    let mut acc = Vec::new();
+    let mut push = |space: Space, lo: usize, hi: usize, write: bool| {
+        acc.push(Access { op: i, space, lo, hi, write });
+    };
+    match &op.kind {
+        PlanOpKind::H2d { dst, .. } => {
+            push(Space::Dev(dst.buf), dst.off, dst.off + dst.len, true);
+        }
+        PlanOpKind::Kex { inputs, outputs, .. } => {
+            for r in inputs {
+                push(Space::Dev(r.buf), r.off, r.off + r.len, false);
+            }
+            for r in outputs {
+                push(Space::Dev(r.buf), r.off, r.off + r.len, true);
+            }
+        }
+        PlanOpKind::D2h { src, output, off } => {
+            push(Space::Dev(src.buf), src.off, src.off + src.len, false);
+            push(Space::Out(*output), *off, *off + src.len, true);
+        }
+    }
+    acc
+}
+
+/// All access records of a plan, in op order.
+pub fn access_records(plan: &StreamPlan) -> Vec<Access> {
+    plan.ops.iter().enumerate().flat_map(|(i, op)| op_accesses(op, i)).collect()
+}
+
+/// Verify `plan` against a freshly derived [`ArenaLayout`] (the layout
+/// the native backend will actually run it under).
+pub fn verify_plan(plan: &StreamPlan) -> VerifyReport {
+    verify_plan_with_layout(plan, &ArenaLayout::of(plan))
+}
+
+/// Refuse a plan with any fatal hazard (the `Backend::submit` /
+/// service gate).  The error carries the first few hazards, op pairs
+/// and byte intervals included.
+pub fn ensure_sound(plan: &StreamPlan) -> Result<()> {
+    let report = verify_plan(plan);
+    if report.is_sound() {
+        return Ok(());
+    }
+    let fatal: Vec<String> =
+        report.hazards.iter().filter(|h| h.kind.fatal()).take(3).map(|h| h.to_string()).collect();
+    let total = report.hazards.iter().filter(|h| h.kind.fatal()).count();
+    Err(Error::Plan(format!(
+        "hazard verifier refused plan `{}`: {} fatal hazard(s): {}{}",
+        report.plan,
+        total,
+        fatal.join("; "),
+        if total > fatal.len() { "; ..." } else { "" }
+    )))
+}
+
+/// Short `op 12 (Kex vector_add)`-style label for hazard messages.
+fn op_label(plan: &StreamPlan, i: usize) -> String {
+    match &plan.ops[i].kind {
+        PlanOpKind::H2d { .. } => format!("op {i} (H2d)"),
+        PlanOpKind::Kex { artifact, .. } => format!("op {i} (Kex {artifact})"),
+        PlanOpKind::D2h { .. } => format!("op {i} (D2h)"),
+    }
+}
+
+/// Verify `plan` under a caller-supplied layout — the negative-control
+/// hook: inject a corrupted layout (e.g. a shrunk must-zero span via
+/// [`ArenaLayout::with_zero_spans`]) and the coverage check must
+/// object.
+pub fn verify_plan_with_layout(plan: &StreamPlan, layout: &ArenaLayout) -> VerifyReport {
+    let n = plan.ops.len();
+    let mut hazards: Vec<Hazard> = Vec::new();
+
+    // (3) + (5a): dep edges strictly backwards (topological order ⇒
+    // acyclic), broadcast prologue closed before the first task op.
+    let mut seen_task = false;
+    for (i, op) in plan.ops.iter().enumerate() {
+        for &d in &op.deps {
+            if d >= i {
+                hazards.push(Hazard {
+                    kind: HazardKind::InvalidDep,
+                    ops: (Some(i), Some(d)),
+                    space: None,
+                    lo: 0,
+                    hi: 0,
+                    missing_edge: None,
+                    detail: format!(
+                        "{} depends on op {d}, which is not an earlier op",
+                        op_label(plan, i)
+                    ),
+                });
+            }
+        }
+        match op.slot {
+            Slot::Task(_) => seen_task = true,
+            Slot::Broadcast if seen_task => hazards.push(Hazard {
+                kind: HazardKind::LateBroadcast,
+                ops: (Some(i), None),
+                space: None,
+                lo: 0,
+                hi: 0,
+                missing_edge: None,
+                detail: format!(
+                    "{} is a broadcast after the first task op — the fan-out barrier no longer covers its consumers",
+                    op_label(plan, i)
+                ),
+            }),
+            Slot::Broadcast => {}
+        }
+    }
+
+    // (5b): every access inside its declared buffer / output.
+    let accesses = access_records(plan);
+    for a in &accesses {
+        let declared = match a.space {
+            Space::Dev(b) => plan.bufs.get(b).copied(),
+            Space::Out(o) => plan.outputs.get(o).copied(),
+        };
+        match declared {
+            Some(size) if a.hi <= size => {}
+            Some(size) => hazards.push(Hazard {
+                kind: HazardKind::OutOfRange,
+                ops: (Some(a.op), None),
+                space: Some(a.space),
+                lo: a.lo,
+                hi: a.hi,
+                missing_edge: None,
+                detail: format!(
+                    "{} accesses bytes past the declared {size}-byte size",
+                    op_label(plan, a.op)
+                ),
+            }),
+            None => hazards.push(Hazard {
+                kind: HazardKind::OutOfRange,
+                ops: (Some(a.op), None),
+                space: Some(a.space),
+                lo: a.lo,
+                hi: a.hi,
+                missing_edge: None,
+                detail: format!("{} targets an undeclared buffer/output", op_label(plan, a.op)),
+            }),
+        }
+    }
+
+    // The interval analyses below assume a well-formed DAG and
+    // in-range records; report structural damage alone if present.
+    if hazards.iter().any(|h| matches!(h.kind, HazardKind::InvalidDep | HazardKind::OutOfRange)) {
+        return VerifyReport {
+            plan: plan.name.clone(),
+            ops: n,
+            accesses: accesses.len(),
+            conflicts: 0,
+            hazards,
+        };
+    }
+
+    // Ancestor closure over the backend dependency contract, as
+    // multi-word bitsets (row i = every op with a dependency path to
+    // op i).  Wavefront corpus plans exceed 192 ops, so a single u64
+    // (the mirror's Python int) does not suffice here.
+    let deps = super::backend::native_deps(plan);
+    let words = n.div_ceil(64);
+    let mut anc = vec![0u64; n * words];
+    for i in 0..n {
+        // Split so the predecessor rows (disjoint, earlier) stay
+        // readable while row i is written.
+        let (done, rest) = anc.split_at_mut(i * words);
+        let row = &mut rest[..words];
+        for &p in &deps[i] {
+            let prow = &done[p * words..(p + 1) * words];
+            for (r, &w) in row.iter_mut().zip(prow) {
+                *r |= w;
+            }
+            row[p / 64] |= 1 << (p % 64);
+        }
+    }
+    let reaches = |from: usize, to: usize| anc[to * words + from / 64] >> (from % 64) & 1 == 1;
+    let ordered = |i: usize, j: usize| reaches(i, j) || reaches(j, i);
+
+    // (1): every overlapping access pair with a write, ordered — the
+    // mirror's `native_output_path_check` conflict loop, ported.
+    let mut groups: HashMap<Space, Vec<&Access>> = HashMap::new();
+    for a in &accesses {
+        groups.entry(a.space).or_default().push(a);
+    }
+    let mut spaces: Vec<&Space> = groups.keys().collect();
+    spaces.sort_unstable_by_key(|s| match s {
+        Space::Dev(b) => (0, *b),
+        Space::Out(o) => (1, *o),
+    });
+    let mut conflicts = 0usize;
+    for space in spaces {
+        let accs = &groups[space];
+        for (k, a) in accs.iter().enumerate() {
+            for b in &accs[k + 1..] {
+                if a.op == b.op || (!a.write && !b.write) {
+                    continue;
+                }
+                if a.lo < b.hi && b.lo < a.hi {
+                    conflicts += 1;
+                    if !ordered(a.op, b.op) {
+                        let (from, to) = (a.op.min(b.op), a.op.max(b.op));
+                        hazards.push(Hazard {
+                            kind: HazardKind::UnorderedRace,
+                            ops: (Some(a.op), Some(b.op)),
+                            space: Some(*space),
+                            lo: a.lo.max(b.lo),
+                            hi: a.hi.min(b.hi),
+                            missing_edge: Some((from, to)),
+                            detail: format!(
+                                "{} and {} overlap with a write and no dependency path orders them",
+                                op_label(plan, a.op),
+                                op_label(plan, b.op)
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // (2): D2h windows tile each host output exactly once.
+    for (o, &size) in plan.outputs.iter().enumerate() {
+        let mut wins: Vec<(usize, usize, usize)> = accesses
+            .iter()
+            .filter(|a| a.write && a.space == Space::Out(o))
+            .map(|a| (a.lo, a.hi, a.op))
+            .collect();
+        wins.sort_unstable();
+        let mut pos = 0usize;
+        let mut prev_op: Option<usize> = None;
+        for &(lo, hi, op) in &wins {
+            if lo > pos {
+                hazards.push(Hazard {
+                    kind: HazardKind::OutputGap,
+                    ops: (prev_op, Some(op)),
+                    space: Some(Space::Out(o)),
+                    lo: pos,
+                    hi: lo,
+                    missing_edge: None,
+                    detail: format!(
+                        "no D2h window writes these bytes before {}",
+                        op_label(plan, op)
+                    ),
+                });
+            } else if lo < pos {
+                hazards.push(Hazard {
+                    kind: HazardKind::OutputOverlap,
+                    ops: (prev_op, Some(op)),
+                    space: Some(Space::Out(o)),
+                    lo,
+                    hi: hi.min(pos),
+                    missing_edge: None,
+                    detail: format!("{} re-writes already-tiled bytes", op_label(plan, op)),
+                });
+            }
+            pos = pos.max(hi);
+            prev_op = Some(op);
+        }
+        if pos < size {
+            hazards.push(Hazard {
+                kind: HazardKind::OutputGap,
+                ops: (prev_op, None),
+                space: Some(Space::Out(o)),
+                lo: pos,
+                hi: size,
+                missing_edge: None,
+                detail: format!("D2h windows cover only {pos} of {size} bytes"),
+            });
+        }
+    }
+
+    // (4): every byte an op reads is either written by an ancestor or
+    // guaranteed zero by the arena layout.  Stronger than the layout's
+    // own index-order scan: coverage is demanded under the *partial
+    // order*, so it also certifies the layout itself (the
+    // negative-control hook shrinks a span and this check objects).
+    for r in accesses.iter().filter(|a| !a.write) {
+        let Space::Dev(buf) = r.space else { continue };
+        let mut written: Vec<(usize, usize)> = groups[&r.space]
+            .iter()
+            .filter(|w| w.write && w.op != r.op && reaches(w.op, r.op))
+            .map(|w| (w.lo, w.hi))
+            .collect();
+        written.sort_unstable();
+        let mut cur = r.lo;
+        let mut check_zero = |lo: usize, hi: usize, hazards: &mut Vec<Hazard>| {
+            if lo < hi && !layout.zero_covers(buf, lo, hi) {
+                hazards.push(Hazard {
+                    kind: HazardKind::UncoveredRead,
+                    ops: (Some(r.op), None),
+                    space: Some(r.space),
+                    lo,
+                    hi,
+                    missing_edge: None,
+                    detail: format!(
+                        "{} reads bytes no ancestor wrote and the arena layout does not zero",
+                        op_label(plan, r.op)
+                    ),
+                });
+            }
+        };
+        for &(lo, hi) in &written {
+            if lo > cur {
+                check_zero(cur, lo.min(r.hi), &mut hazards);
+            }
+            cur = cur.max(hi);
+            if cur >= r.hi {
+                break;
+            }
+        }
+        check_zero(cur, r.hi, &mut hazards);
+    }
+
+    VerifyReport { plan: plan.name.clone(), ops: n, accesses: accesses.len(), conflicts, hazards }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{HostSlice, PlanRegion};
+    use std::sync::Arc;
+
+    fn payload(n: usize) -> HostSlice {
+        HostSlice::whole(Arc::new(vec![7u8; n]))
+    }
+
+    /// One H2d → Kex → D2h chain per lane, disjoint buffers, exact
+    /// tiling — the canonical clean shape.
+    fn clean_plan(lanes: usize) -> StreamPlan {
+        let n = 64;
+        let mut p = StreamPlan::new("clean");
+        let out = p.output(n * lanes);
+        for l in 0..lanes {
+            let a = p.buf(n);
+            let b = p.buf(n);
+            let slot = Slot::Task(l);
+            p.h2d(slot, payload(n), PlanRegion::whole(a, n), vec![]);
+            let k = p.kex(
+                slot,
+                "vector_add",
+                vec![PlanRegion::whole(a, n), PlanRegion::whole(a, n)],
+                vec![PlanRegion::whole(b, n)],
+                Some(1),
+                1,
+                vec![],
+            );
+            p.d2h(slot, PlanRegion::whole(b, n), out, l * n, vec![k]);
+        }
+        p
+    }
+
+    fn kinds(r: &VerifyReport) -> Vec<HazardKind> {
+        r.hazards.iter().map(|h| h.kind).collect()
+    }
+
+    #[test]
+    fn clean_plan_is_clean() {
+        let r = verify_plan(&clean_plan(3));
+        assert!(r.is_clean(), "{}", r.summary());
+        assert!(r.conflicts > 0, "per-lane RAW/WAR pairs must be discharged, not skipped");
+        assert_eq!(r.ops, 9);
+    }
+
+    #[test]
+    fn unordered_cross_lane_write_is_a_race() {
+        // Two lanes H2d into the same region with no ordering: WAW.
+        let mut p = StreamPlan::new("waw");
+        let b = p.buf(16);
+        p.h2d(Slot::Task(0), payload(16), PlanRegion::whole(b, 16), vec![]);
+        p.h2d(Slot::Task(1), payload(16), PlanRegion::whole(b, 16), vec![]);
+        let r = verify_plan(&p);
+        assert!(!r.is_sound());
+        let h = &r.hazards[0];
+        assert_eq!(h.kind, HazardKind::UnorderedRace);
+        assert_eq!(h.ops, (Some(0), Some(1)));
+        assert_eq!((h.lo, h.hi), (0, 16));
+        assert_eq!(h.missing_edge, Some((0, 1)));
+        // The same pair ordered by an explicit dep is race-free (a
+        // WAW toward buffer reuse, not a hazard).
+        let mut p = StreamPlan::new("waw-ordered");
+        let b = p.buf(16);
+        p.h2d(Slot::Task(0), payload(16), PlanRegion::whole(b, 16), vec![]);
+        p.h2d(Slot::Task(1), payload(16), PlanRegion::whole(b, 16), vec![0]);
+        assert!(verify_plan(&p).is_sound());
+    }
+
+    #[test]
+    fn in_place_kex_is_not_a_self_race() {
+        // An op reading and writing the same region races only with
+        // *other* ops — mirrors the `i == j` skip in the Python check.
+        let mut p = StreamPlan::new("in-place");
+        let b = p.buf(64);
+        p.h2d(Slot::Task(0), payload(64), PlanRegion::whole(b, 64), vec![]);
+        p.kex(
+            Slot::Task(0),
+            "vector_add",
+            vec![PlanRegion::whole(b, 64), PlanRegion::whole(b, 64)],
+            vec![PlanRegion::whole(b, 64)],
+            Some(1),
+            1,
+            vec![],
+        );
+        let r = verify_plan(&p);
+        assert!(r.is_clean(), "{}", r.summary());
+    }
+
+    #[test]
+    fn forward_dep_and_late_broadcast_are_structural_hazards() {
+        let mut p = StreamPlan::new("bad-graph");
+        let b = p.buf(16);
+        p.h2d(Slot::Task(0), payload(16), PlanRegion::whole(b, 16), vec![1]);
+        p.h2d(Slot::Broadcast, payload(16), PlanRegion::whole(b, 16), vec![]);
+        let r = verify_plan(&p);
+        assert!(kinds(&r).contains(&HazardKind::InvalidDep));
+        assert!(kinds(&r).contains(&HazardKind::LateBroadcast));
+        assert!(!r.is_sound());
+    }
+
+    #[test]
+    fn out_of_range_access_is_reported() {
+        let mut p = StreamPlan::new("oob");
+        let b = p.buf(16);
+        let out = p.output(8);
+        p.d2h(Slot::Task(0), PlanRegion { buf: b, off: 8, len: 16 }, out, 0, vec![]);
+        let r = verify_plan(&p);
+        assert!(kinds(&r).contains(&HazardKind::OutOfRange));
+        assert!(!r.is_sound());
+    }
+
+    #[test]
+    fn gaps_and_double_writes_in_outputs_are_reported() {
+        // Lane-chained D2hs (ordered, so no race): window 2 re-writes
+        // window 1's bytes and the tail stays unwritten.
+        let mut p = StreamPlan::new("tiling");
+        let b = p.buf(64);
+        let out = p.output(64);
+        p.h2d(Slot::Task(0), payload(64), PlanRegion::whole(b, 64), vec![]);
+        p.d2h(Slot::Task(0), PlanRegion { buf: b, off: 0, len: 16 }, out, 0, vec![]);
+        p.d2h(Slot::Task(0), PlanRegion { buf: b, off: 0, len: 16 }, out, 8, vec![]);
+        let r = verify_plan(&p);
+        assert!(kinds(&r).contains(&HazardKind::OutputOverlap));
+        assert!(kinds(&r).contains(&HazardKind::OutputGap));
+        // Deterministic (ordered) — non-canonical but sound.
+        assert!(r.is_sound() && !r.is_clean());
+        let overlap = r.hazards.iter().find(|h| h.kind == HazardKind::OutputOverlap).unwrap();
+        assert_eq!((overlap.lo, overlap.hi), (8, 16));
+    }
+
+    #[test]
+    fn zero_source_reads_need_layout_coverage() {
+        // A never-written read is fine under the true layout…
+        let mut p = StreamPlan::new("zero-src");
+        let z = p.buf(32);
+        let out = p.output(32);
+        p.d2h(Slot::Task(0), PlanRegion::whole(z, 32), out, 0, vec![]);
+        let r = verify_plan(&p);
+        assert!(r.is_clean(), "{}", r.summary());
+        // …and an UncoveredRead under a layout whose span was shrunk
+        // (the arena-reuse soundness condition, negative control).
+        let layout = ArenaLayout::of(&p).with_zero_spans(vec![(0, 16)]);
+        let r = verify_plan_with_layout(&p, &layout);
+        let h = r.hazards.iter().find(|h| h.kind == HazardKind::UncoveredRead).expect("hazard");
+        assert_eq!((h.lo, h.hi), (16, 32));
+        assert!(!r.is_sound());
+    }
+
+    #[test]
+    fn coverage_respects_the_partial_order_not_index_order() {
+        // Lane 1 writes the bytes lane 0 reads, with an explicit edge:
+        // the ancestor write covers the read, no zero span needed.
+        let mut p = StreamPlan::new("cross-lane-cover");
+        let b = p.buf(16);
+        let out = p.output(16);
+        p.h2d(Slot::Task(1), payload(16), PlanRegion::whole(b, 16), vec![]);
+        p.d2h(Slot::Task(0), PlanRegion::whole(b, 16), out, 0, vec![0]);
+        assert!(verify_plan(&p).is_clean());
+    }
+
+    #[test]
+    fn ensure_sound_names_the_op_pair_and_interval() {
+        let mut p = StreamPlan::new("named");
+        let b = p.buf(16);
+        p.h2d(Slot::Task(0), payload(16), PlanRegion::whole(b, 16), vec![]);
+        p.h2d(Slot::Task(1), payload(16), PlanRegion::whole(b, 16), vec![]);
+        let err = ensure_sound(&p).expect_err("race must refuse").to_string();
+        assert!(err.contains("op 0"), "{err}");
+        assert!(err.contains("op 1"), "{err}");
+        assert!(err.contains("0..16"), "{err}");
+        assert!(err.contains("missing edge 0 -> 1"), "{err}");
+    }
+
+    #[test]
+    fn report_json_round_trips_through_util_json() {
+        let mut p = StreamPlan::new("json");
+        let b = p.buf(16);
+        p.h2d(Slot::Task(0), payload(16), PlanRegion::whole(b, 16), vec![]);
+        p.h2d(Slot::Task(1), payload(16), PlanRegion::whole(b, 16), vec![]);
+        let v = crate::util::json::Json::parse(&verify_plan(&p).to_json()).expect("valid JSON");
+        assert_eq!(v.get("sound").and_then(|b| b.as_bool()), Some(false));
+        let hazards = v.get("hazards").and_then(|h| h.as_arr()).expect("array");
+        assert_eq!(hazards.len(), 1);
+    }
+}

@@ -109,6 +109,39 @@ impl ArenaLayout {
     pub fn zero_spans(&self) -> &[(usize, usize)] {
         &self.zero_spans
     }
+
+    /// Whether buffer-relative bytes `[lo, hi)` of `buf` are fully
+    /// inside the must-zero spans — i.e. guaranteed to read back zero
+    /// on a freshly checked-out (possibly reused) arena.  This is the
+    /// span-introspection hook `plan::verify` discharges its
+    /// arena-soundness obligation through.
+    pub fn zero_covers(&self, buf: usize, lo: usize, hi: usize) -> bool {
+        let (alo, ahi) = (self.offsets[buf] + lo, self.offsets[buf] + hi);
+        let mut cur = alo;
+        for &(s, e) in &self.zero_spans {
+            if e <= cur {
+                continue;
+            }
+            if s > cur {
+                break; // gap at `cur`
+            }
+            cur = e;
+            if cur >= ahi {
+                return true;
+            }
+        }
+        cur >= ahi
+    }
+
+    /// Replace the must-zero spans wholesale (absolute arena
+    /// coordinates).  Test-injection hook for the verifier's
+    /// negative controls: shrink a span and
+    /// `plan::verify::verify_plan_with_layout` must report the
+    /// uncovered read.  Never used on the execution path.
+    pub fn with_zero_spans(mut self, spans: Vec<(usize, usize)>) -> Self {
+        self.zero_spans = spans;
+        self
+    }
 }
 
 /// A pool of reusable arena storages.  `checkout` hands back a vector

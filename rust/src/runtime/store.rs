@@ -286,6 +286,13 @@ mod pjrt {
                 // Refill the cached literal in place (§Perf).
                 match spec.dtype {
                     DType::F32 => {
+                        // SAFETY: `execute_bytes` validated `bytes.len()
+                        // == spec.bytes()` (strict mode on PJRT), so the
+                        // reinterpreted slice covers exactly
+                        // `spec.elements()` f32 values inside the live
+                        // borrow; alignment is not required for reads
+                        // through `copy_raw_from`'s memcpy, and `u8` →
+                        // `f32` has no validity-breaking bit patterns.
                         let src: &[f32] = unsafe {
                             std::slice::from_raw_parts(
                                 bytes.as_ptr() as *const f32,
@@ -295,6 +302,8 @@ mod pjrt {
                         lit.copy_raw_from(src)?;
                     }
                     DType::I32 => {
+                        // SAFETY: as above — length validated against the
+                        // manifest, every bit pattern is a valid i32.
                         let src: &[i32] = unsafe {
                             std::slice::from_raw_parts(
                                 bytes.as_ptr() as *const i32,
@@ -322,6 +331,10 @@ mod pjrt {
                 let mut bytes = vec![0u8; spec.bytes()];
                 match spec.dtype {
                     DType::F32 => {
+                        // SAFETY: `bytes` was just allocated with exactly
+                        // `spec.bytes()` = `spec.elements() * 4` bytes and
+                        // is exclusively borrowed here; writing f32 values
+                        // through the view leaves only initialized bytes.
                         let dst: &mut [f32] = unsafe {
                             std::slice::from_raw_parts_mut(
                                 bytes.as_mut_ptr() as *mut f32,
@@ -331,6 +344,7 @@ mod pjrt {
                         part.copy_raw_to(dst)?;
                     }
                     DType::I32 => {
+                        // SAFETY: as above, for i32 elements.
                         let dst: &mut [i32] = unsafe {
                             std::slice::from_raw_parts_mut(
                                 bytes.as_mut_ptr() as *mut i32,
@@ -360,6 +374,10 @@ pub mod bytes {
     /// f32 slice -> byte vec (single memcpy).
     pub fn from_f32(v: &[f32]) -> Vec<u8> {
         let mut out = vec![0u8; v.len() * 4];
+        // SAFETY: `out` was allocated with exactly `v.len() * 4` bytes,
+        // the source is a live borrow of the same byte count, and the
+        // freshly allocated destination cannot overlap it; any f32 bits
+        // are valid u8 bytes.
         unsafe {
             std::ptr::copy_nonoverlapping(v.as_ptr() as *const u8, out.as_mut_ptr(), out.len());
         }
@@ -369,6 +387,8 @@ pub mod bytes {
     /// i32 slice -> byte vec (single memcpy).
     pub fn from_i32(v: &[i32]) -> Vec<u8> {
         let mut out = vec![0u8; v.len() * 4];
+        // SAFETY: as in `from_f32` — exact-size fresh allocation, no
+        // overlap, i32 bits are valid bytes.
         unsafe {
             std::ptr::copy_nonoverlapping(v.as_ptr() as *const u8, out.as_mut_ptr(), out.len());
         }
@@ -379,6 +399,10 @@ pub mod bytes {
     pub fn to_f32(b: &[u8]) -> Vec<f32> {
         let n = b.len() / 4;
         let mut out = vec![0.0f32; n];
+        // SAFETY: `out` holds `n` f32s = `n * 4` bytes ≤ `b.len()`; the
+        // fresh allocation cannot overlap the borrowed source, byte
+        // copies need no alignment, and every bit pattern is a valid
+        // f32 (trailing non-multiple bytes are deliberately dropped).
         unsafe {
             std::ptr::copy_nonoverlapping(b.as_ptr(), out.as_mut_ptr() as *mut u8, n * 4);
         }
@@ -389,6 +413,7 @@ pub mod bytes {
     pub fn to_i32(b: &[u8]) -> Vec<i32> {
         let n = b.len() / 4;
         let mut out = vec![0i32; n];
+        // SAFETY: as in `to_f32`, for i32 elements.
         unsafe {
             std::ptr::copy_nonoverlapping(b.as_ptr(), out.as_mut_ptr() as *mut u8, n * 4);
         }

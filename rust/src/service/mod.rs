@@ -377,6 +377,10 @@ struct Shared {
     admission: Option<AdmissionConfig>,
     /// Per-tenant token buckets + shed counts (admission control).
     gates: Mutex<HashMap<String, TenantGate>>,
+    /// Plans that carried the static hazard proof through the service
+    /// path (debug builds only — release builds skip the verifier and
+    /// leave this at 0; see DESIGN.md §Verification).
+    verified: AtomicU64,
 }
 
 impl Shared {
@@ -415,6 +419,9 @@ pub struct ServiceStats {
     /// Admission sheds per tenant (over-budget + deadline-infeasible),
     /// sorted by tenant name; empty when admission control is off.
     pub shed: Vec<(String, u64)>,
+    /// Plans that passed the static hazard verifier on the service
+    /// path (debug builds; 0 in release, where the gate compiles out).
+    pub verified: u64,
 }
 
 impl ServiceStats {
@@ -466,6 +473,7 @@ impl StreamService {
             profile: cfg.profile.simulation(),
             admission: cfg.admission,
             gates: Mutex::new(HashMap::new()),
+            verified: AtomicU64::new(0),
         });
         let mut lanes = Vec::with_capacity(cfg.lanes.max(1));
         for lane in 0..cfg.lanes.max(1) {
@@ -600,6 +608,7 @@ impl StreamService {
             cache_hits: self.shared.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.shared.cache_misses.load(Ordering::Relaxed),
             shed,
+            verified: self.shared.verified.load(Ordering::Relaxed),
         }
     }
 
@@ -820,6 +829,22 @@ fn run_job(
             ));
             return report;
         }
+    }
+
+    // Debug builds discharge the static hazard proof on every plan the
+    // service admits — validate first (so malformed plans keep their
+    // validation error text, same order as the backend gates), then the
+    // byte-interval race/lifetime verifier (DESIGN.md §Verification).
+    // The backends repeat the check at submit; doing it here too makes
+    // the refusal attributable to the service path (clean report, no
+    // lane churn) and feeds the `verified` stat.  Pure analysis: the
+    // modeled makespan never sees it.
+    if cfg!(debug_assertions) {
+        if let Err(e) = plan.validate().and_then(|()| crate::plan::ensure_sound(&plan)) {
+            report.error = Some(e.to_string());
+            return report;
+        }
+        shared.verified.fetch_add(1, Ordering::Relaxed);
     }
 
     let mut samples = Vec::with_capacity(shared.runs);

@@ -22,6 +22,7 @@ Run:  python3 tools/mirror/tuner_mirror.py [--apps N]
 """
 
 import argparse
+import json
 import math
 import os
 import re
@@ -431,6 +432,25 @@ def native_check(apps):
           f"plans: conflicts ordered, outputs tiled exactly once)")
 
 
+def native_verdicts(apps):
+    """Per-(app, config, granularity) verdict rows for the CI
+    cross-check against `repro verify --corpus --json`.  Both sides key
+    on the *requested* granularity (1, category default, 7, 16 —
+    pre-clamp, duplicates kept) so the verdict lists align 1:1 over the
+    same 224-plan population."""
+    rows = []
+    for c in apps:
+        for g in (1, default_gran(c.category()), 7, 16):
+            try:
+                native_output_path_check(c, g)
+                err = None
+            except AssertionError as e:
+                err = str(e)
+            rows.append({"app": c.app, "config": c.config, "gran": g,
+                         "ok": err is None, "error": err})
+    return rows
+
+
 # --- arena must-zero mirror (rust/src/runtime/arena.rs twin) -----------
 #
 # The NativeBackend reuses pooled arenas across runs, clearing only the
@@ -754,14 +774,24 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--apps", type=int, default=0, help="limit app count")
     ap.add_argument("--native-check", action="store_true",
-                    help="run only the golden-trace and NativeBackend "
-                         "output-path checks (fast; used by CI)")
+                    help="run only the NativeBackend output-path check "
+                         "(fast; advisory in CI — the Rust verifier "
+                         "`repro verify --corpus` owns this proof, and "
+                         "the cross-check diffs the two verdict sets)")
+    ap.add_argument("--json", action="store_true",
+                    help="with --native-check: print the per-(app, "
+                         "config, granularity) verdicts as one JSON "
+                         "document (tools/verify_crosscheck.py input) "
+                         "and nothing else on stdout")
     ap.add_argument("--arena-check", action="store_true",
-                    help="run only the fast checks incl. the arena "
-                         "must-zero replay (fast; used by CI)")
+                    help="run only the golden-trace check and the arena "
+                         "must-zero replay (fast; gating in CI)")
     args = ap.parse_args()
+    if args.json and not args.native_check:
+        ap.error("--json requires --native-check")
 
-    golden_trace_check()
+    if not args.json:
+        golden_trace_check()
     profile = mic31sp_sim()
     cfgs = parse_corpus()
     apps = representative(cfgs)
@@ -771,10 +801,37 @@ def main():
     if args.apps:
         apps = apps[:args.apps]
 
+    if args.native_check:
+        rows = native_verdicts(apps)
+        failed = [r for r in rows if not r["ok"]]
+        if args.json:
+            print(json.dumps({"schema": "mirror-native-check-v1",
+                              "rows": rows, "total": len(rows),
+                              "failed": len(failed)}))
+        else:
+            print(f"native output-path check: "
+                  f"{'OK' if not failed else 'FAIL'} ({len(rows)} "
+                  f"(app, granularity) plans, {len(failed)} hazardous)")
+            for r in failed:
+                print(f"  {r['app']}/{r['config']} gran {r['gran']}: "
+                      f"{r['error']}")
+        if args.arena_check:
+            arena_check(apps)
+        if failed:
+            sys.exit(1)
+        return
+
+    if args.arena_check:
+        # The native output-path proof was demoted to advisory here:
+        # the Rust verifier (`repro verify --corpus`, cross-checked
+        # against `--native-check --json` by tools/verify_crosscheck.py
+        # in CI) now owns it.  This gate covers what only the mirror
+        # can prove: the golden traces and the dirty-arena replay.
+        arena_check(apps)
+        return
+
     native_check(apps)
     arena_check(apps)
-    if args.native_check or args.arena_check:
-        return
 
     streams = [1, 2, 4, 8]
 
