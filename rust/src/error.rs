@@ -24,6 +24,10 @@ pub enum Error {
     /// Service-layer machinery failure (lane spawn, dropped ticket) —
     /// distinct from [`Error::Stream`], which is engine machinery.
     Service(String),
+    /// A malformed or inconsistent [`crate::spec::WorkloadSpec`]
+    /// (unparsable JSON, missing buffer, unknown kernel, size
+    /// mismatch, ...) — rejected before any lowering happens.
+    Spec(String),
     /// Configuration / CLI errors.
     Config(String),
     /// I/O (manifest and artifact loading).
@@ -46,6 +50,7 @@ impl fmt::Display for Error {
             Error::Admission { tenant, reason } => {
                 write!(f, "admission rejected for tenant `{tenant}`: {reason}")
             }
+            Error::Spec(m) => write!(f, "spec error: {m}"),
             Error::Service(m) => write!(f, "service error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),

@@ -10,6 +10,7 @@ pub mod fig4;
 pub mod fig9;
 pub mod lavamd;
 pub mod learn;
+pub mod run_spec;
 pub mod serve;
 pub mod sweep;
 pub mod table2;
@@ -23,13 +24,14 @@ pub use fig4::fig4;
 pub use fig9::{fig9, measure_one, rgain, Fig9Row};
 pub use lavamd::lavamd_negative;
 pub use learn::{dataset_from_tune_rows, dataset_table, learn_cv, learn_dataset, CvStats};
+pub use run_spec::{compile_spec, run_spec, run_spec_json, RunSpecOpts, RunSpecOutcome};
 pub use serve::{demo_roster, serve_demo, ServeSummary};
 pub use sweep::{
     sweep_corpus, sweep_corpus_with, tune_corpus, tune_corpus_with, tune_rows_json, SweepRow,
     TuneRow, TuneStrategy,
 };
 pub use table2::table2;
-pub use verify::{verify_corpus, verify_rows_json, VerifyRow};
+pub use verify::{verify_corpus, verify_rows_json, verify_spec, VerifyRow};
 
 use crate::corpus::BenchConfig;
 use crate::device::DeviceProfile;

@@ -1,0 +1,278 @@
+//! `repro run-spec FILE` — compile and execute a declarative
+//! [`WorkloadSpec`] end-to-end (DESIGN.md §Spec).
+//!
+//! The spec-driven lowering path, exercised from a file: parse →
+//! validate → [`SpecCompiler`] streamed lowering at the requested (or
+//! spec-default) granularity → `StreamPlan::validate` plus the static
+//! hazard verifier → execute on the chosen [`Backend`].  A plan with a
+//! *fatal* hazard (anything beyond the strictness-only output-tiling
+//! findings) is refused before anything runs, so the CLI exits
+//! non-zero without touching an engine.  `--verify` additionally runs
+//! the bulk lowering and demands bitwise-equal outputs — the paper's
+//! §4 re-chunking oracle applied to a user spec.  `--json` emits the
+//! lowered op list + totals in the `hetstream-run-spec-v1` schema that
+//! `tools/mirror/tuner_mirror.py --spec-check` independently derives
+//! and diffs in CI.
+
+use crate::plan::{
+    outputs_match, verify_plan, Backend, Granularity, PlanOpKind, PlanRegion, RunConfig, Slot,
+    StreamPlan, VerifyReport,
+};
+use crate::spec::{category_token, SpecCompiler, WorkloadSpec};
+use crate::util::json::escape;
+use crate::{Error, Result};
+
+/// Knobs of one `run-spec` invocation.
+#[derive(Debug, Clone, Default)]
+pub struct RunSpecOpts {
+    /// Streams (engine lanes / native pool width) for the streamed run.
+    pub streams: usize,
+    /// Requested granularity; `None` = the spec's own default.  Either
+    /// way the compiler's unified clamp applies on top.
+    pub gran: Option<usize>,
+    /// Also run the bulk lowering and demand bitwise-equal outputs.
+    pub verify: bool,
+}
+
+/// Everything one run produced — the CLI report and the JSON dump.
+#[derive(Debug)]
+pub struct RunSpecOutcome {
+    /// The streamed plan that executed.
+    pub plan: StreamPlan,
+    /// The static hazard verifier's report over that plan (sound by
+    /// construction — fatal hazards are refused before execution).
+    pub report: VerifyReport,
+    /// Effective (post-clamp) granularity the plan was lowered at.
+    pub gran: usize,
+    pub streams: usize,
+    pub backend: &'static str,
+    pub wall_ms: f64,
+    /// Assembled host outputs, one per plan output.
+    pub outputs: Vec<Vec<u8>>,
+    /// `Some(ok)` when the `--verify` bulk oracle ran.
+    pub bulk_match: Option<bool>,
+}
+
+/// Lower `spec` at `gran` (spec default when `None`) and statically
+/// check the result: `StreamPlan::validate` plus the hazard verifier.
+/// A fatal hazard is a refusal ([`Error::Spec`], so the CLI exits
+/// non-zero and nothing executes); strictness-only tiling findings are
+/// carried in the report but do not block execution — `repro verify
+/// --spec` demands full cleanliness separately.
+pub fn compile_spec(
+    spec: &WorkloadSpec,
+    gran: Option<usize>,
+) -> Result<(StreamPlan, VerifyReport, usize)> {
+    spec.validate()?;
+    let compiler = SpecCompiler::new(spec);
+    let requested = Granularity::new(gran.unwrap_or(spec.granularity));
+    let eff = compiler.effective_granularity(requested);
+    let plan = compiler.streamed_at(eff);
+    plan.validate()?;
+    let report = verify_plan(&plan);
+    if !report.is_sound() {
+        let first = report
+            .hazards
+            .iter()
+            .find(|h| h.kind.fatal())
+            .map_or_else(|| "?".to_string(), |h| h.to_string());
+        return Err(Error::Spec(format!(
+            "spec `{}` lowers to a plan with a fatal hazard at granularity {}: {first}",
+            spec.name,
+            eff.get(),
+        )));
+    }
+    Ok((plan, report, eff.get()))
+}
+
+/// Compile `spec` and execute it on `backend`; with `opts.verify`, run
+/// the bulk lowering too and record whether the outputs match bitwise.
+pub fn run_spec(
+    spec: &WorkloadSpec,
+    backend: &dyn Backend,
+    opts: &RunSpecOpts,
+) -> Result<RunSpecOutcome> {
+    let (plan, report, gran) = compile_spec(spec, opts.gran)?;
+    let run = backend.run(&plan, RunConfig::streams(opts.streams))?;
+    let bulk_match = if opts.verify {
+        let bulk = SpecCompiler::new(spec).bulk();
+        bulk.validate()?;
+        let oracle = backend.run(&bulk, RunConfig::streams(1))?;
+        Some(outputs_match(&run, &oracle))
+    } else {
+        None
+    };
+    Ok(RunSpecOutcome {
+        report,
+        gran,
+        streams: opts.streams.max(1),
+        backend: backend.name(),
+        wall_ms: run.wall.as_secs_f64() * 1e3,
+        outputs: run.outputs,
+        bulk_match,
+        plan,
+    })
+}
+
+/// FNV-1a over one output's assembled bytes (carried as a decimal
+/// string in the JSON so f64-backed parsers cannot round it).
+fn fnv64(data: &[u8]) -> u64 {
+    data.iter().fold(0xCBF29CE484222325u64, |h, &b| {
+        (h ^ b as u64).wrapping_mul(0x100000001B3)
+    })
+}
+
+fn region_json(r: &PlanRegion) -> String {
+    format!("{{\"buf\":{},\"off\":{},\"len\":{}}}", r.buf, r.off, r.len)
+}
+
+/// The run as one `hetstream-run-spec-v1` JSON document: the lowered
+/// op list (kind / lane / regions / deps), plan totals, and the
+/// output digests.  The Python mirror re-derives the op list from the
+/// same spec file and diffs it against this dump in CI.
+pub fn run_spec_json(spec: &WorkloadSpec, outcome: &RunSpecOutcome) -> String {
+    let plan = &outcome.plan;
+    let mut ops = String::new();
+    for (i, op) in plan.ops.iter().enumerate() {
+        if i > 0 {
+            ops.push(',');
+        }
+        // Broadcast prologue ops carry lane -1; task ops their index.
+        let slot = match op.slot {
+            Slot::Broadcast => -1i64,
+            Slot::Task(t) => t as i64,
+        };
+        let deps =
+            op.deps.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",");
+        match &op.kind {
+            PlanOpKind::H2d { src, dst } => ops.push_str(&format!(
+                "{{\"kind\":\"h2d\",\"slot\":{slot},\"deps\":[{deps}],\
+                 \"bytes\":{},\"buf\":{},\"off\":{}}}",
+                src.len, dst.buf, dst.off
+            )),
+            PlanOpKind::Kex { artifact, inputs, outputs, flops, repeats } => {
+                let regions = |rs: &[PlanRegion]| {
+                    rs.iter().map(region_json).collect::<Vec<_>>().join(",")
+                };
+                ops.push_str(&format!(
+                    "{{\"kind\":\"kex\",\"slot\":{slot},\"deps\":[{deps}],\
+                     \"artifact\":\"{}\",\"inputs\":[{}],\"outputs\":[{}],\
+                     \"flops\":{},\"repeats\":{}}}",
+                    escape(artifact),
+                    regions(inputs),
+                    regions(outputs),
+                    flops.map_or("null".to_string(), |f| f.to_string()),
+                    repeats
+                ));
+            }
+            PlanOpKind::D2h { src, output, off } => ops.push_str(&format!(
+                "{{\"kind\":\"d2h\",\"slot\":{slot},\"deps\":[{deps}],\
+                 \"bytes\":{},\"buf\":{},\"off\":{},\"output\":{output},\"out_off\":{off}}}",
+                src.len, src.buf, src.off
+            )),
+        }
+    }
+    let outputs = outcome
+        .outputs
+        .iter()
+        .map(|o| format!("{{\"bytes\":{},\"fnv64\":\"{}\"}}", o.len(), fnv64(o)))
+        .collect::<Vec<_>>()
+        .join(",");
+    format!(
+        "{{\"schema\":\"hetstream-run-spec-v1\",\"name\":\"{}\",\"category\":\"{}\",\
+         \"mode\":\"{}\",\"gran\":{},\"streams\":{},\"backend\":\"{}\",\
+         \"wall_ms\":{:.6},\"clean\":{},\"hazards\":{},\"bulk_match\":{},\
+         \"totals\":{{\"ops\":{},\"tasks\":{},\"bufs\":{},\"h2d_bytes\":{},\
+         \"d2h_bytes\":{},\"kex_flops\":{}}},\"outputs\":[{outputs}],\"ops\":[{ops}]}}",
+        escape(&spec.name),
+        category_token(spec.category),
+        spec.mode.token(),
+        outcome.gran,
+        outcome.streams,
+        outcome.backend,
+        outcome.wall_ms,
+        outcome.report.is_clean(),
+        outcome.report.hazards.len(),
+        outcome.bulk_match.map_or("null".to_string(), |b| b.to_string()),
+        plan.ops.len(),
+        plan.tasks(),
+        plan.bufs.len(),
+        plan.h2d_bytes(),
+        plan.d2h_bytes(),
+        plan.kex_flops(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::NativeBackend;
+
+    const DEMO: &str = r#"{
+        "schema": "hetstream-spec-v1",
+        "name": "rs-demo",
+        "category": "independent",
+        "mode": "windows",
+        "granularity": 4,
+        "output_bytes": 65536,
+        "buffers": [
+            {"name": "a", "bytes": 65536, "init": {"kind": "f32_rand", "seed": 7}},
+            {"name": "b", "bytes": 65536, "init": {"kind": "f32_rand", "seed": 8}}
+        ],
+        "stages": [{"kernel": "vector_add", "inputs": ["a", "b"]}]
+    }"#;
+
+    #[test]
+    fn run_spec_executes_and_passes_the_bulk_oracle() {
+        let spec = WorkloadSpec::from_json(DEMO).expect("demo spec parses");
+        let opts = RunSpecOpts { streams: 2, gran: None, verify: true };
+        let outcome = run_spec(&spec, &NativeBackend::new(), &opts).expect("native run");
+        assert_eq!(outcome.gran, 4);
+        assert_eq!(outcome.backend, "native");
+        assert_eq!(outcome.bulk_match, Some(true), "streamed must match bulk bitwise");
+        assert_eq!(outcome.outputs.len(), 1);
+        assert_eq!(outcome.outputs[0].len(), 65536);
+        assert!(outcome.report.is_clean());
+    }
+
+    #[test]
+    fn run_spec_json_parses_and_carries_the_op_list() {
+        let spec = WorkloadSpec::from_json(DEMO).unwrap();
+        let opts = RunSpecOpts { streams: 1, gran: Some(2), verify: false };
+        let outcome = run_spec(&spec, &NativeBackend::new(), &opts).unwrap();
+        assert_eq!(outcome.gran, 2);
+        let doc = run_spec_json(&spec, &outcome);
+        let v = crate::util::json::Json::parse(&doc).expect("valid JSON");
+        assert_eq!(v.get("schema").and_then(|s| s.as_str()), Some("hetstream-run-spec-v1"));
+        assert_eq!(v.get("gran").and_then(|n| n.as_usize()), Some(2));
+        let ops = v.get("ops").and_then(|o| o.as_arr()).expect("ops array");
+        assert_eq!(ops.len(), outcome.plan.ops.len());
+        // 2 tasks x (2 uploads + 1 kex + 1 download).
+        assert_eq!(ops.len(), 8);
+        let kinds: Vec<&str> =
+            ops.iter().filter_map(|o| o.get("kind").and_then(|k| k.as_str())).collect();
+        assert_eq!(kinds.iter().filter(|k| **k == "kex").count(), 2);
+        assert_eq!(
+            v.get("totals").and_then(|t| t.get("d2h_bytes")).and_then(|n| n.as_usize()),
+            Some(65536)
+        );
+    }
+
+    #[test]
+    fn compile_spec_applies_the_unified_clamp() {
+        let mut spec = WorkloadSpec::from_json(DEMO).unwrap();
+        for b in &mut spec.buffers {
+            b.bytes = 1024; // 256 f32 lanes
+        }
+        spec.output_bytes = 1024;
+        // A huge granularity request clamps to one lane per task.
+        let (plan, report, gran) = compile_spec(&spec, Some(1 << 40)).expect("compiles");
+        assert_eq!(gran, 256);
+        assert!(report.is_sound());
+        assert!(plan.tasks() >= 1);
+        // Malformed specs refuse cleanly before lowering.
+        let mut bad = spec.clone();
+        bad.stages[0].kernel = "no_such_kernel".into();
+        assert!(matches!(compile_spec(&bad, None), Err(Error::Spec(_))));
+    }
+}

@@ -1,5 +1,6 @@
-//! `repro verify [--corpus]` — the offline hazard proof over the
-//! corpus lowerings (DESIGN.md §Verification).
+//! `repro verify [--corpus] [--spec FILE]` — the offline hazard proof
+//! over the corpus lowerings, or over one user spec (DESIGN.md
+//! §Verification, §Spec).
 //!
 //! Every representative Table-1 app lowers at a granularity ladder and
 //! runs through [`crate::plan::verify`]: structural sanity, byte-
@@ -22,8 +23,9 @@ use crate::corpus::BenchConfig;
 use crate::metrics::Table;
 use crate::plan::{
     default_corpus_granularity, lower_corpus_streamed_at, mirror_check_granularities, verify_plan,
-    Granularity, VerifyReport, CORPUS_BURNER,
+    Granularity, StreamPlan, VerifyReport, CORPUS_BURNER,
 };
+use crate::spec::{SpecCompiler, WorkloadSpec};
 use crate::util::json::escape;
 
 use super::sweep::representative_configs;
@@ -32,7 +34,7 @@ use super::sweep::representative_configs;
 #[derive(Debug, Clone)]
 pub struct VerifyRow {
     pub suite: &'static str,
-    pub app: &'static str,
+    pub app: String,
     pub config: String,
     pub category: &'static str,
     /// Requested granularity (pre-clamp — the mirror keys on it too).
@@ -54,7 +56,7 @@ fn verify_one(c: &BenchConfig, gran: Granularity) -> VerifyRow {
     let ok = valid_error.is_none() && report.is_clean();
     VerifyRow {
         suite: c.suite.label(),
-        app: c.app,
+        app: c.app.to_string(),
         config: c.config.clone(),
         category: c.category().label(),
         gran: gran.get(),
@@ -83,35 +85,7 @@ pub fn verify_corpus(corpus: bool) -> (Table, Vec<VerifyRow>, usize) {
         }
     }
     let failed = rows.iter().filter(|r| !r.ok).count();
-
-    let mut t = Table::new(
-        format!(
-            "Static hazard verification — {} (app, granularity) lowerings, {} failed",
-            rows.len(),
-            failed
-        ),
-        &["suite", "app", "config", "category", "gran", "ops", "accesses", "conflicts", "verdict"],
-    );
-    for r in &rows {
-        let verdict = if r.ok {
-            "clean".to_string()
-        } else if !r.valid {
-            "INVALID".to_string()
-        } else {
-            format!("{} HAZARD(S)", r.report.hazards.len())
-        };
-        t.row(&[
-            r.suite.to_string(),
-            r.app.to_string(),
-            r.config.clone(),
-            r.category.to_string(),
-            r.gran.to_string(),
-            r.report.ops.to_string(),
-            r.report.accesses.to_string(),
-            r.report.conflicts.to_string(),
-            verdict,
-        ]);
-    }
+    let t = render_table(&rows, failed);
     (t, rows, failed)
 }
 
@@ -129,7 +103,7 @@ pub fn verify_rows_json(rows: &[VerifyRow]) -> String {
             "{{\"suite\":\"{}\",\"app\":\"{}\",\"config\":\"{}\",\"category\":\"{}\",\
              \"gran\":{},\"ok\":{},\"valid\":{},\"valid_error\":{},\"report\":{}}}",
             escape(r.suite),
-            escape(r.app),
+            escape(&r.app),
             escape(&r.config),
             escape(r.category),
             r.gran,
@@ -143,6 +117,113 @@ pub fn verify_rows_json(rows: &[VerifyRow]) -> String {
     }
     s.push_str(&format!("],\"total\":{},\"failed\":{failed}}}", rows.len()));
     s
+}
+
+/// Shared table rendering for corpus and spec verification rows.
+fn render_table(rows: &[VerifyRow], failed: usize) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Static hazard verification — {} (app, granularity) lowerings, {} failed",
+            rows.len(),
+            failed
+        ),
+        &["suite", "app", "config", "category", "gran", "ops", "accesses", "conflicts", "verdict"],
+    );
+    for r in rows {
+        let verdict = if r.ok {
+            "clean".to_string()
+        } else if !r.valid {
+            "INVALID".to_string()
+        } else {
+            format!("{} HAZARD(S)", r.report.hazards.len())
+        };
+        t.row(&[
+            r.suite.to_string(),
+            r.app.clone(),
+            r.config.clone(),
+            r.category.to_string(),
+            r.gran.to_string(),
+            r.report.ops.to_string(),
+            r.report.accesses.to_string(),
+            r.report.conflicts.to_string(),
+            verdict,
+        ]);
+    }
+    t
+}
+
+/// One verification row over an already-lowered spec plan.
+fn spec_row(spec: &WorkloadSpec, plan: &StreamPlan, config: &str, gran: usize) -> VerifyRow {
+    let valid_error = plan.validate().err().map(|e| e.to_string());
+    let report = verify_plan(plan);
+    let ok = valid_error.is_none() && report.is_clean();
+    VerifyRow {
+        suite: "spec",
+        app: spec.name.clone(),
+        config: config.to_string(),
+        category: spec.category.label(),
+        gran,
+        valid: valid_error.is_none(),
+        valid_error,
+        report,
+        ok,
+    }
+}
+
+/// Verify one user spec (`repro verify --spec FILE`): the bulk
+/// reference plus a streamed granularity ladder around the spec's
+/// default, every row demanded hazard-free *including* the
+/// strictness-only tiling findings — stricter than `run-spec`'s
+/// fatal-only execution gate.  Returns the rendered table, the rows,
+/// and the failed-row count (the CLI's exit status).
+pub fn verify_spec(spec: &WorkloadSpec) -> (Table, Vec<VerifyRow>, usize) {
+    let compiler = SpecCompiler::new(spec);
+    let mut rows = vec![spec_row(spec, &compiler.bulk(), "bulk", 1)];
+    // Requested ladder; the unified clamp dedupes aliased points so no
+    // plan is verified twice under different labels.
+    let mut seen = std::collections::HashSet::new();
+    for g in [1, spec.granularity, spec.granularity.saturating_mul(2)] {
+        let eff = compiler.effective_granularity(Granularity::new(g)).get();
+        if !seen.insert(eff) {
+            continue;
+        }
+        rows.push(spec_row(spec, &compiler.streamed_at(Granularity::new(eff)), "streamed", eff));
+    }
+    let failed = rows.iter().filter(|r| !r.ok).count();
+    let t = render_table(&rows, failed);
+    (t, rows, failed)
+}
+
+#[cfg(test)]
+mod spec_tests {
+    use super::*;
+
+    #[test]
+    fn a_valid_spec_verifies_clean_at_every_ladder_point() {
+        let spec = WorkloadSpec::from_json(
+            r#"{
+                "schema": "hetstream-spec-v1",
+                "name": "vs-demo",
+                "category": "independent",
+                "mode": "windows",
+                "granularity": 4,
+                "output_bytes": 4096,
+                "buffers": [
+                    {"name": "a", "bytes": 4096, "init": {"kind": "f32_rand", "seed": 3}}
+                ],
+                "stages": [{"kernel": "burner_8", "inputs": ["a"]}]
+            }"#,
+        )
+        .expect("demo spec parses");
+        spec.validate().unwrap();
+        let (_, rows, failed) = verify_spec(&spec);
+        assert_eq!(failed, 0, "hazards: {:?}", rows.iter().filter(|r| !r.ok).count());
+        assert!(rows.len() >= 3, "bulk + a deduped streamed ladder");
+        assert!(rows.iter().all(|r| r.app == "vs-demo" && r.suite == "spec"));
+        // The JSON dump covers spec rows the same as corpus rows.
+        let v = crate::util::json::Json::parse(&verify_rows_json(&rows)).expect("valid JSON");
+        assert_eq!(v.get("failed").and_then(|n| n.as_usize()), Some(0));
+    }
 }
 
 #[cfg(test)]
@@ -159,7 +240,7 @@ mod tests {
             failed,
             0,
             "hazardous default lowerings: {:?}",
-            rows.iter().filter(|r| !r.ok).map(|r| (r.app, r.gran)).collect::<Vec<_>>()
+            rows.iter().filter(|r| !r.ok).map(|r| (r.app.as_str(), r.gran)).collect::<Vec<_>>()
         );
         assert!(
             rows.iter().all(|r| r.report.conflicts > 0 || r.report.ops <= 1),

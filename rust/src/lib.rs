@@ -40,6 +40,12 @@
 //!   multiplexes them onto shared engine lanes with fair per-tenant
 //!   admission, caches lowered plans, and picks (streams, granularity)
 //!   per submission through a pluggable [`service::TunePolicy`].
+//! - [`spec`] — the declarative workload front end: a JSON
+//!   [`spec::WorkloadSpec`] (buffers, kernel stages, dependence
+//!   category, halo/iteration/wavefront parameters) compiled to a
+//!   `StreamPlan` by [`spec::SpecCompiler`] — the one lowering path
+//!   shared by the corpus descriptors, the `repro run-spec` CLI and
+//!   the service's `Request::Spec`.
 //! - [`corpus`] — all 56 benchmarks × 223 input configurations of
 //!   Table 1 as workload descriptors.
 //! - [`workloads`] — the 13 streamed benchmark drivers of Fig. 9 plus
@@ -68,6 +74,7 @@ pub mod partition;
 pub mod plan;
 pub mod runtime;
 pub mod service;
+pub mod spec;
 pub mod util;
 pub mod workloads;
 

@@ -64,8 +64,18 @@ COMMANDS:
               anything; exits non-zero on any hazard
                 [--corpus  all 224 (app x granularity) lowerings;
                  default: each app's default granularity (56)]
+                [--spec FILE  verify one declarative workload spec
+                 instead: bulk + a streamed granularity ladder, every
+                 row demanded fully clean (tiling findings included)]
                 [--json  structured verdicts for the CI cross-check
                  against tools/mirror/tuner_mirror.py --native-check]
+  run-spec FILE  Compile and execute a declarative workload spec
+              (specs/*.json, DESIGN.md §Spec): parse → validate →
+              SpecCompiler lowering → static hazard check → run; a
+              fatal hazard refuses execution (non-zero exit)
+                [--streams N=4] [--gran G  override the spec default]
+                [--backend sim|native] [--verify  bulk re-chunk oracle,
+                 bitwise] [--json  hetstream-run-spec-v1 op-list dump]
   learn       Learned (streams x granularity) tuner over plan features
               (arXiv:1802.02760-style): build the training set, or
               leave-one-app-out cross-validate the k-NN seed
@@ -501,9 +511,19 @@ fn main() -> Result<()> {
         }
         Some("verify") => {
             // Pure static analysis: no Context, no artifacts, nothing
-            // executes — lower every corpus plan and prove it hazard-
-            // free (DESIGN.md §Verification).
-            let (table, rows, failed) = experiments::verify_corpus(args.flag("corpus"));
+            // executes — lower every corpus plan (or one user spec
+            // with --spec FILE) and prove it hazard-free (DESIGN.md
+            // §Verification, §Spec).
+            let (table, rows, failed) = match args.get("spec") {
+                Some(path) => {
+                    let text = std::fs::read_to_string(path)?;
+                    let spec = hetstream::spec::WorkloadSpec::from_json(&text)
+                        .map_err(|e| cli_err(e.to_string()))?;
+                    spec.validate().map_err(|e| cli_err(e.to_string()))?;
+                    experiments::verify_spec(&spec)
+                }
+                None => experiments::verify_corpus(args.flag("corpus")),
+            };
             if args.flag("json") {
                 println!("{}", experiments::verify_rows_json(&rows));
                 eprintln!("verified {} lowering(s), {failed} failed", rows.len());
@@ -520,7 +540,76 @@ fn main() -> Result<()> {
                 }
             }
             if failed > 0 {
-                return Err(cli_err(format!("{failed} corpus lowering(s) have hazards")));
+                return Err(cli_err(format!("{failed} lowering(s) have hazards")));
+            }
+        }
+        Some("run-spec") => {
+            let path = args.positional.first().ok_or_else(|| {
+                cli_err(
+                    "usage: repro run-spec <FILE> [--streams N] [--gran G] \
+                     [--backend sim|native] [--verify] [--json]"
+                        .into(),
+                )
+            })?;
+            let text = std::fs::read_to_string(path)?;
+            let spec = hetstream::spec::WorkloadSpec::from_json(&text)
+                .map_err(|e| cli_err(e.to_string()))?;
+            let gran = match args.get("gran") {
+                Some(g) => Some(
+                    g.parse::<usize>().map_err(|_| cli_err(format!("bad --gran `{g}`")))?,
+                ),
+                None => None,
+            };
+            let opts =
+                experiments::RunSpecOpts { streams, gran, verify: args.flag("verify") };
+            let outcome = match backend_from(&args)? {
+                hetstream::service::ExecBackend::Sim => {
+                    // The sim engines load artifacts up front: register
+                    // exactly the kernels the spec's stages name.
+                    let mut artifacts: Vec<String> =
+                        spec.stages.iter().map(|s| s.kernel.clone()).collect();
+                    artifacts.sort();
+                    artifacts.dedup();
+                    let ctx = make_ctx_with(&args, profile, Some(artifacts), false)?;
+                    experiments::run_spec(
+                        &spec,
+                        &hetstream::plan::SimBackend::new(&ctx),
+                        &opts,
+                    )
+                }
+                hetstream::service::ExecBackend::Native => {
+                    experiments::run_spec(&spec, &hetstream::plan::NativeBackend::new(), &opts)
+                }
+            }
+            .map_err(|e| cli_err(e.to_string()))?;
+            let summary = format!(
+                "run-spec {}: {} backend | gran {} x {} stream(s) | {} op(s) / {} task(s) | \
+                 wall {:.2} ms | {} hazard(s){}",
+                spec.name,
+                outcome.backend,
+                outcome.gran,
+                outcome.streams,
+                outcome.plan.ops.len(),
+                outcome.plan.tasks(),
+                outcome.wall_ms,
+                outcome.report.hazards.len(),
+                match outcome.bulk_match {
+                    Some(true) => " | bulk oracle: match",
+                    Some(false) => " | bulk oracle: MISMATCH",
+                    None => "",
+                },
+            );
+            if args.flag("json") {
+                println!("{}", experiments::run_spec_json(&spec, &outcome));
+                eprintln!("{summary}");
+            } else {
+                println!("{summary}");
+            }
+            if outcome.bulk_match == Some(false) {
+                return Err(cli_err(format!(
+                    "spec `{}`: streamed outputs diverge from the bulk oracle",
+                    spec.name
+                )));
             }
         }
         Some("learn") => {

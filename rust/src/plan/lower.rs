@@ -20,6 +20,16 @@
 //!   second stream to overlap, exactly the paper's non-streamable
 //!   verdict.  Granularity is ignored.
 //!
+//! Since the [`crate::spec`] refactor the functions here are thin
+//! `CorpusDescriptor → WorkloadSpec` conversions
+//! ([`crate::spec::WorkloadSpec::from_corpus`]) over the one
+//! spec-driven compiler ([`crate::spec::SpecCompiler`]), which owns
+//! granularity clipping, 4-byte alignment and zero-source padding for
+//! *every* lowering in the repo.  The construction — and therefore
+//! every emitted op — is unchanged: the Python mirror cross-checks all
+//! 224 (app, gran) corpus plans against its own independent lowering
+//! per commit.
+//!
 //! **Granularity invariance.**  Re-lowering one descriptor at any
 //! granularity assembles bitwise-identical host outputs (the joint
 //! tuner's validation oracle).  The construction that guarantees it:
@@ -38,22 +48,22 @@
 //! sweeps tractable (the linear terms cancel in R — see
 //! `experiments::fig1::offload_spec`).
 
-use std::sync::Arc;
-
-use crate::analysis::{Category, TaskDep};
+use crate::analysis::Category;
 use crate::corpus::BenchConfig;
 use crate::partition::{diagonals, TileCoord};
+use crate::spec::{SpecCompiler, WorkloadSpec};
 
-use super::{Granularity, HostSlice, PlanRegion, Slot, StreamPlan};
+use super::{Granularity, Slot, StreamPlan};
 
 /// Walk a `g`×`g` wavefront grid in diagonal order and wire each tile's
 /// RAW deps: `emit` is called once per tile with its coordinate, its
 /// lane (`Slot::Task(slot within the anti-diagonal)` — "the number of
 /// streams changes on different diagonals"), and the kex op ids of its
 /// north / west / northwest producers, and must return the tile's own
-/// kex op id.  Shared by every wavefront lowering (NW and the
-/// true-dependent corpus shape) so dep wiring and placement cannot
-/// diverge.  Returns the kex op ids in row-major tile order.
+/// kex op id.  Shared by every wavefront lowering (NW, the
+/// true-dependent corpus shape and spec tiles mode) so dep wiring and
+/// placement cannot diverge.  Returns the kex op ids in row-major tile
+/// order.
 pub fn wire_wavefront(
     g: usize,
     mut emit: impl FnMut(TileCoord, Slot, Vec<usize>) -> usize,
@@ -90,9 +100,6 @@ pub const CORPUS_TASKS: usize = 8;
 /// corpus lowerings — the default [`Granularity`] for that category.
 pub const WAVEFRONT_GRID: usize = 4;
 
-/// The burner artifacts' fixed block: 65536 f32 in, 65536 f32 out.
-const KEX_BYTES: usize = 65536 * 4;
-
 /// The seed repo's fixed pre-tuner settings, per category: the
 /// granularity [`lower_corpus_streamed`] uses and the baseline the
 /// joint tuner reports improvements against.
@@ -120,61 +127,15 @@ pub fn mirror_check_granularities(cat: Category) -> [Granularity; 4] {
 }
 
 /// The knob value [`lower_corpus_streamed_at`] will actually lower
-/// `c` at: requested granularity clamped per category (at least one
-/// output lane per task for the partitioned shapes, tile-grid side in
-/// [1, 8] for wavefronts, always 1 where the knob is ignored).  Tuners
-/// should map their candidate ladders through this and dedupe, or
-/// aliased grid points get measured twice under different labels.
+/// `c` at: requested granularity clamped per category.  Delegates to
+/// the *one* clamp on [`SpecCompiler::effective_granularity`] — the
+/// clamp and the lowering share an implementation and cannot
+/// disagree.  Tuners should map their candidate ladders through this
+/// and dedupe, or aliased grid points get measured twice under
+/// different labels.
 pub fn effective_corpus_granularity(c: &BenchConfig, gran: Granularity) -> Granularity {
-    let s = scaled(c);
-    match c.category() {
-        Category::Sync | Category::Iterative => Granularity::new(1),
-        Category::Independent | Category::FalseDependent => {
-            // At least one input lane per task (tasks partition the
-            // payload — a 4-byte-output reduction still streams its
-            // uploads, Fig. 6).
-            Granularity::new(gran.get().min(s.h2d.max(4) / 4).max(1))
-        }
-        Category::TrueDependent => Granularity::new(gran.get().clamp(1, 8)),
-    }
-}
-
-/// Descriptor profile after engine scaling (see module docs).
-struct Scaled {
-    h2d: usize,
-    d2h: usize,
-    flops_per_iter: u64,
-    repeats: u32,
-}
-
-fn scaled(c: &BenchConfig) -> Scaled {
-    let dil = crate::device::DILATION;
-    Scaled {
-        h2d: ((c.h2d_bytes as f64 / dil) as usize).max(4),
-        d2h: ((c.d2h_bytes as f64 / dil) as usize).max(4),
-        flops_per_iter: ((c.flops_per_iteration() as f64 / dil) as u64).min(300_000_000),
-        repeats: c.kex_iterations.clamp(1, 20),
-    }
-}
-
-/// Deterministic synthetic payload (seeded per app so different
-/// descriptors ship different data; generator shared with the
-/// property-testing RNG rather than re-implemented).
-fn synth_payload(len: usize, seed: u64) -> Arc<Vec<u8>> {
-    let mut rng = crate::util::prop::Rng::new(seed);
-    let mut v = Vec::with_capacity(len + 8);
-    while v.len() < len {
-        v.extend_from_slice(&rng.next_u64().to_le_bytes());
-    }
-    v.truncate(len);
-    Arc::new(v)
-}
-
-fn seed_of(c: &BenchConfig) -> u64 {
-    c.app
-        .bytes()
-        .chain(c.config.bytes())
-        .fold(0xCBF29CE484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001B3))
+    let spec = WorkloadSpec::from_corpus(c, CORPUS_BURNER);
+    SpecCompiler::new(&spec).effective_granularity(gran)
 }
 
 /// Bulk (non-streamed) lowering: one upload, `repeats` kernel
@@ -182,29 +143,8 @@ fn seed_of(c: &BenchConfig) -> u64 {
 /// measures stage-by-stage, and the reference every streamed corpus
 /// run (at every granularity) is validated against bitwise.
 pub fn lower_corpus_bulk(c: &BenchConfig, artifact: &str) -> StreamPlan {
-    let s = scaled(c);
-    let mut p = StreamPlan::new(format!("{}/{}", c.app, c.config));
-    let out = p.output(s.d2h);
-    let payload = synth_payload(s.h2d, seed_of(c));
-    let in_buf = p.buf(s.h2d.max(KEX_BYTES));
-    let out_buf = p.buf(s.d2h.max(KEX_BYTES));
-    p.h2d(
-        Slot::Task(0),
-        HostSlice::whole(payload),
-        PlanRegion { buf: in_buf, off: 0, len: s.h2d },
-        vec![],
-    );
-    let kex = p.kex(
-        Slot::Task(0),
-        artifact,
-        vec![PlanRegion::whole(in_buf, KEX_BYTES)],
-        vec![PlanRegion::whole(out_buf, KEX_BYTES)],
-        Some(s.flops_per_iter),
-        s.repeats,
-        vec![],
-    );
-    p.d2h(Slot::Task(0), PlanRegion { buf: out_buf, off: 0, len: s.d2h }, out, 0, vec![kex]);
-    p
+    let spec = WorkloadSpec::from_corpus(c, artifact);
+    SpecCompiler::new(&spec).bulk()
 }
 
 /// Streamed lowering at the category's historical fixed granularity
@@ -224,148 +164,8 @@ pub fn lower_corpus_streamed_at(
     artifact: &str,
     gran: Granularity,
 ) -> StreamPlan {
-    let s = scaled(c);
-    let eff = effective_corpus_granularity(c, gran).get();
-    match c.category() {
-        Category::Sync | Category::Iterative => lower_corpus_bulk(c, artifact),
-        Category::Independent | Category::FalseDependent => {
-            // Halo ratio per window side (false dependent only): the
-            // redundant boundary bytes of Fig. 7, from the descriptor's
-            // recorded halo/chunk element ratio.
-            let inflate = match c.facts.task_dep {
-                TaskDep::Rar { halo, chunk } => 2.0 * halo as f64 / chunk.max(1) as f64,
-                _ => 0.0,
-            };
-            lower_tasks(c, artifact, &s, eff, inflate, None)
-        }
-        Category::TrueDependent => lower_tasks(c, artifact, &s, eff * eff, 0.0, Some(eff)),
-    }
-}
-
-/// Round up to the next f32-lane boundary.
-fn lane_up(n: usize) -> usize {
-    (n + 3) & !3
-}
-
-/// The shared task construction (module docs, "Granularity
-/// invariance"): partition the payload at aligned boundaries, derive
-/// each task's output window from its input window clipped to the
-/// output size, and split any download reaching past the kernel block
-/// between the kernel output and a never-written zero buffer.
-/// `wavefront = Some(g)`
-/// wires `g`² tiles diagonal-by-diagonal with RAW deps; `None` emits
-/// independent round-robin chains in task order.
-fn lower_tasks(
-    c: &BenchConfig,
-    artifact: &str,
-    s: &Scaled,
-    m: usize,
-    inflate: f64,
-    wavefront: Option<usize>,
-) -> StreamPlan {
-    let (h, d) = (s.h2d, s.d2h);
-    let payload = synth_payload(h, seed_of(c));
-    let mut p = StreamPlan::new(format!("{}/{}", c.app, c.config));
-    let out = p.output(d);
-
-    // Input boundaries: 4-byte-aligned partition of the payload — the
-    // Fig. 6 overlap structure (every task ships a share of the input
-    // whatever the output size).  Alignment keeps every task's burner
-    // f32 lanes in phase with the bulk lowering's lanes.
-    let ix: Vec<usize> = (0..=m).map(|t| if t == m { h } else { (t * h / m) & !3 }).collect();
-    // Output boundaries follow the input partition, clipped to the
-    // output size; the tail of a larger output (d > h) rides with the
-    // last task.  A task's output window is always inside its own
-    // input window's byte positions, so its kernel computed exactly
-    // those lanes.
-    let ob: Vec<usize> = (0..=m).map(|t| if t == m { d } else { ix[t].min(d) }).collect();
-
-    // Zero source for output bytes past the kernel block (bytes the
-    // bulk lowering leaves untouched): one never-written buffer.
-    let zmax = (0..m)
-        .map(|t| ob[t + 1].saturating_sub(ob[t].max(KEX_BYTES)))
-        .max()
-        .unwrap_or(0);
-    let zeros = if zmax > 0 { Some(p.buf(zmax)) } else { None };
-
-    let flops = s.flops_per_iter / m as u64;
-    let emit_task = |p: &mut StreamPlan, t: usize, slot: Slot, deps: Vec<usize>| -> usize {
-        let (olo, ohi) = (ob[t], ob[t + 1]);
-        let (ilo, ihi) = (ix[t], ix[t + 1]);
-        // Symmetric halo extension, lane-aligned, clipped to the
-        // payload (so the window still slices the bulk payload).
-        let halo = if inflate > 0.0 && ihi > ilo {
-            lane_up((((ihi - ilo) as f64 * inflate / 2.0) as usize).max(1))
-        } else {
-            0
-        };
-        let xlo = ilo - halo.min(ilo);
-        let xhi = (ihi + halo).min(h);
-        let xfer = xhi - xlo;
-
-        let in_buf = p.buf(xfer.max(KEX_BYTES));
-        let out_buf = p.buf(KEX_BYTES);
-        if xfer > 0 {
-            p.h2d(
-                slot,
-                HostSlice { data: payload.clone(), off: xlo, len: xfer },
-                PlanRegion { buf: in_buf, off: 0, len: xfer },
-                vec![],
-            );
-        }
-        let kex = p.kex(
-            slot,
-            artifact,
-            vec![PlanRegion::whole(in_buf, KEX_BYTES)],
-            vec![PlanRegion::whole(out_buf, KEX_BYTES)],
-            Some(flops),
-            s.repeats,
-            deps,
-        );
-        // Computed part: output positions below the kernel block, read
-        // at the window-relative offset.  A non-empty output window
-        // implies a non-empty input window starting at `olo` (so there
-        // `delta` is just the halo shift, and `olo ≥ xlo` holds —
-        // outside this branch `olo - xlo` could underflow: an
-        // empty-output task has olo clamped to `d` below its `xlo`).
-        let chi = ohi.min(KEX_BYTES);
-        if chi > olo {
-            let delta = olo - xlo;
-            p.d2h(
-                slot,
-                PlanRegion { buf: out_buf, off: delta, len: chi - olo },
-                out,
-                olo,
-                vec![kex],
-            );
-        }
-        // Zero part: positions the bulk lowering leaves untouched.
-        let zlo = olo.max(KEX_BYTES);
-        if ohi > zlo {
-            p.d2h(
-                slot,
-                PlanRegion { buf: zeros.expect("zero buffer declared"), off: 0, len: ohi - zlo },
-                out,
-                zlo,
-                vec![],
-            );
-        }
-        kex
-    };
-
-    match wavefront {
-        Some(g) => {
-            wire_wavefront(g, |tc, lane, deps| {
-                emit_task(&mut p, tc.bi * g + tc.bj, lane, deps)
-            });
-        }
-        None => {
-            for t in 0..m {
-                emit_task(&mut p, t, Slot::Task(t), vec![]);
-            }
-        }
-    }
-    p
+    let spec = WorkloadSpec::from_corpus(c, artifact);
+    SpecCompiler::new(&spec).streamed_at(gran)
 }
 
 #[cfg(test)]
@@ -480,6 +280,39 @@ mod tests {
             .filter(|op| matches!(op.kind, PlanOpKind::H2d { .. }))
             .count();
         assert_eq!(h2d_ops, CORPUS_TASKS, "every task ships an input share");
+    }
+
+    #[test]
+    fn unified_clamp_agrees_with_the_historical_formula_for_all_224_rows() {
+        // Satellite of the spec refactor: `effective_corpus_granularity`
+        // now delegates to `SpecCompiler::effective_granularity`.  Over
+        // the exact verification population (56 representative apps ×
+        // the 4-point mirror ladder = 224 rows, plus a few off-ladder
+        // knobs) the delegated clamp must agree with the historical
+        // per-category formula, restated inline here.
+        let dil = crate::device::DILATION;
+        for c in crate::experiments::sweep::representative_configs(false) {
+            let h2d = ((c.h2d_bytes as f64 / dil) as usize).max(4);
+            let ladder = mirror_check_granularities(c.category());
+            let extra = [Granularity::new(2), Granularity::new(3), Granularity::new(64)];
+            for g in ladder.iter().chain(extra.iter()) {
+                let historical = match c.category() {
+                    Category::Sync | Category::Iterative => 1,
+                    Category::Independent | Category::FalseDependent => {
+                        g.get().min(h2d.max(4) / 4).max(1)
+                    }
+                    Category::TrueDependent => g.get().clamp(1, 8),
+                };
+                assert_eq!(
+                    effective_corpus_granularity(&c, *g).get(),
+                    historical,
+                    "{}/{} gran {}",
+                    c.app,
+                    c.config,
+                    g.get()
+                );
+            }
+        }
     }
 
     #[test]

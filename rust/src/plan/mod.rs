@@ -519,7 +519,7 @@ impl StreamPlan {
 /// Manifest entry for `artifact` (`None` if unknown).  Loaded once
 /// (builtin manifest when no artifacts dir) and shared by the FLOP
 /// fallback and the signature validation in [`StreamPlan::validate`].
-fn manifest_meta(artifact: &str) -> Option<&'static crate::runtime::ArtifactMeta> {
+pub(crate) fn manifest_meta(artifact: &str) -> Option<&'static crate::runtime::ArtifactMeta> {
     use std::sync::OnceLock;
     static MANIFEST: OnceLock<Option<crate::runtime::Manifest>> = OnceLock::new();
     MANIFEST

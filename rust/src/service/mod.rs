@@ -63,6 +63,7 @@ use crate::plan::{
     lower_corpus_streamed_at, Backend, Granularity, NativeBackend, RunConfig, SimBackend,
     StreamPlan, CORPUS_BURNER,
 };
+use crate::spec::{SpecCompiler, WorkloadSpec};
 use crate::{Error, Result};
 
 /// Which execution backend the service's lanes run jobs on.
@@ -227,6 +228,13 @@ pub enum Request {
     /// A pre-lowered plan at an explicit stream count (no policy, no
     /// cache) — the escape hatch for non-corpus workloads.
     Plan { plan: Arc<StreamPlan>, streams: usize },
+    /// A declarative [`WorkloadSpec`]: validated at submit (malformed
+    /// specs are a clean [`Error::Spec`], never queued), compiled
+    /// through [`SpecCompiler`] on first use, cached by
+    /// `(content hash, effective granularity)`, and tuned per
+    /// submission through [`TunePolicy::choose_plan`] — the same
+    /// cache/policy/admission ride the corpus path gets.
+    Spec(Arc<WorkloadSpec>),
 }
 
 /// What a submission resolved to.
@@ -354,10 +362,22 @@ type CacheSlot = Arc<std::sync::OnceLock<Arc<StreamPlan>>>;
 /// granularity is the *output* of the decision, so it is absent here).
 type ChoiceKey = (&'static str, &'static str, String);
 
+/// Spec-plan cache key: the spec's content hash (not its name — two
+/// specs with equal content share cached plans, a renamed buffer does
+/// not alias) plus the effective granularity the plan was compiled at.
+type SpecCacheKey = (u64, usize);
+
 struct Shared {
     queue: Mutex<QueueState>,
     cv: Condvar,
     cache: Mutex<HashMap<CacheKey, CacheSlot>>,
+    /// Spec submissions' plan cache (same single-flight discipline as
+    /// `cache`, keyed by content hash — see [`SpecCacheKey`]).
+    spec_cache: Mutex<HashMap<SpecCacheKey, CacheSlot>>,
+    /// `TunePolicy::choose_plan` memoized per spec content hash (the
+    /// decision compiles the spec's bulk plan, which materializes the
+    /// payload — same rationale as `choices`).
+    spec_choices: Mutex<HashMap<u64, PolicyChoice>>,
     /// `TunePolicy::choose` memoized per descriptor: both shipped
     /// policies lower the descriptor to extract features/seeds, which
     /// synthesizes the full multi-MiB payload — without this, every
@@ -397,6 +417,25 @@ impl Shared {
         }
         let choice = self.policy.choose(c, &self.profile);
         relock(&self.choices).insert(ckey, choice);
+        choice
+    }
+
+    /// The memoized policy decision for a spec submission: the policy
+    /// sees the spec's *bulk* plan (same byte/FLOP profile at any
+    /// knob), and the returned granularity is clamped through the
+    /// compiler's unified clamp so the cache key below is the knob the
+    /// lowering actually uses.  Requires a validated spec (submit
+    /// rejects malformed ones before they can reach here).
+    fn choice_for_spec(&self, spec: &WorkloadSpec) -> PolicyChoice {
+        let key = spec.content_hash();
+        if let Some(choice) = relock(&self.spec_choices).get(&key).copied() {
+            return choice;
+        }
+        let compiler = SpecCompiler::new(spec);
+        let mut choice =
+            self.policy.choose_plan(&compiler.bulk(), spec.category, &self.profile);
+        choice.gran = compiler.effective_granularity(Granularity::new(choice.gran)).get();
+        relock(&self.spec_choices).insert(key, choice);
         choice
     }
 }
@@ -463,6 +502,8 @@ impl StreamService {
             queue: Mutex::new(QueueState { admission: Admission::new(), closed: false }),
             cv: Condvar::new(),
             cache: Mutex::new(HashMap::new()),
+            spec_cache: Mutex::new(HashMap::new()),
+            spec_choices: Mutex::new(HashMap::new()),
             choices: Mutex::new(HashMap::new()),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
@@ -510,6 +551,12 @@ impl StreamService {
         req: Request,
         deadline_ms: Option<f64>,
     ) -> Result<Ticket> {
+        // Malformed specs are refused here with a clean `Error::Spec`
+        // — never queued, never compiled, never a hang.  Everything
+        // past this point (policy, cache, lanes) may assume validity.
+        if let Request::Spec(spec) = &req {
+            spec.validate()?;
+        }
         if self.shared.admission.is_some() || deadline_ms.is_some() {
             let est_ms = self.estimate_cost_ms(&req);
             if let Some(deadline) = deadline_ms {
@@ -566,6 +613,7 @@ impl StreamService {
             Request::Plan { plan, streams } => {
                 crate::analysis::predict_plan_cost_ms(plan, &self.shared.profile, *streams)
             }
+            Request::Spec(spec) => self.shared.choice_for_spec(spec).est_ms,
         }
     }
 
@@ -710,6 +758,7 @@ fn error_report(lane: usize, backend: &'static str, job: &Job, error: String) ->
     let name = match &job.req {
         Request::Corpus(c) => format!("{}/{}", c.app, c.config),
         Request::Plan { plan, .. } => plan.name.clone(),
+        Request::Spec(spec) => spec.name.clone(),
     };
     SubmissionReport {
         tenant: job.tenant.clone(),
@@ -814,6 +863,53 @@ fn run_job(
                 error: None,
             };
             (plan.clone(), (*streams).max(1), report)
+        }
+        Request::Spec(spec) => {
+            // Mirrors the corpus arm: memoized policy decision, then a
+            // single-flight cache slot keyed by content hash at the
+            // effective granularity (see `SpecCacheKey`).
+            let choice = shared.choice_for_spec(spec);
+            let key: SpecCacheKey = (spec.content_hash(), choice.gran);
+            let (slot, cache_hit) = {
+                let mut cache = relock(&shared.spec_cache);
+                match cache.get(&key) {
+                    Some(slot) => (slot.clone(), true),
+                    None => {
+                        let slot: CacheSlot = Arc::new(std::sync::OnceLock::new());
+                        cache.insert(key, slot.clone());
+                        (slot, false)
+                    }
+                }
+            };
+            if cache_hit {
+                shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                shared.cache_misses.fetch_add(1, Ordering::Relaxed);
+            }
+            let plan = slot
+                .get_or_init(|| {
+                    Arc::new(
+                        SpecCompiler::new(spec).streamed_at(Granularity::new(choice.gran)),
+                    )
+                })
+                .clone();
+            let report = SubmissionReport {
+                tenant: job.tenant.clone(),
+                name: plan.name.clone(),
+                category: Some(spec.category.label()),
+                streams: choice.streams,
+                gran: Some(choice.gran),
+                learned: choice.learned,
+                lane,
+                backend: backend_label,
+                cache_hit,
+                modeled_ms: f64::NAN,
+                queue_wait_ms: f64::NAN,
+                e2e_ms: f64::NAN,
+                outputs: Vec::new(),
+                error: None,
+            };
+            (plan, choice.streams, report)
         }
     };
 
@@ -1040,6 +1136,69 @@ mod tests {
         assert_eq!(nref.backend, "native");
         assert_eq!(sref.outputs, nref.outputs, "sim and native lanes diverge");
         assert_eq!(stats.jobs(), 1);
+    }
+
+    fn demo_spec() -> WorkloadSpec {
+        use crate::spec::{BufferInit, BufferSpec, HaloSpec, SpecMode, StageSpec};
+        WorkloadSpec {
+            name: "spec-demo".into(),
+            category: crate::analysis::Category::Independent,
+            mode: SpecMode::Windows,
+            granularity: 4,
+            repeats: 1,
+            output_bytes: 65536,
+            block_bytes: crate::spec::KEX_BLOCK_BYTES,
+            steps: 0,
+            penalty: 0,
+            halo: HaloSpec::ZERO,
+            buffers: vec![BufferSpec {
+                name: "a".into(),
+                bytes: 65536,
+                init: BufferInit::F32Rand { seed: 9 },
+            }],
+            stages: vec![StageSpec {
+                kernel: CORPUS_BURNER.into(),
+                inputs: vec!["a".into()],
+                flops: Some(1_000_000),
+            }],
+        }
+    }
+
+    #[test]
+    fn spec_submissions_ride_the_cache_and_policy() {
+        // Spec requests get the full corpus treatment: policy-chosen
+        // (streams, gran), content-hash plan cache, clean refusal of
+        // malformed specs at submit.
+        let service = admission_service(None);
+        let spec = Arc::new(demo_spec());
+        let r1 = service
+            .submit("t", Request::Spec(spec.clone()))
+            .expect("valid spec admits")
+            .wait()
+            .expect("report");
+        assert!(r1.ok(), "{:?}", r1.error);
+        assert!(!r1.cache_hit, "first submission lowers");
+        assert_eq!(r1.name, "spec-demo");
+        assert_eq!(r1.category, Some("Independent"));
+        assert!(r1.streams >= 1 && r1.gran.unwrap_or(0) >= 1);
+        let r2 = service
+            .submit("t", Request::Spec(spec.clone()))
+            .expect("resubmit admits")
+            .wait()
+            .expect("report");
+        assert!(r2.cache_hit, "same content hash must hit the cache");
+        assert_eq!(r1.outputs, r2.outputs, "cached plan replays byte-exactly");
+
+        let mut bad = demo_spec();
+        bad.stages[0].kernel = "no_such_kernel".into();
+        match service.submit("t", Request::Spec(Arc::new(bad))) {
+            Err(Error::Spec(m)) => assert!(m.contains("unknown kernel"), "{m}"),
+            other => panic!("malformed spec must be Error::Spec, got {:?}", other.is_ok()),
+        }
+
+        let stats = service.shutdown();
+        assert_eq!(stats.jobs(), 2, "the malformed spec never reached a lane");
+        assert_eq!((stats.cache_hits, stats.cache_misses), (1, 1));
     }
 
     #[test]

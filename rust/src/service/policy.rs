@@ -9,10 +9,15 @@
 //! behind the same one-call interface, and the service consults
 //! whichever it was started with once per descriptor submission.
 
-use crate::analysis::{analytic_corpus_choice, corpus_features, predict_plan_cost_ms, KnnTuner};
+use crate::analysis::{
+    analytic_corpus_choice, corpus_features, predict_plan_cost_ms, predict_plan_point,
+    Category, KnnTuner, PlanFeatures,
+};
 use crate::corpus::BenchConfig;
 use crate::device::DeviceProfile;
-use crate::plan::{effective_corpus_granularity, lower_corpus_bulk, Granularity, CORPUS_BURNER};
+use crate::plan::{
+    effective_corpus_granularity, lower_corpus_bulk, Granularity, StreamPlan, CORPUS_BURNER,
+};
 
 /// One policy decision for a descriptor submission.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -40,6 +45,36 @@ pub trait TunePolicy: Send + Sync {
 
     /// Choose the execution point for `c` on `profile`.
     fn choose(&self, c: &BenchConfig, profile: &DeviceProfile) -> PolicyChoice;
+
+    /// Choose the execution point for an arbitrary lowered plan (the
+    /// [`Request::Spec`](crate::service::Request) path: spec
+    /// submissions have no descriptor to look up, but their *bulk*
+    /// plan carries the same byte/FLOP profile the analytic model
+    /// reads).  The returned granularity is in the workload's knob
+    /// units and still gets clamped through the spec compiler by the
+    /// caller.  Default: the analytic closed form
+    /// ([`predict_plan_point`] + [`predict_plan_cost_ms`]).
+    fn choose_plan(
+        &self,
+        plan: &StreamPlan,
+        category: Category,
+        profile: &DeviceProfile,
+    ) -> PolicyChoice {
+        let (streams, seed_tasks) = predict_plan_point(plan, profile);
+        // Same knob mapping as `analytic_corpus_choice`: wavefront
+        // categories spend the task budget as a grid side.
+        let gran = match category {
+            Category::TrueDependent => (seed_tasks as f64).sqrt().ceil() as usize,
+            _ => seed_tasks,
+        }
+        .max(1);
+        PolicyChoice {
+            streams,
+            gran,
+            learned: false,
+            est_ms: predict_plan_cost_ms(plan, profile, streams),
+        }
+    }
 }
 
 /// The closed-form §6 seed: stream count from the stage balance,
@@ -99,6 +134,23 @@ impl TunePolicy for LearnedPolicy {
             None => AnalyticPolicy.choose(c, profile),
         }
     }
+
+    fn choose_plan(
+        &self,
+        plan: &StreamPlan,
+        category: Category,
+        profile: &DeviceProfile,
+    ) -> PolicyChoice {
+        match self.knn.predict(&PlanFeatures::of(plan, profile, category)) {
+            Some((streams, gran)) => PolicyChoice {
+                streams,
+                gran,
+                learned: true,
+                est_ms: predict_plan_cost_ms(plan, profile, streams),
+            },
+            None => AnalyticPolicy.choose_plan(plan, category, profile),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -138,5 +190,27 @@ mod tests {
         let choice = policy.choose(c, &profile);
         assert!(!choice.learned, "empty model must report the analytic fallback");
         assert_eq!((choice.streams, choice.gran), analytic_corpus_seed(c, &profile));
+    }
+
+    #[test]
+    fn plan_level_choice_is_the_same_closed_form_the_corpus_path_uses() {
+        // `choose_plan` over a descriptor's bulk plan must agree with
+        // `choose` over the descriptor itself — the spec path and the
+        // corpus path share one analytic model.
+        let profile = sim_profile();
+        for c in crate::corpus::all_configs().into_iter().step_by(61) {
+            let spec = crate::spec::WorkloadSpec::from_corpus(&c, CORPUS_BURNER);
+            let bulk = crate::spec::SpecCompiler::new(&spec).bulk();
+            let via_plan = AnalyticPolicy.choose_plan(&bulk, c.category(), &profile);
+            let via_corpus = AnalyticPolicy.choose(&c, &profile);
+            assert_eq!(via_plan.streams, via_corpus.streams, "{}/{}", c.app, c.config);
+            assert_eq!(via_plan.est_ms, via_corpus.est_ms, "{}/{}", c.app, c.config);
+            assert!(!via_plan.learned);
+            // An empty learned model falls back to the same point.
+            let learned = LearnedPolicy::new(KnnTuner::fit(Dataset::default(), 5));
+            let fb = learned.choose_plan(&bulk, c.category(), &profile);
+            assert!(!fb.learned);
+            assert_eq!((fb.streams, fb.gran), (via_plan.streams, via_plan.gran));
+        }
     }
 }

@@ -1,0 +1,741 @@
+//! [`SpecCompiler`]: one spec-driven lowering path from
+//! [`WorkloadSpec`] to [`StreamPlan`] — the only place in the repo
+//! that builds category-shaped task DAGs.
+//!
+//! One composable builder per category/discipline:
+//!
+//! - **bulk / block fan-out / block wavefront** — the historical
+//!   corpus construction (fixed kernel block, aligned payload
+//!   partition, zero-source padding), moved here verbatim from
+//!   `plan/lower.rs` so descriptor-derived plans stay op-for-op
+//!   identical to what the Python mirror independently derives.
+//! - **windows** — exact task windows: elastic kernels run whole
+//!   windows, fixed-shape kernels tile inside them, stages chain per
+//!   task with explicit RAW deps; false-dependent specs extend each
+//!   window by (possibly asymmetric) halo ratios and download only the
+//!   owned range.
+//! - **pingpong** — chunked uploads on alternating lanes feeding a
+//!   pure RAW kernel chain (hotspot's Iterative shape).
+//! - **tiles** — the NW wavefront: broadcast boundary vectors,
+//!   per-tile payloads, device-resident south/east edges, deps wired
+//!   by [`wire_wavefront`].
+//!
+//! The compiler also owns the *unified* granularity clamp
+//! ([`SpecCompiler::effective_granularity`]);
+//! `plan::effective_corpus_granularity` delegates here, so the clamp
+//! and the lowering can no longer disagree.
+//!
+//! **Granularity invariance** (the tuner's oracle) holds for every
+//! mode: re-compiling one spec at any granularity assembles
+//! bitwise-identical host outputs.  See `plan/lower.rs` module docs
+//! for the block-mode construction and DESIGN.md §Spec for the rest.
+
+use std::sync::Arc;
+
+use crate::analysis::Category;
+use crate::partition::chunk_ranges;
+use crate::plan::{
+    manifest_meta, wire_wavefront, Granularity, HostSlice, PlanRegion, Slot, StreamPlan,
+};
+use crate::runtime::{bytes, elastic_artifact};
+
+use super::{materialize, SpecMode, WorkloadSpec};
+
+/// Round up to the next f32-lane boundary.
+fn lane_up(n: usize) -> usize {
+    (n + 3) & !3
+}
+
+/// Halo bytes for one window side: `ratio × window_len`, lane-aligned,
+/// at least one lane when the ratio is non-zero (the historical
+/// symmetric arithmetic, applied per side).
+fn halo_side(ratio: f64, len: usize) -> usize {
+    if ratio > 0.0 && len > 0 {
+        lane_up(((len as f64 * ratio) as usize).max(1))
+    } else {
+        0
+    }
+}
+
+/// Compiles one validated [`WorkloadSpec`] into [`StreamPlan`]s.
+pub struct SpecCompiler<'a> {
+    spec: &'a WorkloadSpec,
+}
+
+impl<'a> SpecCompiler<'a> {
+    pub fn new(spec: &'a WorkloadSpec) -> Self {
+        Self { spec }
+    }
+
+    /// The one category/mode granularity clamp (shared by the corpus
+    /// path, the tuners and the service — tuners should map candidate
+    /// ladders through this and dedupe, or aliased grid points get
+    /// measured twice under different labels):
+    ///
+    /// - block Sync/Iterative — the knob is ignored (single task);
+    /// - partitioned shapes (block fan-out, windows, pingpong
+    ///   uploads) — at least one f32 input lane per task;
+    /// - block wavefront — tile-grid side in [1, 8];
+    /// - tiles — pinned by buffer size ÷ kernel tile side.
+    pub fn effective_granularity(&self, gran: Granularity) -> Granularity {
+        let s = self.spec;
+        let g = gran.get();
+        let lanes = |bytes: usize| g.min(bytes.max(4) / 4).max(1);
+        Granularity::new(match s.mode {
+            SpecMode::Block => match s.category {
+                Category::Sync | Category::Iterative => 1,
+                Category::Independent | Category::FalseDependent => lanes(s.buffers[0].bytes),
+                Category::TrueDependent => g.clamp(1, 8),
+            },
+            SpecMode::Windows | SpecMode::PingPong => lanes(s.buffers[0].bytes),
+            SpecMode::Tiles => self.tile_grid(),
+        })
+    }
+
+    /// The reference (non-streamed) lowering every streamed compile is
+    /// validated against bitwise: one task / whole windows / whole
+    /// uploads.  For tiles the wavefront *is* the reference (baseline
+    /// = same DAG on one stream).
+    pub fn bulk(&self) -> StreamPlan {
+        match self.spec.mode {
+            SpecMode::Block => self.block_bulk(),
+            SpecMode::Windows => self.windows_at(1),
+            SpecMode::PingPong => self.pingpong_at(1),
+            SpecMode::Tiles => self.tiles(),
+        }
+    }
+
+    /// Streamed lowering at the spec's default granularity.
+    pub fn streamed(&self) -> StreamPlan {
+        self.streamed_at(Granularity::new(self.spec.granularity))
+    }
+
+    /// Streamed lowering at an explicit granularity (clamped through
+    /// [`Self::effective_granularity`]).
+    pub fn streamed_at(&self, gran: Granularity) -> StreamPlan {
+        let eff = self.effective_granularity(gran).get();
+        match self.spec.mode {
+            SpecMode::Block => match self.spec.category {
+                Category::Sync | Category::Iterative => self.block_bulk(),
+                Category::Independent | Category::FalseDependent => self.block_tasks(eff, None),
+                Category::TrueDependent => self.block_tasks(eff * eff, Some(eff)),
+            },
+            SpecMode::Windows => self.windows_at(eff),
+            SpecMode::PingPong => self.pingpong_at(eff),
+            SpecMode::Tiles => self.tiles(),
+        }
+    }
+
+    // ----- block mode (the historical corpus construction) -----
+
+    /// Bulk block lowering: one upload, `repeats` kernel launches, one
+    /// download — the offload the paper's §3.3 protocol measures
+    /// stage-by-stage.
+    fn block_bulk(&self) -> StreamPlan {
+        let s = self.spec;
+        let st = &s.stages[0];
+        let b = s.block_bytes;
+        let (h, d) = (s.buffers[0].bytes, s.output_bytes);
+        let mut p = StreamPlan::new(s.name.clone());
+        let out = p.output(d);
+        let payload = materialize(&s.buffers[0]);
+        let in_buf = p.buf(h.max(b));
+        let out_buf = p.buf(d.max(b));
+        p.h2d(
+            Slot::Task(0),
+            HostSlice::whole(payload),
+            PlanRegion { buf: in_buf, off: 0, len: h },
+            vec![],
+        );
+        let kex = p.kex(
+            Slot::Task(0),
+            &st.kernel,
+            vec![PlanRegion::whole(in_buf, b)],
+            vec![PlanRegion::whole(out_buf, b)],
+            st.flops,
+            s.repeats,
+            vec![],
+        );
+        p.d2h(Slot::Task(0), PlanRegion { buf: out_buf, off: 0, len: d }, out, 0, vec![kex]);
+        p
+    }
+
+    /// The shared block task construction ("granularity invariance" in
+    /// the `plan/lower.rs` module docs): partition the payload at
+    /// aligned boundaries, derive each task's output window from its
+    /// input window clipped to the output size, and split any download
+    /// reaching past the kernel block between the kernel output and a
+    /// never-written zero buffer.  `wavefront = Some(g)` wires `g`²
+    /// tiles diagonal-by-diagonal with RAW deps; `None` emits
+    /// independent round-robin chains in task order.
+    fn block_tasks(&self, m: usize, wavefront: Option<usize>) -> StreamPlan {
+        let s = self.spec;
+        let st = &s.stages[0];
+        let kb = s.block_bytes;
+        let (h, d) = (s.buffers[0].bytes, s.output_bytes);
+        let payload = materialize(&s.buffers[0]);
+        let mut p = StreamPlan::new(s.name.clone());
+        let out = p.output(d);
+
+        // Input boundaries: 4-byte-aligned partition of the payload —
+        // the Fig. 6 overlap structure (every task ships a share of
+        // the input whatever the output size).  Alignment keeps every
+        // task's burner f32 lanes in phase with the bulk lowering's.
+        let ix: Vec<usize> = (0..=m).map(|t| if t == m { h } else { (t * h / m) & !3 }).collect();
+        // Output boundaries follow the input partition, clipped to the
+        // output size; the tail of a larger output (d > h) rides with
+        // the last task.  A task's output window is always inside its
+        // own input window's byte positions, so its kernel computed
+        // exactly those lanes.
+        let ob: Vec<usize> = (0..=m).map(|t| if t == m { d } else { ix[t].min(d) }).collect();
+
+        // Zero source for output bytes past the kernel block (bytes
+        // the bulk lowering leaves untouched): one never-written
+        // buffer.
+        let zmax =
+            (0..m).map(|t| ob[t + 1].saturating_sub(ob[t].max(kb))).max().unwrap_or(0);
+        let zeros = if zmax > 0 { Some(p.buf(zmax)) } else { None };
+
+        let flops = st.flops.map(|f| f / m as u64);
+        let emit_task = |p: &mut StreamPlan, t: usize, slot: Slot, deps: Vec<usize>| -> usize {
+            let (olo, ohi) = (ob[t], ob[t + 1]);
+            let (ilo, ihi) = (ix[t], ix[t + 1]);
+            // Halo extension per side (false dependent only),
+            // lane-aligned, clipped to the payload (so the window
+            // still slices the bulk payload).
+            let (hlo, hhi) =
+                (halo_side(s.halo.lo, ihi - ilo), halo_side(s.halo.hi, ihi - ilo));
+            let xlo = ilo - hlo.min(ilo);
+            let xhi = (ihi + hhi).min(h);
+            let xfer = xhi - xlo;
+
+            let in_buf = p.buf(xfer.max(kb));
+            let out_buf = p.buf(kb);
+            if xfer > 0 {
+                p.h2d(
+                    slot,
+                    HostSlice { data: payload.clone(), off: xlo, len: xfer },
+                    PlanRegion { buf: in_buf, off: 0, len: xfer },
+                    vec![],
+                );
+            }
+            let kex = p.kex(
+                slot,
+                &st.kernel,
+                vec![PlanRegion::whole(in_buf, kb)],
+                vec![PlanRegion::whole(out_buf, kb)],
+                flops,
+                s.repeats,
+                deps,
+            );
+            // Computed part: output positions below the kernel block,
+            // read at the window-relative offset.  A non-empty output
+            // window implies a non-empty input window starting at
+            // `olo` (so there `delta` is just the halo shift, and
+            // `olo ≥ xlo` holds — outside this branch `olo - xlo`
+            // could underflow: an empty-output task has olo clamped to
+            // `d` below its `xlo`).
+            let chi = ohi.min(kb);
+            if chi > olo {
+                let delta = olo - xlo;
+                p.d2h(
+                    slot,
+                    PlanRegion { buf: out_buf, off: delta, len: chi - olo },
+                    out,
+                    olo,
+                    vec![kex],
+                );
+            }
+            // Zero part: positions the bulk lowering leaves untouched.
+            let zlo = olo.max(kb);
+            if ohi > zlo {
+                p.d2h(
+                    slot,
+                    PlanRegion {
+                        buf: zeros.expect("zero buffer declared"),
+                        off: 0,
+                        len: ohi - zlo,
+                    },
+                    out,
+                    zlo,
+                    vec![],
+                );
+            }
+            kex
+        };
+
+        match wavefront {
+            Some(g) => {
+                wire_wavefront(g, |tc, lane, deps| {
+                    emit_task(&mut p, tc.bi * g + tc.bj, lane, deps)
+                });
+            }
+            None => {
+                for t in 0..m {
+                    emit_task(&mut p, t, Slot::Task(t), vec![]);
+                }
+            }
+        }
+        p
+    }
+
+    // ----- windows mode (exact-window pipelines) -----
+
+    /// Largest fixed-shape tile among the pipeline stages (4 when all
+    /// stages are elastic) — window boundaries snap to it so every
+    /// fixed kernel sees whole tiles at every granularity.
+    fn window_quantum(&self) -> usize {
+        self.spec
+            .stages
+            .iter()
+            .filter(|st| !elastic_artifact(&st.kernel))
+            .filter_map(|st| manifest_meta(&st.kernel))
+            .map(|m| m.inputs[0].bytes())
+            .fold(4usize, usize::max)
+    }
+
+    /// Exact-window fan-out: `m` tasks partition the (equal-sized)
+    /// streamed inputs at quantum-aligned boundaries; each task
+    /// uploads its (halo-extended) windows, chains the stages on its
+    /// own lane with explicit RAW deps, and downloads only the owned
+    /// range.  Elastic stages run the whole window in one launch;
+    /// fixed-shape stages tile it.  Because window boundaries never
+    /// move data between lanes — every output byte is computed from
+    /// exactly the same input lanes at any `m` — the assembled output
+    /// is bitwise granularity-invariant.
+    fn windows_at(&self, m: usize) -> StreamPlan {
+        let s = self.spec;
+        let h = s.buffers[0].bytes;
+        let q = self.window_quantum();
+        let payloads: Vec<Arc<Vec<u8>>> = s.stages[0]
+            .inputs
+            .iter()
+            .map(|n| {
+                materialize(
+                    s.buffers.iter().find(|b| &b.name == n).expect("validated stage inputs"),
+                )
+            })
+            .collect();
+
+        let mut p = StreamPlan::new(s.name.clone());
+        let out = p.output(h);
+        let ix: Vec<usize> =
+            (0..=m).map(|t| if t == m { h } else { (t * h / m) / q * q }).collect();
+
+        for t in 0..m {
+            let (ilo, ihi) = (ix[t], ix[t + 1]);
+            if ihi == ilo {
+                continue; // more tasks than quanta: this lane is empty
+            }
+            let len = ihi - ilo;
+            let slot = Slot::Task(t);
+            let (hlo, hhi) = (halo_side(s.halo.lo, len), halo_side(s.halo.hi, len));
+            let xlo = ilo - hlo.min(ilo);
+            let xhi = (ihi + hhi).min(h);
+            let xfer = xhi - xlo;
+
+            // Stage 0 inputs stream from the host.
+            let in_bufs: Vec<usize> = payloads.iter().map(|_| p.buf(xfer)).collect();
+            for (pl, &buf) in payloads.iter().zip(&in_bufs) {
+                p.h2d(
+                    slot,
+                    HostSlice { data: pl.clone(), off: xlo, len: xfer },
+                    PlanRegion { buf, off: 0, len: xfer },
+                    vec![],
+                );
+            }
+
+            let mut stage_in = in_bufs;
+            let mut prev_kex: Vec<usize> = Vec::new();
+            for st in &s.stages {
+                // Pacing annotation proportional to the owned window.
+                let flops = st.flops.map(|f| (f as u128 * len as u128 / h as u128) as u64);
+                let out_buf = p.buf(xfer);
+                if elastic_artifact(&st.kernel) {
+                    let inputs =
+                        stage_in.iter().map(|&b| PlanRegion::whole(b, xfer)).collect();
+                    let id = p.kex(
+                        slot,
+                        &st.kernel,
+                        inputs,
+                        vec![PlanRegion::whole(out_buf, xfer)],
+                        flops,
+                        1,
+                        prev_kex.clone(),
+                    );
+                    prev_kex = vec![id];
+                } else {
+                    let tile = manifest_meta(&st.kernel)
+                        .expect("validated kernel")
+                        .inputs[0]
+                        .bytes();
+                    let tiles = xfer / tile;
+                    let per_tile = flops.map(|f| f / tiles.max(1) as u64);
+                    let mut ids = Vec::with_capacity(tiles);
+                    for j in 0..tiles {
+                        ids.push(p.kex(
+                            slot,
+                            &st.kernel,
+                            vec![PlanRegion { buf: stage_in[0], off: j * tile, len: tile }],
+                            vec![PlanRegion { buf: out_buf, off: j * tile, len: tile }],
+                            per_tile,
+                            1,
+                            prev_kex.clone(),
+                        ));
+                    }
+                    prev_kex = ids;
+                }
+                stage_in = vec![out_buf];
+            }
+
+            // Download only the owned range (halo bytes were redundant
+            // compute), at the window-relative offset.
+            let delta = ilo - xlo;
+            p.d2h(
+                slot,
+                PlanRegion { buf: stage_in[0], off: delta, len },
+                out,
+                ilo,
+                prev_kex,
+            );
+        }
+        p
+    }
+
+    // ----- pingpong mode (Iterative) -----
+
+    /// Chunked uploads on alternating lanes (state on even, param on
+    /// odd — all the concurrency the Iterative category permits), then
+    /// a pure RAW ping-pong kernel chain on lane 0 and one download of
+    /// the final state.  The chain is serialized whatever the stream
+    /// count, exactly the paper's non-streamable verdict; the knob
+    /// only re-chunks the uploads, so outputs are bitwise identical at
+    /// every granularity.
+    fn pingpong_at(&self, chunks: usize) -> StreamPlan {
+        let s = self.spec;
+        let st = &s.stages[0];
+        let state =
+            s.buffers.iter().find(|b| b.name == st.inputs[0]).expect("validated stage inputs");
+        let param =
+            s.buffers.iter().find(|b| b.name == st.inputs[1]).expect("validated stage inputs");
+        let bytes_n = state.bytes;
+        let mut p = StreamPlan::new(s.name.clone());
+        let out = p.output(bytes_n);
+        let ta = p.buf(bytes_n);
+        let tb = p.buf(bytes_n);
+        let pw = p.buf(bytes_n);
+
+        let upload = |p: &mut StreamPlan, data: Arc<Vec<u8>>, buf: usize, lane0: usize| {
+            chunk_ranges(bytes_n, chunks)
+                .into_iter()
+                .enumerate()
+                .map(|(j, r)| {
+                    p.h2d(
+                        Slot::Task(lane0 + 2 * j),
+                        HostSlice { data: data.clone(), off: r.start, len: r.len },
+                        PlanRegion { buf, off: r.start, len: r.len },
+                        vec![],
+                    )
+                })
+                .collect::<Vec<usize>>()
+        };
+        let mut uploads = upload(&mut p, materialize(state), ta, 0);
+        uploads.extend(upload(&mut p, materialize(param), pw, 1));
+
+        // Ping-pong chain: step k reads step k-1's output — a pure
+        // RAW chain on lane 0.  The first step waits on every chunk.
+        let (mut src, mut dst) = (ta, tb);
+        for step in 0..s.steps {
+            let deps = if step == 0 { uploads.clone() } else { Vec::new() };
+            p.kex(
+                Slot::Task(0),
+                &st.kernel,
+                vec![PlanRegion::whole(src, bytes_n), PlanRegion::whole(pw, bytes_n)],
+                vec![PlanRegion::whole(dst, bytes_n)],
+                st.flops,
+                1,
+                deps,
+            );
+            std::mem::swap(&mut src, &mut dst);
+        }
+        p.d2h(Slot::Task(0), PlanRegion::whole(src, bytes_n), out, 0, vec![]);
+        p
+    }
+
+    // ----- tiles mode (True Dependent wavefront) -----
+
+    /// Grid side pinned by the spec: matrix side ÷ kernel tile side.
+    fn tile_grid(&self) -> usize {
+        let meta = manifest_meta(&self.spec.stages[0].kernel).expect("validated kernel");
+        let side = meta.inputs[0].bytes() / 4;
+        let size = ((self.spec.buffers[0].bytes / 4) as f64).sqrt() as usize;
+        (size / side.max(1)).max(1)
+    }
+
+    /// The NW-shaped wavefront: boundary vectors broadcast once,
+    /// per-tile payloads stream on the tile's slot-within-diagonal
+    /// lane, each tile kernel reads its neighbours' device-resident
+    /// south/east edges (RAW deps wired by [`wire_wavefront`]) and
+    /// downloads its own block of the assembled matrix.
+    fn tiles(&self) -> StreamPlan {
+        let s = self.spec;
+        let st = &s.stages[0];
+        let meta = manifest_meta(&st.kernel).expect("validated kernel");
+        let edge_bytes = meta.inputs[0].bytes();
+        let tile = edge_bytes / 4;
+        let tile_bytes = meta.inputs[3].bytes();
+        let g = self.tile_grid();
+        let size = g * tile;
+        let penalty = s.penalty;
+        let sub_i32 = bytes::to_i32(&materialize(&s.buffers[0]));
+
+        // Per-tile substitution payloads (row-major within the tile).
+        let mut tile_sub: Vec<Arc<Vec<u8>>> = Vec::with_capacity(g * g);
+        for bi in 0..g {
+            for bj in 0..g {
+                let mut t = Vec::with_capacity(tile * tile);
+                for r in 0..tile {
+                    let row0 = (bi * tile + r) * size + bj * tile;
+                    t.extend_from_slice(&sub_i32[row0..row0 + tile]);
+                }
+                tile_sub.push(Arc::new(bytes::from_i32(&t)));
+            }
+        }
+
+        // Boundary vectors: score row/col 0 are -penalty * (1-based).
+        let north_boundary: Vec<i32> = (0..size as i32).map(|j| -penalty * (j + 1)).collect();
+        let west_boundary: Vec<i32> = (0..size as i32).map(|i| -penalty * (i + 1)).collect();
+
+        let mut p = StreamPlan::new(s.name.clone());
+        let out = p.output(g * g * tile_bytes);
+
+        // Boundaries are broadcast inputs: stream 0, fan-out waits.
+        let nb = p.buf(size * 4);
+        let wb = p.buf(size * 4);
+        let cz = p.buf(4);
+        p.h2d(
+            Slot::Broadcast,
+            HostSlice::whole(Arc::new(bytes::from_i32(&north_boundary))),
+            PlanRegion::whole(nb, size * 4),
+            vec![],
+        );
+        p.h2d(
+            Slot::Broadcast,
+            HostSlice::whole(Arc::new(bytes::from_i32(&west_boundary))),
+            PlanRegion::whole(wb, size * 4),
+            vec![],
+        );
+        p.h2d(
+            Slot::Broadcast,
+            HostSlice::whole(Arc::new(bytes::from_i32(&[0i32]))),
+            PlanRegion::whole(cz, 4),
+            vec![],
+        );
+
+        // Per-tile device buffers (sub, out, south edge, east edge).
+        let sub_bufs: Vec<usize> = (0..g * g).map(|_| p.buf(tile_bytes)).collect();
+        let out_bufs: Vec<usize> = (0..g * g).map(|_| p.buf(tile_bytes)).collect();
+        let south_bufs: Vec<usize> = (0..g * g).map(|_| p.buf(edge_bytes)).collect();
+        let east_bufs: Vec<usize> = (0..g * g).map(|_| p.buf(edge_bytes)).collect();
+
+        wire_wavefront(g, |tc, lane, deps| {
+            let (bi, bj) = (tc.bi, tc.bj);
+            let t = bi * g + bj;
+
+            p.h2d(
+                lane,
+                HostSlice::whole(tile_sub[t].clone()),
+                PlanRegion::whole(sub_bufs[t], tile_bytes),
+                vec![],
+            );
+
+            // Edge inputs: neighbours' contiguous outputs (their
+            // producing kernels are already in `deps`) or boundary
+            // slices.
+            let north = if bi == 0 {
+                PlanRegion { buf: nb, off: bj * tile * 4, len: edge_bytes }
+            } else {
+                PlanRegion::whole(south_bufs[(bi - 1) * g + bj], edge_bytes)
+            };
+            let west = if bj == 0 {
+                PlanRegion { buf: wb, off: bi * tile * 4, len: edge_bytes }
+            } else {
+                PlanRegion::whole(east_bufs[bi * g + bj - 1], edge_bytes)
+            };
+            let corner = match (bi, bj) {
+                (0, 0) => PlanRegion::whole(cz, 4),
+                (0, j) => PlanRegion { buf: nb, off: (j * tile - 1) * 4, len: 4 },
+                (i, 0) => PlanRegion { buf: wb, off: (i * tile - 1) * 4, len: 4 },
+                (i, j) => PlanRegion {
+                    buf: south_bufs[(i - 1) * g + j - 1],
+                    off: (tile - 1) * 4,
+                    len: 4,
+                },
+            };
+
+            let kex = p.kex(
+                lane,
+                &st.kernel,
+                vec![north, west, corner, PlanRegion::whole(sub_bufs[t], tile_bytes)],
+                vec![
+                    PlanRegion::whole(out_bufs[t], tile_bytes),
+                    PlanRegion::whole(south_bufs[t], edge_bytes),
+                    PlanRegion::whole(east_bufs[t], edge_bytes),
+                ],
+                st.flops,
+                1,
+                deps,
+            );
+
+            let out_region = PlanRegion::whole(out_bufs[t], tile_bytes);
+            p.d2h(lane, out_region, out, t * tile_bytes, vec![]);
+            kex
+        });
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::{BufferInit, BufferSpec, HaloSpec, StageSpec, KEX_BLOCK_BYTES};
+
+    fn windows_spec(stages: Vec<StageSpec>, bytes: usize, halo: HaloSpec) -> WorkloadSpec {
+        let category = if halo.is_zero() {
+            Category::Independent
+        } else {
+            Category::FalseDependent
+        };
+        WorkloadSpec {
+            name: "t".into(),
+            category,
+            mode: SpecMode::Windows,
+            granularity: 4,
+            repeats: 1,
+            output_bytes: bytes,
+            block_bytes: KEX_BLOCK_BYTES,
+            steps: 0,
+            penalty: 0,
+            halo,
+            buffers: vec![BufferSpec {
+                name: "a".into(),
+                bytes,
+                init: BufferInit::F32Rand { seed: 7 },
+            }],
+            stages,
+        }
+    }
+
+    #[test]
+    fn window_boundaries_snap_to_fixed_stage_tiles() {
+        // vector_add (elastic) -> fwt (fixed 16384-byte tiles): every
+        // task window must hold whole fwt tiles at every granularity.
+        let spec = windows_spec(
+            vec![
+                StageSpec { kernel: "burner_8".into(), inputs: vec!["a".into()], flops: None },
+                StageSpec { kernel: "fwt".into(), inputs: vec![], flops: None },
+            ],
+            16384 * 8,
+            HaloSpec::ZERO,
+        );
+        spec.validate().unwrap();
+        let q = SpecCompiler::new(&spec).window_quantum();
+        assert_eq!(q, 16384);
+        for m in [1usize, 2, 3, 5, 8, 64] {
+            let plan = SpecCompiler::new(&spec).windows_at(m);
+            plan.validate().unwrap_or_else(|e| panic!("m={m}: {e}"));
+            // Assembled output always covers the whole array.
+            assert_eq!(plan.d2h_bytes(), 16384 * 8);
+        }
+    }
+
+    #[test]
+    fn asymmetric_halo_extends_uploads_but_not_downloads() {
+        let spec = windows_spec(
+            vec![StageSpec { kernel: "burner_64".into(), inputs: vec!["a".into()], flops: None }],
+            65536,
+            HaloSpec { lo: 0.25, hi: 0.0625 },
+        );
+        spec.validate().unwrap();
+        let bulk = SpecCompiler::new(&spec).bulk();
+        let strm = SpecCompiler::new(&spec).windows_at(8);
+        strm.validate().unwrap();
+        assert_eq!(strm.d2h_bytes(), bulk.d2h_bytes(), "downloads: owned ranges only");
+        assert!(strm.h2d_bytes() > bulk.h2d_bytes(), "halo redundancy must show up");
+    }
+
+    #[test]
+    fn pingpong_chain_length_and_upload_fanout() {
+        use crate::plan::PlanOpKind;
+        let spec = WorkloadSpec {
+            name: "hs".into(),
+            category: Category::Iterative,
+            mode: SpecMode::PingPong,
+            granularity: 4,
+            repeats: 1,
+            output_bytes: 128 * 128 * 4,
+            block_bytes: KEX_BLOCK_BYTES,
+            steps: 3,
+            penalty: 0,
+            halo: HaloSpec::ZERO,
+            buffers: vec![
+                BufferSpec {
+                    name: "temp".into(),
+                    bytes: 128 * 128 * 4,
+                    init: BufferInit::F32Rand { seed: 221 },
+                },
+                BufferSpec {
+                    name: "power".into(),
+                    bytes: 128 * 128 * 4,
+                    init: BufferInit::F32Rand { seed: 222 },
+                },
+            ],
+            stages: vec![StageSpec {
+                kernel: "hotspot_step".into(),
+                inputs: vec!["temp".into(), "power".into()],
+                flops: None,
+            }],
+        };
+        spec.validate().unwrap();
+        let plan = SpecCompiler::new(&spec).streamed_at(Granularity::new(4));
+        plan.validate().unwrap();
+        let kexes = plan.ops.iter().filter(|o| matches!(o.kind, PlanOpKind::Kex { .. })).count();
+        let h2ds = plan.ops.iter().filter(|o| matches!(o.kind, PlanOpKind::H2d { .. })).count();
+        assert_eq!(kexes, 3, "one launch per step");
+        assert_eq!(h2ds, 8, "two arrays x four chunks");
+    }
+
+    #[test]
+    fn tiles_grid_is_pinned_by_the_buffer() {
+        let spec = WorkloadSpec {
+            name: "nw".into(),
+            category: Category::TrueDependent,
+            mode: SpecMode::Tiles,
+            granularity: 4,
+            repeats: 1,
+            output_bytes: (4 * 32) * (4 * 32) * 4,
+            block_bytes: KEX_BLOCK_BYTES,
+            steps: 0,
+            penalty: 10,
+            halo: HaloSpec::ZERO,
+            buffers: vec![BufferSpec {
+                name: "sub".into(),
+                bytes: (4 * 32) * (4 * 32) * 4,
+                init: BufferInit::I32Rand { seed: 0xBEEF, bound: 15, shift: 5 },
+            }],
+            stages: vec![StageSpec {
+                kernel: "nw_tile".into(),
+                inputs: vec!["sub".into()],
+                flops: Some(450_000),
+            }],
+        };
+        spec.validate().unwrap();
+        let c = SpecCompiler::new(&spec);
+        // The knob cannot move the grid: it is fixed by matrix/tile.
+        assert_eq!(c.effective_granularity(Granularity::new(16)).get(), 4);
+        assert_eq!(c.effective_granularity(Granularity::new(1)).get(), 4);
+        let plan = c.streamed();
+        plan.validate().unwrap();
+        assert_eq!(plan.tasks(), 16);
+    }
+}

@@ -1,0 +1,896 @@
+//! Declarative workload specs — the single front end for every
+//! streamed lowering in the repo.
+//!
+//! The paper's generic flow (§5) classifies a heterogeneous code by
+//! its dependence pattern and derives the streamed program from that
+//! classification mechanically.  A [`WorkloadSpec`] is exactly that
+//! classification written down: buffers (sizes + deterministic init),
+//! one kernel per stage drawn from the simkern artifact manifest, the
+//! Table-2 category, and the per-category parameters (halo ratios,
+//! iteration count, wavefront grid).  [`compile::SpecCompiler`] turns
+//! a spec into a [`StreamPlan`] with one composable builder per
+//! category; `plan::lower_corpus_{bulk,streamed_at}` are now thin
+//! `CorpusDescriptor → WorkloadSpec` conversions over the same
+//! compiler, so all 224 (app, gran) corpus plans provably flow through
+//! this path.
+//!
+//! Specs round-trip through JSON (`util::json`, no external deps):
+//! [`WorkloadSpec::from_json`] ∘ [`WorkloadSpec::to_json`] is the
+//! identity, and [`WorkloadSpec::content_hash`] over the canonical
+//! serialization keys the service's plan cache.  See DESIGN.md §Spec
+//! and `specs/README.md` for the schema walkthrough.
+
+pub mod compile;
+
+pub use compile::SpecCompiler;
+
+use std::sync::Arc;
+
+use crate::analysis::{Category, TaskDep};
+use crate::corpus::BenchConfig;
+use crate::error::{Error, Result};
+use crate::util::json::{escape, Json};
+
+/// The burner artifacts' fixed block: 65536 f32 in, 65536 f32 out —
+/// the `block_bytes` every corpus-derived spec carries.
+pub const KEX_BLOCK_BYTES: usize = 65536 * 4;
+
+/// Schema tag committed spec files must carry.
+pub const SPEC_SCHEMA: &str = "hetstream-spec-v1";
+
+/// How a buffer's deterministic payload is produced (specs describe
+/// data, they never embed it).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BufferInit {
+    /// Raw bytes from the property-testing RNG (`util::prop::Rng`) —
+    /// what every corpus descriptor ships.
+    Synth { seed: u64 },
+    /// f32 lanes in [-1, 1) from `workloads::gen_f32`.
+    F32Rand { seed: u64 },
+    /// i32 lanes in `[-shift, bound - shift)` from
+    /// `workloads::gen_i32` minus `shift` (NW substitution scores).
+    I32Rand { seed: u64, bound: i32, shift: i32 },
+    /// All zero.
+    Zeros,
+}
+
+/// One named input buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BufferSpec {
+    pub name: String,
+    pub bytes: usize,
+    pub init: BufferInit,
+}
+
+/// One kernel stage.  Stage 0 reads host buffers (by name); stages
+/// past the first read the previous stage's device output (spelled
+/// `"$prev"`, or omitted).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSpec {
+    /// Artifact name — must exist in the simkern manifest.
+    pub kernel: String,
+    pub inputs: Vec<String>,
+    /// Total-FLOP annotation for the whole stage (pacing only; the
+    /// compiler splits it across tasks).  `None` falls back to the
+    /// manifest per-call estimate.
+    pub flops: Option<u64>,
+}
+
+/// Per-side halo ratio for false-dependent windows: each task's input
+/// window extends by `ratio × window_len` bytes on that side (Fig. 7's
+/// redundant boundary transfer).  Asymmetric ratios are allowed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HaloSpec {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl HaloSpec {
+    pub const ZERO: HaloSpec = HaloSpec { lo: 0.0, hi: 0.0 };
+
+    pub fn is_zero(&self) -> bool {
+        self.lo == 0.0 && self.hi == 0.0
+    }
+}
+
+/// Which region discipline the compiler uses within the category's
+/// builder (the category fixes the DAG shape; the mode fixes how
+/// kernel regions map onto windows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpecMode {
+    /// Historical corpus discipline: one payload, kernel regions pinned
+    /// to the artifact's fixed `block_bytes` block, zero-source padding
+    /// for output bytes past the block.  What every descriptor-derived
+    /// spec uses.
+    Block,
+    /// Exact windows: elastic kernels run whole task windows, fixed
+    /// kernels run tile-by-tile inside them; stages chain per task.
+    Windows,
+    /// Iterative ping-pong: chunked uploads on alternating lanes, then
+    /// a pure RAW kernel chain on resident data (hotspot's shape).
+    PingPong,
+    /// Wavefront tile grid with device-resident edges (NW's shape);
+    /// the grid side is fixed by buffer size ÷ kernel tile.
+    Tiles,
+}
+
+impl SpecMode {
+    pub fn token(self) -> &'static str {
+        match self {
+            SpecMode::Block => "block",
+            SpecMode::Windows => "windows",
+            SpecMode::PingPong => "pingpong",
+            SpecMode::Tiles => "tiles",
+        }
+    }
+}
+
+/// Category ↔ JSON token (the paper's Table-2 names, snake_cased).
+pub fn category_token(cat: Category) -> &'static str {
+    match cat {
+        Category::Sync => "sync",
+        Category::Iterative => "iterative",
+        Category::Independent => "independent",
+        Category::FalseDependent => "false_dependent",
+        Category::TrueDependent => "true_dependent",
+    }
+}
+
+fn category_from_token(s: &str) -> Option<Category> {
+    Some(match s {
+        "sync" => Category::Sync,
+        "iterative" => Category::Iterative,
+        "independent" => Category::Independent,
+        "false_dependent" => Category::FalseDependent,
+        "true_dependent" => Category::TrueDependent,
+        _ => return None,
+    })
+}
+
+fn mode_from_token(s: &str) -> Option<SpecMode> {
+    Some(match s {
+        "block" => SpecMode::Block,
+        "windows" => SpecMode::Windows,
+        "pingpong" => SpecMode::PingPong,
+        "tiles" => SpecMode::Tiles,
+        _ => return None,
+    })
+}
+
+/// A declarative streamed workload: everything the compiler needs to
+/// derive the bulk and streamed plans at any granularity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    pub name: String,
+    /// The paper's dependence category — picks the builder.
+    pub category: Category,
+    /// Region discipline within the builder.
+    pub mode: SpecMode,
+    /// Default granularity (task count / tile-grid side); the
+    /// compiler's unified clamp applies on top.
+    pub granularity: usize,
+    /// Kernel launches per task (block mode; windows/tiles/pingpong
+    /// stages launch once per window/tile/step).
+    pub repeats: u32,
+    /// Assembled host output size.
+    pub output_bytes: usize,
+    /// Fixed kernel block for [`SpecMode::Block`].
+    pub block_bytes: usize,
+    /// Ping-pong chain length for [`SpecMode::PingPong`].
+    pub steps: usize,
+    /// Boundary gap penalty for [`SpecMode::Tiles`] (score row/col 0
+    /// are `-penalty × (1-based index)`).
+    pub penalty: i32,
+    /// False-dependent halo ratios (zero elsewhere).
+    pub halo: HaloSpec,
+    pub buffers: Vec<BufferSpec>,
+    pub stages: Vec<StageSpec>,
+}
+
+fn err(msg: impl Into<String>) -> Error {
+    Error::Spec(msg.into())
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<Option<usize>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => {
+            let f = v.as_f64().ok_or_else(|| err(format!("`{key}` must be a number")))?;
+            if f < 0.0 || f.fract() != 0.0 {
+                return Err(err(format!("`{key}` must be a non-negative integer")));
+            }
+            Ok(Some(f as usize))
+        }
+    }
+}
+
+/// Seeds are u64; values past 2^53 are carried as decimal strings so
+/// the f64-backed JSON layer cannot round them.
+fn get_seed(j: &Json, key: &str) -> Result<u64> {
+    match j.get(key) {
+        Some(Json::Str(s)) => {
+            s.parse::<u64>().map_err(|_| err(format!("`{key}` string must be a decimal u64")))
+        }
+        Some(v) => {
+            let f = v.as_f64().ok_or_else(|| err(format!("`{key}` must be a number")))?;
+            if f < 0.0 || f.fract() != 0.0 {
+                return Err(err(format!("`{key}` must be a non-negative integer")));
+            }
+            Ok(f as u64)
+        }
+        None => Err(err(format!("buffer init missing `{key}`"))),
+    }
+}
+
+fn seed_json(seed: u64) -> String {
+    if seed <= (1u64 << 53) {
+        format!("{seed}")
+    } else {
+        format!("\"{seed}\"")
+    }
+}
+
+impl WorkloadSpec {
+    /// Parse a spec document.  Every malformation is a clean
+    /// [`Error::Spec`]; parsing never panics or hangs.
+    pub fn from_json(text: &str) -> Result<WorkloadSpec> {
+        let j = Json::parse(text).map_err(|e| err(format!("unparsable json: {e}")))?;
+        if j.get("schema").and_then(Json::as_str) != Some(SPEC_SCHEMA) {
+            return Err(err(format!("missing or wrong `schema` (want \"{SPEC_SCHEMA}\")")));
+        }
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err("missing `name`"))?
+            .to_string();
+        if name.is_empty() {
+            return Err(err("`name` must be non-empty"));
+        }
+        let category = j
+            .get("category")
+            .and_then(Json::as_str)
+            .and_then(category_from_token)
+            .ok_or_else(|| {
+                err("missing or unknown `category` \
+                     (sync|iterative|independent|false_dependent|true_dependent)")
+            })?;
+        let mode = j
+            .get("mode")
+            .and_then(Json::as_str)
+            .and_then(mode_from_token)
+            .ok_or_else(|| err("missing or unknown `mode` (block|windows|pingpong|tiles)"))?;
+        let granularity = get_usize(&j, "granularity")?.unwrap_or(1);
+        let repeats = get_usize(&j, "repeats")?.unwrap_or(1) as u32;
+        let output_bytes =
+            get_usize(&j, "output_bytes")?.ok_or_else(|| err("missing `output_bytes`"))?;
+        let block_bytes = get_usize(&j, "block_bytes")?.unwrap_or(KEX_BLOCK_BYTES);
+        let steps = get_usize(&j, "steps")?.unwrap_or(0);
+        let penalty = match j.get("penalty") {
+            None | Some(Json::Null) => 0,
+            Some(v) => {
+                let f = v.as_f64().ok_or_else(|| err("`penalty` must be a number"))?;
+                if f.fract() != 0.0 {
+                    return Err(err("`penalty` must be an integer"));
+                }
+                f as i32
+            }
+        };
+        let halo = match j.get("halo") {
+            None | Some(Json::Null) => HaloSpec::ZERO,
+            Some(h) => {
+                let side = |key: &str| -> Result<f64> {
+                    match h.get(key) {
+                        None => Ok(0.0),
+                        Some(v) => {
+                            let f = v
+                                .as_f64()
+                                .ok_or_else(|| err(format!("halo `{key}` must be a number")))?;
+                            if !f.is_finite() || f < 0.0 {
+                                return Err(err(format!("halo `{key}` must be finite and >= 0")));
+                            }
+                            Ok(f)
+                        }
+                    }
+                };
+                HaloSpec { lo: side("lo")?, hi: side("hi")? }
+            }
+        };
+
+        let buffers_j =
+            j.get("buffers").and_then(Json::as_arr).ok_or_else(|| err("missing `buffers` array"))?;
+        let mut buffers = Vec::with_capacity(buffers_j.len());
+        for (i, b) in buffers_j.iter().enumerate() {
+            let bname = b
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err(format!("buffer {i} missing `name`")))?
+                .to_string();
+            let bytes = get_usize(b, "bytes")?
+                .ok_or_else(|| err(format!("buffer `{bname}` missing `bytes`")))?;
+            let init_j =
+                b.get("init").ok_or_else(|| err(format!("buffer `{bname}` missing `init`")))?;
+            let kind = init_j
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err(format!("buffer `{bname}` init missing `kind`")))?;
+            let init = match kind {
+                "synth" => BufferInit::Synth { seed: get_seed(init_j, "seed")? },
+                "f32_rand" => BufferInit::F32Rand { seed: get_seed(init_j, "seed")? },
+                "i32_rand" => {
+                    let bound = get_usize(init_j, "bound")?
+                        .ok_or_else(|| err(format!("buffer `{bname}` i32_rand missing `bound`")))?;
+                    let shift = get_usize(init_j, "shift")?.unwrap_or(0);
+                    BufferInit::I32Rand {
+                        seed: get_seed(init_j, "seed")?,
+                        bound: bound as i32,
+                        shift: shift as i32,
+                    }
+                }
+                "zeros" => BufferInit::Zeros,
+                other => {
+                    return Err(err(format!(
+                        "buffer `{bname}` unknown init kind `{other}` \
+                         (synth|f32_rand|i32_rand|zeros)"
+                    )))
+                }
+            };
+            buffers.push(BufferSpec { name: bname, bytes, init });
+        }
+
+        let stages_j =
+            j.get("stages").and_then(Json::as_arr).ok_or_else(|| err("missing `stages` array"))?;
+        let mut stages = Vec::with_capacity(stages_j.len());
+        for (i, s) in stages_j.iter().enumerate() {
+            let kernel = s
+                .get("kernel")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err(format!("stage {i} missing `kernel`")))?
+                .to_string();
+            let inputs = match s.get("inputs") {
+                None | Some(Json::Null) => Vec::new(),
+                Some(v) => v
+                    .as_arr()
+                    .ok_or_else(|| err(format!("stage {i} `inputs` must be an array")))?
+                    .iter()
+                    .map(|x| {
+                        x.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| err(format!("stage {i} inputs must be strings")))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            let flops = get_usize(s, "flops")?.map(|f| f as u64);
+            stages.push(StageSpec { kernel, inputs, flops });
+        }
+
+        Ok(WorkloadSpec {
+            name,
+            category,
+            mode,
+            granularity,
+            repeats,
+            output_bytes,
+            block_bytes,
+            steps,
+            penalty,
+            halo,
+            buffers,
+            stages,
+        })
+    }
+
+    /// Canonical serialization: stable field order, one line per
+    /// scalar.  `from_json(to_json(s)) == s` for every valid spec, and
+    /// [`Self::content_hash`] is FNV-1a over exactly these bytes.
+    pub fn to_json(&self) -> String {
+        let mut o = String::new();
+        o.push_str("{\n");
+        o.push_str(&format!("  \"schema\": \"{SPEC_SCHEMA}\",\n"));
+        o.push_str(&format!("  \"name\": \"{}\",\n", escape(&self.name)));
+        o.push_str(&format!("  \"category\": \"{}\",\n", category_token(self.category)));
+        o.push_str(&format!("  \"mode\": \"{}\",\n", self.mode.token()));
+        o.push_str(&format!("  \"granularity\": {},\n", self.granularity));
+        o.push_str(&format!("  \"repeats\": {},\n", self.repeats));
+        o.push_str(&format!("  \"output_bytes\": {},\n", self.output_bytes));
+        if self.mode == SpecMode::Block {
+            o.push_str(&format!("  \"block_bytes\": {},\n", self.block_bytes));
+        }
+        if self.steps > 0 {
+            o.push_str(&format!("  \"steps\": {},\n", self.steps));
+        }
+        if self.penalty != 0 {
+            o.push_str(&format!("  \"penalty\": {},\n", self.penalty));
+        }
+        if !self.halo.is_zero() {
+            let (lo, hi) = (self.halo.lo, self.halo.hi);
+            o.push_str(&format!("  \"halo\": {{\"lo\": {lo}, \"hi\": {hi}}},\n"));
+        }
+        o.push_str("  \"buffers\": [\n");
+        for (i, b) in self.buffers.iter().enumerate() {
+            let init = match b.init {
+                BufferInit::Synth { seed } => {
+                    format!("{{\"kind\": \"synth\", \"seed\": {}}}", seed_json(seed))
+                }
+                BufferInit::F32Rand { seed } => {
+                    format!("{{\"kind\": \"f32_rand\", \"seed\": {}}}", seed_json(seed))
+                }
+                BufferInit::I32Rand { seed, bound, shift } => format!(
+                    "{{\"kind\": \"i32_rand\", \"seed\": {}, \
+                     \"bound\": {bound}, \"shift\": {shift}}}",
+                    seed_json(seed)
+                ),
+                BufferInit::Zeros => "{\"kind\": \"zeros\"}".to_string(),
+            };
+            o.push_str(&format!(
+                "    {{\"name\": \"{}\", \"bytes\": {}, \"init\": {init}}}{}\n",
+                escape(&b.name),
+                b.bytes,
+                if i + 1 < self.buffers.len() { "," } else { "" }
+            ));
+        }
+        o.push_str("  ],\n");
+        o.push_str("  \"stages\": [\n");
+        for (i, s) in self.stages.iter().enumerate() {
+            let inputs = s
+                .inputs
+                .iter()
+                .map(|n| format!("\"{}\"", escape(n)))
+                .collect::<Vec<_>>()
+                .join(", ");
+            let flops = match s.flops {
+                Some(f) => format!(", \"flops\": {f}"),
+                None => String::new(),
+            };
+            o.push_str(&format!(
+                "    {{\"kernel\": \"{}\", \"inputs\": [{inputs}]{flops}}}{}\n",
+                escape(&s.kernel),
+                if i + 1 < self.stages.len() { "," } else { "" }
+            ));
+        }
+        o.push_str("  ]\n");
+        o.push_str("}\n");
+        o
+    }
+
+    /// FNV-1a over the canonical serialization — the service's plan
+    /// cache key (two specs with equal content share cached plans, a
+    /// renamed buffer does not alias).
+    pub fn content_hash(&self) -> u64 {
+        self.to_json()
+            .bytes()
+            .fold(0xCBF29CE484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001B3))
+    }
+
+    /// Structural validation against the artifact manifest and the
+    /// per-mode rules.  Every violation is a clean [`Error::Spec`];
+    /// a spec that validates compiles without panicking.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            return Err(err("`name` must be non-empty"));
+        }
+        if self.buffers.is_empty() {
+            return Err(err("at least one buffer required"));
+        }
+        if self.stages.is_empty() {
+            return Err(err("at least one stage required"));
+        }
+        if self.granularity == 0 {
+            return Err(err("`granularity` must be >= 1"));
+        }
+        if self.repeats == 0 {
+            return Err(err("`repeats` must be >= 1"));
+        }
+        if self.output_bytes == 0 {
+            return Err(err("`output_bytes` must be >= 1"));
+        }
+        let halo_ok = |r: f64| r.is_finite() && r >= 0.0;
+        if !halo_ok(self.halo.lo) || !halo_ok(self.halo.hi) {
+            return Err(err("halo ratios must be finite and >= 0"));
+        }
+        for (i, b) in self.buffers.iter().enumerate() {
+            if b.bytes == 0 {
+                return Err(err(format!("buffer `{}` must have bytes >= 1", b.name)));
+            }
+            if self.buffers[..i].iter().any(|o| o.name == b.name) {
+                return Err(err(format!("duplicate buffer name `{}`", b.name)));
+            }
+        }
+        // Every kernel must exist in the manifest; every stage-0 input
+        // must name a declared buffer; later stages read `$prev`.
+        for (si, s) in self.stages.iter().enumerate() {
+            let meta = crate::plan::manifest_meta(&s.kernel)
+                .ok_or_else(|| err(format!("unknown kernel `{}` (not in manifest)", s.kernel)))?;
+            if si == 0 {
+                if s.inputs.is_empty() {
+                    return Err(err("stage 0 must name its input buffers"));
+                }
+                for n in &s.inputs {
+                    if !self.buffers.iter().any(|b| &b.name == n) {
+                        return Err(err(format!("stage 0 input `{n}` names no declared buffer")));
+                    }
+                }
+            } else if !s.inputs.is_empty() && s.inputs != ["$prev"] {
+                return Err(err(format!(
+                    "stage {si} inputs must be omitted or [\"$prev\"] (stages chain)"
+                )));
+            }
+            if meta.outputs.is_empty() {
+                return Err(err(format!("kernel `{}` has no outputs", s.kernel)));
+            }
+        }
+        match self.mode {
+            SpecMode::Block => self.validate_block(),
+            SpecMode::Windows => self.validate_windows(),
+            SpecMode::PingPong => self.validate_pingpong(),
+            SpecMode::Tiles => self.validate_tiles(),
+        }
+    }
+
+    fn validate_block(&self) -> Result<()> {
+        if self.buffers.len() != 1 || self.stages.len() != 1 {
+            return Err(err("block mode takes exactly one buffer and one stage"));
+        }
+        if self.block_bytes < 4 || self.block_bytes % 4 != 0 {
+            return Err(err("`block_bytes` must be a positive multiple of 4"));
+        }
+        if self.stages[0].inputs.len() != 1 {
+            return Err(err("block mode stage reads exactly the one buffer"));
+        }
+        Ok(())
+    }
+
+    fn validate_windows(&self) -> Result<()> {
+        use crate::runtime::elastic_artifact;
+        if !matches!(self.category, Category::Independent | Category::FalseDependent) {
+            return Err(err("windows mode requires an independent or false_dependent category"));
+        }
+        let s0 = &self.stages[0];
+        let meta0 = crate::plan::manifest_meta(&s0.kernel).expect("checked above");
+        if !elastic_artifact(&s0.kernel) {
+            return Err(err(format!("windows stage 0 kernel `{}` must be elastic", s0.kernel)));
+        }
+        if s0.inputs.len() != meta0.inputs.len() {
+            return Err(err(format!(
+                "stage 0 names {} inputs but kernel `{}` takes {}",
+                s0.inputs.len(),
+                s0.kernel,
+                meta0.inputs.len()
+            )));
+        }
+        if meta0.outputs.len() != 1 || meta0.outputs[0].bytes() != meta0.inputs[0].bytes() {
+            return Err(err(format!(
+                "windows kernels must map bytes 1:1 (kernel `{}` does not)",
+                s0.kernel
+            )));
+        }
+        let h = self.buffers[0].bytes;
+        for n in &s0.inputs {
+            let b = self.buffers.iter().find(|b| &b.name == n).expect("checked above");
+            if b.bytes != h {
+                return Err(err(format!(
+                    "size mismatch: windows-mode inputs must be equal-sized \
+                     (`{}` is {} bytes, `{}` is {})",
+                    self.buffers[0].name, h, b.name, b.bytes
+                )));
+            }
+        }
+        if h % 4 != 0 {
+            return Err(err("windows-mode buffers must be whole f32 lanes (multiple of 4 bytes)"));
+        }
+        if self.output_bytes != h {
+            return Err(err(format!(
+                "size mismatch: windows mode assembles output_bytes == input bytes ({} != {h})",
+                self.output_bytes
+            )));
+        }
+        let mut quantum = 4usize;
+        for (si, s) in self.stages.iter().enumerate().skip(1) {
+            let meta = crate::plan::manifest_meta(&s.kernel).expect("checked above");
+            if meta.inputs.len() != 1 || meta.outputs.len() != 1 {
+                return Err(err(format!(
+                    "pipeline stage {si} kernel `{}` must be 1-in 1-out",
+                    s.kernel
+                )));
+            }
+            if meta.outputs[0].bytes() != meta.inputs[0].bytes() {
+                return Err(err(format!(
+                    "pipeline stage {si} kernel `{}` must map bytes 1:1",
+                    s.kernel
+                )));
+            }
+            if !elastic_artifact(&s.kernel) {
+                let tile = meta.inputs[0].bytes();
+                if h % tile != 0 {
+                    return Err(err(format!(
+                        "size mismatch: fixed-shape stage {si} kernel `{}` \
+                         tiles {tile} bytes, which must divide the {h} byte window",
+                        s.kernel
+                    )));
+                }
+                if quantum % tile != 0 && tile % quantum != 0 {
+                    return Err(err("fixed-shape stage tiles must nest (share a common quantum)"));
+                }
+                quantum = quantum.max(tile);
+            }
+        }
+        if !self.halo.is_zero() {
+            if self.category != Category::FalseDependent {
+                return Err(err("halo ratios require category false_dependent"));
+            }
+            if self.stages.len() != 1 {
+                return Err(err("halo windows support a single elastic stage"));
+            }
+        }
+        if self.category == Category::FalseDependent && self.halo.is_zero() {
+            return Err(err("false_dependent windows need a non-zero halo"));
+        }
+        Ok(())
+    }
+
+    fn validate_pingpong(&self) -> Result<()> {
+        if self.category != Category::Iterative {
+            return Err(err("pingpong mode is the iterative category"));
+        }
+        if self.steps == 0 {
+            return Err(err("pingpong mode needs `steps` >= 1"));
+        }
+        if self.buffers.len() != 2 || self.stages.len() != 1 {
+            return Err(err("pingpong mode takes exactly two buffers (state, param) and one stage"));
+        }
+        let s0 = &self.stages[0];
+        let meta = crate::plan::manifest_meta(&s0.kernel).expect("checked above");
+        if s0.inputs.len() != 2 {
+            return Err(err("pingpong stage reads [state, param]"));
+        }
+        let n = self.buffers[0].bytes;
+        if self.buffers[1].bytes != n {
+            return Err(err(format!(
+                "size mismatch: state ({} bytes) and param ({} bytes) must be equal",
+                self.buffers[0].bytes, self.buffers[1].bytes
+            )));
+        }
+        if meta.inputs.len() != 2 || meta.outputs.len() != 1 {
+            return Err(err(format!("pingpong kernel `{}` must be 2-in 1-out", s0.kernel)));
+        }
+        if meta.inputs[0].bytes() != n || meta.outputs[0].bytes() != n {
+            return Err(err(format!(
+                "size mismatch: kernel `{}` block is {} bytes, buffers are {} bytes",
+                s0.kernel,
+                meta.inputs[0].bytes(),
+                n
+            )));
+        }
+        if self.output_bytes != n {
+            return Err(err("pingpong downloads the whole state: output_bytes must equal it"));
+        }
+        Ok(())
+    }
+
+    fn validate_tiles(&self) -> Result<()> {
+        if self.category != Category::TrueDependent {
+            return Err(err("tiles mode is the true_dependent category"));
+        }
+        if self.buffers.len() != 1 || self.stages.len() != 1 {
+            return Err(err("tiles mode takes exactly one buffer (the score matrix) and one stage"));
+        }
+        let s0 = &self.stages[0];
+        let meta = crate::plan::manifest_meta(&s0.kernel).expect("checked above");
+        if meta.inputs.len() != 4 || meta.outputs.len() != 3 {
+            return Err(err(format!(
+                "tiles kernel `{}` must take [north, west, corner, tile] \
+                 and emit [out, south, east]",
+                s0.kernel
+            )));
+        }
+        let edge = meta.inputs[0].bytes();
+        let tile_bytes = meta.inputs[3].bytes();
+        let side = edge / 4;
+        if side * side * 4 != tile_bytes
+            || meta.inputs[1].bytes() != edge
+            || meta.inputs[2].bytes() != 4
+            || meta.outputs[0].bytes() != tile_bytes
+            || meta.outputs[1].bytes() != edge
+            || meta.outputs[2].bytes() != edge
+        {
+            return Err(err(format!("kernel `{}` is not a wavefront tile kernel", s0.kernel)));
+        }
+        let bytes = self.buffers[0].bytes;
+        let elems = bytes / 4;
+        let size = (elems as f64).sqrt() as usize;
+        if bytes % 4 != 0 || size * size != elems {
+            return Err(err("tiles-mode buffer must be a square i32 matrix"));
+        }
+        if size % side != 0 {
+            return Err(err(format!(
+                "size mismatch: matrix side {size} must be a multiple \
+                 of the kernel tile side {side}"
+            )));
+        }
+        let grid = size / side;
+        if self.granularity != grid {
+            return Err(err(format!(
+                "tiles-mode granularity is pinned by the buffer: expected {grid}, spec says {}",
+                self.granularity
+            )));
+        }
+        if self.output_bytes != bytes {
+            return Err(err("tiles mode assembles the whole matrix: output_bytes must equal it"));
+        }
+        Ok(())
+    }
+
+    /// Descriptor → spec conversion: the one remaining job of the
+    /// corpus path.  All 224 (app, gran) corpus plans flow through
+    /// [`SpecCompiler`] via this conversion; the produced plans are
+    /// op-for-op identical to the historical `plan/lower.rs` bodies
+    /// (the Python mirror cross-checks this per commit).
+    pub fn from_corpus(c: &BenchConfig, artifact: &str) -> WorkloadSpec {
+        let dil = crate::device::DILATION;
+        let h2d = ((c.h2d_bytes as f64 / dil) as usize).max(4);
+        let d2h = ((c.d2h_bytes as f64 / dil) as usize).max(4);
+        let flops_per_iter = ((c.flops_per_iteration() as f64 / dil) as u64).min(300_000_000);
+        let repeats = c.kex_iterations.clamp(1, 20);
+        // Halo ratio per window side (false dependent only): the
+        // descriptor's halo/chunk element ratio, carried as the
+        // historical `inflate` halved so the compiler's per-side
+        // arithmetic reproduces the legacy bytes bit-for-bit.
+        let inflate = match c.facts.task_dep {
+            TaskDep::Rar { halo, chunk } => 2.0 * halo as f64 / chunk.max(1) as f64,
+            _ => 0.0,
+        };
+        WorkloadSpec {
+            name: format!("{}/{}", c.app, c.config),
+            category: c.category(),
+            mode: SpecMode::Block,
+            granularity: crate::plan::default_corpus_granularity(c.category()).get(),
+            repeats,
+            output_bytes: d2h,
+            block_bytes: KEX_BLOCK_BYTES,
+            steps: 0,
+            penalty: 0,
+            halo: HaloSpec { lo: inflate / 2.0, hi: inflate / 2.0 },
+            buffers: vec![BufferSpec {
+                name: "input".into(),
+                bytes: h2d,
+                init: BufferInit::Synth { seed: corpus_seed(c) },
+            }],
+            stages: vec![StageSpec {
+                kernel: artifact.to_string(),
+                inputs: vec!["input".into()],
+                flops: Some(flops_per_iter),
+            }],
+        }
+    }
+}
+
+/// Deterministic per-descriptor payload seed (FNV-1a over app+config —
+/// unchanged from the historical `plan/lower.rs` seeding, so every
+/// corpus payload is bitwise what it always was).
+pub fn corpus_seed(c: &BenchConfig) -> u64 {
+    c.app
+        .bytes()
+        .chain(c.config.bytes())
+        .fold(0xCBF29CE484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001B3))
+}
+
+/// Feature extraction for the learned tuner: compile the spec at its
+/// default granularity and featurize the plan — specs ride the k-NN
+/// dataset exactly like corpus rows.
+pub fn spec_features(
+    spec: &WorkloadSpec,
+    profile: &crate::device::DeviceProfile,
+) -> crate::analysis::PlanFeatures {
+    let plan = SpecCompiler::new(spec).streamed();
+    crate::analysis::PlanFeatures::of(&plan, profile, spec.category)
+}
+
+/// Materialize a buffer's deterministic payload.
+pub(crate) fn materialize(b: &BufferSpec) -> Arc<Vec<u8>> {
+    use crate::runtime::bytes;
+    match b.init {
+        BufferInit::Synth { seed } => {
+            let mut rng = crate::util::prop::Rng::new(seed);
+            let mut v = Vec::with_capacity(b.bytes + 8);
+            while v.len() < b.bytes {
+                v.extend_from_slice(&rng.next_u64().to_le_bytes());
+            }
+            v.truncate(b.bytes);
+            Arc::new(v)
+        }
+        BufferInit::F32Rand { seed } => {
+            Arc::new(bytes::from_f32(&crate::workloads::gen_f32(b.bytes / 4, seed)))
+        }
+        BufferInit::I32Rand { seed, bound, shift } => {
+            let v: Vec<i32> = crate::workloads::gen_i32(b.bytes / 4, bound, seed)
+                .into_iter()
+                .map(|x| x - shift)
+                .collect();
+            Arc::new(bytes::from_i32(&v))
+        }
+        BufferInit::Zeros => Arc::new(vec![0u8; b.bytes]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::all_configs;
+
+    fn minimal_windows_spec() -> WorkloadSpec {
+        WorkloadSpec {
+            name: "t".into(),
+            category: Category::Independent,
+            mode: SpecMode::Windows,
+            granularity: 4,
+            repeats: 1,
+            output_bytes: 1024,
+            block_bytes: KEX_BLOCK_BYTES,
+            steps: 0,
+            penalty: 0,
+            halo: HaloSpec::ZERO,
+            buffers: vec![
+                BufferSpec { name: "a".into(), bytes: 1024, init: BufferInit::F32Rand { seed: 1 } },
+                BufferSpec { name: "b".into(), bytes: 1024, init: BufferInit::F32Rand { seed: 2 } },
+            ],
+            stages: vec![StageSpec {
+                kernel: "vector_add".into(),
+                inputs: vec!["a".into(), "b".into()],
+                flops: None,
+            }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        let spec = minimal_windows_spec();
+        let text = spec.to_json();
+        let back = WorkloadSpec::from_json(&text).expect("canonical json parses");
+        assert_eq!(back, spec);
+        // And the serialization is a fixed point (hash-stable).
+        assert_eq!(back.to_json(), text);
+    }
+
+    #[test]
+    fn big_seeds_survive_the_f64_json_layer() {
+        let mut spec = minimal_windows_spec();
+        let seed = 0xDEAD_BEEF_CAFE_F00Du64; // > 2^53
+        spec.buffers[0].init = BufferInit::Synth { seed };
+        let back = WorkloadSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.buffers[0].init, BufferInit::Synth { seed });
+    }
+
+    #[test]
+    fn content_hash_tracks_content_not_identity() {
+        let a = minimal_windows_spec();
+        let mut b = minimal_windows_spec();
+        assert_eq!(a.content_hash(), b.content_hash());
+        b.granularity = 5;
+        assert_ne!(a.content_hash(), b.content_hash());
+    }
+
+    #[test]
+    fn every_corpus_descriptor_converts_to_a_valid_spec() {
+        for c in all_configs() {
+            let spec = WorkloadSpec::from_corpus(&c, crate::plan::CORPUS_BURNER);
+            spec.validate()
+                .unwrap_or_else(|e| panic!("{}/{}: {e}", c.app, c.config));
+            // Round-trips too: descriptor-derived specs are exportable.
+            let back = WorkloadSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back, spec, "{}/{}", c.app, c.config);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_unknown_kernel_and_missing_buffer() {
+        let mut s = minimal_windows_spec();
+        s.stages[0].kernel = "no_such_kernel".into();
+        assert!(matches!(s.validate(), Err(Error::Spec(m)) if m.contains("unknown kernel")));
+        let mut s = minimal_windows_spec();
+        s.stages[0].inputs[1] = "ghost".into();
+        let got = s.validate();
+        assert!(matches!(got, Err(Error::Spec(m)) if m.contains("names no declared buffer")));
+        let mut s = minimal_windows_spec();
+        s.buffers[1].bytes = 512;
+        assert!(matches!(s.validate(), Err(Error::Spec(m)) if m.contains("size mismatch")));
+    }
+}

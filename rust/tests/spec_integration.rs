@@ -1,0 +1,197 @@
+//! Spec front-end integration (DESIGN.md §Spec): the committed
+//! `specs/*.json` files are the acceptance fixtures for the declarative
+//! lowering path.
+//!
+//! Three proofs:
+//! 1. **Round-trip identity** — every committed file is byte-identical
+//!    to its own canonical re-serialization, so the content-hash cache
+//!    key is stable and the files document the one true format.
+//! 2. **Clean rejection** — a table of malformed documents must each
+//!    fail with `Error::Spec` (never a panic, hang, or silent default).
+//! 3. **Legacy equivalence** — the vectoradd / hotspot / nw specs
+//!    reproduce their hand-written drivers' output bytes exactly,
+//!    across a stream ladder × granularity grid on both the Sim and
+//!    Native backends; the two novel specs (3-stage mixed pipeline,
+//!    asymmetric-halo stencil) verify hazard-clean and pass the
+//!    streamed-vs-bulk re-chunking oracle.
+
+use hetstream::device::DeviceProfile;
+use hetstream::experiments::{run_spec, verify_spec, RunSpecOpts};
+use hetstream::hstreams::{Context, ContextBuilder};
+use hetstream::plan::{Backend, NativeBackend, RunConfig, SimBackend};
+use hetstream::spec::WorkloadSpec;
+use hetstream::workloads::hotspot::N as HOTSPOT_N;
+use hetstream::workloads::{gen_f32, Benchmark, Hotspot, Mode, NeedlemanWunsch, VectorAdd};
+
+fn load(name: &str) -> (String, WorkloadSpec) {
+    let path = format!("{}/../specs/{name}", env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(&path).expect("committed spec readable");
+    let spec = WorkloadSpec::from_json(&text).expect("committed spec parses");
+    spec.validate().expect("committed spec validates");
+    (text, spec)
+}
+
+fn instant_ctx(artifacts: &[&str]) -> Context {
+    ContextBuilder::new()
+        .profile(DeviceProfile::instant())
+        .only_artifacts(artifacts.to_vec())
+        .build()
+        .expect("context")
+}
+
+const COMMITTED: &[&str] =
+    &["vectoradd.json", "hotspot.json", "nw.json", "pipeline3.json", "stencil_asym.json"];
+
+#[test]
+fn committed_specs_round_trip_byte_identically() {
+    for name in COMMITTED {
+        let (text, spec) = load(name);
+        assert_eq!(
+            spec.to_json(),
+            text,
+            "{name}: the committed file must be the canonical serialization \
+             (re-run to_json and commit its output)"
+        );
+        // And the canonical form is a fixpoint, so the cache key is too.
+        let reparsed = WorkloadSpec::from_json(&spec.to_json()).expect("canonical form parses");
+        assert_eq!(reparsed.content_hash(), spec.content_hash(), "{name}: unstable content hash");
+    }
+}
+
+#[test]
+fn malformed_specs_reject_with_a_clean_spec_error() {
+    let valid = r#"{
+        "schema": "hetstream-spec-v1",
+        "name": "ok",
+        "category": "independent",
+        "mode": "windows",
+        "output_bytes": 4096,
+        "buffers": [{"name": "a", "bytes": 4096, "init": {"kind": "f32_rand", "seed": 1}}],
+        "stages": [{"kernel": "burner_8", "inputs": ["a"]}]
+    }"#;
+    WorkloadSpec::from_json(valid).and_then(|s| s.validate()).expect("baseline must be valid");
+
+    // (what is broken, the document) — every row must be Error::Spec.
+    let table: &[(&str, String)] = &[
+        ("unparsable json", "{".into()),
+        ("wrong schema", valid.replace("hetstream-spec-v1", "hetstream-spec-v0")),
+        ("empty name", valid.replace("\"ok\"", "\"\"")),
+        ("unknown category", valid.replace("independent", "embarrassing")),
+        ("unknown mode", valid.replace("windows", "ribbons")),
+        ("missing output_bytes", valid.replace("\"output_bytes\": 4096,", "")),
+        ("zero-byte buffer", valid.replace("\"bytes\": 4096", "\"bytes\": 0")),
+        ("unknown init kind", valid.replace("f32_rand", "f16_rand")),
+        ("unknown kernel", valid.replace("burner_8", "no_such_kernel")),
+        ("undeclared stage-0 input", valid.replace("[\"a\"]", "[\"z\"]")),
+        (
+            "output/input size mismatch",
+            valid.replace("\"output_bytes\": 4096", "\"output_bytes\": 8192"),
+        ),
+        ("misaligned buffer", valid.replace("4096", "4095")),
+        ("zero granularity", valid.replace("\"mode\"", "\"granularity\": 0, \"mode\"")),
+        (
+            "halo without false_dependent",
+            valid.replace("\"mode\"", "\"halo\": {\"lo\": 0.5}, \"mode\""),
+        ),
+        ("negative halo", valid.replace("\"mode\"", "\"halo\": {\"lo\": -1}, \"mode\"")),
+    ];
+    for (what, doc) in table {
+        let got = WorkloadSpec::from_json(doc).and_then(|s| s.validate());
+        assert!(
+            matches!(got, Err(hetstream::Error::Spec(_))),
+            "{what}: expected Error::Spec, got {got:?}"
+        );
+    }
+}
+
+/// Run `spec` over backends × streams × granularities and demand every
+/// run assembles exactly `reference` — and passes its own bulk oracle.
+fn assert_grid_matches(spec: &WorkloadSpec, ctx: &Context, grans: &[usize], reference: &[Vec<u8>]) {
+    let sim = SimBackend::new(ctx);
+    let native = NativeBackend::new();
+    let backends: [&dyn Backend; 2] = [&sim, &native];
+    for backend in backends {
+        for &streams in &[1usize, 2, 4] {
+            for &gran in grans {
+                let opts = RunSpecOpts { streams, gran: Some(gran), verify: true };
+                let out = run_spec(spec, backend, &opts).expect("spec run");
+                let at = format!(
+                    "{} on {} at {streams} stream(s) x gran {gran}",
+                    spec.name,
+                    backend.name()
+                );
+                assert_eq!(out.bulk_match, Some(true), "{at}: bulk oracle");
+                assert_eq!(out.outputs, reference, "{at}: legacy bytes");
+            }
+        }
+    }
+}
+
+#[test]
+fn vectoradd_spec_is_bitwise_identical_to_the_legacy_driver() {
+    let (_, spec) = load("vectoradd.json");
+    let ctx = instant_ctx(&["vector_add"]);
+    // Legacy reference: the hand-written driver's own tunable workload
+    // through the historical GenericWorkload execution path.
+    let wl = VectorAdd::new(1).tunable().expect("VectorAdd is re-chunkable");
+    let (_, reference, _) = wl.execute(&ctx, Mode::Streamed(4)).expect("legacy run");
+    assert_grid_matches(&spec, &ctx, &[1, 4, 8], &reference);
+}
+
+#[test]
+fn hotspot_spec_is_bitwise_identical_to_the_legacy_driver() {
+    let (_, spec) = load("hotspot.json");
+    let ctx = instant_ctx(&["hotspot_step"]);
+    let temp0 = gen_f32(HOTSPOT_N * HOTSPOT_N, 221);
+    let power = gen_f32(HOTSPOT_N * HOTSPOT_N, 222);
+    let plan = Hotspot::new(1).lower(&temp0, &power);
+    let reference =
+        SimBackend::new(&ctx).run(&plan, RunConfig::streams(2)).expect("legacy run").outputs;
+    assert_grid_matches(&spec, &ctx, &[1, 2, 4], &reference);
+}
+
+#[test]
+fn nw_spec_is_bitwise_identical_to_the_legacy_driver() {
+    let (_, spec) = load("nw.json");
+    let ctx = instant_ctx(&["nw_tile"]);
+    let plan = NeedlemanWunsch::new(1).lower();
+    let reference =
+        SimBackend::new(&ctx).run(&plan, RunConfig::streams(4)).expect("legacy run").outputs;
+    // Tiles-mode granularity is pinned by the matrix: every request
+    // clamps to the 8x8 grid, so the "ladder" proves the clamp too.
+    assert_grid_matches(&spec, &ctx, &[1, 8, 16], &reference);
+}
+
+#[test]
+fn novel_specs_verify_clean_and_pass_the_bulk_oracle() {
+    let apps: &[(&str, &[&str])] = &[
+        ("pipeline3.json", &["vector_add", "fwt", "burner_8"]),
+        ("stencil_asym.json", &["burner_64"]),
+    ];
+    for (file, artifacts) in apps {
+        let (_, spec) = load(file);
+        // Static: hazard-clean (tiling findings included) at the bulk
+        // point and across the streamed ladder.
+        let (_, rows, failed) = verify_spec(&spec);
+        assert_eq!(failed, 0, "{file}: {:?}", rows.iter().filter(|r| !r.ok).collect::<Vec<_>>());
+        // Dynamic: streamed output equals the bulk lowering bitwise on
+        // both backends (the §4 re-chunking oracle).
+        let ctx = instant_ctx(artifacts);
+        let sim = SimBackend::new(&ctx);
+        let native = NativeBackend::new();
+        let backends: [&dyn Backend; 2] = [&sim, &native];
+        for backend in backends {
+            for streams in [1usize, 4] {
+                let opts = RunSpecOpts { streams, gran: None, verify: true };
+                let out = run_spec(&spec, backend, &opts).expect("novel spec run");
+                assert_eq!(
+                    out.bulk_match,
+                    Some(true),
+                    "{file} on {} at {streams} stream(s)",
+                    backend.name()
+                );
+                assert!(out.report.is_clean());
+            }
+        }
+    }
+}

@@ -770,6 +770,182 @@ def golden_trace_check():
     print("golden-trace check: OK (16/16 intervals match the Rust timeline)")
 
 
+# --- spec front-end cross-check ----------------------------------------
+#
+# An independent Python derivation of `SpecCompiler::windows_at`
+# (rust/src/spec/compile.rs), diffed op-for-op against a
+# `repro run-spec FILE --json` dump.  Only windows-mode specs are
+# supported; the corpus modes are already covered by the descriptor
+# mirror above.
+
+# Elastic kernels accept any whole-lane window (runtime::elastic_artifact).
+SPEC_ELASTIC = {"vector_add", "black_scholes", "nn_dist"}
+
+# Fixed-shape pipeline kernels the mirror knows the input-tile bytes of
+# (rust/src/runtime/manifest.rs is the source of truth).
+SPEC_FIXED_TILE = {"fwt": 16384}
+
+
+def spec_elastic(kernel):
+    return kernel in SPEC_ELASTIC or kernel.startswith("burner_")
+
+
+def spec_halo_side(ratio, length):
+    """Halo bytes for one window side: ratio x window, lane-aligned,
+    at least one lane when the ratio is non-zero (compile.rs
+    halo_side; `as usize` truncates, like int())."""
+    if ratio > 0.0 and length > 0:
+        return lane_up(max(int(length * ratio), 1))
+    return 0
+
+
+def spec_window_quantum(spec):
+    q = 4
+    for st in spec["stages"]:
+        k = st["kernel"]
+        if spec_elastic(k):
+            continue
+        if k not in SPEC_FIXED_TILE:
+            sys.exit(f"spec-check: unknown fixed-shape kernel {k!r} "
+                     f"(teach SPEC_FIXED_TILE its tile size)")
+        q = max(q, SPEC_FIXED_TILE[k])
+    return q
+
+
+def lower_spec_windows(spec, m):
+    """Port of SpecCompiler::windows_at(m): the op list in exactly the
+    shape `run_spec_json` dumps (buffer ids in allocation order, RAW
+    deps by op index, owned-range downloads)."""
+    h = spec["buffers"][0]["bytes"]
+    halo = spec.get("halo") or {}
+    halo_lo, halo_hi = halo.get("lo", 0.0), halo.get("hi", 0.0)
+    q = spec_window_quantum(spec)
+    n_payloads = len(spec["stages"][0]["inputs"])
+    ops = []
+    nbuf = [0]
+
+    def new_buf():
+        nbuf[0] += 1
+        return nbuf[0] - 1
+
+    def region(buf, off, length):
+        return {"buf": buf, "off": off, "len": length}
+
+    ix = [(t * h // m) // q * q for t in range(m)] + [h]
+    for t in range(m):
+        ilo, ihi = ix[t], ix[t + 1]
+        if ihi == ilo:
+            continue  # more tasks than quanta: this lane is empty
+        length = ihi - ilo
+        hlo = spec_halo_side(halo_lo, length)
+        hhi = spec_halo_side(halo_hi, length)
+        xlo = ilo - min(hlo, ilo)
+        xhi = min(ihi + hhi, h)
+        xfer = xhi - xlo
+
+        in_bufs = [new_buf() for _ in range(n_payloads)]
+        for buf in in_bufs:
+            ops.append({"kind": "h2d", "slot": t, "deps": [],
+                        "bytes": xfer, "buf": buf, "off": 0})
+
+        stage_in = in_bufs
+        prev_kex = []
+        for st in spec["stages"]:
+            flops = st.get("flops")
+            if flops is not None:
+                flops = flops * length // h
+            out_buf = new_buf()
+            if spec_elastic(st["kernel"]):
+                kex = len(ops)
+                ops.append({"kind": "kex", "slot": t, "deps": prev_kex,
+                            "artifact": st["kernel"],
+                            "inputs": [region(b, 0, xfer)
+                                       for b in stage_in],
+                            "outputs": [region(out_buf, 0, xfer)],
+                            "flops": flops, "repeats": 1})
+                prev_kex = [kex]
+            else:
+                tile = SPEC_FIXED_TILE[st["kernel"]]
+                tiles = xfer // tile
+                per_tile = (flops // max(tiles, 1)
+                            if flops is not None else None)
+                ids = []
+                for j in range(tiles):
+                    ids.append(len(ops))
+                    ops.append({"kind": "kex", "slot": t,
+                                "deps": prev_kex,
+                                "artifact": st["kernel"],
+                                "inputs": [region(stage_in[0],
+                                                  j * tile, tile)],
+                                "outputs": [region(out_buf,
+                                                   j * tile, tile)],
+                                "flops": per_tile, "repeats": 1})
+                prev_kex = ids
+            stage_in = [out_buf]
+
+        delta = ilo - xlo
+        ops.append({"kind": "d2h", "slot": t, "deps": prev_kex,
+                    "bytes": length, "buf": stage_in[0], "off": delta,
+                    "output": 0, "out_off": ilo})
+    return ops
+
+
+def spec_check(spec_path, dump_path):
+    with open(spec_path) as f:
+        spec = json.load(f)
+    with open(dump_path) as f:
+        dump = json.load(f)
+    if spec.get("schema") != "hetstream-spec-v1":
+        sys.exit("spec-check: not a hetstream-spec-v1 spec")
+    if dump.get("schema") != "hetstream-run-spec-v1":
+        sys.exit("spec-check: dump is not a hetstream-run-spec-v1 "
+                 "document (run `repro run-spec FILE --json`)")
+    if spec.get("mode") != "windows":
+        sys.exit(f"spec-check: only windows-mode specs are supported "
+                 f"(got {spec.get('mode')!r})")
+    if dump.get("name") != spec.get("name"):
+        sys.exit(f"spec-check: dump is for {dump.get('name')!r}, "
+                 f"spec is {spec.get('name')!r}")
+    gran = dump["gran"]
+    h = spec["buffers"][0]["bytes"]
+    eff = max(min(gran, max(h, 4) // 4), 1)
+    if eff != gran:
+        sys.exit(f"spec-check: dump gran {gran} is not a clamp "
+                 f"fixpoint (expected {eff})")
+
+    want = lower_spec_windows(spec, gran)
+    got = dump["ops"]
+    bad = 0
+    if len(got) != len(want):
+        print(f"spec-check: op count mismatch: rust {len(got)} vs "
+              f"mirror {len(want)}")
+        bad += 1
+    for i, (g, w) in enumerate(zip(got, want)):
+        if g != w:
+            print(f"spec-check: op {i} mismatch:\n"
+                  f"  rust:   {json.dumps(g, sort_keys=True)}\n"
+                  f"  mirror: {json.dumps(w, sort_keys=True)}")
+            bad += 1
+            if bad >= 5:
+                print("spec-check: (further mismatches suppressed)")
+                break
+    totals = dump.get("totals", {})
+    derived = {
+        "ops": len(want),
+        "h2d_bytes": sum(o["bytes"] for o in want if o["kind"] == "h2d"),
+        "d2h_bytes": sum(o["bytes"] for o in want if o["kind"] == "d2h"),
+    }
+    for key, val in derived.items():
+        if totals.get(key) != val:
+            print(f"spec-check: totals.{key} mismatch: rust "
+                  f"{totals.get(key)} vs mirror {val}")
+            bad += 1
+    if bad:
+        sys.exit(1)
+    print(f"spec-check: OK ({spec['name']}: {len(want)} op(s) at gran "
+          f"{gran} match the Rust lowering)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--apps", type=int, default=0, help="limit app count")
@@ -786,9 +962,22 @@ def main():
     ap.add_argument("--arena-check", action="store_true",
                     help="run only the golden-trace check and the arena "
                          "must-zero replay (fast; gating in CI)")
+    ap.add_argument("--spec-check", metavar="SPEC",
+                    help="lower a windows-mode workload spec "
+                         "(specs/*.json) independently and diff its op "
+                         "list against a `repro run-spec --json` dump "
+                         "(requires --spec-json; gating in CI)")
+    ap.add_argument("--spec-json", metavar="DUMP",
+                    help="with --spec-check: path to the Rust side's "
+                         "hetstream-run-spec-v1 dump to diff against")
     args = ap.parse_args()
     if args.json and not args.native_check:
         ap.error("--json requires --native-check")
+    if args.spec_check:
+        if not args.spec_json:
+            ap.error("--spec-check requires --spec-json")
+        spec_check(args.spec_check, args.spec_json)
+        return
 
     if not args.json:
         golden_trace_check()
