@@ -29,7 +29,8 @@ use std::time::{Duration, Instant};
 use crate::device::{DeviceProfile, TimeMode};
 use crate::metrics::{latency_stats, BenchReport, BenchTick, Table, TenantTotals};
 use crate::service::{
-    AdmissionConfig, ExecBackend, Request, ServiceConfig, StreamService, Ticket, TunePolicy,
+    AdaptiveConfig, AdmissionConfig, ExecBackend, Request, ServiceConfig, StreamService, Ticket,
+    TunePolicy,
 };
 use crate::util::percentile;
 use crate::{Error, Result};
@@ -63,6 +64,10 @@ pub struct BenchOpts {
     /// Lane execution backend; on [`ExecBackend::Native`] the latency
     /// numbers are real host execution, not simulation cost.
     pub backend: ExecBackend,
+    /// Adaptive service runtime (`--adaptive`): `lanes` becomes the
+    /// initial fleet and the controller batches / grows / parks from
+    /// the measured window.
+    pub adaptive: Option<AdaptiveConfig>,
 }
 
 /// One submission outcome, stamped with its completion (or shed) time
@@ -98,6 +103,7 @@ pub fn run_bench(opts: &BenchOpts, policy: Arc<dyn TunePolicy>) -> Result<BenchR
             backend: opts.backend,
             artifacts: Some(vec![crate::plan::CORPUS_BURNER.into()]),
             admission: opts.admission,
+            adaptive: opts.adaptive,
         },
         policy,
     )?;
@@ -147,6 +153,24 @@ pub fn run_bench(opts: &BenchOpts, policy: Arc<dyn TunePolicy>) -> Result<BenchR
     // Ticks are one second wide, so per-tick throughput = completions.
     for t in &mut ticks {
         t.throughput_rps = t.completed as f64;
+    }
+    // Merge the adaptive controller's per-second log (mode / lane
+    // target / batch count) into the series: exact match by tick
+    // index, forward-filling mode and lanes across seconds the
+    // controller logged nothing for.  The controller's epoch is the
+    // service start, microseconds before the bench epoch — well under
+    // the one-second tick width.  Without the adaptive runtime every
+    // tick reads park / fixed lanes / zero batches.
+    let mut mode = crate::service::WakeupMode::Park.label().to_string();
+    let mut lanes_now = opts.lanes.max(1) as u64;
+    for t in &mut ticks {
+        if let Some(a) = stats.adaptive_ticks.iter().find(|a| a.t_s == t.t_s) {
+            mode = a.mode.label().to_string();
+            lanes_now = a.lanes as u64;
+            t.batches = a.batches;
+        }
+        t.mode = mode.clone();
+        t.lanes = lanes_now;
     }
 
     let done: Vec<&Event> =
@@ -201,6 +225,11 @@ pub fn run_bench(opts: &BenchOpts, policy: Arc<dyn TunePolicy>) -> Result<BenchR
         secs: opts.secs,
         open_loop: opts.open_loop,
         lanes: opts.lanes.max(1),
+        adaptive: opts.adaptive.is_some(),
+        max_lanes: opts
+            .adaptive
+            .map(|a| a.normalized().max_lanes)
+            .unwrap_or(opts.lanes.max(1)),
         profile: opts.profile.name.clone(),
         time_mode: format!("{:?}", opts.time_mode).to_lowercase(),
         backend: opts.backend.label().into(),
@@ -218,6 +247,16 @@ pub fn run_bench(opts: &BenchOpts, policy: Arc<dyn TunePolicy>) -> Result<BenchR
         modeled_total_ms: stats.modeled_ms(),
         cache_hits: stats.cache_hits,
         cache_misses: stats.cache_misses,
+        batches: stats.adaptive.as_ref().map(|a| a.batches).unwrap_or(0),
+        batched_jobs: stats.adaptive.as_ref().map(|a| a.batched_jobs).unwrap_or(0),
+        lane_grows: stats.adaptive.as_ref().map(|a| a.lane_grows).unwrap_or(0),
+        lane_retires: stats.adaptive.as_ref().map(|a| a.lane_retires).unwrap_or(0),
+        wakeup_switches: stats.adaptive.as_ref().map(|a| a.wakeup_switches).unwrap_or(0),
+        peak_lanes: stats
+            .adaptive
+            .as_ref()
+            .map(|a| a.peak_lanes)
+            .unwrap_or(opts.lanes.max(1) as u64),
     })
 }
 
@@ -350,7 +389,7 @@ pub fn bench_table(r: &BenchReport) -> Table {
         ),
         &[
             "t (s)", "done", "shed", "err", "thr (req/s)", "avg (ms)", "p50 (ms)", "p99 (ms)",
-            "queue (ms)",
+            "queue (ms)", "mode", "lanes", "batches",
         ],
     );
     for tick in &r.ticks {
@@ -364,6 +403,9 @@ pub fn bench_table(r: &BenchReport) -> Table {
             num(tick.lat_p50_ms),
             num(tick.lat_p99_ms),
             num(tick.queue_avg_ms),
+            tick.mode.clone(),
+            tick.lanes.to_string(),
+            tick.batches.to_string(),
         ]);
     }
     t

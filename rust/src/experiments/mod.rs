@@ -24,7 +24,9 @@ pub use fig4::fig4;
 pub use fig9::{fig9, measure_one, rgain, Fig9Row};
 pub use lavamd::lavamd_negative;
 pub use learn::{dataset_from_tune_rows, dataset_table, learn_cv, learn_dataset, CvStats};
-pub use run_spec::{compile_spec, run_spec, run_spec_json, RunSpecOpts, RunSpecOutcome};
+pub use run_spec::{
+    compile_spec, run_spec, run_spec_json, tune_spec, RunSpecOpts, RunSpecOutcome, SpecTune,
+};
 pub use serve::{demo_roster, serve_demo, ServeSummary};
 pub use sweep::{
     sweep_corpus, sweep_corpus_with, tune_corpus, tune_corpus_with, tune_rows_json, SweepRow,

@@ -14,6 +14,10 @@
 //! `tools/mirror/tuner_mirror.py --spec-check` independently derives
 //! and diffs in CI.
 
+use crate::analysis::{
+    autotune_plan_pruned, gran_ladder, normalize_ladder, predict_plan_point, Category,
+};
+use crate::hstreams::Context;
 use crate::plan::{
     outputs_match, verify_plan, Backend, Granularity, PlanOpKind, PlanRegion, RunConfig, Slot,
     StreamPlan, VerifyReport,
@@ -51,6 +55,71 @@ pub struct RunSpecOutcome {
     pub outputs: Vec<Vec<u8>>,
     /// `Some(ok)` when the `--verify` bulk oracle ran.
     pub bulk_match: Option<bool>,
+    /// `Some` when `--tune` routed the spec through the joint
+    /// autotuner before running (the chosen knobs are then the run's
+    /// own `streams`/`gran`).
+    pub tuned: Option<SpecTune>,
+}
+
+/// What the joint autotuner chose for a spec (`repro run-spec --tune`).
+#[derive(Debug, Clone)]
+pub struct SpecTune {
+    /// Winning stream count.
+    pub streams: usize,
+    /// Winning effective granularity.
+    pub gran: usize,
+    /// Modeled makespan at the winner, ms.
+    pub best_ms: f64,
+    /// Bulk (single-offload) reference makespan, ms.
+    pub bulk_ms: f64,
+    /// Grid points the pruned walk actually measured.
+    pub points: usize,
+}
+
+/// Route a validated spec through the seeded pruned joint autotuner
+/// (the PR-3/4 search, fed by the spec compiler's lowering): seed from
+/// the analytic closed form ([`predict_plan_point`] over the bulk
+/// plan, category-mapped into knob units), candidate axes from the
+/// shared ladders, every candidate clamped through the compiler's
+/// unified granularity clamp, measured under `ctx`'s virtual clock.
+pub fn tune_spec(ctx: &Context, spec: &WorkloadSpec, runs: usize) -> Result<SpecTune> {
+    spec.validate()?;
+    let compiler = SpecCompiler::new(spec);
+    let bulk = compiler.bulk();
+    bulk.validate()?;
+    let (seed_streams, seed_tasks) = predict_plan_point(&bulk, ctx.profile());
+    // Task budget → knob units: wavefront categories spend it as a
+    // grid side (same mapping as the service's `choose_plan`).
+    let seed_gran = match spec.category {
+        Category::TrueDependent => (seed_tasks as f64).sqrt().ceil() as usize,
+        _ => seed_tasks,
+    }
+    .max(1);
+    let seed_gran = compiler.effective_granularity(Granularity::new(seed_gran)).get();
+    let streams = normalize_ladder(&[1, 2, 4, 8, seed_streams]);
+    let mut grans: Vec<usize> = gran_ladder(seed_gran)
+        .into_iter()
+        .map(|g| compiler.effective_granularity(Granularity::new(g)).get())
+        .collect();
+    grans.sort_unstable();
+    grans.dedup();
+    let lower = |g: Granularity| compiler.streamed_at(compiler.effective_granularity(g));
+    let r = autotune_plan_pruned(
+        ctx,
+        &bulk,
+        &lower,
+        &streams,
+        &grans,
+        (seed_streams, seed_gran),
+        runs.max(1),
+    )?;
+    Ok(SpecTune {
+        streams: r.best_streams,
+        gran: r.best_gran,
+        best_ms: r.best_ms,
+        bulk_ms: r.bulk_ms,
+        points: r.surface.len(),
+    })
 }
 
 /// Lower `spec` at `gran` (spec default when `None`) and statically
@@ -110,6 +179,7 @@ pub fn run_spec(
         wall_ms: run.wall.as_secs_f64() * 1e3,
         outputs: run.outputs,
         bulk_match,
+        tuned: None,
         plan,
     })
 }
@@ -181,7 +251,7 @@ pub fn run_spec_json(spec: &WorkloadSpec, outcome: &RunSpecOutcome) -> String {
     format!(
         "{{\"schema\":\"hetstream-run-spec-v1\",\"name\":\"{}\",\"category\":\"{}\",\
          \"mode\":\"{}\",\"gran\":{},\"streams\":{},\"backend\":\"{}\",\
-         \"wall_ms\":{:.6},\"clean\":{},\"hazards\":{},\"bulk_match\":{},\
+         \"wall_ms\":{:.6},\"clean\":{},\"hazards\":{},\"bulk_match\":{},\"tuned\":{},\
          \"totals\":{{\"ops\":{},\"tasks\":{},\"bufs\":{},\"h2d_bytes\":{},\
          \"d2h_bytes\":{},\"kex_flops\":{}}},\"outputs\":[{outputs}],\"ops\":[{ops}]}}",
         escape(&spec.name),
@@ -194,6 +264,12 @@ pub fn run_spec_json(spec: &WorkloadSpec, outcome: &RunSpecOutcome) -> String {
         outcome.report.is_clean(),
         outcome.report.hazards.len(),
         outcome.bulk_match.map_or("null".to_string(), |b| b.to_string()),
+        outcome.tuned.as_ref().map_or("null".to_string(), |t| {
+            format!(
+                "{{\"streams\":{},\"gran\":{},\"best_ms\":{:.6},\"bulk_ms\":{:.6},\"points\":{}}}",
+                t.streams, t.gran, t.best_ms, t.bulk_ms, t.points
+            )
+        }),
         plan.ops.len(),
         plan.tasks(),
         plan.bufs.len(),
@@ -256,6 +332,45 @@ mod tests {
             v.get("totals").and_then(|t| t.get("d2h_bytes")).and_then(|n| n.as_usize()),
             Some(65536)
         );
+    }
+
+    #[test]
+    fn tune_spec_picks_a_candidate_point_and_beats_bulk() {
+        let spec = WorkloadSpec::from_json(DEMO).unwrap();
+        let ctx = crate::hstreams::ContextBuilder::new()
+            .profile(crate::device::DeviceProfile::mic31sp().simulation())
+            .only_artifacts(vec!["vector_add"])
+            .build()
+            .expect("sim context");
+        let tune = tune_spec(&ctx, &spec, 1).expect("tune");
+        assert!(tune.streams >= 1);
+        assert!(tune.gran >= 1, "gran must be a clamped knob value");
+        assert!(tune.best_ms.is_finite() && tune.best_ms > 0.0);
+        assert!(
+            tune.best_ms <= tune.bulk_ms,
+            "winner ({:.3} ms) must not lose to the bulk reference ({:.3} ms)",
+            tune.best_ms,
+            tune.bulk_ms
+        );
+        assert!(tune.points >= 1, "the pruned walk must measure at least the seed");
+        // The chosen knobs drive a real run: lower at the winner and
+        // dump — the JSON carries the tuned block verbatim.
+        let outcome = run_spec(
+            &spec,
+            &NativeBackend::new(),
+            &RunSpecOpts { streams: tune.streams, gran: Some(tune.gran), verify: true },
+        )
+        .map(|mut o| {
+            o.tuned = Some(tune.clone());
+            o
+        })
+        .expect("native run at the tuned point");
+        assert_eq!(outcome.bulk_match, Some(true));
+        let doc = run_spec_json(&spec, &outcome);
+        let v = crate::util::json::Json::parse(&doc).expect("valid JSON");
+        let t = v.get("tuned").expect("tuned block");
+        assert_eq!(t.get("streams").and_then(|n| n.as_usize()), Some(tune.streams));
+        assert_eq!(t.get("gran").and_then(|n| n.as_usize()), Some(tune.gran));
     }
 
     #[test]

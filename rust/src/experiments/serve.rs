@@ -26,7 +26,9 @@ use crate::plan::{
     lower_corpus_streamed_at, Backend, Granularity, NativeBackend, RunConfig, SimBackend,
     CORPUS_BURNER,
 };
-use crate::service::{ExecBackend, Request, ServiceConfig, StreamService, TunePolicy};
+use crate::service::{
+    AdaptiveConfig, AdaptiveStats, ExecBackend, Request, ServiceConfig, StreamService, TunePolicy,
+};
 use crate::{Error, Result};
 
 use super::sweep::representative_configs;
@@ -79,6 +81,9 @@ pub struct ServeSummary {
     /// times agreed (virtual mode), and no submission errored.
     pub validated: bool,
     pub errors: usize,
+    /// Adaptive-runtime counters (`None` when `--adaptive` was off):
+    /// batching, lane elasticity, and wakeup-mode distribution.
+    pub adaptive: Option<AdaptiveStats>,
 }
 
 impl ServeSummary {
@@ -141,6 +146,7 @@ pub fn serve_demo(
     lanes: usize,
     runs: usize,
     policy: Arc<dyn TunePolicy>,
+    adaptive: Option<AdaptiveConfig>,
 ) -> Result<(Table, ServeSummary)> {
     if n == 0 {
         return Err(Error::Config("serve demo needs --demo N >= 1".into()));
@@ -194,6 +200,7 @@ pub fn serve_demo(
             // The demo is closed-loop over a fixed roster — admission
             // control is the load harness's concern (`repro bench`).
             admission: None,
+            adaptive,
         },
         policy,
     )?;
@@ -292,6 +299,7 @@ pub fn serve_demo(
         modeled_total_ms,
         validated,
         errors,
+        adaptive: stats.adaptive,
     };
     Ok((t, summary))
 }

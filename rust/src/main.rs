@@ -76,6 +76,9 @@ COMMANDS:
                 [--streams N=4] [--gran G  override the spec default]
                 [--backend sim|native] [--verify  bulk re-chunk oracle,
                  bitwise] [--json  hetstream-run-spec-v1 op-list dump]
+                [--tune  seed + prune the joint (streams x granularity)
+                 autotuner over the spec's lowering (virtual clock) and
+                 run at the argmin; overrides --streams/--gran]
   learn       Learned (streams x granularity) tuner over plan features
               (arXiv:1802.02760-style): build the training set, or
               leave-one-app-out cross-validate the k-NN seed
@@ -89,6 +92,11 @@ COMMANDS:
                 --demo N [--lanes L=4] [--runs R=1]
                 [--backend sim|native  native = real host execution]
                 [--learned [--dataset PATH] [--k K=5]]
+                [--adaptive  windowed feedback controller: same-key
+                 request batching, lane elasticity, wakeup switching]
+                [--max-lanes M=8] [--dwell MS=250]
+                [--batch-on RPS=100] [--batch-off RPS=25]
+                [--max-batch B=16]
   bench       Multi-tenant load harness over the StreamService: one
               worker per tenant paces mixed-category corpus submissions
               at --rate req/s for --secs s (closed-loop by default;
@@ -104,6 +112,10 @@ COMMANDS:
                  second (burst 2x); 0 = admit everything]
                 [--json [PATH]  write the time series as JSON]
                 [--learned [--dataset PATH] [--k K=5]]
+                [--adaptive [--max-lanes M=8] [--dwell MS=250]
+                 [--batch-on RPS=100] [--batch-off RPS=25]
+                 [--max-batch B=16]  the adaptive runtime: per-tick
+                 mode/lanes/batches land in the v3 JSON series]
   trace NAME  Dump one benchmark's virtual event timeline as JSON, or
               as a per-lane SVG Gantt chart with --svg
                 [--streams N=4] [--scale S=2] [--svg] [--out PATH]
@@ -185,6 +197,51 @@ fn policy_from(
     } else {
         Ok(std::sync::Arc::new(hetstream::service::AnalyticPolicy))
     }
+}
+
+/// Parse the adaptive-runtime flags shared by `serve` and `bench`:
+/// `--adaptive` switches the windowed feedback controller on (request
+/// batching + lane elasticity + wakeup-mode switching); the threshold
+/// knobs override [`hetstream::service::AdaptiveConfig`]'s defaults.
+/// `lanes` (the `--lanes` starting fleet) seeds the elastic floor so
+/// the controller never drains below what the caller asked for.
+fn adaptive_from(
+    args: &Args,
+    lanes: usize,
+) -> Result<Option<hetstream::service::AdaptiveConfig>> {
+    if !args.flag("adaptive") {
+        return Ok(None);
+    }
+    let d = hetstream::service::AdaptiveConfig::default();
+    Ok(Some(
+        hetstream::service::AdaptiveConfig {
+            max_lanes: args.get_usize("max-lanes", d.max_lanes.max(lanes)),
+            dwell_ms: args.get_usize("dwell", d.dwell_ms as usize) as u64,
+            batch_on_rps: args.get_f64("batch-on", d.batch_on_rps),
+            batch_off_rps: args.get_f64("batch-off", d.batch_off_rps),
+            max_batch: args.get_usize("max-batch", d.max_batch),
+            ..d
+        }
+        .normalized(),
+    ))
+}
+
+/// One-line adaptive-runtime summary for `serve`/`bench` output.
+fn adaptive_line(a: &hetstream::service::AdaptiveStats) -> String {
+    format!(
+        "adaptive: {} batch(es) covering {} job(s), {} batch toggle(s) | \
+         lanes +{} / -{} (peak {}) | {} wakeup switch(es), \
+         park {} ms / spin {} ms",
+        a.batches,
+        a.batched_jobs,
+        a.batch_toggles,
+        a.lane_grows,
+        a.lane_retires,
+        a.peak_lanes,
+        a.wakeup_switches,
+        a.park_ms,
+        a.spin_ms,
+    )
 }
 
 fn make_ctx_with(
@@ -560,16 +617,31 @@ fn main() -> Result<()> {
                 ),
                 None => None,
             };
-            let opts =
+            // The sim engines load artifacts up front: register exactly
+            // the kernels the spec's stages name (the tuner needs the
+            // same set even when the run itself is native).
+            let mut artifacts: Vec<String> =
+                spec.stages.iter().map(|s| s.kernel.clone()).collect();
+            artifacts.sort();
+            artifacts.dedup();
+            let mut opts =
                 experiments::RunSpecOpts { streams, gran, verify: args.flag("verify") };
-            let outcome = match backend_from(&args)? {
+            // --tune: route the spec through the seeded pruned joint
+            // autotuner (virtual clock) first and run at its argmin —
+            // explicit --streams/--gran are overridden by the winner.
+            let tuned = if args.flag("tune") {
+                let tctx =
+                    make_ctx_with(&args, profile.clone(), Some(artifacts.clone()), false)?;
+                let t = experiments::tune_spec(&tctx, &spec, runs)
+                    .map_err(|e| cli_err(e.to_string()))?;
+                opts.streams = t.streams;
+                opts.gran = Some(t.gran);
+                Some(t)
+            } else {
+                None
+            };
+            let mut outcome = match backend_from(&args)? {
                 hetstream::service::ExecBackend::Sim => {
-                    // The sim engines load artifacts up front: register
-                    // exactly the kernels the spec's stages name.
-                    let mut artifacts: Vec<String> =
-                        spec.stages.iter().map(|s| s.kernel.clone()).collect();
-                    artifacts.sort();
-                    artifacts.dedup();
                     let ctx = make_ctx_with(&args, profile, Some(artifacts), false)?;
                     experiments::run_spec(
                         &spec,
@@ -582,9 +654,10 @@ fn main() -> Result<()> {
                 }
             }
             .map_err(|e| cli_err(e.to_string()))?;
+            outcome.tuned = tuned;
             let summary = format!(
                 "run-spec {}: {} backend | gran {} x {} stream(s) | {} op(s) / {} task(s) | \
-                 wall {:.2} ms | {} hazard(s){}",
+                 wall {:.2} ms | {} hazard(s){}{}",
                 spec.name,
                 outcome.backend,
                 outcome.gran,
@@ -597,6 +670,13 @@ fn main() -> Result<()> {
                     Some(true) => " | bulk oracle: match",
                     Some(false) => " | bulk oracle: MISMATCH",
                     None => "",
+                },
+                match &outcome.tuned {
+                    Some(t) => format!(
+                        " | tuned ({}, {}) best {:.2} ms vs bulk {:.2} ms over {} point(s)",
+                        t.streams, t.gran, t.best_ms, t.bulk_ms, t.points
+                    ),
+                    None => String::new(),
                 },
             );
             if args.flag("json") {
@@ -701,9 +781,11 @@ fn main() -> Result<()> {
             // Policy features/predictions must see the same (dilated)
             // profile the service lanes model.
             let policy = policy_from(&args, &profile.simulation())?;
-            let (table, s) =
-                experiments::serve_demo(&profile, time_mode, backend, n, lanes, runs, policy)
-                    .map_err(|e| cli_err(e.to_string()))?;
+            let adaptive = adaptive_from(&args, lanes)?;
+            let (table, s) = experiments::serve_demo(
+                &profile, time_mode, backend, n, lanes, runs, policy, adaptive,
+            )
+            .map_err(|e| cli_err(e.to_string()))?;
             println!("{}", table.markdown());
             // Under the virtual clock the headline is the *modeled*
             // speedup (simulated physics); wall time there measures the
@@ -742,6 +824,9 @@ fn main() -> Result<()> {
                 s.serial_wall.as_secs_f64() * 1e3,
                 s.wall_speedup,
             );
+            if let Some(a) = &s.adaptive {
+                println!("{}", adaptive_line(a));
+            }
             if s.errors > 0 || !s.validated {
                 return Err(cli_err(format!(
                     "{} submission error(s); outputs bitwise-identical to serial: {}",
@@ -769,17 +854,19 @@ fn main() -> Result<()> {
                 None => None,
             };
             let policy = policy_from(&args, &profile.simulation())?;
+            let lanes = args.get_usize("lanes", 4);
             let opts = experiments::BenchOpts {
                 tenants: args.get_usize("tenants", 4),
                 rate,
                 secs,
                 open_loop: args.flag("open-loop"),
-                lanes: args.get_usize("lanes", 4),
+                lanes,
                 flood,
                 admission,
                 profile: profile.clone(),
                 time_mode: time_mode_from(&args)?,
                 backend: backend_from(&args)?,
+                adaptive: adaptive_from(&args, lanes)?,
             };
             let report =
                 experiments::run_bench(&opts, policy).map_err(|e| cli_err(e.to_string()))?;
@@ -801,6 +888,19 @@ fn main() -> Result<()> {
                 report.cache_hits,
                 report.cache_misses,
             );
+            if report.adaptive {
+                println!(
+                    "adaptive: {} batch(es) covering {} job(s) | lanes +{} / -{} \
+                     (peak {} of max {}) | {} wakeup switch(es)",
+                    report.batches,
+                    report.batched_jobs,
+                    report.lane_grows,
+                    report.lane_retires,
+                    report.peak_lanes,
+                    report.max_lanes,
+                    report.wakeup_switches,
+                );
+            }
             for t in &report.per_tenant {
                 println!(
                     "  {}: {} completed, {} shed, {} error(s), p99 {:.2} ms",

@@ -14,8 +14,10 @@ use crate::util::percentile;
 /// `tools/bench_schema.py` validates against it).  v2 added
 /// `config.backend` (`"sim"` / `"native"`) — on native the latency
 /// numbers are real host execution, so cross-commit comparisons must
-/// never mix backends.
-pub const BENCH_SCHEMA: &str = "hetstream-bench-v2";
+/// never mix backends.  v3 added the adaptive runtime: per-tick
+/// `mode`/`lanes`/`batches` series, `config.adaptive` +
+/// `config.max_lanes`, and the `totals.adaptive` counter block.
+pub const BENCH_SCHEMA: &str = "hetstream-bench-v3";
 
 /// One reporter tick: everything that *completed or was shed* during
 /// second `t_s` of the run, with latency statistics over the tick's
@@ -39,6 +41,14 @@ pub struct BenchTick {
     pub lat_p99_ms: f64,
     /// Mean admission-queue wait over the tick's completions, ms.
     pub queue_avg_ms: f64,
+    /// Lane wakeup mode in force during the tick (`"park"`/`"spin"`;
+    /// always `"park"` when the adaptive runtime is off).
+    pub mode: String,
+    /// Lane target at the end of the tick (the fixed `--lanes` when
+    /// adaptive is off).
+    pub lanes: u64,
+    /// Coalesced (multi-ticket) runs completed during the tick.
+    pub batches: u64,
 }
 
 /// Per-tenant lifetime totals.
@@ -64,6 +74,11 @@ pub struct BenchReport {
     pub secs: f64,
     pub open_loop: bool,
     pub lanes: usize,
+    /// Whether the adaptive runtime (`--adaptive`) drove this run.
+    pub adaptive: bool,
+    /// Lane-elasticity cap (`--max-lanes`; equals `lanes` when the
+    /// adaptive runtime is off).
+    pub max_lanes: usize,
     pub profile: String,
     pub time_mode: String,
     /// Lane execution backend label (`"sim"` / `"native"`).
@@ -85,6 +100,18 @@ pub struct BenchReport {
     pub modeled_total_ms: f64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Coalesced (multi-ticket) backend runs over the whole run.
+    pub batches: u64,
+    /// Tickets those coalesced runs served.
+    pub batched_jobs: u64,
+    /// Lanes spawned beyond the initial fleet.
+    pub lane_grows: u64,
+    /// Lanes that quiesced and retired.
+    pub lane_retires: u64,
+    /// Wakeup-mode flips (park ↔ spin).
+    pub wakeup_switches: u64,
+    /// Largest live-lane count the service reached.
+    pub peak_lanes: u64,
 }
 
 /// Latency aggregates of a completion sample (avg + nearest-rank
@@ -105,18 +132,22 @@ pub fn bench_json(r: &BenchReport) -> String {
     let num = |v: f64| if v.is_finite() { format!("{v:.6}") } else { "null".into() };
     let mut s = format!(
         "{{\"schema\":\"{}\",\"config\":{{\"tenants\":{},\"rate\":{},\"secs\":{},\
-         \"open_loop\":{},\"lanes\":{},\"profile\":\"{}\",\"time_mode\":\"{}\",\
-         \"backend\":\"{}\"}},\
+         \"open_loop\":{},\"lanes\":{},\"adaptive\":{},\"max_lanes\":{},\
+         \"profile\":\"{}\",\"time_mode\":\"{}\",\"backend\":\"{}\"}},\
          \"totals\":{{\"completed\":{},\"rejected\":{},\"errors\":{},\"duration_s\":{},\
          \"throughput_rps\":{},\"latency_ms\":{{\"avg\":{},\"p50\":{},\"p99\":{}}},\
          \"queue_wait_avg_ms\":{},\"modeled_total_ms\":{},\
-         \"cache\":{{\"hits\":{},\"misses\":{}}}}},\"per_tenant\":[",
+         \"cache\":{{\"hits\":{},\"misses\":{}}},\
+         \"adaptive\":{{\"batches\":{},\"batched_jobs\":{},\"grows\":{},\"retires\":{},\
+         \"wakeup_switches\":{},\"peak_lanes\":{}}}}},\"per_tenant\":[",
         BENCH_SCHEMA,
         r.tenants,
         num(r.rate),
         num(r.secs),
         r.open_loop,
         r.lanes,
+        r.adaptive,
+        r.max_lanes,
         escape(&r.profile),
         escape(&r.time_mode),
         escape(&r.backend),
@@ -132,6 +163,12 @@ pub fn bench_json(r: &BenchReport) -> String {
         num(r.modeled_total_ms),
         r.cache_hits,
         r.cache_misses,
+        r.batches,
+        r.batched_jobs,
+        r.lane_grows,
+        r.lane_retires,
+        r.wakeup_switches,
+        r.peak_lanes,
     );
     for (i, t) in r.per_tenant.iter().enumerate() {
         if i > 0 {
@@ -154,7 +191,7 @@ pub fn bench_json(r: &BenchReport) -> String {
         s.push_str(&format!(
             "{{\"t_s\":{},\"completed\":{},\"rejected\":{},\"errors\":{},\
              \"throughput_rps\":{},\"lat_avg_ms\":{},\"lat_p50_ms\":{},\"lat_p99_ms\":{},\
-             \"queue_avg_ms\":{}}}",
+             \"queue_avg_ms\":{},\"mode\":\"{}\",\"lanes\":{},\"batches\":{}}}",
             t.t_s,
             t.completed,
             t.rejected,
@@ -164,6 +201,9 @@ pub fn bench_json(r: &BenchReport) -> String {
             num(t.lat_p50_ms),
             num(t.lat_p99_ms),
             num(t.queue_avg_ms),
+            escape(&t.mode),
+            t.lanes,
+            t.batches,
         ));
     }
     s.push_str("]}");
@@ -193,6 +233,8 @@ mod tests {
             secs: 2.0,
             open_loop: true,
             lanes: 4,
+            adaptive: true,
+            max_lanes: 8,
             profile: "mic31sp-sim".into(),
             time_mode: "virtual".into(),
             backend: "sim".into(),
@@ -207,9 +249,18 @@ mod tests {
                     lat_p50_ms: 4.0,
                     lat_p99_ms: 7.0,
                     queue_avg_ms: 0.5,
+                    mode: "spin".into(),
+                    lanes: 6,
+                    batches: 2,
                 },
                 // A tick that completed nothing: NaN stats → null.
-                BenchTick { t_s: 1, lat_avg_ms: f64::NAN, ..Default::default() },
+                BenchTick {
+                    t_s: 1,
+                    lat_avg_ms: f64::NAN,
+                    mode: "park".into(),
+                    lanes: 4,
+                    ..Default::default()
+                },
             ],
             per_tenant: vec![
                 TenantTotals {
@@ -239,6 +290,12 @@ mod tests {
             modeled_total_ms: 42.0,
             cache_hits: 2,
             cache_misses: 1,
+            batches: 2,
+            batched_jobs: 5,
+            lane_grows: 2,
+            lane_retires: 1,
+            wakeup_switches: 2,
+            peak_lanes: 6,
         }
     }
 
@@ -250,13 +307,23 @@ mod tests {
         assert_eq!(cfg.get("tenants").and_then(Json::as_usize), Some(2));
         assert_eq!(cfg.get("open_loop").and_then(Json::as_bool), Some(true));
         assert_eq!(cfg.get("backend").and_then(Json::as_str), Some("sim"));
+        assert_eq!(cfg.get("adaptive").and_then(Json::as_bool), Some(true));
+        assert_eq!(cfg.get("max_lanes").and_then(Json::as_usize), Some(8));
         let totals = doc.get("totals").expect("totals");
         assert_eq!(totals.get("completed").and_then(Json::as_u64), Some(3));
         let lat = totals.get("latency_ms").expect("latency");
         assert_eq!(lat.get("p99").and_then(Json::as_f64), Some(7.0));
+        let adaptive = totals.get("adaptive").expect("adaptive totals");
+        assert_eq!(adaptive.get("batches").and_then(Json::as_u64), Some(2));
+        assert_eq!(adaptive.get("grows").and_then(Json::as_u64), Some(2));
+        assert_eq!(adaptive.get("peak_lanes").and_then(Json::as_u64), Some(6));
         let ticks = doc.get("ticks").and_then(Json::as_arr).expect("ticks");
         assert_eq!(ticks.len(), 2);
         assert_eq!(ticks[0].get("t_s").and_then(Json::as_u64), Some(0));
+        assert_eq!(ticks[0].get("mode").and_then(Json::as_str), Some("spin"));
+        assert_eq!(ticks[0].get("lanes").and_then(Json::as_u64), Some(6));
+        assert_eq!(ticks[0].get("batches").and_then(Json::as_u64), Some(2));
+        assert_eq!(ticks[1].get("mode").and_then(Json::as_str), Some("park"));
         // The empty tick's NaN stats must be null, not a bare NaN token
         // (which would fail any standards JSON parser).
         assert!(matches!(ticks[1].get("lat_avg_ms"), Some(Json::Null)));

@@ -1,0 +1,607 @@
+//! `AdaptiveController` — the windowed feedback loop behind
+//! `--adaptive` (DESIGN.md §Adaptive).
+//!
+//! The controller is **pure**: it never reads a clock, never touches a
+//! thread, never holds a lock of its own.  The service feeds it
+//! millisecond timestamps (`now_ms`, measured from the service's start
+//! epoch) on every submit / shed / completion, and asks it for a
+//! [`Decision`] — the three actuator settings — whenever something
+//! changed.  That inversion keeps the whole state machine
+//! deterministic and unit-testable with synthetic tick series (no
+//! sleeps, no threads; see the tests at the bottom).
+//!
+//! Telemetry is a sliding window (default 1 s) of submit and shed
+//! timestamps plus recent inter-arrival gaps.  Three actuators hang
+//! off it, each guarded by **hysteresis** (distinct on/off thresholds)
+//! and a **minimum dwell time** (a switch pins the actuator for
+//! `dwell_ms` before it may flip back), so a single spike or a
+//! threshold-straddling load never flaps a mode:
+//!
+//! 1. **Request batching** — on when the offered load (submits + sheds
+//!    per second) crosses `batch_on_rps`, off again only below
+//!    `batch_off_rps`.  While on, lanes coalesce queued same-key
+//!    submissions into one backend run (the fan-out lives in
+//!    `service/mod.rs`; exactness argument in DESIGN.md).
+//! 2. **Lane elasticity** — the lane *target* steps up one lane when
+//!    the queue is deep (`depth > grow_depth × target`) **and** the
+//!    window shows sustained arrivals (more submits in the window than
+//!    lanes to absorb them — a lone spike can stack depth but not
+//!    sustained arrivals, so it never grows the fleet), down one lane
+//!    when the queue is drained and arrivals are sparse.  The service
+//!    spawns toward the target on submit and lets surplus lanes retire
+//!    themselves between jobs (quiesce-then-exit, never mid-job).
+//! 3. **Wakeup mode** — idle lanes park on the condvar by default;
+//!    when the mean inter-arrival gap in the window drops under
+//!    `spin_on_gap_ms`, lanes switch to a bounded spin-poll (claim
+//!    latency under heavy traffic), and back to parking once gaps
+//!    stretch past `park_on_gap_ms`.
+//!
+//! The controller also keeps a per-second tick log ([`AdaptiveTick`]):
+//! mode, lane target, and batch count for each elapsed second, which
+//! `repro bench` merges into the `hetstream-bench-v3` tick series.
+
+use std::collections::VecDeque;
+
+/// Tuning knobs for the adaptive runtime.  All thresholds are paired
+/// (hysteresis) and every actuator shares the one `dwell_ms` guard.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveConfig {
+    /// Sliding telemetry window, ms.
+    pub window_ms: u64,
+    /// Minimum time between two switches of the same actuator, ms.
+    pub dwell_ms: u64,
+    /// Batching turns ON when offered load (submits + sheds per
+    /// second over the window) exceeds this.
+    pub batch_on_rps: f64,
+    /// Batching turns OFF when offered load falls below this (must be
+    /// `< batch_on_rps` for hysteresis to bite).
+    pub batch_off_rps: f64,
+    /// Most tickets one coalesced backend run may serve.
+    pub max_batch: usize,
+    /// Lane-target floor (elasticity never drains below this).
+    pub min_lanes: usize,
+    /// Lane-target cap (`--max-lanes`).
+    pub max_lanes: usize,
+    /// Grow one lane when queue depth exceeds `grow_depth × target`.
+    pub grow_depth: usize,
+    /// Shrink one lane when queue depth is at or below this.
+    pub shrink_depth: usize,
+    /// Spin-poll when the mean inter-arrival gap drops below this, ms.
+    pub spin_on_gap_ms: f64,
+    /// Park again when the mean gap stretches past this, ms.
+    pub park_on_gap_ms: f64,
+    /// Spin-poll budget: claim attempts a lane makes before it falls
+    /// back to the condvar (bounds idle CPU burn if traffic stops
+    /// mid-dwell).
+    pub spin_rounds: u32,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        Self {
+            window_ms: 1_000,
+            dwell_ms: 250,
+            batch_on_rps: 100.0,
+            batch_off_rps: 25.0,
+            max_batch: 16,
+            min_lanes: 1,
+            max_lanes: 8,
+            grow_depth: 4,
+            shrink_depth: 1,
+            spin_on_gap_ms: 2.0,
+            park_on_gap_ms: 20.0,
+            spin_rounds: 64,
+        }
+    }
+}
+
+impl AdaptiveConfig {
+    /// Clamp the knobs into a consistent state (hysteresis pairs
+    /// ordered, floors ≤ caps, nonzero window) so a hostile CLI can't
+    /// configure a controller that flaps by construction.
+    pub fn normalized(mut self) -> Self {
+        self.window_ms = self.window_ms.max(1);
+        self.max_batch = self.max_batch.max(1);
+        self.min_lanes = self.min_lanes.max(1);
+        self.max_lanes = self.max_lanes.max(self.min_lanes);
+        self.grow_depth = self.grow_depth.max(1);
+        self.batch_off_rps = self.batch_off_rps.min(self.batch_on_rps);
+        self.park_on_gap_ms = self.park_on_gap_ms.max(self.spin_on_gap_ms);
+        self
+    }
+}
+
+/// How idle lanes wait for work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WakeupMode {
+    /// Park on the condvar (zero idle CPU; wake latency = notify).
+    #[default]
+    Park,
+    /// Bounded spin-poll before parking (claim latency under load).
+    Spin,
+}
+
+impl WakeupMode {
+    /// Label used in bench ticks and stats (`"park"` / `"spin"`).
+    pub fn label(self) -> &'static str {
+        match self {
+            WakeupMode::Park => "park",
+            WakeupMode::Spin => "spin",
+        }
+    }
+}
+
+/// The three actuator settings the controller currently wants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decision {
+    /// Coalesce queued same-key submissions into one run.
+    pub batching: bool,
+    /// Lane target the service should spawn/drain toward.
+    pub target_lanes: usize,
+    /// How idle lanes should wait.
+    pub wakeup: WakeupMode,
+}
+
+/// One second of the controller's life, for the bench tick series.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdaptiveTick {
+    /// Whole seconds since the service epoch.
+    pub t_s: u64,
+    /// Wakeup mode in force at the end of the second.
+    pub mode: WakeupMode,
+    /// Lane target at the end of the second.
+    pub lanes: usize,
+    /// Coalesced (multi-ticket) runs completed during the second.
+    pub batches: u64,
+}
+
+/// Lifetime counters of one adaptive run.
+#[derive(Debug, Clone, Default)]
+pub struct AdaptiveStats {
+    /// Coalesced backend runs (each served ≥ 2 tickets).
+    pub batches: u64,
+    /// Tickets served by those coalesced runs.
+    pub batched_jobs: u64,
+    /// Times the batching actuator toggled (either direction).
+    pub batch_toggles: u64,
+    /// Times the wakeup mode flipped (either direction).
+    pub wakeup_switches: u64,
+    /// Lanes the service actually spawned beyond its initial fleet.
+    pub lane_grows: u64,
+    /// Lanes that quiesced and retired.
+    pub lane_retires: u64,
+    /// Largest live-lane count the service reached.
+    pub peak_lanes: u64,
+    /// Mode distribution: ms spent with lanes parking / spinning.
+    pub park_ms: u64,
+    pub spin_ms: u64,
+}
+
+/// The sliding-window hysteresis state machine (module docs).
+#[derive(Debug)]
+pub struct AdaptiveController {
+    cfg: AdaptiveConfig,
+    /// Submit timestamps inside the window, ms.
+    submits: VecDeque<u64>,
+    /// Shed timestamps inside the window, ms (offered load counts
+    /// rejected traffic too — a flood we shed is still pressure).
+    sheds: VecDeque<u64>,
+    /// Recent (timestamp, gap_ms) inter-arrival samples.
+    gaps: VecDeque<(u64, f64)>,
+    last_submit_ms: Option<u64>,
+    /// Queue depth as of the last observation.
+    queue_depth: usize,
+    batching: bool,
+    target_lanes: usize,
+    wakeup: WakeupMode,
+    last_batch_switch_ms: u64,
+    last_lane_switch_ms: u64,
+    last_wakeup_switch_ms: u64,
+    /// When the current wakeup mode was entered (mode distribution).
+    mode_since_ms: u64,
+    /// Tick accumulator: current second + its batch count.
+    cur_t: u64,
+    cur_batches: u64,
+    ticks: Vec<AdaptiveTick>,
+    stats: AdaptiveStats,
+}
+
+impl AdaptiveController {
+    pub fn new(cfg: AdaptiveConfig, initial_lanes: usize) -> Self {
+        let cfg = cfg.normalized();
+        let target_lanes = initial_lanes.clamp(cfg.min_lanes, cfg.max_lanes);
+        Self {
+            cfg,
+            submits: VecDeque::new(),
+            sheds: VecDeque::new(),
+            gaps: VecDeque::new(),
+            last_submit_ms: None,
+            queue_depth: 0,
+            batching: false,
+            target_lanes,
+            wakeup: WakeupMode::Park,
+            last_batch_switch_ms: 0,
+            last_lane_switch_ms: 0,
+            last_wakeup_switch_ms: 0,
+            mode_since_ms: 0,
+            cur_t: 0,
+            cur_batches: 0,
+            ticks: Vec::new(),
+            stats: AdaptiveStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &AdaptiveConfig {
+        &self.cfg
+    }
+
+    /// Record an admitted submission and the queue depth just after it
+    /// was enqueued.
+    pub fn observe_submit(&mut self, now_ms: u64, queue_depth: usize) {
+        self.roll_ticks(now_ms);
+        if let Some(prev) = self.last_submit_ms {
+            let gap = now_ms.saturating_sub(prev) as f64;
+            self.gaps.push_back((now_ms, gap));
+        }
+        self.last_submit_ms = Some(now_ms);
+        self.submits.push_back(now_ms);
+        self.queue_depth = queue_depth;
+        self.prune(now_ms);
+    }
+
+    /// Record an admission shed (offered load, not served load).
+    pub fn observe_shed(&mut self, now_ms: u64) {
+        self.roll_ticks(now_ms);
+        self.sheds.push_back(now_ms);
+        self.prune(now_ms);
+    }
+
+    /// Record a finished backend run that served `coalesced` tickets.
+    pub fn observe_complete(&mut self, now_ms: u64, coalesced: usize, queue_depth: usize) {
+        self.roll_ticks(now_ms);
+        self.queue_depth = queue_depth;
+        if coalesced > 1 {
+            self.stats.batches += 1;
+            self.stats.batched_jobs += coalesced as u64;
+            self.cur_batches += 1;
+        }
+        self.prune(now_ms);
+    }
+
+    /// Offered load over the window, requests/second.
+    fn offered_rps(&self) -> f64 {
+        let n = (self.submits.len() + self.sheds.len()) as f64;
+        n * 1_000.0 / self.cfg.window_ms as f64
+    }
+
+    /// Mean inter-arrival gap over the window, ms (`None` until two
+    /// arrivals have landed inside it).
+    fn mean_gap_ms(&self) -> Option<f64> {
+        if self.gaps.len() < 2 {
+            return None;
+        }
+        let sum: f64 = self.gaps.iter().map(|(_, g)| g).sum();
+        Some(sum / self.gaps.len() as f64)
+    }
+
+    /// Run the hysteresis state machine and return the actuator
+    /// settings in force.  `live_lanes` is the service's current lane
+    /// count (the target steps relative to it so the ladder can't
+    /// outrun what actually exists).
+    pub fn decide(&mut self, now_ms: u64, live_lanes: usize) -> Decision {
+        self.roll_ticks(now_ms);
+        self.prune(now_ms);
+        let rps = self.offered_rps();
+        let dwell = self.cfg.dwell_ms;
+
+        // Actuator 1: batching (offered-load hysteresis).
+        if now_ms.saturating_sub(self.last_batch_switch_ms) >= dwell {
+            let next = if self.batching {
+                rps >= self.cfg.batch_off_rps
+            } else {
+                rps > self.cfg.batch_on_rps
+            };
+            if next != self.batching {
+                self.batching = next;
+                self.last_batch_switch_ms = now_ms;
+                self.stats.batch_toggles += 1;
+            }
+        }
+
+        // Actuator 2: lane target.  Growth needs *sustained* pressure:
+        // a deep queue AND more window arrivals than lanes to absorb
+        // them — a single spike satisfies the first but never the
+        // second, so it cannot grow the fleet.
+        if now_ms.saturating_sub(self.last_lane_switch_ms) >= dwell {
+            let target = self.target_lanes.clamp(self.cfg.min_lanes, self.cfg.max_lanes);
+            let deep = self.queue_depth > self.cfg.grow_depth.saturating_mul(target);
+            let sustained = self.submits.len() > target;
+            let drained =
+                self.queue_depth <= self.cfg.shrink_depth && self.submits.len() < target;
+            if deep && sustained && target < self.cfg.max_lanes {
+                self.target_lanes = (live_lanes.max(target) + 1).min(self.cfg.max_lanes);
+                self.last_lane_switch_ms = now_ms;
+            } else if drained && target > self.cfg.min_lanes {
+                self.target_lanes = target - 1;
+                self.last_lane_switch_ms = now_ms;
+            } else {
+                self.target_lanes = target;
+            }
+        }
+
+        // Actuator 3: wakeup mode (inter-arrival-gap hysteresis).
+        if now_ms.saturating_sub(self.last_wakeup_switch_ms) >= dwell {
+            let next = match (self.wakeup, self.mean_gap_ms()) {
+                (WakeupMode::Park, Some(gap)) if gap < self.cfg.spin_on_gap_ms => {
+                    WakeupMode::Spin
+                }
+                (WakeupMode::Spin, Some(gap)) if gap > self.cfg.park_on_gap_ms => {
+                    WakeupMode::Park
+                }
+                // No gap data (traffic stopped): spin lanes fall back
+                // to parking — never burn CPU on silence.
+                (WakeupMode::Spin, None) => WakeupMode::Park,
+                (mode, _) => mode,
+            };
+            if next != self.wakeup {
+                self.credit_mode_time(now_ms);
+                self.wakeup = next;
+                self.last_wakeup_switch_ms = now_ms;
+                self.stats.wakeup_switches += 1;
+            }
+        }
+
+        Decision { batching: self.batching, target_lanes: self.target_lanes, wakeup: self.wakeup }
+    }
+
+    /// Close out the run: credit the final mode interval and flush the
+    /// partial tick.  Idempotent enough for shutdown paths (a second
+    /// call at the same `now_ms` adds nothing).
+    pub fn finalize(&mut self, now_ms: u64) {
+        self.roll_ticks(now_ms);
+        self.credit_mode_time(now_ms);
+        if self.cur_batches > 0 || self.ticks.is_empty() {
+            self.push_tick();
+        }
+    }
+
+    pub fn stats(&self) -> AdaptiveStats {
+        self.stats.clone()
+    }
+
+    /// Drain the per-second tick log (bench merges it by `t_s`).
+    pub fn take_ticks(&mut self) -> Vec<AdaptiveTick> {
+        std::mem::take(&mut self.ticks)
+    }
+
+    fn credit_mode_time(&mut self, now_ms: u64) {
+        let span = now_ms.saturating_sub(self.mode_since_ms);
+        match self.wakeup {
+            WakeupMode::Park => self.stats.park_ms += span,
+            WakeupMode::Spin => self.stats.spin_ms += span,
+        }
+        self.mode_since_ms = now_ms;
+    }
+
+    /// Emit one tick per elapsed whole second (the log stays
+    /// contiguous from t=0 even across quiet seconds).
+    fn roll_ticks(&mut self, now_ms: u64) {
+        let now_s = now_ms / 1_000;
+        while self.cur_t < now_s {
+            self.push_tick();
+        }
+    }
+
+    fn push_tick(&mut self) {
+        self.ticks.push(AdaptiveTick {
+            t_s: self.cur_t,
+            mode: self.wakeup,
+            lanes: self.target_lanes,
+            batches: self.cur_batches,
+        });
+        self.cur_t += 1;
+        self.cur_batches = 0;
+    }
+
+    fn prune(&mut self, now_ms: u64) {
+        let cut = now_ms.saturating_sub(self.cfg.window_ms);
+        while self.submits.front().is_some_and(|&t| t < cut) {
+            self.submits.pop_front();
+        }
+        while self.sheds.front().is_some_and(|&t| t < cut) {
+            self.sheds.pop_front();
+        }
+        while self.gaps.front().is_some_and(|&(t, _)| t < cut) {
+            self.gaps.pop_front();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AdaptiveConfig {
+        AdaptiveConfig {
+            window_ms: 1_000,
+            dwell_ms: 250,
+            batch_on_rps: 100.0,
+            batch_off_rps: 25.0,
+            max_batch: 16,
+            min_lanes: 1,
+            max_lanes: 4,
+            grow_depth: 2,
+            shrink_depth: 1,
+            spin_on_gap_ms: 2.0,
+            park_on_gap_ms: 20.0,
+            spin_rounds: 64,
+        }
+    }
+
+    /// Feed `n` submissions spaced `gap_ms` apart starting at `t0`,
+    /// holding queue depth constant; returns the last timestamp.
+    fn feed(ctl: &mut AdaptiveController, t0: u64, n: usize, gap_ms: u64, depth: usize) -> u64 {
+        let mut t = t0;
+        for i in 0..n {
+            t = t0 + i as u64 * gap_ms;
+            ctl.observe_submit(t, depth);
+        }
+        t
+    }
+
+    #[test]
+    fn batching_switches_with_hysteresis() {
+        let mut ctl = AdaptiveController::new(cfg(), 1);
+        // 150 submits in one window = 150 rps > batch_on (100).
+        let t = feed(&mut ctl, 0, 150, 5, 3);
+        let d = ctl.decide(t, 1);
+        assert!(d.batching, "150 rps must switch batching on");
+        // Load drops to ~50 rps: inside the hysteresis band — stays on.
+        let mut ctl2 = AdaptiveController::new(cfg(), 1);
+        let t = feed(&mut ctl2, 0, 150, 5, 3);
+        ctl2.decide(t, 1);
+        let t2 = feed(&mut ctl2, t + 1_000, 50, 20, 1); // fresh window, 50 in 1 s
+        assert!(ctl2.decide(t2, 1).batching, "50 rps is inside the band: no flap");
+        // Load collapses below batch_off (25): switches off.
+        let t3 = feed(&mut ctl2, t2 + 2_000, 5, 200, 0);
+        assert!(!ctl2.decide(t3, 1).batching, "5 rps must switch batching off");
+        assert_eq!(ctl2.stats().batch_toggles, 2);
+    }
+
+    #[test]
+    fn dwell_blocks_rapid_flapping() {
+        let mut c = cfg();
+        c.dwell_ms = 500;
+        let mut ctl = AdaptiveController::new(c, 1);
+        let t = feed(&mut ctl, 0, 150, 5, 3);
+        assert!(ctl.decide(t, 1).batching);
+        let on_at = t;
+        // Traffic stops dead; within the dwell the actuator is pinned
+        // even though the window has fully drained past it.
+        let quiet = on_at + 499;
+        ctl.observe_complete(quiet, 1, 0);
+        assert!(ctl.decide(quiet, 1).batching, "dwell must pin batching on");
+        // One ms past the dwell it may flip.
+        assert!(!ctl.decide(on_at + 501, 1).batching, "past dwell the drop registers");
+    }
+
+    #[test]
+    fn single_spike_never_flips_anything() {
+        let mut ctl = AdaptiveController::new(cfg(), 1);
+        // One submission with an absurd queue depth: no rate (1 rps),
+        // no sustained arrivals — nothing may move.
+        ctl.observe_submit(300, 10_000);
+        let d = ctl.decide(300, 1);
+        assert!(!d.batching, "one submit is 1 rps, not a flood");
+        assert_eq!(d.target_lanes, 1, "depth without sustained arrivals must not grow lanes");
+        assert_eq!(d.wakeup, WakeupMode::Park, "one gap sample must not start spinning");
+        assert_eq!(ctl.stats().batch_toggles + ctl.stats().wakeup_switches, 0);
+    }
+
+    #[test]
+    fn lane_target_grows_under_sustained_pressure_and_shrinks_when_drained() {
+        let mut ctl = AdaptiveController::new(cfg(), 1);
+        // Sustained arrivals + deep queue: grow one step per dwell.
+        let t = feed(&mut ctl, 0, 50, 10, 50);
+        assert_eq!(ctl.decide(t, 1).target_lanes, 2, "first grow step");
+        // Within the dwell the ladder is pinned.
+        assert_eq!(ctl.decide(t + 100, 2).target_lanes, 2);
+        // Next dwell, still deep: another step, relative to live lanes.
+        let t2 = feed(&mut ctl, t + 300, 50, 10, 50);
+        assert_eq!(ctl.decide(t2, 2).target_lanes, 3, "second grow step");
+        // Cap binds.
+        let mut t3 = t2;
+        for _ in 0..6 {
+            t3 = feed(&mut ctl, t3 + 300, 50, 10, 80);
+            ctl.decide(t3, 4);
+        }
+        assert_eq!(ctl.decide(t3, 4).target_lanes, 4, "max_lanes caps the ladder");
+        // Queue drains + traffic stops: shrink one step per dwell back
+        // to the floor, never below.
+        let mut t4 = t3;
+        for expect in [3, 2, 1, 1] {
+            t4 += 1_500;
+            ctl.observe_complete(t4, 1, 0);
+            assert_eq!(ctl.decide(t4, 4).target_lanes, expect);
+        }
+        assert_eq!(ctl.decide(t4 + 1_500, 1).target_lanes, 1, "floor binds");
+    }
+
+    #[test]
+    fn wakeup_follows_interarrival_gaps() {
+        let mut ctl = AdaptiveController::new(cfg(), 1);
+        // 1 ms gaps < spin_on (2 ms): spin.
+        let t = feed(&mut ctl, 0, 400, 1, 2);
+        assert_eq!(ctl.decide(t, 1).wakeup, WakeupMode::Spin);
+        // 10 ms gaps: inside the band (2..20) — stays spinning.
+        let t2 = feed(&mut ctl, t + 1_100, 110, 10, 1);
+        assert_eq!(ctl.decide(t2, 1).wakeup, WakeupMode::Spin, "band holds the mode");
+        // 50 ms gaps > park_on (20 ms): park again.
+        let t3 = feed(&mut ctl, t2 + 1_100, 25, 50, 0);
+        assert_eq!(ctl.decide(t3, 1).wakeup, WakeupMode::Park);
+        assert_eq!(ctl.stats().wakeup_switches, 2);
+        let s = ctl.stats();
+        assert!(s.park_ms > 0 && s.spin_ms > 0, "mode distribution is credited");
+    }
+
+    #[test]
+    fn spinning_controller_parks_when_traffic_stops() {
+        let mut ctl = AdaptiveController::new(cfg(), 1);
+        let t = feed(&mut ctl, 0, 400, 1, 2);
+        assert_eq!(ctl.decide(t, 1).wakeup, WakeupMode::Spin);
+        // Silence long enough to drain the window: no gap data → park.
+        let quiet = t + 5_000;
+        ctl.observe_complete(quiet, 1, 0);
+        assert_eq!(ctl.decide(quiet, 1).wakeup, WakeupMode::Park, "silence must not spin");
+    }
+
+    #[test]
+    fn tick_log_is_contiguous_and_counts_batches() {
+        let mut ctl = AdaptiveController::new(cfg(), 2);
+        ctl.observe_submit(100, 1);
+        ctl.observe_complete(200, 4, 0); // one coalesced run of 4
+        ctl.observe_complete(300, 1, 0); // unbatched: not a batch
+        // Quiet seconds 1..3, then another batch in second 3.
+        ctl.observe_complete(3_400, 2, 0);
+        ctl.finalize(3_500);
+        let ticks = ctl.take_ticks();
+        let t_s: Vec<u64> = ticks.iter().map(|t| t.t_s).collect();
+        assert_eq!(t_s, vec![0, 1, 2, 3], "contiguous from t=0 across quiet seconds");
+        let batches: Vec<u64> = ticks.iter().map(|t| t.batches).collect();
+        assert_eq!(batches, vec![1, 0, 0, 1]);
+        assert!(ticks.iter().all(|t| t.lanes == 2 && t.mode == WakeupMode::Park));
+        let s = ctl.stats();
+        assert_eq!((s.batches, s.batched_jobs), (2, 6));
+    }
+
+    #[test]
+    fn window_prunes_old_samples() {
+        let mut ctl = AdaptiveController::new(cfg(), 1);
+        feed(&mut ctl, 0, 200, 1, 2);
+        // Two seconds later the window is empty: offered load is 0.
+        ctl.observe_complete(2_500, 1, 0);
+        assert_eq!(ctl.submits.len(), 0, "stale submits pruned");
+        assert_eq!(ctl.gaps.len(), 0, "stale gaps pruned");
+        assert!(ctl.offered_rps() == 0.0);
+    }
+
+    #[test]
+    fn normalized_config_orders_hysteresis_pairs() {
+        let c = AdaptiveConfig {
+            batch_on_rps: 10.0,
+            batch_off_rps: 50.0,
+            spin_on_gap_ms: 30.0,
+            park_on_gap_ms: 5.0,
+            min_lanes: 6,
+            max_lanes: 2,
+            max_batch: 0,
+            grow_depth: 0,
+            ..AdaptiveConfig::default()
+        }
+        .normalized();
+        assert!(c.batch_off_rps <= c.batch_on_rps);
+        assert!(c.park_on_gap_ms >= c.spin_on_gap_ms);
+        assert!(c.min_lanes <= c.max_lanes && c.min_lanes >= 1);
+        assert!(c.max_batch >= 1 && c.grow_depth >= 1);
+    }
+}

@@ -44,12 +44,16 @@
 //! changes wall-clock throughput, never the simulated physics
 //! (`tests/service_integration.rs` asserts both properties).
 
+mod adaptive;
 mod policy;
 
+pub use adaptive::{
+    AdaptiveConfig, AdaptiveController, AdaptiveStats, AdaptiveTick, Decision, WakeupMode,
+};
 pub use policy::{AnalyticPolicy, LearnedPolicy, PolicyChoice, TunePolicy};
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
@@ -204,6 +208,11 @@ pub struct ServiceConfig {
     /// What lanes execute jobs on: the modeled device (default) or
     /// the native host thread pool (real wall-clock execution).
     pub backend: ExecBackend,
+    /// Adaptive runtime (`--adaptive`): windowed feedback controller
+    /// driving request batching, lane elasticity (`lanes` becomes the
+    /// initial fleet, [`AdaptiveConfig::max_lanes`] the cap), and
+    /// wakeup-mode switching.  `None` = the fixed-lane behavior.
+    pub adaptive: Option<AdaptiveConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -216,6 +225,7 @@ impl Default for ServiceConfig {
             artifacts: Some(vec![CORPUS_BURNER.into()]),
             admission: None,
             backend: ExecBackend::default(),
+            adaptive: None,
         }
     }
 }
@@ -266,6 +276,11 @@ pub struct SubmissionReport {
     /// Wall time from `submit` to completion (queue wait + execution),
     /// ms — the load harness's end-to-end latency.
     pub e2e_ms: f64,
+    /// Tickets served by the backend run that produced this report:
+    /// 1 normally, ≥ 2 when the adaptive runtime coalesced this
+    /// submission with queued same-key peers (outputs are still this
+    /// ticket's own byte-exact bytes — DESIGN.md §Adaptive).
+    pub batch: usize,
     /// Byte-exact assembled host outputs.
     pub outputs: Vec<Vec<u8>>,
     pub error: Option<String>,
@@ -333,6 +348,33 @@ impl<T> Admission<T> {
         }
         None
     }
+
+    /// Remove up to `limit` queued items matching `pred`, across every
+    /// tenant, preserving each tenant's FIFO order for the rest — the
+    /// batching claim (a coalesced run may serve many tenants, and
+    /// fairness is preserved because the *primary* job still came off
+    /// the round-robin cursor; peers it absorbs would have run the
+    /// identical plan anyway).
+    pub(crate) fn drain_matching<F: Fn(&T) -> bool>(&mut self, pred: F, limit: usize) -> Vec<T> {
+        let mut out = Vec::new();
+        if limit == 0 {
+            return out;
+        }
+        for (_, q) in self.queues.iter_mut() {
+            // Full rotation: every item is popped and either claimed
+            // or pushed back, so survivors keep their relative order.
+            for _ in 0..q.len() {
+                let item = q.pop_front().expect("rotating a counted queue");
+                if out.len() < limit && pred(&item) {
+                    out.push(item);
+                } else {
+                    q.push_back(item);
+                }
+            }
+        }
+        self.len -= out.len();
+        out
+    }
 }
 
 struct Job {
@@ -341,11 +383,35 @@ struct Job {
     tx: Sender<SubmissionReport>,
     /// When `submit` enqueued this job (queue-wait accounting).
     enqueued: Instant,
+    /// Batching identity (adaptive runtime only; `None` otherwise, or
+    /// for pre-lowered [`Request::Plan`] submissions which never
+    /// coalesce — their plans have no cache identity).
+    key: Option<BatchKey>,
+}
+
+/// What "the same work" means for request coalescing: two submissions
+/// with equal keys lower to the identical plan and run at the
+/// identical `(streams, granularity)`, so one backend run serves all
+/// of them byte-exactly.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum BatchKey {
+    /// Corpus descriptor at its policy-chosen effective granularity —
+    /// the plan-cache key, minus the suite/app `&'static str`s being
+    /// folded with the config string.
+    Corpus(&'static str, &'static str, String, usize),
+    /// Spec content hash at its effective granularity (two specs with
+    /// equal content batch even under different names — same rule as
+    /// the spec plan cache).
+    Spec(u64, usize),
 }
 
 struct QueueState {
     admission: Admission<Job>,
     closed: bool,
+    /// Queued jobs per batch key (adaptive runtime only): lets the
+    /// admission estimate amortize a submission's cost over the run
+    /// it will share, without scanning the queues.
+    pending_keys: HashMap<BatchKey, usize>,
 }
 
 type CacheKey = (&'static str, &'static str, String, usize);
@@ -401,6 +467,40 @@ struct Shared {
     /// path (debug builds only — release builds skip the verifier and
     /// leave this at 0; see DESIGN.md §Verification).
     verified: AtomicU64,
+    /// The adaptive runtime (`None` = fixed lanes, no batching).
+    adaptive: Option<AdaptiveRt>,
+}
+
+/// Shared-side state of the adaptive runtime: the controller behind a
+/// mutex plus its latest decision mirrored into atomics, so the hot
+/// paths (lane claim loop, admission estimate) read plain loads and
+/// only the observation points pay the controller lock.
+struct AdaptiveRt {
+    cfg: AdaptiveConfig,
+    ctl: Mutex<AdaptiveController>,
+    /// Service start: controller timestamps are ms since this instant.
+    epoch: Instant,
+    // Latest decision (written under `ctl`, read lock-free).
+    batching: AtomicBool,
+    target_lanes: AtomicUsize,
+    wakeup_spin: AtomicBool,
+    /// Lanes currently running their loop (grow/retire bookkeeping).
+    live_lanes: AtomicUsize,
+    grows: AtomicU64,
+    retires: AtomicU64,
+    peak_lanes: AtomicUsize,
+}
+
+impl AdaptiveRt {
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    fn store_decision(&self, d: &Decision) {
+        self.batching.store(d.batching, Ordering::Relaxed);
+        self.target_lanes.store(d.target_lanes, Ordering::Relaxed);
+        self.wakeup_spin.store(d.wakeup == WakeupMode::Spin, Ordering::Relaxed);
+    }
 }
 
 impl Shared {
@@ -438,6 +538,24 @@ impl Shared {
         relock(&self.spec_choices).insert(key, choice);
         choice
     }
+
+    /// The batching identity of a request, when it has one.  Rides the
+    /// memoized policy decision (the granularity in the key is the
+    /// *effective* one the lowering will use), so repeat submissions
+    /// cost a map lookup.
+    fn batch_key(&self, req: &Request) -> Option<BatchKey> {
+        match req {
+            Request::Corpus(c) => {
+                let choice = self.choice_for(c);
+                Some(BatchKey::Corpus(c.suite.label(), c.app, c.config.clone(), choice.gran))
+            }
+            Request::Plan { .. } => None,
+            Request::Spec(spec) => {
+                let choice = self.choice_for_spec(spec);
+                Some(BatchKey::Spec(spec.content_hash(), choice.gran))
+            }
+        }
+    }
 }
 
 /// Per-lane lifetime totals.
@@ -461,6 +579,12 @@ pub struct ServiceStats {
     /// Plans that passed the static hazard verifier on the service
     /// path (debug builds; 0 in release, where the gate compiles out).
     pub verified: u64,
+    /// Adaptive-runtime lifetime counters (`None` when `--adaptive`
+    /// was off).
+    pub adaptive: Option<AdaptiveStats>,
+    /// Per-second controller tick log (empty when adaptive was off) —
+    /// `repro bench` merges it into the v3 tick series.
+    pub adaptive_ticks: Vec<AdaptiveTick>,
 }
 
 impl ServiceStats {
@@ -492,14 +616,42 @@ impl ServiceStats {
 /// The multi-tenant execution front-end (module docs).
 pub struct StreamService {
     shared: Arc<Shared>,
-    lanes: Vec<JoinHandle<LaneStats>>,
+    /// Lane thread handles, mutexed because the adaptive runtime
+    /// spawns new lanes from the submit path (retired lanes leave
+    /// their finished handle here; `shutdown` joins everything).
+    lanes: Mutex<Vec<JoinHandle<LaneStats>>>,
+    /// Service config kept for elastic lane spawns.
+    cfg: ServiceConfig,
+    /// Monotone lane-id allocator (retired ids are never reused, so
+    /// reports always attribute to a unique lane).
+    next_lane: AtomicUsize,
 }
 
 impl StreamService {
     /// Spawn the lane workers and start accepting submissions.
     pub fn start(cfg: ServiceConfig, policy: Arc<dyn TunePolicy>) -> Result<Self> {
+        let initial = cfg.lanes.max(1);
+        let adaptive = cfg.adaptive.map(|a| {
+            let a = a.normalized();
+            AdaptiveRt {
+                cfg: a,
+                ctl: Mutex::new(AdaptiveController::new(a, initial)),
+                epoch: Instant::now(),
+                batching: AtomicBool::new(false),
+                target_lanes: AtomicUsize::new(initial.clamp(a.min_lanes, a.max_lanes)),
+                wakeup_spin: AtomicBool::new(false),
+                live_lanes: AtomicUsize::new(initial),
+                grows: AtomicU64::new(0),
+                retires: AtomicU64::new(0),
+                peak_lanes: AtomicUsize::new(initial),
+            }
+        });
         let shared = Arc::new(Shared {
-            queue: Mutex::new(QueueState { admission: Admission::new(), closed: false }),
+            queue: Mutex::new(QueueState {
+                admission: Admission::new(),
+                closed: false,
+                pending_keys: HashMap::new(),
+            }),
             cv: Condvar::new(),
             cache: Mutex::new(HashMap::new()),
             spec_cache: Mutex::new(HashMap::new()),
@@ -515,18 +667,61 @@ impl StreamService {
             admission: cfg.admission,
             gates: Mutex::new(HashMap::new()),
             verified: AtomicU64::new(0),
+            adaptive,
         });
-        let mut lanes = Vec::with_capacity(cfg.lanes.max(1));
-        for lane in 0..cfg.lanes.max(1) {
-            let shared = shared.clone();
-            let cfg = cfg.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("hetstream-lane-{lane}"))
-                .spawn(move || lane_loop(lane, &shared, &cfg))
-                .map_err(|e| Error::Service(format!("spawn service lane {lane}: {e}")))?;
-            lanes.push(handle);
+        let service = Self {
+            shared,
+            lanes: Mutex::new(Vec::with_capacity(initial)),
+            cfg: cfg.clone(),
+            next_lane: AtomicUsize::new(0),
+        };
+        {
+            let mut handles = relock(&service.lanes);
+            for _ in 0..initial {
+                let handle = service.spawn_lane()?;
+                handles.push(handle);
+            }
         }
-        Ok(Self { shared, lanes })
+        Ok(service)
+    }
+
+    /// Spawn one lane thread with the next lane id.
+    fn spawn_lane(&self) -> Result<JoinHandle<LaneStats>> {
+        let lane = self.next_lane.fetch_add(1, Ordering::Relaxed);
+        let shared = self.shared.clone();
+        let cfg = self.cfg.clone();
+        std::thread::Builder::new()
+            .name(format!("hetstream-lane-{lane}"))
+            .spawn(move || lane_loop(lane, &shared, &cfg))
+            .map_err(|e| Error::Service(format!("spawn service lane {lane}: {e}")))
+    }
+
+    /// Grow the live fleet toward the controller's lane target (no-op
+    /// without the adaptive runtime; shrinking is lane-side — surplus
+    /// lanes quiesce and retire themselves between jobs).  A failed
+    /// spawn stops growing but never fails the submission that
+    /// triggered it: the existing lanes still serve the queue.
+    fn grow_to(&self, target: usize) {
+        let Some(rt) = &self.shared.adaptive else { return };
+        let target = target.min(rt.cfg.max_lanes);
+        if rt.live_lanes.load(Ordering::Relaxed) >= target {
+            return;
+        }
+        let mut handles = relock(&self.lanes);
+        // `live_lanes` only grows under this lock, so the check-then-
+        // spawn below cannot overshoot the cap (lane-side retirement
+        // may undershoot concurrently; the next submit re-grows).
+        while rt.live_lanes.load(Ordering::Relaxed) < target {
+            match self.spawn_lane() {
+                Ok(handle) => {
+                    handles.push(handle);
+                    let live = rt.live_lanes.fetch_add(1, Ordering::Relaxed) + 1;
+                    rt.grows.fetch_add(1, Ordering::Relaxed);
+                    rt.peak_lanes.fetch_max(live, Ordering::Relaxed);
+                }
+                Err(_) => break,
+            }
+        }
     }
 
     /// Enqueue a submission for `tenant`; returns immediately.
@@ -580,6 +775,8 @@ impl StreamService {
                 if !gate.bucket.try_charge(cfg, now, est_ms) {
                     gate.shed += 1;
                     let balance = gate.bucket.tokens_ms;
+                    drop(gates);
+                    self.observe_shed_adaptive();
                     return Err(Error::Admission {
                         tenant: tenant.to_string(),
                         reason: format!(
@@ -592,13 +789,40 @@ impl StreamService {
             }
         }
         let (tx, rx) = channel();
+        // Batching identity only matters under the adaptive runtime;
+        // computed before taking the queue lock (it may pay a memoized
+        // policy lowering on first sight of a descriptor).
+        let key = match &self.shared.adaptive {
+            Some(_) => self.shared.batch_key(&req),
+            None => None,
+        };
+        let depth;
         {
             let mut q = relock(&self.shared.queue);
-            let job =
-                Job { tenant: tenant.to_string(), req, tx, enqueued: Instant::now() };
+            let job = Job {
+                tenant: tenant.to_string(),
+                req,
+                tx,
+                enqueued: Instant::now(),
+                key: key.clone(),
+            };
             q.admission.push(tenant, job);
+            if let Some(key) = key {
+                *q.pending_keys.entry(key).or_insert(0) += 1;
+            }
+            depth = q.admission.len();
         }
         self.shared.cv.notify_all();
+        if let Some(rt) = &self.shared.adaptive {
+            let now = rt.now_ms();
+            let decision = {
+                let mut ctl = relock(&rt.ctl);
+                ctl.observe_submit(now, depth);
+                ctl.decide(now, rt.live_lanes.load(Ordering::Relaxed))
+            };
+            rt.store_decision(&decision);
+            self.grow_to(decision.target_lanes);
+        }
         Ok(Ticket { rx })
     }
 
@@ -607,14 +831,42 @@ impl StreamService {
     /// the lane will reuse), [`predict_plan_cost_ms`] at the requested
     /// stream count for pre-lowered plans (already lowered, so the
     /// stage-time walk is cheap).
+    ///
+    /// While the adaptive runtime is batching, a submission that will
+    /// share its backend run with `k−1` queued same-key peers is
+    /// charged the amortized [`PolicyChoice::amortized_ms`] — the
+    /// coalesced run costs one execution however many tickets it
+    /// serves, so a flood of identical requests stops being billed as
+    /// `k` executions.
     fn estimate_cost_ms(&self, req: &Request) -> f64 {
-        match req {
-            Request::Corpus(c) => self.shared.choice_for(c).est_ms,
-            Request::Plan { plan, streams } => {
-                crate::analysis::predict_plan_cost_ms(plan, &self.shared.profile, *streams)
+        let choice = match req {
+            Request::Corpus(c) => self.shared.choice_for(c),
+            Request::Plan { plan, streams } => PolicyChoice {
+                streams: (*streams).max(1),
+                gran: 1,
+                learned: false,
+                est_ms: crate::analysis::predict_plan_cost_ms(
+                    plan,
+                    &self.shared.profile,
+                    *streams,
+                ),
+            },
+            Request::Spec(spec) => self.shared.choice_for_spec(spec),
+        };
+        if let Some(rt) = &self.shared.adaptive {
+            if rt.batching.load(Ordering::Relaxed) {
+                if let Some(key) = self.shared.batch_key(req) {
+                    let pending = relock(&self.shared.queue)
+                        .pending_keys
+                        .get(&key)
+                        .copied()
+                        .unwrap_or(0);
+                    let coalesced = (pending + 1).min(rt.cfg.max_batch);
+                    return choice.amortized_ms(coalesced);
+                }
             }
-            Request::Spec(spec) => self.shared.choice_for_spec(spec).est_ms,
         }
+        choice.est_ms
     }
 
     /// Count a shed for `tenant` (deadline rejections shed even when
@@ -628,6 +880,23 @@ impl StreamService {
             .entry(tenant.to_string())
             .or_insert_with(|| TenantGate { bucket: TokenBucket::new(&cfg, now), shed: 0 })
             .shed += 1;
+        self.observe_shed_adaptive();
+    }
+
+    /// Feed a shed into the adaptive controller: rejected traffic is
+    /// still offered load (a flood we shed should still trip batching
+    /// and lane growth for the admitted remainder).
+    fn observe_shed_adaptive(&self) {
+        if let Some(rt) = &self.shared.adaptive {
+            let now = rt.now_ms();
+            let decision = {
+                let mut ctl = relock(&rt.ctl);
+                ctl.observe_shed(now);
+                ctl.decide(now, rt.live_lanes.load(Ordering::Relaxed))
+            };
+            rt.store_decision(&decision);
+            self.grow_to(decision.target_lanes);
+        }
     }
 
     /// Lifetime admission sheds for one tenant (0 if never seen).
@@ -641,9 +910,13 @@ impl StreamService {
     }
 
     /// Drain the queue, stop the lanes, and return lifetime stats.
-    pub fn shutdown(mut self) -> ServiceStats {
+    pub fn shutdown(self) -> ServiceStats {
         self.close();
-        let handles = std::mem::take(&mut self.lanes);
+        // Retired lanes' threads have already returned; their handles
+        // still sit in the vec, so every LaneStats — including those
+        // of lanes that quiesced mid-run — is collected here.  No
+        // increment is lost to retirement.
+        let handles = std::mem::take(&mut *relock(&self.lanes));
         let lanes: Vec<LaneStats> =
             handles.into_iter().map(|h| h.join().unwrap_or_default()).collect();
         let mut shed: Vec<(String, u64)> = relock(&self.shared.gates)
@@ -651,12 +924,26 @@ impl StreamService {
             .map(|(t, g)| (t.clone(), g.shed))
             .collect();
         shed.sort();
+        let (adaptive, adaptive_ticks) = match &self.shared.adaptive {
+            Some(rt) => {
+                let mut ctl = relock(&rt.ctl);
+                ctl.finalize(rt.now_ms());
+                let mut stats = ctl.stats();
+                stats.lane_grows = rt.grows.load(Ordering::Relaxed);
+                stats.lane_retires = rt.retires.load(Ordering::Relaxed);
+                stats.peak_lanes = rt.peak_lanes.load(Ordering::Relaxed) as u64;
+                (Some(stats), ctl.take_ticks())
+            }
+            None => (None, Vec::new()),
+        };
         ServiceStats {
             lanes,
             cache_hits: self.shared.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.shared.cache_misses.load(Ordering::Relaxed),
             shed,
             verified: self.shared.verified.load(Ordering::Relaxed),
+            adaptive,
+            adaptive_ticks,
         }
     }
 
@@ -717,41 +1004,140 @@ fn lane_loop(lane: usize, shared: &Shared, cfg: &ServiceConfig) -> LaneStats {
         ExecBackend::Native => None,
     };
     loop {
-        let job = {
+        let jobs: Vec<Job> = {
             let mut q = relock(&shared.queue);
+            // Fresh spin budget per claim: a lane in spin mode makes
+            // this many polling passes before it falls back to the
+            // condvar, so silence never burns a core indefinitely.
+            let mut spin_left: u32 =
+                shared.adaptive.as_ref().map(|rt| rt.cfg.spin_rounds).unwrap_or(0);
             loop {
                 if let Some(job) = q.admission.pop() {
-                    break job;
+                    break claim_batch(&mut q, job, shared);
                 }
                 if q.closed {
                     return stats;
+                }
+                if let Some(rt) = &shared.adaptive {
+                    // Surplus lane (target shrank below the live
+                    // fleet): quiesce — the queue is empty here — and
+                    // retire.  The CAS makes exactly (live − target)
+                    // lanes take this exit however many race on it.
+                    let floor = rt.target_lanes.load(Ordering::Relaxed).max(rt.cfg.min_lanes);
+                    let mut live = rt.live_lanes.load(Ordering::Relaxed);
+                    while live > floor {
+                        match rt.live_lanes.compare_exchange(
+                            live,
+                            live - 1,
+                            Ordering::Relaxed,
+                            Ordering::Relaxed,
+                        ) {
+                            Ok(_) => {
+                                rt.retires.fetch_add(1, Ordering::Relaxed);
+                                return stats;
+                            }
+                            Err(cur) => live = cur,
+                        }
+                    }
+                    // Spin-poll wakeup: release the lock, burn a short
+                    // bounded busy-wait, and re-check — claim latency
+                    // under dense traffic without a notify round-trip.
+                    if spin_left > 0 && rt.wakeup_spin.load(Ordering::Relaxed) {
+                        spin_left -= 1;
+                        drop(q);
+                        for _ in 0..64 {
+                            std::hint::spin_loop();
+                        }
+                        std::thread::yield_now();
+                        q = relock(&shared.queue);
+                        continue;
+                    }
                 }
                 // A poisoned wait still hands back the guard — recover
                 // it like every other lock here.
                 q = shared.cv.wait(q).unwrap_or_else(|e| e.into_inner());
             }
         };
-        let queue_wait_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
-        let mut report = match &exec {
-            Ok(exec) => run_job(lane, shared, exec, &job, allowed.as_ref()),
+        // One backend run serves every claimed ticket: run the primary
+        // job once, then fan the report out with per-ticket identity
+        // and timing.  `modeled_ms` stays the per-ticket modeled cost
+        // (what an unbatched run of that submission would report), so
+        // modeled-time accounting is batching-invariant; only the
+        // wall-clock side (queue waits, e2e) shows the coalescing win.
+        let claimed = Instant::now();
+        let coalesced = jobs.len();
+        let base = match &exec {
+            Ok(exec) => run_job(lane, shared, exec, &jobs[0], allowed.as_ref()),
             Err(e) => error_report(
                 lane,
                 cfg.backend.label(),
-                &job,
+                &jobs[0],
                 format!("lane executor failed to build: {e}"),
             ),
         };
-        report.queue_wait_ms = queue_wait_ms;
-        report.e2e_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
-        stats.jobs += 1;
-        if report.error.is_some() {
-            stats.errors += 1;
-        } else {
-            stats.modeled_ms += report.modeled_ms;
+        for job in &jobs {
+            let mut report = base.clone();
+            report.tenant = job.tenant.clone();
+            report.batch = coalesced;
+            report.queue_wait_ms =
+                claimed.saturating_duration_since(job.enqueued).as_secs_f64() * 1e3;
+            report.e2e_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
+            stats.jobs += 1;
+            if report.error.is_some() {
+                stats.errors += 1;
+            } else {
+                stats.modeled_ms += report.modeled_ms;
+            }
+            // A dropped ticket is fine — the work still counts.
+            let _ = job.tx.send(report);
         }
-        // A dropped ticket is fine — the work still counts.
-        let _ = job.tx.send(report);
+        if let Some(rt) = &shared.adaptive {
+            let depth = relock(&shared.queue).admission.len();
+            let now = rt.now_ms();
+            let decision = {
+                let mut ctl = relock(&rt.ctl);
+                ctl.observe_complete(now, coalesced, depth);
+                ctl.decide(now, rt.live_lanes.load(Ordering::Relaxed))
+            };
+            rt.store_decision(&decision);
+        }
     }
+}
+
+/// Claim the batch a popped job anchors: while the controller has
+/// batching on, absorb up to `max_batch − 1` queued same-key peers —
+/// they lower to the identical plan at the identical knobs, so one
+/// backend run serves all of them byte-exactly.  Always settles the
+/// claimed jobs' `pending_keys` bookkeeping.
+fn claim_batch(q: &mut QueueState, job: Job, shared: &Shared) -> Vec<Job> {
+    let mut jobs = vec![job];
+    if let Some(rt) = &shared.adaptive {
+        if rt.batching.load(Ordering::Relaxed) {
+            if let Some(key) = jobs[0].key.clone() {
+                let extras = q.admission.drain_matching(
+                    |j: &Job| j.key.as_ref() == Some(&key),
+                    rt.cfg.max_batch.saturating_sub(1),
+                );
+                jobs.extend(extras);
+            }
+        }
+    }
+    for job in &jobs {
+        if let Some(key) = &job.key {
+            let drop_key = q
+                .pending_keys
+                .get_mut(key)
+                .map(|n| {
+                    *n = n.saturating_sub(1);
+                    *n == 0
+                })
+                .unwrap_or(false);
+            if drop_key {
+                q.pending_keys.remove(key);
+            }
+        }
+    }
+    jobs
 }
 
 fn error_report(lane: usize, backend: &'static str, job: &Job, error: String) -> SubmissionReport {
@@ -773,6 +1159,7 @@ fn error_report(lane: usize, backend: &'static str, job: &Job, error: String) ->
         modeled_ms: f64::NAN,
         queue_wait_ms: f64::NAN,
         e2e_ms: f64::NAN,
+        batch: 1,
         outputs: Vec::new(),
         error: Some(error),
     }
@@ -840,6 +1227,7 @@ fn run_job(
                 modeled_ms: f64::NAN,
                 queue_wait_ms: f64::NAN,
                 e2e_ms: f64::NAN,
+                batch: 1,
                 outputs: Vec::new(),
                 error: None,
             };
@@ -859,6 +1247,7 @@ fn run_job(
                 modeled_ms: f64::NAN,
                 queue_wait_ms: f64::NAN,
                 e2e_ms: f64::NAN,
+                batch: 1,
                 outputs: Vec::new(),
                 error: None,
             };
@@ -906,6 +1295,7 @@ fn run_job(
                 modeled_ms: f64::NAN,
                 queue_wait_ms: f64::NAN,
                 e2e_ms: f64::NAN,
+                batch: 1,
                 outputs: Vec::new(),
                 error: None,
             };
@@ -989,6 +1379,85 @@ mod tests {
         assert_eq!(order, vec![0, 10, 20, 1, 21, 2, 3]);
         assert_eq!(a.len(), 0);
         assert!(a.pop().is_none());
+    }
+
+    #[test]
+    fn drain_matching_claims_across_tenants_and_preserves_order() {
+        let mut a: Admission<u32> = Admission::new();
+        a.push("a", 1);
+        a.push("a", 2);
+        a.push("a", 3);
+        a.push("b", 12);
+        a.push("b", 5);
+        // Claim even values, capped at 2: one from each tenant, odd
+        // values untouched and still in FIFO order.
+        let evens = a.drain_matching(|v| v % 2 == 0, 2);
+        assert_eq!(evens, vec![2, 12]);
+        assert_eq!(a.len(), 3);
+        let rest: Vec<u32> = std::iter::from_fn(|| a.pop()).collect();
+        assert_eq!(rest, vec![1, 5, 3], "round-robin over the survivors, order intact");
+        // Limit 0 claims nothing.
+        let mut b: Admission<u32> = Admission::new();
+        b.push("a", 4);
+        assert!(b.drain_matching(|_| true, 0).is_empty());
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn adaptive_service_batches_same_key_floods_bitwise_exactly() {
+        // An adaptive service under a same-descriptor flood must
+        // coalesce submissions (batch > 1 on some report) and still
+        // hand every ticket the bytes an unbatched run produces.
+        let c = corpus_config();
+        let plain = admission_service(None);
+        let reference = plain
+            .submit("ref", Request::Corpus(c.clone()))
+            .expect("admit")
+            .wait()
+            .expect("report");
+        plain.shutdown();
+        assert_eq!(reference.batch, 1);
+
+        let adaptive = StreamService::start(
+            ServiceConfig {
+                lanes: 1,
+                adaptive: Some(AdaptiveConfig {
+                    batch_on_rps: 0.0, // batching on from the first decide
+                    batch_off_rps: 0.0,
+                    dwell_ms: 0,
+                    max_batch: 8,
+                    ..AdaptiveConfig::default()
+                }),
+                ..ServiceConfig::default()
+            },
+            Arc::new(AnalyticPolicy),
+        )
+        .expect("adaptive service starts");
+        let tickets: Vec<Ticket> = (0..24)
+            .map(|i| {
+                adaptive
+                    .submit(&format!("t{}", i % 3), Request::Corpus(c.clone()))
+                    .expect("admit")
+            })
+            .collect();
+        let mut max_batch_seen = 0;
+        for t in tickets {
+            let r = t.wait().expect("report");
+            assert!(r.ok(), "{:?}", r.error);
+            assert_eq!(r.outputs, reference.outputs, "batched ticket must stay byte-exact");
+            assert_eq!(r.modeled_ms, reference.modeled_ms, "modeled accounting is invariant");
+            max_batch_seen = max_batch_seen.max(r.batch);
+        }
+        let stats = adaptive.shutdown();
+        assert_eq!(stats.jobs(), 24, "every ticket counts as a job");
+        let a = stats.adaptive.expect("adaptive stats present");
+        assert!(a.batches > 0, "the flood must coalesce at least once");
+        assert!(max_batch_seen >= 2 && max_batch_seen <= 8, "batch size respects the cap");
+        assert_eq!(
+            stats.adaptive_ticks.first().map(|t| t.t_s),
+            Some(0),
+            "tick log starts at t=0"
+        );
     }
 
     #[test]

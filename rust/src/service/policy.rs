@@ -35,6 +35,17 @@ pub struct PolicyChoice {
     pub est_ms: f64,
 }
 
+impl PolicyChoice {
+    /// Batch-aware admission charge: when the adaptive runtime will
+    /// coalesce this submission with `coalesced − 1` queued same-key
+    /// peers, the backend pays `est_ms` *once* for all of them, so
+    /// each ticket's fair share is the estimate split evenly.  With
+    /// `coalesced ≤ 1` (or batching off) this is just `est_ms`.
+    pub fn amortized_ms(&self, coalesced: usize) -> f64 {
+        self.est_ms / coalesced.max(1) as f64
+    }
+}
+
 /// Picks `(streams, granularity)` for a corpus descriptor on a given
 /// device profile.  Implementations must be cheap relative to a run —
 /// the service calls this on the submission path, once per descriptor
@@ -178,6 +189,15 @@ mod tests {
                 choice.est_ms
             );
         }
+    }
+
+    #[test]
+    fn amortized_cost_splits_the_estimate_over_the_batch() {
+        let choice = PolicyChoice { streams: 4, gran: 8, learned: false, est_ms: 120.0 };
+        assert_eq!(choice.amortized_ms(0), 120.0, "degenerate batch charges full price");
+        assert_eq!(choice.amortized_ms(1), 120.0);
+        assert_eq!(choice.amortized_ms(4), 30.0);
+        assert!(choice.amortized_ms(16) < choice.amortized_ms(2));
     }
 
     #[test]

@@ -7,12 +7,13 @@
 
 use std::sync::Arc;
 
+use hetstream::corpus::BenchConfig;
 use hetstream::device::{DeviceProfile, TimeMode};
 use hetstream::experiments::{demo_roster, run_bench, BenchOpts};
 use hetstream::metrics::{bench_json, BENCH_SCHEMA};
 use hetstream::service::{
-    AdmissionConfig, AnalyticPolicy, ExecBackend, Request, ServiceConfig, StreamService,
-    TunePolicy,
+    AdaptiveConfig, AdmissionConfig, AnalyticPolicy, ExecBackend, Request, ServiceConfig,
+    StreamService, TunePolicy,
 };
 use hetstream::util::json::Json;
 
@@ -28,6 +29,7 @@ fn base_opts() -> BenchOpts {
         profile: DeviceProfile::mic31sp(),
         time_mode: TimeMode::Virtual,
         backend: ExecBackend::Sim,
+        adaptive: None,
     }
 }
 
@@ -114,6 +116,153 @@ fn closed_loop_bench_without_admission_completes_everything() {
     assert!(report.modeled_total_ms > 0.0);
 }
 
+/// An adaptive config aggressive enough to exercise every actuator in
+/// a short test: batching always on, a single starting lane so the
+/// queue backs up, elasticity tripping on any backlog.
+fn aggressive_adaptive(max_lanes: usize) -> AdaptiveConfig {
+    AdaptiveConfig {
+        dwell_ms: 0,
+        batch_on_rps: 0.0,
+        batch_off_rps: 0.0,
+        max_batch: 8,
+        min_lanes: 1,
+        max_lanes,
+        grow_depth: 1,
+        ..Default::default()
+    }
+}
+
+/// ISSUE acceptance: the adaptive runtime must change *when* work runs
+/// (coalesced batches, elastic lanes) but never *what* it computes —
+/// every ticket's bytes must be identical to a non-adaptive fixed-lane
+/// run of the same submissions, on both backends.
+fn adaptive_run_is_bitwise_exact_on(backend: ExecBackend) {
+    let roster = demo_roster(4);
+    let submissions: Vec<BenchConfig> =
+        (0..48).map(|i| roster[i % roster.len()].clone()).collect();
+    let run = |lanes: usize, adaptive: Option<AdaptiveConfig>| {
+        let service = StreamService::start(
+            ServiceConfig {
+                lanes,
+                runs: 1,
+                profile: DeviceProfile::mic31sp(),
+                time_mode: TimeMode::Virtual,
+                backend,
+                artifacts: Some(vec![hetstream::plan::CORPUS_BURNER.into()]),
+                admission: None,
+                adaptive,
+            },
+            Arc::new(AnalyticPolicy),
+        )
+        .expect("service starts");
+        let tickets: Vec<_> = submissions
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                service
+                    .submit(&format!("tenant-{}", i % 3), Request::Corpus(c.clone()))
+                    .expect("admitted")
+            })
+            .collect();
+        let reports: Vec<_> =
+            tickets.into_iter().map(|t| t.wait().expect("report")).collect();
+        (reports, service.shutdown())
+    };
+
+    let (want, _) = run(2, None);
+    let (got, stats) = run(1, Some(aggressive_adaptive(3)));
+
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(g.ok(), "submission {i}: {:?}", g.error);
+        assert_eq!(
+            g.outputs, w.outputs,
+            "submission {i} ({}): adaptive outputs must equal the fixed-lane run bitwise",
+            g.name
+        );
+        if backend == ExecBackend::Sim {
+            // Virtual-clock physics are batching-invariant: each ticket
+            // keeps the modeled makespan of its own unbatched run.
+            assert_eq!(g.modeled_ms, w.modeled_ms, "submission {i} ({})", g.name);
+        }
+    }
+    let a = stats.adaptive.expect("adaptive stats present");
+    assert!(a.batches > 0, "a 48-deep same-key backlog must coalesce (batches = 0)");
+    assert!(a.lane_grows >= 1, "sustained backlog must grow the fleet at least once");
+    assert!(a.peak_lanes >= 2 && a.peak_lanes <= 3, "peak {} within 1..=3", a.peak_lanes);
+    assert_eq!(stats.jobs(), submissions.len(), "every ticket accounted");
+}
+
+#[test]
+fn adaptive_run_is_bitwise_exact_on_sim() {
+    adaptive_run_is_bitwise_exact_on(ExecBackend::Sim);
+}
+
+#[test]
+fn adaptive_run_is_bitwise_exact_on_native() {
+    adaptive_run_is_bitwise_exact_on(ExecBackend::Native);
+}
+
+#[test]
+fn adaptive_flood_batches_and_keeps_the_good_tenant_bounded() {
+    // The flood acceptance run with the controller on: same budget
+    // shape as the non-adaptive flood test, but one starting lane and
+    // batching forced on, so the flooder's admitted burst backs up and
+    // coalesces.  The well-behaved tenant must still be shed-free with
+    // a bounded tail, and the v3 artifact must carry the adaptive
+    // series.
+    let cycle = roster_cycle_est_ms();
+    let opts = BenchOpts {
+        open_loop: true,
+        lanes: 1,
+        flood: Some((0, 20.0)),
+        admission: Some(AdmissionConfig {
+            refill_ms_per_sec: cycle * 1e-3,
+            burst_ms: cycle * 2.5,
+        }),
+        adaptive: Some(aggressive_adaptive(4)),
+        ..base_opts()
+    };
+    let report = run_bench(&opts, Arc::new(AnalyticPolicy)).expect("bench runs");
+
+    assert!(report.completed > 0);
+    assert!(report.adaptive);
+    assert_eq!(report.max_lanes, 4);
+    assert!(
+        report.batches > 0,
+        "the flooder's admitted burst must coalesce through one starting lane"
+    );
+    assert!(report.batched_jobs >= 2 * report.batches, "a batch covers at least two jobs");
+    let flooder = &report.per_tenant[0];
+    let good = &report.per_tenant[1];
+    assert!(flooder.shed > 0, "the 20x flood still overruns its bucket");
+    assert_eq!(good.shed, 0, "the well-behaved tenant fits its budget");
+    assert!(good.completed > 0);
+    assert!(
+        good.p99_ms.is_finite() && good.p99_ms < 2_000.0,
+        "well-behaved p99 must stay bounded under the adaptive flood, got {} ms",
+        good.p99_ms
+    );
+
+    // v3 artifact: config + totals carry the adaptive block, every
+    // tick carries mode/lanes/batches.
+    let doc = Json::parse(&bench_json(&report)).expect("bench JSON parses");
+    assert_eq!(doc.get("schema").and_then(Json::as_str), Some(BENCH_SCHEMA));
+    let cfg = doc.get("config").expect("config");
+    assert_eq!(cfg.get("adaptive").and_then(Json::as_bool), Some(true));
+    assert_eq!(cfg.get("max_lanes").and_then(Json::as_u64), Some(4));
+    let adaptive = doc.get("totals").and_then(|t| t.get("adaptive")).expect("totals.adaptive");
+    assert_eq!(adaptive.get("batches").and_then(Json::as_u64), Some(report.batches));
+    assert_eq!(adaptive.get("peak_lanes").and_then(Json::as_u64), Some(report.peak_lanes));
+    for tick in doc.get("ticks").and_then(Json::as_arr).expect("ticks") {
+        let mode = tick.get("mode").and_then(Json::as_str).expect("tick mode");
+        assert!(mode == "park" || mode == "spin", "unknown mode `{mode}`");
+        let lanes = tick.get("lanes").and_then(Json::as_u64).expect("tick lanes");
+        assert!((1..=4).contains(&lanes), "tick lanes {lanes} outside 1..=4");
+        assert!(tick.get("batches").and_then(Json::as_u64).is_some());
+    }
+}
+
 #[test]
 fn panicking_client_does_not_wedge_the_service_for_others() {
     // A client thread that submits and then panics (dropping its
@@ -131,6 +280,7 @@ fn panicking_client_does_not_wedge_the_service_for_others() {
             backend: ExecBackend::Sim,
             artifacts: Some(vec![hetstream::plan::CORPUS_BURNER.into()]),
             admission: Some(AdmissionConfig::default()),
+            adaptive: None,
         },
         Arc::new(AnalyticPolicy),
     )

@@ -48,6 +48,7 @@ fn service_config(lanes: usize) -> ServiceConfig {
         // These tests exercise execution equivalence, not load
         // shedding — admit everything.
         admission: None,
+        adaptive: None,
     }
 }
 
@@ -143,6 +144,73 @@ fn concurrent_service_submissions_match_serial_bitwise() {
             r.name
         );
     }
+}
+
+#[test]
+fn adaptive_run_accounts_for_every_submission() {
+    // The ServiceStats drift oracle across a mixed adaptive run: with
+    // batching forced on, lanes growing and retiring, and a tight
+    // token bucket shedding part of the offered load, every submission
+    // attempt must land in exactly one bucket — completed or shed —
+    // and none may error.  A fan-out bug (a coalesced ticket counted
+    // twice or dropped) or a retirement bug (a lane exiting with a
+    // claimed job) shows up here as drift.
+    let mut cfg = service_config(1);
+    cfg.admission = Some(hetstream::service::AdmissionConfig {
+        refill_ms_per_sec: 40.0,
+        burst_ms: 80.0,
+    });
+    cfg.adaptive = Some(hetstream::service::AdaptiveConfig {
+        dwell_ms: 0,
+        batch_on_rps: 0.0,
+        batch_off_rps: 0.0,
+        max_batch: 8,
+        min_lanes: 1,
+        max_lanes: 3,
+        grow_depth: 1,
+        ..Default::default()
+    });
+    let service = StreamService::start(cfg, Arc::new(AnalyticPolicy)).expect("service");
+
+    let sample: Vec<BenchConfig> = all_configs().into_iter().step_by(47).take(4).collect();
+    let attempts = 36u64;
+    let mut tickets = Vec::new();
+    let mut shed = 0u64;
+    for i in 0..attempts {
+        let tenant = format!("tenant-{}", i % 3);
+        match service.submit(&tenant, Request::Corpus(sample[i as usize % sample.len()].clone()))
+        {
+            Ok(t) => tickets.push(t),
+            Err(hetstream::Error::Admission { .. }) => shed += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    let reports: Vec<_> = tickets.into_iter().map(|t| t.wait().expect("report")).collect();
+    let stats = service.shutdown();
+
+    assert!(shed > 0, "a 40 ms/s budget must shed part of a 36-deep burst");
+    assert_eq!(stats.errors(), 0);
+    assert_eq!(reports.iter().filter(|r| r.ok()).count(), reports.len());
+    assert_eq!(
+        stats.jobs() as u64 + stats.shed_total(),
+        attempts,
+        "completed ({}) + shed ({}) must equal submissions ({attempts}) — no drift",
+        stats.jobs(),
+        stats.shed_total(),
+    );
+    assert_eq!(stats.shed_total(), shed, "service-side shed count matches the client's");
+    let a = stats.adaptive.expect("adaptive stats present when the controller is on");
+    assert!(a.peak_lanes >= 1 && a.peak_lanes <= 3, "peak {} within cap", a.peak_lanes);
+    // Lane lifecycle books balance: whatever grew beyond the initial
+    // single lane either retired during the run or was still live at
+    // shutdown — never negative, never past the cap.
+    let live_at_end = 1 + a.lane_grows as i64 - a.lane_retires as i64;
+    assert!(
+        (1..=3).contains(&live_at_end),
+        "grows {} / retires {} leave {live_at_end} live lanes",
+        a.lane_grows,
+        a.lane_retires,
+    );
 }
 
 #[test]

@@ -2,11 +2,15 @@
 """Validate BENCH_*.json load-harness artifacts (DESIGN.md §Bench).
 
 ``repro bench --json PATH`` emits a versioned per-second time series
-(schema tag ``hetstream-bench-v2``); this checker is the offline half
+(schema tag ``hetstream-bench-v3``); this checker is the offline half
 of the contract: any bench artifact, from any commit, must carry the
 expected shape so runs stay comparable across PRs.  v2 added
 ``config.backend`` (``sim`` | ``native``) — native latencies are real
-host execution, so comparisons must never mix backends.
+host execution, so comparisons must never mix backends.  v3 added the
+adaptive runtime: ``config.adaptive`` / ``config.max_lanes``, a
+``totals.adaptive`` counter block (batching, lane elasticity, wakeup
+switches), and per-tick ``mode`` (``park`` | ``spin``) / ``lanes`` /
+``batches`` so mode flips and fleet growth are visible in the series.
 
 Usage:
     python3 tools/bench_schema.py BENCH_*.json   # validate artifacts
@@ -20,7 +24,7 @@ from __future__ import annotations
 import json
 import sys
 
-SCHEMA = "hetstream-bench-v2"
+SCHEMA = "hetstream-bench-v3"
 
 # (key, type) for each required section.  ``float`` accepts ints and
 # None — the emitter writes ``null`` for NaN statistics (e.g. the p99
@@ -31,6 +35,8 @@ CONFIG_KEYS = [
     ("secs", float),
     ("open_loop", bool),
     ("lanes", int),
+    ("adaptive", bool),
+    ("max_lanes", int),
     ("profile", str),
     ("time_mode", str),
     ("backend", str),
@@ -46,6 +52,14 @@ TOTALS_KEYS = [
 ]
 LATENCY_KEYS = [("avg", float), ("p50", float), ("p99", float)]
 CACHE_KEYS = [("hits", int), ("misses", int)]
+ADAPTIVE_KEYS = [
+    ("batches", int),
+    ("batched_jobs", int),
+    ("grows", int),
+    ("retires", int),
+    ("wakeup_switches", int),
+    ("peak_lanes", int),
+]
 TENANT_KEYS = [
     ("tenant", str),
     ("completed", int),
@@ -63,6 +77,9 @@ TICK_KEYS = [
     ("lat_p50_ms", float),
     ("lat_p99_ms", float),
     ("queue_avg_ms", float),
+    ("mode", str),
+    ("lanes", int),
+    ("batches", int),
 ]
 
 
@@ -101,6 +118,7 @@ def validate(doc) -> list[str]:
     if isinstance(totals, dict):
         errors += _check_fields(totals.get("latency_ms"), LATENCY_KEYS, "totals.latency_ms")
         errors += _check_fields(totals.get("cache"), CACHE_KEYS, "totals.cache")
+        errors += _check_fields(totals.get("adaptive"), ADAPTIVE_KEYS, "totals.adaptive")
 
     tenants = doc.get("per_tenant")
     if not isinstance(tenants, list):
@@ -117,6 +135,8 @@ def validate(doc) -> list[str]:
         errors += _check_fields(t, TICK_KEYS, f"ticks[{i}]")
         if isinstance(t, dict) and t.get("t_s") != i:
             errors.append(f"ticks[{i}].t_s: series must be contiguous from 0, got {t.get('t_s')!r}")
+        if isinstance(t, dict) and t.get("mode") not in ("park", "spin"):
+            errors.append(f"ticks[{i}].mode: expected `park` or `spin`, got {t.get('mode')!r}")
 
     # Cross-section consistency: the series and the per-tenant rows
     # must partition the totals.
@@ -142,6 +162,8 @@ def _sample_doc():
             "secs": 1.0,
             "open_loop": False,
             "lanes": 2,
+            "adaptive": True,
+            "max_lanes": 8,
             "profile": "mic31sp-sim",
             "time_mode": "virtual",
             "backend": "sim",
@@ -156,6 +178,14 @@ def _sample_doc():
             "queue_wait_avg_ms": 0.4,
             "modeled_total_ms": 120.0,
             "cache": {"hits": 4, "misses": 1},
+            "adaptive": {
+                "batches": 2,
+                "batched_jobs": 5,
+                "grows": 1,
+                "retires": 1,
+                "wakeup_switches": 2,
+                "peak_lanes": 3,
+            },
         },
         "per_tenant": [
             {"tenant": "tenant-0", "completed": 5, "shed": 1, "errors": 0, "p99_ms": 6.0},
@@ -171,6 +201,9 @@ def _sample_doc():
                 "lat_p50_ms": 2.5,
                 "lat_p99_ms": 6.0,
                 "queue_avg_ms": 0.4,
+                "mode": "spin",
+                "lanes": 3,
+                "batches": 2,
             },
             {
                 "t_s": 1,
@@ -182,6 +215,9 @@ def _sample_doc():
                 "lat_p50_ms": None,
                 "lat_p99_ms": None,
                 "queue_avg_ms": None,
+                "mode": "park",
+                "lanes": 2,
+                "batches": 0,
             },
         ],
     }
@@ -209,7 +245,13 @@ def selftest() -> int:
     bad = [
         ("wrong schema tag", mutated(schema="hetstream-bench-v0")),
         ("stale v1 schema tag", mutated(schema="hetstream-bench-v1")),
+        ("stale v2 schema tag", mutated(schema="hetstream-bench-v2")),
         ("missing backend", mutated(**{"config.backend": ...})),
+        ("missing adaptive flag", mutated(**{"config.adaptive": ...})),
+        ("missing tick mode", mutated(**{"ticks.0.mode": ...})),
+        ("unknown tick mode", mutated(**{"ticks.0.mode": "nap"})),
+        ("missing tick lane series", mutated(**{"ticks.1.lanes": ...})),
+        ("missing adaptive totals", mutated(**{"totals.adaptive": ...})),
         ("missing totals key", mutated(**{"totals.completed": ...})),
         ("negative count", mutated(**{"totals.rejected": -1})),
         ("string where number", mutated(**{"totals.latency_ms.p99": "fast"})),
